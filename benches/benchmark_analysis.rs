@@ -1,0 +1,133 @@
+//! Bench: the paper's Discussion / supplementary analysis —
+//! Eq. 3 throughput, computing density, power efficiency & breakdown
+//! (Fig. S16), insertion loss (Fig. S14), spectral Q requirement (Fig. S5),
+//! spectral folding (Fig. S18) and the SOTA comparison (Table S6).
+//! Every row prints measured-vs-paper.
+
+use cirptc::analysis::sota;
+use cirptc::analysis::spectral::{required_q, FSR_NM};
+use cirptc::analysis::{AreaModel, LatencyModel, PowerModel, WeightTech};
+use cirptc::arch::CirPtcConfig;
+use cirptc::photonic::waveguide::LossBudget;
+use cirptc::photonic::LAMBDA_NM;
+use cirptc::util::bench::{row, section};
+
+fn cfg(s: usize) -> CirPtcConfig {
+    CirPtcConfig { n: s, m: s, l: 4, fold: 1, f_op: 10e9 }
+}
+
+fn main() {
+    let area = AreaModel::paper();
+    let power = PowerModel::paper();
+    let loss = LossBudget::paper();
+    let lat = LatencyModel::paper();
+
+    section("Eq. 3: OPS = 2*M*N*f_op");
+    let c48 = CirPtcConfig::scaled_48();
+    row("48x48 @ 10 GHz", &[
+        ("tops", format!("{:.2}", c48.ops() / 1e12)),
+        ("exact", "46.08".into()),
+    ]);
+
+    section("computing density (paper: 4.85 TOPS/mm2 @48x48; 5.48-5.84 folded)");
+    row("48x48", &[
+        ("tops_per_mm2", format!("{:.2}", area.computing_density_tops_mm2(&c48))),
+        ("paper", "4.85".into()),
+    ]);
+    row("48x48 r=4", &[
+        ("tops_per_mm2",
+         format!("{:.2}", area.computing_density_tops_mm2(&CirPtcConfig::folded_48()))),
+        ("paper", "5.48-5.84".into()),
+    ]);
+
+    section("Fig S14: insertion loss, linear in size");
+    for s in [8usize, 16, 32, 48, 64, 96] {
+        row(&format!("{s}x{s}"), &[
+            ("cirptc_db", format!("{:.2}", loss.cirptc_critical_path_db(s, s, 4))),
+            ("uncompressed_db", format!("{:.2}", loss.uncompressed_critical_path_db(s, s))),
+        ]);
+    }
+
+    section("Fig S16: power breakdown & efficiency vs size");
+    let mut peak = (0usize, 0.0f64);
+    for s in [16usize, 32, 48, 64, 96, 128] {
+        let c = cfg(s);
+        let b = power.cirptc(&c, WeightTech::ThermoOptic);
+        let e = power.efficiency_tops_w(&c, WeightTech::ThermoOptic);
+        if e > peak.1 {
+            peak = (s, e);
+        }
+        row(&format!("{s}x{s}"), &[
+            ("tops_w", format!("{e:.2}")),
+            ("laser_w", format!("{:.3}", b.laser_w)),
+            ("laser_pct", format!("{:.1}", 100.0 * b.laser_fraction())),
+            ("total_w", format!("{:.2}", b.total_w())),
+        ]);
+    }
+    row("peak", &[
+        ("at", format!("{}x{}", peak.0, peak.0)),
+        ("tops_w", format!("{:.2}", peak.1)),
+        ("paper", "9.53 @48x48".into()),
+    ]);
+    let f64c = power.cirptc(&cfg(64), WeightTech::ThermoOptic);
+    row("laser share @64", &[
+        ("pct", format!("{:.1}", 100.0 * f64c.laser_fraction())),
+        ("paper", "43.14".into()),
+    ]);
+    let ratio48 = power.efficiency_tops_w(&c48, WeightTech::ThermoOptic)
+        / power.uncompressed_efficiency_tops_w(&c48, WeightTech::ThermoOptic);
+    row("vs uncompressed @48", &[
+        ("ratio", format!("{ratio48:.2}x")),
+        ("paper", "3.82x".into()),
+    ]);
+
+    section("Fig S18: spectral folding r=4");
+    let folded = CirPtcConfig::folded_48();
+    let e_fold = power.efficiency_tops_w(&folded, WeightTech::ThermoOptic);
+    let e_moscap = power.efficiency_tops_w(&folded, WeightTech::Moscap);
+    let unc = power.uncompressed_efficiency_tops_w(&c48, WeightTech::ThermoOptic);
+    row("r=4 thermo", &[
+        ("tops_w", format!("{e_fold:.2}")),
+        ("ratio", format!("{:.2}x", e_fold / unc)),
+        ("paper", "17.13 / 6.87x".into()),
+    ]);
+    row("r=4 MOSCAP", &[
+        ("tops_w", format!("{e_moscap:.2}")),
+        ("paper", "47.94".into()),
+    ]);
+    let bf = power.cirptc(&folded, WeightTech::ThermoOptic);
+    row("dominant term (folded)", &[
+        ("mrr_w", format!("{:.2}", bf.weight_mrr_w)),
+        ("next", format!("adc {:.2}", bf.adc_w)),
+        ("paper", "MRR thermal dominates (S18b)".into()),
+    ]);
+
+    section("Fig S5: required Q vs weight resolution (N=48)");
+    for bits in [2u32, 4, 6, 8] {
+        row(&format!("{bits}-bit"), &[
+            ("q", format!("{:.3e}", required_q(48, bits, FSR_NM, LAMBDA_NM))),
+            ("paper", if bits == 6 { "2.49e5".into() } else { "-".to_string() }),
+        ]);
+    }
+
+    section("latency feasibility (single-cycle MVM constraint)");
+    for s in [48usize, 256, 1024] {
+        let c = cfg(s);
+        row(&format!("{s}x{s}"), &[
+            ("latency_ps", format!("{:.1}", lat.latency_s(&c) * 1e12)),
+            ("max_f_op_ghz", format!("{:.1}", lat.max_f_op(&c) / 1e9)),
+            ("10ghz_ok", format!("{}", lat.clock_feasible(&c))),
+        ]);
+    }
+
+    section("Table S6: SOTA comparison (CirPTC rows computed live)");
+    for e in sota::literature().iter().chain(sota::cirptc_rows().iter()) {
+        row(e.name, &[
+            ("tech", e.technology.to_string()),
+            ("tops_mm2", e.density_tops_mm2.map(|d| format!("{d:.2}"))
+                .unwrap_or_else(|| "-".into())),
+            ("tops_w", e.efficiency_tops_w.map(|d| format!("{d:.2}"))
+                .unwrap_or_else(|| "-".into())),
+        ]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Bench: paper Fig. 3 — on-chip convolution.
+//!
+//! Regenerates the Fig. 3 rows: normalised RMSE of chip-vs-ideal feature
+//! maps over a batch of RGB images (3a–d) and for the four CXR kernels
+//! (3e), plus the timing of the on-chip convolution pipeline (im2col →
+//! BCM extension → sign-split chip passes) at the prototype data-path
+//! granularity.
+
+use std::path::PathBuf;
+
+use cirptc::data::datasets;
+use cirptc::data::kernels::{self, extend_kernel};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{conv2d, im2col, Tensor};
+use cirptc::util::bench::{bench, black_box, row, section};
+
+fn chip_convolve(sim: &mut ChipSim, img: &Tensor, k: &kernels::ImageKernel) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    let (oh, ow) = (h - 2, w - 2);
+    let bcm = extend_kernel(k, sim.desc.l);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ch in 0..c {
+        let chan =
+            Tensor::new(&[1, h, w], img.data[ch * h * w..(ch + 1) * h * w].to_vec());
+        let xm = im2col(&chan, 3);
+        let cols = xm.shape[1];
+        let mut xp = Tensor::zeros(&[bcm.n(), cols]);
+        xp.data[..9 * cols].copy_from_slice(&xm.data);
+        let y = sim.forward_signed(&bcm, &xp);
+        out.data[ch * oh * ow..(ch + 1) * oh * ow].copy_from_slice(&y.data[..cols]);
+    }
+    out
+}
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    let chip = ChipDescription::load(&dir.join("chip.json"))
+        .unwrap_or_else(|_| ChipDescription::ideal(4));
+
+    section("Fig 3a-d: blur kernel over CIFAR-scale RGB images (RMSE)");
+    let split = datasets::synth_textures(16, 99);
+    let blur = kernels::blur();
+    let wmat = kernels::kernels_to_matrix(&[blur.clone()]);
+    let mut sim = ChipSim::new(chip.clone());
+    let mut rmses = Vec::new();
+    for i in 0..split.n {
+        let img = split.image(i);
+        let got = chip_convolve(&mut sim, &img, &blur);
+        let (h, w) = (img.shape[1], img.shape[2]);
+        let mut want = Tensor::zeros(&got.shape.clone());
+        for ch in 0..3 {
+            let chan = Tensor::new(
+                &[1, h, w],
+                img.data[ch * h * w..(ch + 1) * h * w].to_vec(),
+            );
+            let y = conv2d(&chan, &wmat, 3, false);
+            want.data[ch * y.numel()..(ch + 1) * y.numel()]
+                .copy_from_slice(&y.data);
+        }
+        rmses.push(got.normalized_rmse(&want));
+    }
+    let mean = rmses.iter().sum::<f32>() / rmses.len() as f32;
+    let worst = rmses.iter().cloned().fold(0.0f32, f32::max);
+    row("blur/RGB-32x32 (16 images)", &[
+        ("rmse_mean", format!("{mean:.4}")),
+        ("rmse_worst", format!("{worst:.4}")),
+        ("paper", "0.0243".into()),
+    ]);
+
+    section("Fig 3e: four kernels on CXR-like image (RMSE, sign-split)");
+    let cxr = datasets::synth_cxr(1, 7).image(0);
+    for k in kernels::fig3e_kernels() {
+        let mut sim = ChipSim::new(chip.clone());
+        let got = chip_convolve(&mut sim, &cxr, &k);
+        let want = conv2d(&cxr, &kernels::kernels_to_matrix(&[k.clone()]), 3, false);
+        row(k.name, &[
+            ("rmse", format!("{:.4}", got.normalized_rmse(&want))),
+            ("chip_passes", format!("{}", sim.passes())),
+        ]);
+    }
+
+    section("on-chip conv pipeline timing (32x32 RGB, blur)");
+    let img = split.image(0);
+    let mut sim = ChipSim::new(chip.clone());
+    let s = bench("chip_convolve 3ch 32x32", || {
+        black_box(chip_convolve(&mut sim, &img, &blur));
+    });
+    // each channel: (30*30) MVM columns x 12x4 BCM x 2 sign passes
+    let mvms = 3.0 * 900.0 * 2.0;
+    row("effective MVM rate", &[
+        ("mvms_per_s", format!("{:.0}", s.per_second(mvms))),
+        ("paper_prototype", "12.5 Kbaud input rate".into()),
+    ]);
+}

@@ -1,0 +1,156 @@
+//! Bench: paper Fig. 4 — end-to-end classification.
+//!
+//! Regenerates the Fig. 4e comparison ladder per dataset by combining
+//! (a) the python-side training metrics (`artifacts/metrics.json`: fp32
+//! GEMM, digital circulant, chip w/o DPE, chip + DPE — configs trained at
+//! build time) with (b) a live rust-serving accuracy measurement of the
+//! DPE model on the photonic simulator, confirming the exported weights
+//! reproduce the python lookup-mode numbers through the L3 stack.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cirptc::coordinator::worker::EngineBackend;
+use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{argmax, Tensor};
+use cirptc::util::bench::{row, section};
+use cirptc::util::json::Json;
+
+fn live_accuracy(dir: &PathBuf, model: &str, photonic: bool, limit: usize) -> Option<f64> {
+    let manifest = dir.join(format!("models/{model}.json"));
+    if !manifest.exists() {
+        return None;
+    }
+    // the DPE bundle serves the photonic path; the digitally-trained
+    // bundle serves the digital path (BN calibration is substrate-specific)
+    let variant = if photonic { "dpe" } else { "digital" };
+    let bundle = dir.join(format!("models/{model}_{variant}.cpt"));
+    let bundle = if bundle.exists() {
+        bundle
+    } else {
+        dir.join(format!("models/{model}_dpe.cpt"))
+    };
+    let engine = Arc::new(Engine::load(&manifest, &bundle).ok()?);
+    let chip = ChipDescription::load(&dir.join("chip.json")).ok()?;
+    let test = Bundle::load(&dir.join(format!("models/{model}_testset.cpt"))).ok()?;
+    let (c, h) = engine.manifest.input_shape();
+    let xs = test.get("x").ok()?.as_f32().ok()?;
+    let ys = test.get("y").ok()?.as_i32().ok()?;
+    let n = ys.len().min(limit);
+    let images: Vec<Tensor> = (0..n)
+        .map(|i| Tensor::new(&[c, h, h], xs[i * c * h * h..(i + 1) * c * h * h].to_vec()))
+        .collect();
+    let factories: Vec<BackendFactory> = (0..2)
+        .map(|i| {
+            let engine = Arc::clone(&engine);
+            let mut d = chip.clone();
+            d.seed ^= i as u64;
+            Box::new(move || {
+                let mode = if photonic {
+                    Backend::PhotonicSim(ChipSim::new(d))
+                } else {
+                    Backend::Digital
+                };
+                Box::new(EngineBackend { engine, mode })
+                    as Box<dyn cirptc::coordinator::InferenceBackend>
+            }) as BackendFactory
+        })
+        .collect();
+    let coord = Coordinator::start(
+        factories,
+        BatcherConfig { max_batch: 8, max_wait_us: 1000 },
+    );
+    let rs = coord.classify_all(&images).ok()?;
+    Some(
+        rs.iter()
+            .zip(&ys[..n])
+            .filter(|(r, &y)| argmax(&r.logits) == y as usize)
+            .count() as f64
+            / n as f64,
+    )
+}
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    let metrics_path = dir.join("metrics.json");
+
+    section("Fig 4e: accuracy ladder per dataset (python build-time metrics)");
+    let metrics = std::fs::read_to_string(&metrics_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    match &metrics {
+        Some(j) => {
+            for (name, paper) in [
+                ("synth_digits", "SVHN 88.08%"),
+                ("synth_textures", "CIFAR-10 80.04%"),
+                ("synth_cxr", "COVID-QU-Ex 92.6%"),
+            ] {
+                if let Some(d) = j.get(name) {
+                    let g = |k: &str| {
+                        d.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+                    };
+                    row(name, &[
+                        ("gemm_fp32", format!("{:.4}", g("acc_gemm_digital"))),
+                        ("circ_digital", format!("{:.4}", g("acc_circ_digital"))),
+                        ("chip_no_dpe", format!("{:.4}", g("acc_chip_vanilla"))),
+                        ("chip_dpe", format!("{:.4}", g("acc_chip_dpe"))),
+                        ("paper_chip", paper.into()),
+                    ]);
+                    if let Some(p) = d.get("params") {
+                        row("  param reduction", &[(
+                            "pct",
+                            format!(
+                                "{:.2}% (paper 74.91%)",
+                                p.get("reduction_pct")
+                                    .and_then(Json::as_f64)
+                                    .unwrap_or(f64::NAN)
+                            ),
+                        )]);
+                    }
+                }
+            }
+        }
+        None => println!("  metrics.json missing — run `make train`"),
+    }
+
+    section("Fig 4 live: DPE model served through the rust L3 stack");
+    for model in ["synth_cxr", "synth_digits", "synth_textures"] {
+        let dig = live_accuracy(&dir, model, false, 96);
+        let pho = live_accuracy(&dir, model, true, 96);
+        match (dig, pho) {
+            (Some(d), Some(p)) => row(model, &[
+                ("rust_digital", format!("{d:.4}")),
+                ("rust_photonic_sim", format!("{p:.4}")),
+            ]),
+            _ => println!("  {model}: skipped (run `make train`)"),
+        }
+    }
+
+    section("Fig 4a-d: confusion matrix (chip+DPE, from metrics.json)");
+    if let Some(j) = &metrics {
+        if let Some(conf) = j
+            .get("synth_cxr")
+            .and_then(|d| d.get("confusion_chip_dpe"))
+            .and_then(Json::as_arr)
+        {
+            for (i, r) in conf.iter().enumerate() {
+                println!("  true {i}: {:?}", r.as_f32_flat());
+            }
+            let sens = j
+                .get("synth_cxr")
+                .and_then(|d| d.get("sensitivity_covid"))
+                .and_then(Json::as_f64);
+            let spec = j
+                .get("synth_cxr")
+                .and_then(|d| d.get("specificity_covid"))
+                .and_then(Json::as_f64);
+            row("covid class", &[
+                ("sensitivity", format!("{:.3} (paper 0.963)", sens.unwrap_or(f64::NAN))),
+                ("specificity", format!("{:.3} (paper 0.980)", spec.unwrap_or(f64::NAN))),
+            ]);
+        }
+    }
+}

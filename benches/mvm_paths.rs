@@ -1,0 +1,109 @@
+//! Bench: MVM execution-path ablation (DESIGN.md §7 design choices).
+//!
+//! * direct compressed BCM multiply vs FFT path (Eq. 2) vs dense expansion
+//!   — at the paper's order-4 the direct path should win; FFT crosses over
+//!   at large block order (this is the ablation behind choosing the direct
+//!   form for the L1 kernel's MXU mapping).
+//! * the AOT Pallas artifact via PJRT (per-call overhead included).
+//! * photonic-simulator overhead vs bare fp32.
+
+use std::path::PathBuf;
+
+use cirptc::circulant::Bcm;
+use cirptc::runtime::Runtime;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::util::bench::{bench, black_box, row, section};
+use cirptc::util::rng::Rng;
+
+fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
+    let mut r = Rng::new(seed);
+    let mut w = vec![0.0f32; p * q * l];
+    r.fill_uniform(&mut w);
+    Bcm::new(p, q, l, w)
+}
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+
+    section("order-4 48x48: direct vs FFT vs dense expansion (batch 16)");
+    let bcm = rand_bcm(12, 12, 4, 1);
+    let mut r = Rng::new(2);
+    let mut xd = vec![0.0f32; 48 * 16];
+    r.fill_uniform(&mut xd);
+    let x = Tensor::new(&[48, 16], xd.clone());
+    let xcol = xd[..48].to_vec();
+
+    let s_direct = bench("direct compressed matmul 48x48xB16", || {
+        black_box(bcm.matmul(&x));
+    });
+    let dense = bcm.expand();
+    let s_dense = bench("dense expanded matmul 48x48xB16", || {
+        black_box(dense.matmul(&x));
+    });
+    bench("dense expansion itself", || {
+        black_box(bcm.expand());
+    });
+    let s_fft = bench("fft path (Eq.2) single column x16", || {
+        for _ in 0..16 {
+            black_box(bcm.mvm_fft(&xcol));
+        }
+    });
+    row("order-4 verdict", &[
+        ("direct_vs_dense", format!("{:.2}x", s_dense.mean_ns / s_direct.mean_ns)),
+        ("direct_vs_fft", format!("{:.2}x", s_fft.mean_ns / s_direct.mean_ns)),
+    ]);
+
+    section("FFT crossover with block order (fixed 1024-dim, 1 column)");
+    for l in [4usize, 16, 64, 256] {
+        let blocks = 1024 / l;
+        let b = rand_bcm(blocks.min(16), blocks, l, 3);
+        let mut xc = vec![0.0f32; b.n()];
+        Rng::new(4).fill_uniform(&mut xc);
+        let sd = bench(&format!("direct l={l}"), || {
+            black_box(b.mvm(&xc));
+        });
+        let sf = bench(&format!("fft    l={l}"), || {
+            black_box(b.mvm_fft(&xc));
+        });
+        row(&format!("l={l}"), &[(
+            "fft_speedup",
+            format!("{:.2}x", sd.mean_ns / sf.mean_ns),
+        )]);
+    }
+
+    section("photonic-sim overhead vs bare fp32 (48x48, batch 16)");
+    let chip = ChipDescription::load(&dir.join("chip.json"))
+        .unwrap_or_else(|_| ChipDescription::ideal(4));
+    let mut sim = ChipSim::new(chip);
+    let s_sim = bench("chip sim forward (quant+Γ+noise)", || {
+        black_box(sim.forward(&bcm, &x));
+    });
+    let mut sim_signed = ChipSim::new(ChipDescription::ideal(4));
+    bench("chip sim forward_signed (2 passes)", || {
+        black_box(sim_signed.forward_signed(&bcm, &x));
+    });
+    row("sim overhead", &[(
+        "vs_direct",
+        format!("{:.2}x", s_sim.mean_ns / s_direct.mean_ns),
+    )]);
+
+    section("AOT Pallas artifact via PJRT (includes dispatch overhead)");
+    match Runtime::new(&dir) {
+        Ok(mut rt) => match rt.load("bcm_48x48_b16") {
+            Ok(_) => {
+                let wt = Tensor::new(&[12, 12, 4], bcm.w.clone());
+                let exe = rt.load("bcm_48x48_b16").unwrap();
+                let s_xla = bench("pallas bcm_48x48_b16 via PJRT", || {
+                    black_box(exe.run(&[&wt, &x]).unwrap());
+                });
+                row("xla dispatch", &[(
+                    "vs_direct",
+                    format!("{:.2}x", s_xla.mean_ns / s_direct.mean_ns),
+                )]);
+            }
+            Err(e) => println!("  skipped: {e:#}"),
+        },
+        Err(e) => println!("  skipped (PJRT): {e:#}"),
+    }
+}

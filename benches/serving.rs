@@ -1,0 +1,117 @@
+//! Bench: L3 serving — batching-policy sweep and coordinator overhead.
+//!
+//! The paper's system contribution is the hardware; the serving layer is
+//! our operationalisation (DESIGN.md §4).  Targets: the coordinator adds
+//! <10 % overhead vs a bare engine loop, and the batch-size sweep shows
+//! the standard throughput/latency trade-off.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cirptc::coordinator::worker::EngineBackend;
+use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine};
+use cirptc::tensor::Tensor;
+use cirptc::util::bench::{row, section};
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    let manifest = dir.join("models/synth_cxr.json");
+    if !manifest.exists() {
+        println!("serving bench skipped — run `make train` first");
+        return;
+    }
+    let engine = Arc::new(
+        Engine::load(&manifest, &dir.join("models/synth_cxr_dpe.cpt")).unwrap(),
+    );
+    let test = Bundle::load(&dir.join("models/synth_cxr_testset.cpt")).unwrap();
+    let xs = test.get("x").unwrap().as_f32().unwrap();
+    let n = 64usize;
+    let images: Vec<Tensor> = (0..n)
+        .map(|i| Tensor::new(&[1, 64, 64], xs[i * 64 * 64..(i + 1) * 64 * 64].to_vec()))
+        .collect();
+
+    section("bare engine loop (digital, single thread) — baseline");
+    let t0 = Instant::now();
+    let mut be = Backend::Digital;
+    for im in &images {
+        let _ = engine.forward(im, &mut be).unwrap();
+    }
+    let bare = t0.elapsed().as_secs_f64();
+    row("bare loop", &[
+        ("req_s", format!("{:.1}", n as f64 / bare)),
+        ("total_s", format!("{bare:.3}")),
+    ]);
+
+    section("coordinator overhead (1 digital worker, batch 8)");
+    let engine2 = Arc::clone(&engine);
+    let coord = Coordinator::start(
+        vec![Box::new(move || {
+            Box::new(EngineBackend { engine: engine2, mode: Backend::Digital })
+                as Box<dyn cirptc::coordinator::InferenceBackend>
+        })],
+        BatcherConfig { max_batch: 8, max_wait_us: 500 },
+    );
+    let t0 = Instant::now();
+    coord.classify_all(&images).unwrap();
+    let coord_s = t0.elapsed().as_secs_f64();
+    row("coordinator", &[
+        ("req_s", format!("{:.1}", n as f64 / coord_s)),
+        ("overhead_pct", format!("{:.1}", 100.0 * (coord_s - bare) / bare)),
+        ("target", "<10%".into()),
+    ]);
+    drop(coord);
+
+    section("batch-size sweep (2 digital workers)");
+    for batch in [1usize, 2, 4, 8, 16] {
+        let factories: Vec<BackendFactory> = (0..2)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                Box::new(move || {
+                    Box::new(EngineBackend { engine, mode: Backend::Digital })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as BackendFactory
+            })
+            .collect();
+        let coord = Coordinator::start(
+            factories,
+            BatcherConfig { max_batch: batch, max_wait_us: 400 },
+        );
+        let t0 = Instant::now();
+        coord.classify_all(&images).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let (p50, p99) = coord.metrics.latency_percentiles_us();
+        row(&format!("batch={batch}"), &[
+            ("req_s", format!("{:.1}", n as f64 / wall)),
+            ("p50_us", format!("{p50}")),
+            ("p99_us", format!("{p99}")),
+            ("mean_batch", format!("{:.1}", coord.metrics.mean_batch_size())),
+        ]);
+    }
+
+    section("worker scaling (digital, batch 8)");
+    for workers in [1usize, 2, 4] {
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                Box::new(move || {
+                    Box::new(EngineBackend { engine, mode: Backend::Digital })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as BackendFactory
+            })
+            .collect();
+        let coord = Coordinator::start(
+            factories,
+            BatcherConfig { max_batch: 8, max_wait_us: 400 },
+        );
+        let t0 = Instant::now();
+        coord.classify_all(&images).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        row(&format!("workers={workers}"), &[(
+            "req_s",
+            format!("{:.1}", n as f64 / wall),
+        )]);
+    }
+}

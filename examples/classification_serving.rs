@@ -1,0 +1,186 @@
+//! END-TO-END driver (DESIGN.md §6): serve the trained StrC-ONN models
+//! through the full L3 stack — router → dynamic batcher → worker pool —
+//! over three backends, reporting accuracy, latency (p50/p99) and
+//! throughput per configuration:
+//!
+//! * `digital`   — pure-rust fp32 engine (paper's digital baseline)
+//! * `photonic`  — CirPTC chip simulator with noise (paper's on-chip
+//!   lookup-mode inference, Fig. 4)
+//! * `xla-aot`   — the AOT HLO artifact (L1 Pallas + L2 jax graph) on PJRT
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example classification_serving
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cirptc::coordinator::worker::{EngineBackend, XlaBackend};
+use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{argmax, Tensor};
+use cirptc::util::cli::Args;
+
+struct RunResult {
+    acc: f64,
+    throughput: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+    confusion: Vec<Vec<u32>>,
+}
+
+fn run_backends(
+    images: &[Tensor],
+    labels: &[i32],
+    classes: usize,
+    backends: Vec<BackendFactory>,
+    max_batch: usize,
+) -> anyhow::Result<RunResult> {
+    let coord = Coordinator::start(
+        backends,
+        BatcherConfig { max_batch, max_wait_us: 1500 },
+    );
+    let t0 = Instant::now();
+    let responses = coord.classify_all(images)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut confusion = vec![vec![0u32; classes]; classes];
+    let mut correct = 0usize;
+    for (r, &y) in responses.iter().zip(labels) {
+        let pred = argmax(&r.logits);
+        confusion[y as usize][pred] += 1;
+        if pred == y as usize {
+            correct += 1;
+        }
+    }
+    let (p50, p99) = coord.metrics.latency_percentiles_us();
+    Ok(RunResult {
+        acc: correct as f64 / images.len() as f64,
+        throughput: images.len() as f64 / wall,
+        p50_us: p50,
+        p99_us: p99,
+        mean_batch: coord.metrics.mean_batch_size(),
+        confusion,
+    })
+}
+
+fn print_result(label: &str, r: &RunResult) {
+    println!(
+        "  {label}  acc={:.4}  throughput={:>7.1} req/s  p50={}µs  \
+         p99={}µs  mean_batch={:.1}",
+        r.acc, r.throughput, r.p50_us, r.p99_us, r.mean_batch
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let workers = args.usize_or("workers", 2);
+    let max_batch = args.usize_or("batch", 8);
+    let limit = args.usize_or("limit", 128);
+    let models: Vec<String> = match args.get("model") {
+        Some(m) => vec![m.to_string()],
+        None => ["synth_cxr", "synth_digits", "synth_textures"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+
+    let chip = ChipDescription::load(&dir.join("chip.json"))?;
+    for model in &models {
+        let manifest = dir.join(format!("models/{model}.json"));
+        if !manifest.exists() {
+            println!("[{model}] missing — run `make train` first");
+            continue;
+        }
+        // two weight bundles: the DPE (hardware-aware) model serves the
+        // photonic path; the digitally-trained circulant baseline serves
+        // the digital / XLA paths (BN calibration is substrate-specific —
+        // see python/compile/recalib.py)
+        let engine = Arc::new(Engine::load(
+            &manifest,
+            &dir.join(format!("models/{model}_dpe.cpt")),
+        )?);
+        let digital_bundle = dir.join(format!("models/{model}_digital.cpt"));
+        let engine_dig = if digital_bundle.exists() {
+            Arc::new(Engine::load(&manifest, &digital_bundle)?)
+        } else {
+            Arc::clone(&engine)
+        };
+        let test = Bundle::load(&dir.join(format!("models/{model}_testset.cpt")))?;
+        let (c, h) = engine.manifest.input_shape();
+        let classes = engine.manifest.classes;
+        let xs = test.get("x")?.as_f32()?;
+        let ys = test.get("y")?.as_i32()?;
+        let n = ys.len().min(limit);
+        let images: Vec<Tensor> = (0..n)
+            .map(|i| {
+                Tensor::new(
+                    &[c, h, h],
+                    xs[i * c * h * h..(i + 1) * c * h * h].to_vec(),
+                )
+            })
+            .collect();
+        let labels = &ys[..n];
+        let (dense, stored) = engine.manifest.param_counts();
+        println!(
+            "\n== {model}: {n} requests, {workers} workers, batch {max_batch} \
+             (params {stored} vs dense {dense}: {:.2}% reduction) ==",
+            100.0 * (1.0 - stored as f64 / dense as f64)
+        );
+
+        // -- digital -------------------------------------------------------
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|_| {
+                let engine = Arc::clone(&engine_dig);
+                Box::new(move || {
+                    Box::new(EngineBackend { engine, mode: Backend::Digital })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as BackendFactory
+            })
+            .collect();
+        let r = run_backends(&images, labels, classes, factories, max_batch)?;
+        print_result("digital ", &r);
+
+        // -- photonic sim (each worker owns an independent chip instance) --
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|i| {
+                let engine = Arc::clone(&engine);
+                let mut d = chip.clone();
+                d.seed ^= i as u64;
+                Box::new(move || {
+                    Box::new(EngineBackend {
+                        engine,
+                        mode: Backend::PhotonicSim(ChipSim::new(d)),
+                    })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as BackendFactory
+            })
+            .collect();
+        let r = run_backends(&images, labels, classes, factories, max_batch)?;
+        print_result("photonic", &r);
+        if classes <= 3 {
+            println!("  photonic confusion matrix: {:?}", r.confusion);
+        }
+
+        // -- XLA AOT artifact (PJRT client built on the worker thread) -----
+        let art = dir.clone();
+        let mname = format!("model_{model}");
+        let chw = (c, h, h);
+        let factory: BackendFactory = Box::new(move || {
+            Box::new(
+                XlaBackend::new(&art, &mname, 8, classes, chw)
+                    .expect("XLA backend"),
+            ) as Box<dyn cirptc::coordinator::InferenceBackend>
+        });
+        let r = run_backends(&images, labels, classes, vec![factory], 8)?;
+        print_result("xla-aot ", &r);
+    }
+    println!("\nclassification_serving OK");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Benchmark-analysis walkthrough (paper Discussion + Figs. S5/S14/S16/S18):
+//! sweeps the analytical models over matrix size and prints the headline
+//! numbers next to the paper's values.
+//!
+//! ```bash
+//! cargo run --release --example scaling_analysis
+//! ```
+
+use cirptc::analysis::spectral::{achievable_bits, required_q, FSR_NM};
+use cirptc::analysis::{AreaModel, LatencyModel, PowerModel, WeightTech};
+use cirptc::arch::CirPtcConfig;
+use cirptc::photonic::waveguide::LossBudget;
+use cirptc::photonic::LAMBDA_NM;
+
+fn cfg(s: usize) -> CirPtcConfig {
+    CirPtcConfig { n: s, m: s, l: 4, fold: 1, f_op: 10e9 }
+}
+
+fn main() {
+    let area = AreaModel::paper();
+    let power = PowerModel::paper();
+    let lat = LatencyModel::paper();
+    let loss = LossBudget::paper();
+
+    println!("== throughput & latency (Eq. 3) ==");
+    for s in [16usize, 48, 64, 128] {
+        let c = cfg(s);
+        println!(
+            "  {s:>3}x{s:<3}  OPS = {:>7.2} TOPS   latency = {:>6.1} ps   \
+             max f_op = {:>5.1} GHz {}",
+            c.ops() / 1e12,
+            lat.latency_s(&c) * 1e12,
+            lat.max_f_op(&c) / 1e9,
+            if lat.clock_feasible(&c) { "(10 GHz ok)" } else { "(!)" }
+        );
+    }
+
+    println!("\n== insertion loss (Fig. S14: linear in size) ==");
+    for s in [8usize, 16, 32, 48, 64, 96] {
+        println!(
+            "  {s:>3}x{s:<3}  CirPTC {:>6.2} dB   uncompressed {:>6.2} dB",
+            loss.cirptc_critical_path_db(s, s, 4),
+            loss.uncompressed_critical_path_db(s, s)
+        );
+    }
+
+    println!("\n== power breakdown & efficiency (Fig. S16) ==");
+    println!(
+        "  {:>7}  {:>8} {:>8} {:>8} {:>8} {:>8}  {:>9} {:>6}",
+        "size", "laser W", "MZM W", "MRR W", "ADC W", "TIA W", "TOPS/W", "laser%"
+    );
+    for s in [16usize, 32, 48, 64, 96, 128] {
+        let c = cfg(s);
+        let b = power.cirptc(&c, WeightTech::ThermoOptic);
+        println!(
+            "  {s:>3}x{s:<3}  {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}  \
+             {:>9.2} {:>5.1}%",
+            b.laser_w,
+            b.input_mzm_w,
+            b.weight_mrr_w,
+            b.adc_w,
+            b.tia_w,
+            power.efficiency_tops_w(&c, WeightTech::ThermoOptic),
+            100.0 * b.laser_fraction()
+        );
+    }
+    println!(
+        "  paper anchors: 9.53 TOPS/W peak @48; laser 43.14% @64; decline \
+         past the knee"
+    );
+
+    println!("\n== computing density ==");
+    println!(
+        "  48x48           {:>6.2} TOPS/mm²   (paper 4.85)",
+        area.computing_density_tops_mm2(&CirPtcConfig::scaled_48())
+    );
+    println!(
+        "  48x48 r=4 fold  {:>6.2} TOPS/mm²   (paper 5.48-5.84)",
+        area.computing_density_tops_mm2(&CirPtcConfig::folded_48())
+    );
+
+    println!("\n== spectral folding (Fig. S18) ==");
+    let folded = CirPtcConfig::folded_48();
+    let base_unc =
+        power.uncompressed_efficiency_tops_w(&CirPtcConfig::scaled_48(),
+                                             WeightTech::ThermoOptic);
+    let e_fold = power.efficiency_tops_w(&folded, WeightTech::ThermoOptic);
+    let e_moscap = power.efficiency_tops_w(&folded, WeightTech::Moscap);
+    println!(
+        "  r=4 thermo   {e_fold:>6.2} TOPS/W = {:.2}x uncompressed  \
+         (paper 17.13 / 6.87x)",
+        e_fold / base_unc
+    );
+    println!(
+        "  r=4 MOSCAP   {e_moscap:>6.2} TOPS/W                    \
+         (paper 47.94)"
+    );
+    let b = power.cirptc(&folded, WeightTech::ThermoOptic);
+    println!(
+        "  folded breakdown: MRR thermal {:.2} W dominates (paper Fig. S18b): \
+         laser {:.2} / ADC {:.2} / TIA {:.2} / MZM {:.2}",
+        b.weight_mrr_w, b.laser_w, b.adc_w, b.tia_w, b.input_mzm_w
+    );
+
+    println!("\n== spectral scalability (Fig. S5) ==");
+    for bits in [4u32, 6, 8] {
+        let q = required_q(48, bits, FSR_NM, LAMBDA_NM);
+        println!(
+            "  N=48, {bits}-bit weights  ->  required Q = {q:.3e}  \
+             (check: achievable {:.2} bits)",
+            achievable_bits(48, q, FSR_NM, LAMBDA_NM)
+        );
+    }
+    println!("  paper anchor: Q = 2.49e5 at N=48, 6-bit");
+    println!("\nscaling_analysis OK");
+}

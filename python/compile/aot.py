@@ -1,0 +1,167 @@
+"""AOT lowering: jax → HLO *text* → ``artifacts/*.hlo.txt``.
+
+The interchange format is HLO text, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (all loaded by ``rust/src/runtime``):
+
+* ``bcm_{M}x{N}_b{B}.hlo.txt``      — Pallas block-circulant matmul kernel
+  (compressed (P,Q,l) weights + (N,B) inputs as parameters).
+* ``crossbar_{M}x{N}_b{B}.hlo.txt`` — deterministic CirPTC forward (4/6-bit
+  quantization + Γ crosstalk + dark), the lookup-mode serving graph.
+* ``gemm_{M}x{N}_b{B}.hlo.txt``     — dense matmul baseline.
+* ``model_{dataset}.hlo.txt``       — full StrC-ONN digital inference graph
+  with trained weights baked in (random-init fallback before training has
+  run, so ``make artifacts`` works from a clean tree).
+* ``model_{dataset}_chip.hlo.txt``  — same network through the
+  deterministic device path (true Γ, quantization, tilt; noise is added by
+  the rust simulator on top — artifacts stay reproducible).
+
+Python runs ONLY here (build time); the rust binary is self-contained
+afterwards.  Usage: ``python -m compile.aot --out ../artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import chip as chip_mod
+from . import data as data_mod
+from . import export, model
+from .kernels import ref
+from .kernels.circulant import bcm_matmul
+from .kernels.crossbar import crossbar_forward
+from .train import true_dpe_from_chip
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: baked model weights must survive the text
+    # round-trip (the default elides them as '{...}', which the rust-side
+    # parser would reject or silently zero).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(out: Path, name: str, text: str) -> None:
+    path = out / f"{name}.hlo.txt"
+    path.write_text(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+# ---------------------------------------------------------------------------
+# kernel artifacts
+# ---------------------------------------------------------------------------
+
+BCM_SIZES = [
+    # (P, Q, l, B)
+    (4, 4, 4, 8),        # 16x16  — the fabricated order-4 prototype scaled
+    (12, 12, 4, 16),     # 48x48  — the paper's peak-efficiency size
+    (16, 16, 4, 16),     # 64x64  — past the laser-power knee (Fig. S16)
+]
+
+
+def export_kernels(out: Path) -> None:
+    gamma = ref.crosstalk_matrix(4, chip_mod.ChipParams().eps)
+    for (p, q, l, b) in BCM_SIZES:
+        m, n = p * l, q * l
+        wspec = jax.ShapeDtypeStruct((p, q, l), jnp.float32)
+        xspec = jax.ShapeDtypeStruct((n, b), jnp.float32)
+
+        fn = lambda w, x: (bcm_matmul(w, x),)
+        _write(out, f"bcm_{m}x{n}_b{b}",
+               to_hlo_text(jax.jit(fn).lower(wspec, xspec)))
+
+        cb = lambda w, x: (crossbar_forward(
+            w, x, gamma, dark=chip_mod.ChipParams().dark),)
+        _write(out, f"crossbar_{m}x{n}_b{b}",
+               to_hlo_text(jax.jit(cb).lower(wspec, xspec)))
+
+        dspec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+        ge = lambda w, x: (w @ x,)
+        _write(out, f"gemm_{m}x{n}_b{b}",
+               to_hlo_text(jax.jit(ge).lower(dspec, xspec)))
+
+
+# ---------------------------------------------------------------------------
+# model artifacts
+# ---------------------------------------------------------------------------
+
+def _load_or_init(out: Path, name: str, cfgs, variant: str = "dpe"):
+    """Trained weights if train.py has run, else deterministic random init.
+
+    variant "digital" -> the digitally-trained circulant baseline
+    (train_digital.py); "dpe" -> the hardware-aware-trained model whose BN
+    stats are device-calibrated.  The digital inference graph must carry
+    the former, the chip graph the latter (compile.recalib docstring).
+    """
+    bundle = out / "models" / f"{name}_{variant}.cpt"
+    params, state = model.init_params(jax.random.PRNGKey(0), cfgs)
+    if bundle.exists():
+        tensors = export.read_bundle(bundle)
+        for lname in list(params):
+            for k in list(params[lname]):
+                params[lname][k] = jnp.asarray(tensors[f"{lname}.{k}"])
+        for lname in list(state):
+            for k in list(state[lname]):
+                state[lname][k] = jnp.asarray(tensors[f"{lname}.state.{k}"])
+        src = f"trained ({variant})"
+    else:
+        src = "random-init"
+    print(f"  model {name}: {src} weights")
+    return params, state
+
+
+def export_models(out: Path, batch: int = 8) -> None:
+    chp = chip_mod.make_chip(chip_mod.ChipParams())
+    dpe_det = true_dpe_from_chip(chp, noisy=False)
+    for name in data_mod.DATASETS:
+        cfgs = model.net_config(name, "circ")
+        c, h = (3, 32) if name != "synth_cxr" else (1, 64)
+        xspec = jax.ShapeDtypeStruct((batch, c, h, h), jnp.float32)
+
+        params, state = _load_or_init(out, name, cfgs, "digital")
+        dig = lambda x: (model.apply(params, state, cfgs, x,
+                                     mode="digital", train=False)[0],)
+        _write(out, f"model_{name}", to_hlo_text(jax.jit(dig).lower(xspec)))
+
+        params, state = _load_or_init(out, name, cfgs, "dpe")
+        chipf = lambda x: (model.apply(params, state, cfgs, x, mode="device",
+                                       dpe=dpe_det, train=False)[0],)
+        _write(out, f"model_{name}_chip",
+               to_hlo_text(jax.jit(chipf).lower(xspec)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-models", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    export_kernels(out)
+    if not args.skip_models:
+        export_models(out)
+
+    # chip description for the rust simulator (idempotent with train.py)
+    chp = chip_mod.make_chip(chip_mod.ChipParams())
+    (out / "chip.json").write_text(json.dumps(chp.export_dict(), indent=1))
+    # manifest of everything produced
+    manifest = sorted(p.name for p in out.glob("*.hlo.txt"))
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"done: {len(manifest)} HLO artifacts in {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Differentiable photonic-chip model (jnp mirror of ``rust/src/photonic``).
+
+The paper characterises the fabricated CirPTC by fitting physical device
+models to measurements (Fig. 2 d-f) and then drives the DPE from those fits.
+We have no chip, so this module *is* the chip (DESIGN.md §2): a
+``PhotonicChip`` instance holds hidden, seeded nonideality parameters
+(spectral crosstalk, per-wavelength PD responsivity tilt, dark current,
+noise magnitudes, fabrication variance of the MRR transmission peaks) and
+exposes the same interfaces the real testbed would:
+
+* ``forward(w, x, key)``   — "run the chip": quantized, crosstalk-mixed,
+  noisy BCM matmul (lookup-mode ground truth; mirrored bit-for-bit by the
+  deterministic part of the rust simulator).
+* ``sweep_lut(key)``       — calibration sweep producing (x, y) pairs, the
+  stand-in for the paper's measured lookup table.
+* ``fit_gamma(lut)``       — least-squares fit of the effective mixing
+  operator Γ from the LUT (paper Methods Eq. 5), used by the DPE.
+
+Everything is pure-functional over a frozen parameter dataclass so it can
+be jitted and vmapped inside training loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipParams:
+    """Hidden ("as-fabricated") parameters of one CirPTC instance."""
+    l: int = 4                 # circulant block order (paper: order-4)
+    eps: float = 0.02          # adjacent-channel spectral crosstalk
+    dark: float = 0.015        # PD dark current, normalised output units
+    sigma_rel: float = 0.01    # relative (signal-proportional) noise
+    sigma_abs: float = 0.003   # absolute (thermal/shot floor) noise
+    resp_tilt: float = 0.03    # per-wavelength PD responsivity tilt (peak-peak)
+    fab_sigma: float = 0.01    # MRR peak-transmission fabrication variance
+    w_bits: int = 6            # weight DAC resolution (paper: 6-bit)
+    x_bits: int = 4            # input DAC resolution (paper: 4-bit)
+    seed: int = 7
+
+
+def make_chip(params: ChipParams) -> "PhotonicChip":
+    return PhotonicChip(params)
+
+
+class PhotonicChip:
+    """One fabricated CirPTC instance (see module docstring)."""
+
+    def __init__(self, params: ChipParams):
+        self.p = params
+        l = params.l
+        rng = np.random.default_rng(params.seed)
+        # true crosstalk operator: nominal Lorentzian-leakage mixing plus a
+        # random asymmetric perturbation from fabrication variance
+        gamma = np.asarray(ref.crosstalk_matrix(l, params.eps))
+        pert = rng.normal(0.0, params.fab_sigma / 2, (l, l))
+        pert -= np.diag(np.diag(pert))
+        self.gamma_true = jnp.asarray(gamma + pert, dtype=jnp.float32)
+        # per-wavelength responsivity tilt (PD + MRR peak variance), the
+        # wavelength-dependent response the paper flags for spectral folding
+        tilt = np.linspace(-params.resp_tilt / 2, params.resp_tilt / 2, l)
+        tilt = tilt + rng.normal(0.0, params.fab_sigma, l)
+        self.resp = jnp.asarray(1.0 + tilt, dtype=jnp.float32)
+
+    # -- device-domain transfer -------------------------------------------
+
+    def encode_weights(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Quantize + apply per-wavelength responsivity to (P, Q, l) weights.
+
+        Element ``w[p, q, s]`` rides wavelength ``s`` of its block, so the
+        responsivity tilt multiplies along the last axis.
+        """
+        wq = ref.quantize_ref(w, self.p.w_bits) if self.p.w_bits else w
+        return wq * self.resp[None, None, :]
+
+    def encode_inputs(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Quantize inputs and mix WDM channels with the true Γ."""
+        xq = ref.quantize_ref(x, self.p.x_bits) if self.p.x_bits else x
+        q = x.shape[0] // self.p.l
+        xb = xq.reshape(q, self.p.l, -1)
+        xb = jnp.einsum("ij,qjb->qib", self.gamma_true, xb)
+        return xb.reshape(x.shape)
+
+    # -- chip execution ----------------------------------------------------
+
+    def forward(self, w: jnp.ndarray, x: jnp.ndarray,
+                key: jax.Array | None = None) -> jnp.ndarray:
+        """Run one BCM matmul "on chip" (lookup-mode ground truth).
+
+        w: (P, Q, l) in [0, 1];  x: (N, B) in [0, 1];  returns (M, B).
+        """
+        y = ref.bcm_matmul_ref(self.encode_weights(w), self.encode_inputs(x))
+        y = y + self.p.dark
+        if key is not None:
+            k1, k2 = jax.random.split(key)
+            y = y + (jnp.abs(y) * self.p.sigma_rel
+                     * jax.random.normal(k1, y.shape)
+                     + self.p.sigma_abs * jax.random.normal(k2, y.shape))
+        return y
+
+    # -- calibration -------------------------------------------------------
+
+    def sweep_lut(self, key: jax.Array, n_sweep: int = 256,
+                  q_blocks: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Calibration sweep (the paper's LUT measurement).
+
+        Programs ``n_sweep`` random (w, x) pairs on a (1, q_blocks, l) tile
+        and records chip outputs.  Returns (ws, xs, ys).
+        """
+        l = self.p.l
+        kw, kx, kn = jax.random.split(key, 3)
+        ws = jax.random.uniform(kw, (n_sweep, 1, q_blocks, l))
+        xs = jax.random.uniform(kx, (n_sweep, q_blocks * l, 1))
+        def run(w, x, k):
+            return self.forward(w, x, k)
+        keys = jax.random.split(kn, n_sweep)
+        ys = jax.vmap(run)(ws, xs, keys)
+        return ws, xs, ys
+
+    def fit_gamma(self, lut: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Least-squares Γ/gain/offset estimate from a calibration LUT.
+
+        Solves paper Eq. (5): find Γ (l×l), per-wavelength gain ĝ and dark
+        offset d̂ minimising ``|y_meas - ĝ∘(W Γ x) - d̂|²`` over the sweep.
+        Implementation: because ``y = W Γ x`` is linear in Γ for fixed
+        (w, x), stack the sweep into a design matrix and solve with lstsq.
+        """
+        ws, xs, ys = lut
+        n, _, q, l = ws.shape
+        # design: y_i = sum_{jk} Γ[j,k] * (W_i e_j)(e_k^T x_i)  + d
+        rows = []
+        targ = []
+        for i in range(n):
+            wq = ref.quantize_ref(ws[i], self.p.w_bits)
+            xq = ref.quantize_ref(xs[i], self.p.x_bits)
+            wd = ref.expand_bcm(wq)                       # (l, q*l)
+            xb = np.asarray(xq).reshape(q, l)
+            # A[r, (j,k)] = sum_q wd[r, q*l + j] * xb[q, k]
+            wblk = np.asarray(wd).reshape(l, q, l)
+            a = np.einsum("rqj,qk->rjk", wblk, xb).reshape(l, l * l)
+            rows.append(np.concatenate([a, np.eye(l)], axis=1))
+            targ.append(np.asarray(ys[i]).reshape(l))
+        a = np.concatenate(rows, axis=0)
+        b = np.concatenate(targ, axis=0)
+        sol, *_ = np.linalg.lstsq(a, b, rcond=None)
+        gamma_hat = jnp.asarray(sol[: l * l].reshape(l, l), dtype=jnp.float32)
+        dark_hat = jnp.asarray(sol[l * l:], dtype=jnp.float32)
+        return gamma_hat, dark_hat, jnp.asarray(self.resp)
+
+    def export_dict(self) -> dict:
+        """Serializable chip description (consumed by the rust simulator)."""
+        return {
+            "l": self.p.l,
+            "eps": self.p.eps,
+            "dark": self.p.dark,
+            "sigma_rel": self.p.sigma_rel,
+            "sigma_abs": self.p.sigma_abs,
+            "w_bits": self.p.w_bits,
+            "x_bits": self.p.x_bits,
+            "seed": self.p.seed,
+            "gamma_true": np.asarray(self.gamma_true).tolist(),
+            "resp": np.asarray(self.resp).tolist(),
+        }

@@ -1,0 +1,146 @@
+"""Synthetic datasets standing in for SVHN / CIFAR-10 / COVID-QU-Ex.
+
+The paper's datasets may be unavailable offline, so per DESIGN.md §2 we
+generate deterministic synthetic sets with the *same tensor shapes and task
+structure*: a 10-class digit-glyph set (SVHN stand-in), a 10-class oriented-
+texture set (CIFAR-10 stand-in), and a 3-class chest-X-ray-like set
+(COVID-QU-Ex stand-in: normal / diffuse / focal).  What we reproduce from
+Fig. 4 is the *ordering* of configurations (fp32 GEMM ≥ digital circulant ≥
+CirPTC+DPE ≫ CirPTC w/o DPE), which depends on the method, not the corpus.
+
+All generators are pure functions of a seed; images are float32 in [0, 1],
+layout NCHW.  The same generators are re-implemented in rust
+(rust/src/data/) with identical constants and verified against golden files
+exported by ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 5x7 bitmap glyphs for the digit dataset (classic calculator font).
+_DIGIT_GLYPHS = {
+    0: ["11111", "10001", "10001", "10001", "10001", "10001", "11111"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["11111", "00001", "00001", "11111", "10000", "10000", "11111"],
+    3: ["11111", "00001", "00001", "01111", "00001", "00001", "11111"],
+    4: ["10001", "10001", "10001", "11111", "00001", "00001", "00001"],
+    5: ["11111", "10000", "10000", "11111", "00001", "00001", "11111"],
+    6: ["11111", "10000", "10000", "11111", "10001", "10001", "11111"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["11111", "10001", "10001", "11111", "10001", "10001", "11111"],
+    9: ["11111", "10001", "10001", "11111", "00001", "00001", "11111"],
+}
+
+
+def synth_digits(n_train: int = 2048, n_test: int = 512, seed: int = 1,
+                 size: int = 32) -> dict:
+    """SVHN stand-in: colored digit glyphs on textured backgrounds."""
+    rng = np.random.default_rng(seed)
+    glyphs = np.zeros((10, 7, 5), np.float32)
+    for d, rows in _DIGIT_GLYPHS.items():
+        glyphs[d] = np.array([[int(ch) for ch in row] for row in rows])
+
+    def make(n):
+        y = rng.integers(0, 10, n)
+        x = rng.uniform(0.0, 0.35, (n, 3, size, size)).astype(np.float32)
+        for i in range(n):
+            scale = rng.integers(2, 4)                  # glyph magnification
+            g = np.kron(glyphs[y[i]], np.ones((scale, scale), np.float32))
+            gh, gw = g.shape
+            r0 = rng.integers(0, size - gh + 1)
+            c0 = rng.integers(0, size - gw + 1)
+            color = rng.uniform(0.6, 1.0, 3).astype(np.float32)
+            for c in range(3):
+                patch = x[i, c, r0:r0 + gh, c0:c0 + gw]
+                x[i, c, r0:r0 + gh, c0:c0 + gw] = np.where(
+                    g > 0, color[c], patch)
+        x += rng.normal(0.0, 0.05, x.shape).astype(np.float32)
+        return np.clip(x, 0.0, 1.0), y.astype(np.int32)
+
+    xtr, ytr = make(n_train)
+    xte, yte = make(n_test)
+    return {"train_x": xtr, "train_y": ytr, "test_x": xte, "test_y": yte,
+            "classes": 10, "name": "synth_digits"}
+
+
+def synth_textures(n_train: int = 2048, n_test: int = 512, seed: int = 2,
+                   size: int = 32) -> dict:
+    """CIFAR-10 stand-in: 10 oriented/frequency Gabor-texture classes."""
+    rng = np.random.default_rng(seed)
+    thetas = np.pi * np.arange(5) / 5.0                 # 5 orientations
+    freqs = np.array([2.0, 4.0])                        # 2 spatial freqs
+    yy, xx = np.mgrid[0:size, 0:size] / size
+
+    def make(n):
+        y = rng.integers(0, 10, n)
+        x = np.zeros((n, 3, size, size), np.float32)
+        for i in range(n):
+            th = thetas[y[i] % 5] + rng.normal(0, 0.08)
+            f = freqs[y[i] // 5] * rng.uniform(0.9, 1.1)
+            phase = rng.uniform(0, 2 * np.pi)
+            u = np.cos(th) * xx + np.sin(th) * yy
+            base = 0.5 + 0.45 * np.sin(2 * np.pi * f * u + phase)
+            tint = rng.uniform(0.7, 1.0, 3)
+            for c in range(3):
+                x[i, c] = base * tint[c]
+        x += rng.normal(0.0, 0.08, x.shape).astype(np.float32)
+        return np.clip(x, 0.0, 1.0).astype(np.float32), y.astype(np.int32)
+
+    xtr, ytr = make(n_train)
+    xte, yte = make(n_test)
+    return {"train_x": xtr, "train_y": ytr, "test_x": xte, "test_y": yte,
+            "classes": 10, "name": "synth_textures"}
+
+
+def synth_cxr(n_train: int = 1536, n_test: int = 384, seed: int = 3,
+              size: int = 64) -> dict:
+    """COVID-QU-Ex stand-in: 3-class grayscale chest-X-ray-like images.
+
+    class 0 "normal"  — clear lung fields;
+    class 1 "covid"   — diffuse bilateral ground-glass haze;
+    class 2 "pneumonia" — focal unilateral opacities.
+    """
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:size, 0:size] / size
+
+    def lung_fields():
+        # two elliptic bright regions on a dark thorax
+        img = 0.15 + 0.1 * yy
+        for cx in (0.32, 0.68):
+            d = ((xx - cx) / 0.18) ** 2 + ((yy - 0.52) / 0.32) ** 2
+            img = img + 0.55 * np.exp(-d * 1.5)
+        return img
+
+    def make(n):
+        y = rng.integers(0, 3, n)
+        x = np.zeros((n, 1, size, size), np.float32)
+        for i in range(n):
+            img = lung_fields() * rng.uniform(0.9, 1.1)
+            if y[i] == 1:                                # diffuse haze
+                haze = rng.uniform(0.12, 0.25)
+                u = np.cos(rng.uniform(0, np.pi)) * xx + \
+                    np.sin(rng.uniform(0, np.pi)) * yy
+                img += haze * (0.6 + 0.4 * np.sin(2 * np.pi * 3 * u))
+            elif y[i] == 2:                              # focal opacities
+                for _ in range(rng.integers(1, 4)):
+                    cx = rng.uniform(0.2, 0.8)
+                    cy = rng.uniform(0.3, 0.75)
+                    rad = rng.uniform(0.05, 0.12)
+                    d = ((xx - cx) ** 2 + (yy - cy) ** 2) / rad ** 2
+                    img += 0.35 * np.exp(-d)
+            img += rng.normal(0.0, 0.04, img.shape)
+            x[i, 0] = np.clip(img, 0.0, 1.0)
+        return x, y.astype(np.int32)
+
+    xtr, ytr = make(n_train)
+    xte, yte = make(n_test)
+    return {"train_x": xtr, "train_y": ytr, "test_x": xte, "test_y": yte,
+            "classes": 3, "name": "synth_cxr"}
+
+
+DATASETS = {
+    "synth_digits": synth_digits,
+    "synth_textures": synth_textures,
+    "synth_cxr": synth_cxr,
+}

@@ -1,0 +1,131 @@
+"""Differentiable PIC Estimator (DPE) — paper Methods, "Hardware-Aware Training".
+
+Two modes, exactly as the paper defines them:
+
+* **lookup mode** — inference against the (non-differentiable) chip
+  response.  Here that is :meth:`chip.PhotonicChip.forward`; on the rust
+  side it is the simulator.
+* **differentiable mode** — a surrogate ``Y'(w, x) = W · Γ̂ x`` (paper's
+  ``W · Γx``) with Γ̂, dark offset and responsivity fitted from the
+  calibration LUT, plus straight-through-estimator quantization and dynamic
+  Gaussian noise injection, so gradients flow to both ``w`` and ``x`` while
+  the forward pass statistically matches the chip.
+
+The key identity used to keep training fast: the per-block mixing Γ acting
+on length-``l`` input subgroups equals a right-multiplication of the dense
+weight by ``Γ_big = blockdiag(Γ, ..., Γ)``; and the responsivity tilt is a
+row-space modulation of the compressed weights.  Both therefore fold into
+an *effective dense weight*, so hardware-aware training runs at the speed
+of ordinary dense training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def ste_quantize(x: jnp.ndarray, bits: int, lo: float = 0.0,
+                 hi: float = 1.0) -> jnp.ndarray:
+    """Straight-through-estimator quantization: forward quantizes,
+    backward is identity (gradient of clip outside [lo, hi] is zero)."""
+    xc = jnp.clip(x, lo, hi)
+    q = ref.quantize_ref(xc, bits, lo, hi)
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+@dataclasses.dataclass(frozen=True)
+class DpeParams:
+    """Fitted chip estimate + training-noise configuration."""
+    l: int
+    gamma_hat: jnp.ndarray       # (l, l) fitted mixing operator
+    dark_hat: jnp.ndarray        # (l,) fitted dark offsets (per block-row λ)
+    resp_hat: jnp.ndarray        # (l,) fitted responsivity tilt
+    w_bits: int = 6
+    x_bits: int = 4
+    noise_rel: float = 0.01      # dynamic noise injection magnitudes
+    noise_abs: float = 0.003
+
+    def gamma_big(self, q: int) -> jnp.ndarray:
+        """blockdiag(Γ̂, ..., Γ̂) of size (q*l, q*l)."""
+        eye = jnp.eye(q, dtype=self.gamma_hat.dtype)
+        return jnp.kron(eye, self.gamma_hat)
+
+
+def ideal_dpe(l: int, w_bits: int = 0, x_bits: int = 0) -> DpeParams:
+    """A DPE describing a perfect chip (identity Γ, no dark/tilt/noise).
+    With ``w_bits = x_bits = 0`` this reduces circulant training to plain
+    digital circulant training — used for the Fig. 4e digital baselines."""
+    return DpeParams(l=l, gamma_hat=jnp.eye(l), dark_hat=jnp.zeros(l),
+                     resp_hat=jnp.ones(l), w_bits=w_bits, x_bits=x_bits,
+                     noise_rel=0.0, noise_abs=0.0)
+
+
+def effective_dense_weight(w: jnp.ndarray, dpe: DpeParams,
+                           quantize: bool = True) -> jnp.ndarray:
+    """Fold quantization (STE), responsivity and Γ̂ into a dense (M, N) weight.
+
+    ``w`` is the compressed (P, Q, l) *device-domain* weight in [0, 1].
+    Returns ``diag-resp(expand(q(w))) @ Γ_big`` so that ``W_eff @ x``
+    reproduces the DPE surrogate ``resp ∘ (W Γ̂ x)``.
+    """
+    p, q, l = w.shape
+    wq = ste_quantize(w, dpe.w_bits) if (quantize and dpe.w_bits) else w
+    wr = wq * dpe.resp_hat[None, None, :]
+    dense = ref.expand_bcm(wr)                        # (P*l, Q*l)
+    return dense @ dpe.gamma_big(q)
+
+
+def dpe_forward(w: jnp.ndarray, x: jnp.ndarray, dpe: DpeParams,
+                key: jax.Array | None = None) -> jnp.ndarray:
+    """Differentiable-mode surrogate of one on-chip BCM matmul.
+
+    w: (P, Q, l) in [0, 1];  x: (N, B) in [0, 1];  returns (M, B) with the
+    dark offset *included* (sign-split post-processing subtracts it; see
+    :func:`signed_dpe_forward`).
+    """
+    p, q, l = w.shape
+    xq = ste_quantize(x, dpe.x_bits) if dpe.x_bits else x
+    w_eff = effective_dense_weight(w, dpe)
+    y = w_eff @ xq + jnp.tile(dpe.dark_hat, p)[:, None]
+    if key is not None and (dpe.noise_rel > 0 or dpe.noise_abs > 0):
+        k1, k2 = jax.random.split(key)
+        y = y + (jnp.abs(jax.lax.stop_gradient(y)) * dpe.noise_rel
+                 * jax.random.normal(k1, y.shape)
+                 + dpe.noise_abs * jax.random.normal(k2, y.shape))
+    return y
+
+
+def split_signed(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-range weights -> (w_pos, w_neg, scale) in the device domain.
+
+    Paper "On-chip image processing": amplitude-tuned modulators are
+    positive-only, so W is split by sign, each half run separately and
+    subtracted in post-processing (time-domain multiplexing).  The shared
+    ``scale`` maps device units back to weight units.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    wp = jnp.clip(w, 0.0, None) / scale
+    wn = jnp.clip(-w, 0.0, None) / scale
+    return wp, wn, scale
+
+
+def signed_dpe_forward(w: jnp.ndarray, x: jnp.ndarray, dpe: DpeParams,
+                       key: jax.Array | None = None) -> jnp.ndarray:
+    """Full-range BCM matmul through the positive-only surrogate.
+
+    Runs the positive and negative halves (two chip passes, paper's
+    time-multiplexing), subtracts — cancelling the dark offset exactly, as
+    the paper notes — and rescales to weight units.
+    """
+    wp, wn, scale = split_signed(w)
+    kp = kn = None
+    if key is not None:
+        kp, kn = jax.random.split(key)
+    yp = dpe_forward(wp, x, dpe, kp)
+    yn = dpe_forward(wn, x, dpe, kn)
+    return (yp - yn) * scale

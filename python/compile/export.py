@@ -1,0 +1,94 @@
+"""Tensor/manifest export: the python→rust weight interchange.
+
+No serde/npz on the rust side (offline vendor set), so we define a tiny
+binary tensor-bundle format, ``CPT1``, implemented symmetrically here and
+in ``rust/src/data/bundle.rs``:
+
+    magic   b"CPT1"
+    u32     n_tensors
+    repeat n_tensors:
+        u32     name_len;  name bytes (utf-8)
+        u8      dtype      (0 = f32, 1 = i32)
+        u8      ndim
+        u32[n]  dims
+        bytes   data (little-endian, C order)
+
+plus a JSON manifest per model describing layer configs (parsed by the
+hand-rolled JSON reader in ``rust/src/util/json.rs``).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+MAGIC = b"CPT1"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_bundle(path: str | Path, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a named-tensor bundle in CPT1 format (sorted by name)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_bundle(path: str | Path) -> Dict[str, np.ndarray]:
+    """Read a CPT1 bundle (round-trip check for :func:`write_bundle`)."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        out = {}
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", f.read(4))
+            name = f.read(nl).decode()
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            dtype = np.float32 if dt == 0 else np.int32
+            count = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(count * 4), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+        return out
+
+
+def model_tensors(params: dict, state: dict) -> Dict[str, np.ndarray]:
+    """Flatten model params/state pytrees into bundle names."""
+    out: Dict[str, np.ndarray] = {}
+    for lname, p in params.items():
+        for k, v in p.items():
+            out[f"{lname}.{k}"] = np.asarray(v)
+    for lname, s in state.items():
+        for k, v in s.items():
+            out[f"{lname}.state.{k}"] = np.asarray(v)
+    return out
+
+
+def write_manifest(path: str | Path, cfgs: List, meta: dict) -> None:
+    """JSON manifest of the layer stack + metadata for the rust engine."""
+    layers = []
+    for cfg in cfgs:
+        layers.append({
+            "kind": cfg.kind, "cin": cfg.cin, "cout": cfg.cout, "k": cfg.k,
+            "pool": cfg.pool, "arch": cfg.arch, "l": cfg.l,
+            "act_scale": cfg.act_scale,
+        })
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"layers": layers, **meta}, indent=1))

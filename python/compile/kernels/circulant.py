@@ -1,0 +1,141 @@
+"""L1 Pallas kernel: block-circulant matmul (the CirPTC compute hot-spot).
+
+TPU mapping of the paper's photonic WDM fan-out (DESIGN.md §3): the kernel
+reads only the *compressed* ``(P, Q, l)`` primary vectors from HBM — an
+``l``-fold reduction in weight traffic, the memory-side analogue of the
+paper's ``l``-fold reduction in active modulators — expands each circulant
+block to dense form *inside VMEM* with an iota-based gather, and feeds the
+MXU with one ``(l, N) @ (N, Bt)`` matmul per grid step.
+
+The grid is ``(P, B / Bt)``: one program instance per block-row of the BCM
+per batch tile, mirroring how each CirPTC output column's photodiode sums a
+full row of the crossbar per clock cycle.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); see DESIGN.md §8 for the real-TPU VMEM/MXU estimate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _expand_rows(wb: jnp.ndarray, l: int) -> jnp.ndarray:
+    """(Q, l) primary vectors -> (l, Q*l) dense block-row of the BCM.
+
+    Uses broadcasted iota (TPU-friendly: no 1-D iota) to build the circulant
+    gather table ``idx[r, c] = (c - r) mod l`` from paper Eq. (1), then
+    one-hot matmul instead of dynamic gather — MXU-mappable and supported in
+    both interpret and compiled modes.
+    """
+    q = wb.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    idx = (cols - rows) % l                          # (l, l)
+    # one-hot over the source index: onehot[r, c, s] = (idx[r,c] == s)
+    src = lax.broadcasted_iota(jnp.int32, (l, l, l), 2)
+    onehot = (idx[:, :, None] == src).astype(wb.dtype)
+    # expanded[q, r, c] = sum_s onehot[r, c, s] * wb[q, s]
+    expanded = jnp.einsum("rcs,qs->qrc", onehot, wb)
+    # block-row layout: rows r, concatenated over q on the column axis
+    return expanded.transpose(1, 0, 2).reshape(l, q * l)
+
+
+def _bcm_kernel(w_ref, x_ref, o_ref, *, l: int):
+    """One (block-row p, batch-tile b) program instance."""
+    wb = w_ref[0]                                    # (Q, l) primary vectors
+    row = _expand_rows(wb, l)                        # (l, Q*l) in VMEM
+    o_ref[...] = jnp.dot(row, x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def bcm_matmul(w: jnp.ndarray, x: jnp.ndarray, *, batch_tile: int = 0,
+               interpret: bool = True) -> jnp.ndarray:
+    """Block-circulant matmul ``y = expand(w) @ x`` via Pallas.
+
+    Args:
+      w: ``(P, Q, l)`` compressed BCM (primary row vectors, paper Eq. 1).
+      x: ``(Q*l, B)`` input batch.
+      batch_tile: batch tile width ``Bt`` (0 = whole batch in one tile).
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      ``(P*l, B)`` output.
+    """
+    p, q, l = w.shape
+    n, b = x.shape
+    assert n == q * l, f"x rows {n} != Q*l {q * l}"
+    bt = batch_tile if batch_tile and b % batch_tile == 0 else b
+    grid = (p, b // bt)
+    return pl.pallas_call(
+        functools.partial(_bcm_kernel, l=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, l), lambda i, j: (i, 0, 0)),   # compressed row p
+            pl.BlockSpec((n, bt), lambda i, j: (0, j)),        # batch tile
+        ],
+        out_specs=pl.BlockSpec((l, bt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p * l, b), x.dtype),
+        interpret=interpret,
+    )(w, x)
+
+
+def _bcm_fft_kernel(fw_re_ref, fw_im_ref, x_ref, o_ref, *, l: int):
+    """FFT-domain variant (paper Eq. 2): weights arrive pre-transformed.
+
+    The host passes ``FFT(first-column)`` split into re/im planes (PJRT CPU
+    handles complex, but real planes keep the artifact dtype-uniform).  The
+    kernel does the per-block spectral product and inverse DFT via two real
+    matmuls against precomputed DFT bases — all MXU-shaped.
+    """
+    qsize = x_ref.shape[0] // l
+    k = lax.broadcasted_iota(jnp.float32, (l, l), 0)
+    nn = lax.broadcasted_iota(jnp.float32, (l, l), 1)
+    ang = 2.0 * jnp.pi * k * nn / l
+    dft_re, dft_im = jnp.cos(ang), -jnp.sin(ang)
+    xb = x_ref[...].reshape(qsize, l, -1)
+    fx_re = jnp.einsum("kn,qnb->qkb", dft_re, xb)
+    fx_im = jnp.einsum("kn,qnb->qkb", dft_im, xb)
+    fw_re, fw_im = fw_re_ref[0], fw_im_ref[0]        # (Q, l)
+    fy_re = jnp.einsum("qk,qkb->kb", fw_re, fx_re) - jnp.einsum(
+        "qk,qkb->kb", fw_im, fx_im)
+    fy_im = jnp.einsum("qk,qkb->kb", fw_re, fx_im) + jnp.einsum(
+        "qk,qkb->kb", fw_im, fx_re)
+    # inverse DFT, real part: y[n] = (1/l) sum_k re(F[k] e^{+i 2pi kn/l})
+    y = (jnp.einsum("kn,kb->nb", dft_re, fy_re) +
+         jnp.einsum("kn,kb->nb", dft_im, fy_im)) / l
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcm_matmul_fft(w: jnp.ndarray, x: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """FFT-path block-circulant matmul (paper Eq. 2) as a Pallas kernel.
+
+    Pre-transforms the compressed weights on the host side of the trace
+    (fused into the same HLO), then runs the spectral kernel per block-row.
+    """
+    p, q, l = w.shape
+    n, b = x.shape
+    assert n == q * l
+    col = jnp.roll(w[:, :, ::-1], 1, axis=-1)        # first columns
+    fw = jnp.fft.fft(col, axis=-1)
+    fw_re = jnp.real(fw).astype(x.dtype)
+    fw_im = jnp.imag(fw).astype(x.dtype)
+    return pl.pallas_call(
+        functools.partial(_bcm_fft_kernel, l=l),
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, q, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p * l, b), x.dtype),
+        interpret=interpret,
+    )(fw_re, fw_im, x)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: im2col patch extraction (paper Fig. 1a).
+
+Transforms a ``(C, H, W)`` image into the ``(C*k*k, OH*OW)`` patch matrix
+that turns convolution into the BCM matmuls CirPTC executes.  The grid is
+``(OH,)`` — one program instance per output row, the unit at which the
+paper's FPGA streams sliding-window vectors to the chip.
+
+Stride 1 only (all kernels in the paper's networks are stride-1; pooling
+provides downsampling).  ``k`` and ``C`` are static, so the gather unrolls
+into ``C*k*k`` dynamic row slices; windows overlap between grid steps, so
+the image is kept whole in VMEM and sliced with ``program_id``-relative
+dynamic slices rather than a non-overlapping BlockSpec.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _im2col_kernel(img_ref, o_ref, *, c: int, k: int, ow: int):
+    i = pl.program_id(0)                              # output row index
+    img = img_ref[...]                                # (C, H, W) in VMEM
+    for ci in range(c):
+        for di in range(k):
+            for dj in range(k):
+                row = ci * k * k + di * k + dj
+                sl = lax.dynamic_slice(img, (ci, i + di, dj), (1, 1, ow))
+                o_ref[row, :] = sl.reshape(ow)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def im2col(img: jnp.ndarray, k: int, *, interpret: bool = True) -> jnp.ndarray:
+    """Pallas im2col: ``(C, H, W) -> (C*k*k, (H-k+1)*(W-k+1))``, stride 1."""
+    c, h, w = img.shape
+    oh, ow = h - k + 1, w - k + 1
+    return pl.pallas_call(
+        functools.partial(_im2col_kernel, c=c, k=k, ow=ow),
+        grid=(oh,),
+        in_specs=[pl.BlockSpec((c, h, w), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((c * k * k, ow), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c * k * k, oh * ow), img.dtype),
+        interpret=interpret,
+    )(img)

@@ -1,0 +1,190 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything in this file is the *specification*: slow, obviously-correct
+implementations of the block-circulant algebra (paper Eq. 1/2), im2col
+(paper Fig. 1a), and the photonic crossbar transfer chain (paper Fig. 2 d-f).
+The Pallas kernels in this package and the rust simulator
+(rust/src/simulator/) are both validated against these functions.
+
+Conventions
+-----------
+A block-circulant matrix (BCM) ``W`` of shape ``(M, N)`` with block order
+``l`` is stored compressed as ``w`` of shape ``(P, Q, l)`` with
+``M = P*l``, ``N = Q*l``.  ``w[p, q]`` is the *primary vector* (first row)
+of circulant block ``W_pq``; following paper Eq. (1),
+
+    W_pq[r, c] = w[p, q, (c - r) mod l]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# circulant algebra
+# ---------------------------------------------------------------------------
+
+def circulant_indices(l: int) -> np.ndarray:
+    """(l, l) gather table: ``idx[r, c] = (c - r) mod l`` (paper Eq. 1)."""
+    r = np.arange(l)[:, None]
+    c = np.arange(l)[None, :]
+    return (c - r) % l
+
+
+def expand_circulant(w_row: jnp.ndarray) -> jnp.ndarray:
+    """Expand a primary vector (..., l) into full (..., l, l) circulant blocks."""
+    l = w_row.shape[-1]
+    return w_row[..., circulant_indices(l)]
+
+
+def expand_bcm(w: jnp.ndarray) -> jnp.ndarray:
+    """Expand compressed (P, Q, l) weights into the dense (P*l, Q*l) BCM."""
+    p, q, l = w.shape
+    blocks = expand_circulant(w)                     # (P, Q, l, l)
+    return blocks.transpose(0, 2, 1, 3).reshape(p * l, q * l)
+
+
+def bcm_matmul_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense-expansion reference: ``y = expand(w) @ x``.
+
+    w: (P, Q, l) compressed BCM;  x: (N, B) column-major batch;  y: (M, B).
+    """
+    return expand_bcm(w) @ x
+
+
+def bcm_matmul_fft_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """FFT reference (paper Eq. 2), generalised to blocks.
+
+    For a circulant block with primary *row* ``w``, the first *column* is
+    ``w[(-r) mod l]``, i.e. ``roll(flip(w), 1)``; circulant matmul is then
+    ``IFFT(FFT(col) * FFT(x))`` applied per (p, q) block and summed over q.
+    """
+    p, q, l = w.shape
+    b = x.shape[1]
+    xb = x.reshape(q, l, b)
+    col = jnp.roll(w[:, :, ::-1], 1, axis=-1)        # (P, Q, l) first columns
+    fw = jnp.fft.fft(col, axis=-1)                   # (P, Q, l)
+    fx = jnp.fft.fft(xb, axis=1)                     # (Q, l, B)
+    fy = jnp.einsum("pql,qlb->plb", fw, fx)
+    y = jnp.fft.ifft(fy, axis=1).real
+    return y.reshape(p * l, b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# im2col / convolution
+# ---------------------------------------------------------------------------
+
+def im2col_ref(img: jnp.ndarray, k: int, stride: int = 1) -> jnp.ndarray:
+    """(C, H, W) image -> (C*k*k, n_patches) patch matrix (paper Fig. 1a).
+
+    Patch columns are ordered row-major over output positions; within a
+    column the layout is channel-major then kernel-row then kernel-col,
+    matching the row-wise flattening of kernels into the weight matrix.
+    """
+    c, h, w = img.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    cols = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = img[:, i * stride:i * stride + k, j * stride:j * stride + k]
+            cols.append(patch.reshape(-1))
+    return jnp.stack(cols, axis=1)                   # (C*k*k, oh*ow)
+
+
+def conv2d_ref(img: jnp.ndarray, kern: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Naive conv: img (C, H, W), kern (Cout, C, k, k) -> (Cout, OH, OW)."""
+    cout, c, k, _ = kern.shape
+    _, h, w = img.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    wmat = kern.reshape(cout, c * k * k)
+    xmat = im2col_ref(img, k, stride)
+    return (wmat @ xmat).reshape(cout, oh, ow)
+
+
+# ---------------------------------------------------------------------------
+# photonic transfer chain (mirrors rust/src/photonic/)
+# ---------------------------------------------------------------------------
+
+def mzm_transmission(v: jnp.ndarray, v_pi: float = 1.0) -> jnp.ndarray:
+    """Thermo-optic MZM amplitude-tuning intensity transfer.
+
+    Push-pull MZM biased at null: T(v) = sin^2(pi * v / (2 * v_pi)).
+    Encoding maps x in [0, 1] to v = (2 v_pi / pi) asin(sqrt(x)), so an
+    *ideal* device round-trips exactly; nonideality enters via quantized
+    drive voltages and finite extinction.
+    """
+    return jnp.sin(jnp.pi * v / (2.0 * v_pi)) ** 2
+
+
+def mzm_drive(x: jnp.ndarray, v_pi: float = 1.0) -> jnp.ndarray:
+    """Inverse of :func:`mzm_transmission` for x in [0, 1]."""
+    return (2.0 * v_pi / jnp.pi) * jnp.arcsin(jnp.sqrt(jnp.clip(x, 0.0, 1.0)))
+
+
+def mrr_drop_transmission(delta: jnp.ndarray, fwhm: float = 1.0,
+                          peak: float = 1.0) -> jnp.ndarray:
+    """Add-drop MRR drop-port Lorentzian: T(delta) = peak / (1 + (2 delta/fwhm)^2).
+
+    ``delta`` is the detuning from resonance in the same units as ``fwhm``.
+    Weight encoding detunes the ring thermally; the usable branch is
+    monotonic (paper Fig. 2f uses one branch per ring to avoid overlap).
+    """
+    return peak / (1.0 + (2.0 * delta / fwhm) ** 2)
+
+
+def mrr_weight_detuning(w: jnp.ndarray, fwhm: float = 1.0,
+                        peak: float = 1.0) -> jnp.ndarray:
+    """Inverse of the drop-port Lorentzian on the left branch: w -> delta <= 0."""
+    w = jnp.clip(w, 1e-6, peak)
+    return -0.5 * fwhm * jnp.sqrt(peak / w - 1.0)
+
+
+def crosstalk_matrix(n: int, eps: float) -> jnp.ndarray:
+    """Inter-channel spectral-leakage mixing Gamma (paper Methods, Eq. 5).
+
+    Adjacent WDM channels leak a fraction ``eps``; next-adjacent eps^2, etc.
+    Rows are renormalised so a calibrated all-ones input maps to one.
+    """
+    i = np.arange(n)[:, None]
+    j = np.arange(n)[None, :]
+    g = eps ** np.abs(i - j).astype(np.float64)
+    g = g / g.sum(axis=1, keepdims=True)
+    return jnp.asarray(g, dtype=jnp.float32)
+
+
+def quantize_ref(x: jnp.ndarray, bits: int, lo: float = 0.0,
+                 hi: float = 1.0) -> jnp.ndarray:
+    """Uniform affine quantization to 2^bits levels over [lo, hi]."""
+    levels = (1 << bits) - 1
+    xq = jnp.round((jnp.clip(x, lo, hi) - lo) / (hi - lo) * levels)
+    return xq / levels * (hi - lo) + lo
+
+
+def crossbar_forward_ref(w: jnp.ndarray, x: jnp.ndarray, *,
+                         eps: float = 0.0,
+                         w_bits: int = 0,
+                         x_bits: int = 0,
+                         dark: float = 0.0) -> jnp.ndarray:
+    """Ideal-physics CirPTC forward for one BCM (no stochastic noise).
+
+    w: (P, Q, l) compressed weights in [0, 1];  x: (N, B) inputs in [0, 1].
+    Chain: quantize -> (MZM / MRR encode+decode are calibrated inverses,
+    so the deterministic nonideality is quantization in the *device* domain)
+    -> crosstalk mixing Gamma over the l WDM channels of each block column
+    -> crossbar matmul -> PD dark-current offset.
+    """
+    p, q, l = w.shape
+    if x_bits:
+        x = quantize_ref(x, x_bits)
+    if w_bits:
+        w = quantize_ref(w, w_bits)
+    if eps > 0.0:
+        gamma = crosstalk_matrix(l, eps)
+        xb = x.reshape(q, l, -1)
+        x = jnp.einsum("ij,qjb->qib", gamma, xb).reshape(q * l, -1)
+    y = bcm_matmul_ref(w, x)
+    return y + dark

@@ -1,0 +1,282 @@
+"""L2: StrC-ONN model definitions (paper Fig. 1a / Fig. 4a).
+
+Functional JAX models over explicit parameter pytrees.  Every conv / FC
+layer can be instantiated in two architectures:
+
+* ``gemm`` — ordinary dense weights (the paper's digital baseline);
+* ``circ`` — block-circulant weights of order ``l`` stored *compressed* as
+  ``(P, Q, l)`` primary vectors (paper Eq. 1), the StrC-ONN configuration.
+
+and executed through two paths:
+
+* ``digital``  — fp32 maths (expansion of the compressed weights);
+* ``device``   — the CirPTC transfer chain via a :class:`dpe.DpeParams`
+  (sign-split positive-only weights, STE quantization, Γ mixing,
+  responsivity tilt, dark offset, dynamic noise).  With the *fitted* Γ̂ this
+  is the DPE differentiable mode used for hardware-aware training; with the
+  chip's *true* parameters it is the lookup-mode evaluation the paper runs
+  on the physical chip (rust/src/simulator mirrors it on the request path).
+
+BN / pooling / activation run digitally, as in the paper ("batch
+normalization, pooling, and nonlinear activation are executed on digital
+processors").
+
+Convolution uses the im2col identity (paper Fig. 1a): a circulant conv
+layer's flattened weight matrix ``(Cout, Cin*k*k)`` is constrained to a BCM
+with zero-padded input dimension (the paper's "3 rows of padding" for the
+12x4 blur BCM); padded columns meet zero inputs, so dense ``lax.conv`` on
+the sliced expansion is exact while training stays fast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import dpe as dpe_mod
+from .kernels import ref
+
+Params = Dict[str, Any]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# layer configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerCfg:
+    kind: str                  # conv | fc | bn | relu | pool | flatten
+    cin: int = 0
+    cout: int = 0
+    k: int = 3
+    pool: int = 2
+    arch: str = "circ"         # circ | gemm  (conv/fc only)
+    l: int = 4                 # circulant block order
+    act_scale: float = 4.0     # device-domain input scaling (conv/fc only)
+
+
+def net_config(dataset: str, arch: str, l: int = 4) -> List[LayerCfg]:
+    """Network topologies (small VGG-style stacks; DESIGN.md §2 scaling)."""
+    conv = lambda ci, co: LayerCfg("conv", cin=ci, cout=co, k=3, arch=arch, l=l)
+    fc = lambda ci, co: LayerCfg("fc", cin=ci, cout=co, arch=arch, l=l)
+    bn = lambda c: LayerCfg("bn", cin=c)
+    relu = LayerCfg("relu")
+    pool = LayerCfg("pool")
+    flat = LayerCfg("flatten")
+    if dataset in ("synth_digits", "synth_textures"):
+        # 3x32x32 -> 10 classes (SVHN / CIFAR-10 stand-ins, Fig. 4a)
+        return [
+            conv(3, 16), bn(16), relu, pool,          # 16x16
+            conv(16, 32), bn(32), relu, pool,         # 8x8
+            conv(32, 32), bn(32), relu, pool,         # 4x4
+            flat,
+            fc(32 * 4 * 4, 128), relu,
+            fc(128, 10),
+        ]
+    if dataset == "synth_cxr":
+        # 1x64x64 -> 3 classes (COVID-QU-Ex stand-in)
+        return [
+            conv(1, 8), bn(8), relu, pool,            # 32x32
+            conv(8, 16), bn(16), relu, pool,          # 16x16
+            conv(16, 32), bn(32), relu, pool,         # 8x8
+            flat,
+            fc(32 * 8 * 8, 64), relu,
+            fc(64, 3),
+        ]
+    raise ValueError(f"unknown dataset {dataset}")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_weight(key: jax.Array, cfg: LayerCfg) -> Params:
+    """Kaiming-style init in either dense or compressed-circulant form."""
+    if cfg.kind == "conv":
+        m, n = cfg.cout, cfg.cin * cfg.k * cfg.k
+    else:
+        m, n = cfg.cout, cfg.cin
+    std = float(np.sqrt(2.0 / n))
+    if cfg.arch == "circ":
+        mp, npad = _ceil_to(m, cfg.l), _ceil_to(n, cfg.l)
+        p, q = mp // cfg.l, npad // cfg.l
+        w = std * jax.random.normal(key, (p, q, cfg.l))
+    else:
+        w = std * jax.random.normal(key, (m, n))
+    return {"w": w, "b": jnp.zeros(m)}
+
+
+def init_params(key: jax.Array, cfgs: List[LayerCfg]) -> Tuple[Params, Params]:
+    """Returns (params, state): trainables and BN running stats."""
+    params: Params = {}
+    state: Params = {}
+    for i, cfg in enumerate(cfgs):
+        name = f"layer{i}"
+        if cfg.kind in ("conv", "fc"):
+            key, sub = jax.random.split(key)
+            params[name] = _init_weight(sub, cfg)
+        elif cfg.kind == "bn":
+            params[name] = {"gamma": jnp.ones(cfg.cin),
+                            "beta": jnp.zeros(cfg.cin)}
+            state[name] = {"mean": jnp.zeros(cfg.cin),
+                           "var": jnp.ones(cfg.cin)}
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _dense_weight(p: Params, cfg: LayerCfg) -> jnp.ndarray:
+    """Full-range dense (m, n) weight for the digital path."""
+    if cfg.kind == "conv":
+        m, n = cfg.cout, cfg.cin * cfg.k * cfg.k
+    else:
+        m, n = cfg.cout, cfg.cin
+    if cfg.arch == "circ":
+        return ref.expand_bcm(p["w"])[:m, :n]
+    return p["w"]
+
+
+def _device_weight(p: Params, cfg: LayerCfg, dpe: dpe_mod.DpeParams
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sign-split device-path effective dense weights (w_pos_eff, w_neg_eff).
+
+    Returned in weight units (scale folded in); subtracting the two conv/fc
+    results reproduces the paper's time-multiplexed post-processing and
+    cancels the dark offset, which is therefore omitted here.
+    """
+    if cfg.kind == "conv":
+        m, n = cfg.cout, cfg.cin * cfg.k * cfg.k
+    else:
+        m, n = cfg.cout, cfg.cin
+    if cfg.arch == "circ":
+        wp, wn, scale = dpe_mod.split_signed(p["w"])
+        wpe = dpe_mod.effective_dense_weight(wp, dpe) * scale
+        wne = dpe_mod.effective_dense_weight(wn, dpe) * scale
+        return wpe[:m, :n], wne[:m, :n]
+    # GEMM layers never run on CirPTC in the paper; digital fallback.
+    w = p["w"]
+    return jnp.clip(w, 0.0, None), jnp.clip(-w, 0.0, None)
+
+
+def _device_noise(y: jnp.ndarray, dpe: dpe_mod.DpeParams,
+                  key: Optional[jax.Array]) -> jnp.ndarray:
+    """Dynamic noise injection (paper Fig. 1d).  The two sign-split passes
+    each carry independent noise; we inject the summed equivalent
+    (factor sqrt(2) on the absolute floor)."""
+    if key is None or (dpe.noise_rel == 0.0 and dpe.noise_abs == 0.0):
+        return y
+    k1, k2 = jax.random.split(key)
+    return y + (jnp.abs(lax.stop_gradient(y)) * dpe.noise_rel
+                * jax.random.normal(k1, y.shape)
+                + dpe.noise_abs * np.sqrt(2.0) * jax.random.normal(k2, y.shape))
+
+
+def _conv(x: jnp.ndarray, wmat: jnp.ndarray, cfg: LayerCfg) -> jnp.ndarray:
+    kern = wmat.reshape(cfg.cout, cfg.cin, cfg.k, cfg.k)
+    return lax.conv_general_dilated(
+        x, kern, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _linear_layer(x: jnp.ndarray, p: Params, cfg: LayerCfg, mode: str,
+                  dpe: Optional[dpe_mod.DpeParams],
+                  key: Optional[jax.Array]) -> jnp.ndarray:
+    """Shared conv/fc execution across digital and device paths."""
+    is_conv = cfg.kind == "conv"
+    if mode == "digital" or cfg.arch == "gemm":
+        w = _dense_weight(p, cfg)
+        y = _conv(x, w, cfg) if is_conv else x @ w.T
+    else:
+        assert dpe is not None
+        s = cfg.act_scale
+        xd = jnp.clip(x / s, 0.0, 1.0)
+        xd = dpe_mod.ste_quantize(xd, dpe.x_bits) if dpe.x_bits else xd
+        wpe, wne = _device_weight(p, cfg, dpe)
+        if is_conv:
+            y = _conv(xd, wpe, cfg) - _conv(xd, wne, cfg)
+        else:
+            y = xd @ (wpe - wne).T
+        y = _device_noise(y, dpe, key) * s
+    b = p["b"]
+    return y + (b[None, :, None, None] if is_conv else b[None, :])
+
+
+def apply(params: Params, state: Params, cfgs: List[LayerCfg],
+          x: jnp.ndarray, *, mode: str = "digital",
+          dpe: Optional[dpe_mod.DpeParams] = None,
+          key: Optional[jax.Array] = None,
+          train: bool = False,
+          bn_momentum: float = 0.9) -> Tuple[jnp.ndarray, Params]:
+    """Run the network.  Returns (logits, new_state)."""
+    new_state = dict(state)
+    for i, cfg in enumerate(cfgs):
+        name = f"layer{i}"
+        if cfg.kind in ("conv", "fc"):
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
+            x = _linear_layer(x, params[name], cfg, mode, dpe, sub)
+        elif cfg.kind == "bn":
+            g, b = params[name]["gamma"], params[name]["beta"]
+            if train:
+                mean = x.mean(axis=(0, 2, 3))
+                var = x.var(axis=(0, 2, 3))
+                st = state[name]
+                new_state[name] = {
+                    "mean": bn_momentum * st["mean"] + (1 - bn_momentum) * mean,
+                    "var": bn_momentum * st["var"] + (1 - bn_momentum) * var,
+                }
+            else:
+                mean, var = state[name]["mean"], state[name]["var"]
+            x = (x - mean[None, :, None, None]) / jnp.sqrt(
+                var[None, :, None, None] + 1e-5)
+            x = x * g[None, :, None, None] + b[None, :, None, None]
+        elif cfg.kind == "relu":
+            x = jax.nn.relu(x)
+        elif cfg.kind == "pool":
+            x = lax.reduce_window(x, -jnp.inf, lax.max,
+                                  (1, 1, cfg.pool, cfg.pool),
+                                  (1, 1, cfg.pool, cfg.pool), "VALID")
+        elif cfg.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise ValueError(cfg.kind)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (paper's 74.91 % reduction claim)
+# ---------------------------------------------------------------------------
+
+def count_params(cfgs: List[LayerCfg]) -> Dict[str, float]:
+    """Trainable-parameter counts: dense vs compressed weight storage.
+
+    ``gemm``/``circ`` count only conv+FC weight matrices (the quantities the
+    paper compresses — also the count of active modulators and weight-memory
+    words on CirPTC); ``aux`` counts biases and BN affine parameters, which
+    are identical between the two architectures.
+    """
+    gemm = circ = aux = 0
+    for cfg in cfgs:
+        if cfg.kind in ("conv", "fc"):
+            m = cfg.cout
+            n = cfg.cin * cfg.k * cfg.k if cfg.kind == "conv" else cfg.cin
+            gemm += m * n
+            mp, npad = _ceil_to(m, cfg.l), _ceil_to(n, cfg.l)
+            circ += (mp // cfg.l) * (npad // cfg.l) * cfg.l
+            aux += m
+        elif cfg.kind == "bn":
+            aux += 2 * cfg.cin
+    return {"gemm": gemm, "circ": circ, "aux": aux,
+            "reduction_pct": 100.0 * (1.0 - circ / max(gemm, 1))}

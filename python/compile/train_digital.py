@@ -1,0 +1,43 @@
+"""Train + export the digital circulant baselines (Fig. 4e config 2).
+
+``compile.train`` exports only the hardware-aware (DPE) bundles for
+serving; the digital / XLA-AOT serving paths need the *digitally trained*
+circulant weights (you cannot serve device-optimized weights on the
+digital path — see compile.recalib docstring).  This re-runs config 2
+per dataset with the same seeds as compile.train (so accuracies match
+metrics.json) and writes ``{name}_digital.cpt``.
+
+Usage:  python -m compile.train_digital --out ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from . import data as data_mod
+from . import export, model
+from .train import evaluate, recalibrate_bn, train_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+    epochs = 3 if args.quick else 20
+    for name in data_mod.DATASETS:
+        ds = data_mod.DATASETS[name]()
+        cfgs = model.net_config(name, "circ")
+        params, state, _ = train_model(ds, cfgs, epochs=epochs,
+                                       log=lambda m: None)
+        state = recalibrate_bn(params, state, cfgs, ds)
+        acc, _ = evaluate(params, state, cfgs, ds)
+        export.write_bundle(out / "models" / f"{name}_digital.cpt",
+                            export.model_tensors(params, state))
+        print(f"  {name}: circ digital acc {acc:.4f} -> {name}_digital.cpt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Chip model + DPE: calibration, Γ fitting, STE gradients, sign-splitting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import chip as chip_mod
+from compile import dpe as dpe_mod
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _chip(**kw):
+    return chip_mod.make_chip(chip_mod.ChipParams(**kw))
+
+
+def _rand01(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, shape).astype(np.float32))
+
+
+class TestChipModel:
+    def test_ideal_chip_is_exact_bcm(self):
+        chp = _chip(eps=0.0, dark=0.0, resp_tilt=0.0, fab_sigma=0.0,
+                    w_bits=0, x_bits=0)
+        w, x = _rand01((2, 3, 4), 1), _rand01((12, 5), 2)
+        np.testing.assert_allclose(chp.forward(w, x),
+                                   ref.bcm_matmul_ref(w, x), atol=1e-5)
+
+    def test_deterministic_without_key(self):
+        chp = _chip()
+        w, x = _rand01((2, 2, 4), 3), _rand01((8, 4), 4)
+        np.testing.assert_allclose(chp.forward(w, x), chp.forward(w, x))
+
+    def test_noise_with_key(self):
+        chp = _chip()
+        w, x = _rand01((2, 2, 4), 5), _rand01((8, 4), 6)
+        y1 = chp.forward(w, x, jax.random.PRNGKey(0))
+        y2 = chp.forward(w, x, jax.random.PRNGKey(1))
+        assert not np.allclose(y1, y2)
+
+    def test_seed_reproducible_instance(self):
+        a, b = _chip(seed=5), _chip(seed=5)
+        np.testing.assert_allclose(a.gamma_true, b.gamma_true)
+        np.testing.assert_allclose(a.resp, b.resp)
+
+    def test_different_seed_different_fab(self):
+        a, b = _chip(seed=5), _chip(seed=6)
+        assert not np.allclose(a.gamma_true, b.gamma_true)
+
+    def test_export_dict_roundtrip_fields(self):
+        d = _chip().export_dict()
+        for k in ("l", "eps", "dark", "gamma_true", "resp", "w_bits",
+                  "x_bits", "sigma_rel", "sigma_abs", "seed"):
+            assert k in d
+        assert np.asarray(d["gamma_true"]).shape == (4, 4)
+
+
+class TestCalibration:
+    def test_gamma_fit_recovers_truth(self):
+        chp = _chip(sigma_rel=0.0, sigma_abs=0.0)   # noiseless sweep
+        lut = chp.sweep_lut(jax.random.PRNGKey(0), n_sweep=160)
+        gamma_hat, dark_hat, _ = chp.fit_gamma(lut)
+        # The tilt acts on the weight's wavelength index (c-r) mod l, which
+        # no single Γ can represent exactly — the DPE is an approximation by
+        # construction (paper: "we approximate its behavior").  diag(resp)@Γ
+        # is the nearest interpretable target; the residual is the tilt's
+        # off-row component, bounded by ~resp_tilt.
+        target = np.diag(np.asarray(chp.resp)) @ np.asarray(chp.gamma_true)
+        assert np.abs(np.asarray(gamma_hat) - target).max() < 2.5e-2
+        np.testing.assert_allclose(dark_hat, chp.p.dark * np.ones(4),
+                                   atol=1e-2)
+
+    def test_gamma_fit_robust_to_noise(self):
+        chp = _chip()
+        lut = chp.sweep_lut(jax.random.PRNGKey(1), n_sweep=256)
+        gamma_hat, _, _ = chp.fit_gamma(lut)
+        target = np.diag(np.asarray(chp.resp)) @ np.asarray(chp.gamma_true)
+        assert np.abs(np.asarray(gamma_hat) - target).max() < 5e-2
+
+
+class TestSTE:
+    def test_forward_quantizes(self):
+        x = _rand01((64,), 7)
+        np.testing.assert_allclose(dpe_mod.ste_quantize(x, 4),
+                                   ref.quantize_ref(x, 4), atol=1e-7)
+
+    def test_gradient_is_identity_inside_range(self):
+        g = jax.grad(lambda x: jnp.sum(dpe_mod.ste_quantize(x, 4)))(
+            jnp.asarray([0.3, 0.7]))
+        np.testing.assert_allclose(g, [1.0, 1.0])
+
+    def test_gradient_zero_outside_range(self):
+        g = jax.grad(lambda x: jnp.sum(dpe_mod.ste_quantize(x, 4)))(
+            jnp.asarray([-0.5, 1.5]))
+        np.testing.assert_allclose(g, [0.0, 0.0])
+
+
+class TestSignSplit:
+    def test_reconstruction(self):
+        w = _rand01((3, 3, 4), 8) - 0.5
+        wp, wn, s = dpe_mod.split_signed(w)
+        np.testing.assert_allclose((wp - wn) * s, w, atol=1e-6)
+
+    def test_halves_nonnegative_unit_range(self):
+        w = 10.0 * (_rand01((2, 2, 4), 9) - 0.5)
+        wp, wn, _ = dpe_mod.split_signed(w)
+        for h in (wp, wn):
+            assert float(jnp.min(h)) >= 0.0 and float(jnp.max(h)) <= 1.0
+
+    def test_signed_forward_cancels_dark(self):
+        # dark offset identical in both passes -> exact cancellation
+        d = dpe_mod.DpeParams(l=4, gamma_hat=jnp.eye(4),
+                              dark_hat=jnp.full((4,), 0.3),
+                              resp_hat=jnp.ones(4), w_bits=0, x_bits=0,
+                              noise_rel=0.0, noise_abs=0.0)
+        w = _rand01((2, 2, 4), 10) - 0.5
+        x = _rand01((8, 4), 11)
+        y = dpe_mod.signed_dpe_forward(w, x, d)
+        np.testing.assert_allclose(y, ref.bcm_matmul_ref(w, x), atol=1e-5)
+
+
+class TestDpeSurrogate:
+    def test_ideal_dpe_equals_bcm(self):
+        d = dpe_mod.ideal_dpe(4)
+        w, x = _rand01((2, 3, 4), 12), _rand01((12, 6), 13)
+        np.testing.assert_allclose(dpe_mod.dpe_forward(w, x, d),
+                                   ref.bcm_matmul_ref(w, x), atol=1e-5)
+
+    def test_gamma_big_blockdiag(self):
+        g = jnp.asarray(np.random.default_rng(0)
+                        .uniform(size=(4, 4)).astype(np.float32))
+        dd = dpe_mod.DpeParams(l=4, gamma_hat=g, dark_hat=jnp.zeros(4),
+                               resp_hat=jnp.ones(4))
+        big = np.asarray(dd.gamma_big(3))
+        assert big.shape == (12, 12)
+        for i in range(3):
+            np.testing.assert_allclose(big[i * 4:(i + 1) * 4,
+                                           i * 4:(i + 1) * 4], g)
+        assert np.abs(big[0:4, 4:8]).max() == 0.0
+
+    def test_surrogate_tracks_chip(self):
+        """DPE built from the chip's true params == deterministic chip."""
+        chp = _chip(sigma_rel=0.0, sigma_abs=0.0)
+        d = dpe_mod.DpeParams(
+            l=4, gamma_hat=chp.gamma_true,
+            dark_hat=jnp.full((4,), chp.p.dark), resp_hat=chp.resp,
+            w_bits=6, x_bits=4, noise_rel=0.0, noise_abs=0.0)
+        w, x = _rand01((3, 2, 4), 14), _rand01((8, 5), 15)
+        np.testing.assert_allclose(dpe_mod.dpe_forward(w, x, d),
+                                   chp.forward(w, x), atol=1e-5)
+
+    def test_gradients_flow_to_w_and_x(self):
+        chp = _chip()
+        d = dpe_mod.DpeParams(l=4, gamma_hat=chp.gamma_true,
+                              dark_hat=jnp.zeros(4), resp_hat=chp.resp)
+        w, x = _rand01((2, 2, 4), 16), _rand01((8, 3), 17)
+        gw = jax.grad(lambda w: jnp.sum(dpe_mod.dpe_forward(w, x, d)))(w)
+        gx = jax.grad(lambda x: jnp.sum(dpe_mod.dpe_forward(w, x, d)))(x)
+        assert float(jnp.abs(gw).max()) > 0.0
+        assert float(jnp.abs(gx).max()) > 0.0

@@ -1,0 +1,120 @@
+"""Pallas block-circulant matmul kernel vs pure-jnp oracle (the CORE signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.circulant import bcm_matmul, bcm_matmul_fft
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# spec sanity: the oracle itself
+# ---------------------------------------------------------------------------
+
+class TestOracle:
+    def test_expand_circulant_rows_are_rotations(self):
+        w = _rand((4,), seed=1)
+        c = np.asarray(ref.expand_circulant(w))
+        for r in range(4):
+            # row r of a circulant with primary row w is w rotated right by r
+            assert np.allclose(c[r], np.roll(np.asarray(w), r))
+
+    def test_expand_matches_paper_eq1_order2(self):
+        # explicit 2x2 check of Eq. (1): [[w1, w2], [w2, w1]]
+        w = jnp.asarray([1.0, 2.0])
+        c = np.asarray(ref.expand_circulant(w))
+        assert np.allclose(c, [[1.0, 2.0], [2.0, 1.0]])
+
+    def test_expand_bcm_block_structure(self):
+        w = _rand((2, 3, 4), seed=2)
+        dense = np.asarray(ref.expand_bcm(w))
+        assert dense.shape == (8, 12)
+        for p in range(2):
+            for q in range(3):
+                blk = dense[p * 4:(p + 1) * 4, q * 4:(q + 1) * 4]
+                assert np.allclose(blk, ref.expand_circulant(w[p, q]))
+
+    def test_fft_path_equals_dense_expansion(self):
+        w, x = _rand((3, 4, 4), 3), _rand((16, 8), 4)
+        y0 = ref.bcm_matmul_ref(w, x)
+        y1 = ref.bcm_matmul_fft_ref(w, x)
+        np.testing.assert_allclose(y0, y1, atol=1e-4)
+
+    def test_parameter_reduction_factor(self):
+        # paper: independent parameters reduce to MN/l
+        p, q, l = 5, 7, 4
+        assert p * q * l == (p * l) * (q * l) // l
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("p,q,l,b", [
+        (1, 1, 2, 1), (2, 3, 4, 8), (4, 4, 4, 16), (3, 5, 8, 4),
+        (12, 12, 4, 16), (1, 8, 16, 2),
+    ])
+    def test_matches_ref(self, p, q, l, b):
+        w, x = _rand((p, q, l), p + q), _rand((q * l, b), l + b)
+        np.testing.assert_allclose(
+            bcm_matmul(w, x), ref.bcm_matmul_ref(w, x), atol=1e-5)
+
+    @pytest.mark.parametrize("bt", [1, 2, 4, 8])
+    def test_batch_tiling_invariant(self, bt):
+        w, x = _rand((3, 4, 4), 5), _rand((16, 8), 6)
+        full = bcm_matmul(w, x)
+        tiled = bcm_matmul(w, x, batch_tile=bt)
+        np.testing.assert_allclose(full, tiled, atol=1e-6)
+
+    def test_non_divisible_batch_tile_falls_back(self):
+        w, x = _rand((2, 2, 4), 7), _rand((8, 7), 8)
+        np.testing.assert_allclose(
+            bcm_matmul(w, x, batch_tile=3), ref.bcm_matmul_ref(w, x),
+            atol=1e-5)
+
+    @pytest.mark.parametrize("p,q,l,b", [(2, 3, 4, 8), (4, 2, 8, 4)])
+    def test_fft_kernel_matches_ref(self, p, q, l, b):
+        w, x = _rand((p, q, l), 9), _rand((q * l, b), 10)
+        np.testing.assert_allclose(
+            bcm_matmul_fft(w, x), ref.bcm_matmul_ref(w, x), atol=1e-3,
+            rtol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(p=st.integers(1, 6), q=st.integers(1, 6),
+           le=st.sampled_from([2, 4, 8]), b=st.integers(1, 9),
+           seed=st.integers(0, 2 ** 16))
+    def test_property_matches_ref(self, p, q, le, b, seed):
+        w = _rand((p, q, le), seed)
+        x = _rand((q * le, b), seed + 1)
+        np.testing.assert_allclose(
+            bcm_matmul(w, x), ref.bcm_matmul_ref(w, x), atol=1e-4)
+
+    def test_linearity(self):
+        w, x1, x2 = _rand((2, 2, 4), 11), _rand((8, 4), 12), _rand((8, 4), 13)
+        y = bcm_matmul(w, x1 + 2.0 * x2)
+        np.testing.assert_allclose(
+            y, bcm_matmul(w, x1) + 2.0 * bcm_matmul(w, x2), atol=1e-5)
+
+    def test_identity_weight(self):
+        # primary vector e0 per diagonal block => identity BCM
+        l, q = 4, 3
+        w = np.zeros((q, q, l), np.float32)
+        for i in range(q):
+            w[i, i, 0] = 1.0
+        x = _rand((q * l, 5), 14)
+        np.testing.assert_allclose(bcm_matmul(jnp.asarray(w), x), x, atol=1e-6)
+
+    def test_dtype_f32_output(self):
+        w, x = _rand((2, 2, 4), 15), _rand((8, 4), 16)
+        assert bcm_matmul(w, x).dtype == jnp.float32

@@ -1,0 +1,132 @@
+"""Crossbar (photonic-forward) kernel and transfer-chain oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.crossbar import crossbar_forward
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand01(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, shape).astype(np.float32))
+
+
+class TestQuantizer:
+    @pytest.mark.parametrize("bits", [1, 2, 4, 6, 8])
+    def test_levels(self, bits):
+        x = jnp.linspace(0, 1, 1000)
+        q = np.unique(np.asarray(ref.quantize_ref(x, bits)))
+        assert len(q) == (1 << bits)
+
+    def test_endpoints_exact(self):
+        for bits in (4, 6):
+            q = ref.quantize_ref(jnp.asarray([0.0, 1.0]), bits)
+            np.testing.assert_allclose(q, [0.0, 1.0])
+
+    def test_error_bound(self):
+        x = _rand01((1000,), 1)
+        for bits in (4, 6):
+            err = np.abs(np.asarray(ref.quantize_ref(x, bits) - x))
+            assert err.max() <= 0.5 / ((1 << bits) - 1) + 1e-7
+
+    def test_idempotent(self):
+        x = _rand01((100,), 2)
+        q1 = ref.quantize_ref(x, 4)
+        np.testing.assert_allclose(ref.quantize_ref(q1, 4), q1, atol=1e-7)
+
+    def test_clips_out_of_range(self):
+        q = ref.quantize_ref(jnp.asarray([-0.5, 1.5]), 4)
+        np.testing.assert_allclose(q, [0.0, 1.0])
+
+
+class TestCrosstalkMatrix:
+    def test_rows_sum_to_one(self):
+        for n in (2, 4, 8, 48):
+            g = np.asarray(ref.crosstalk_matrix(n, 0.03))
+            np.testing.assert_allclose(g.sum(axis=1), np.ones(n), atol=1e-6)
+
+    def test_zero_eps_is_identity(self):
+        g = np.asarray(ref.crosstalk_matrix(4, 0.0))
+        np.testing.assert_allclose(g, np.eye(4), atol=1e-7)
+
+    def test_decaying_leakage(self):
+        # row normalisation breaks exact symmetry at the band edges (edge
+        # channels have fewer neighbours) — only the decay is invariant
+        g = np.asarray(ref.crosstalk_matrix(6, 0.05))
+        assert np.abs(g - g.T).max() < 0.01
+        assert g[0, 0] > g[0, 1] > g[0, 2] > g[0, 3]
+
+
+class TestDeviceModels:
+    def test_mzm_roundtrip(self):
+        x = _rand01((256,), 3)
+        v = ref.mzm_drive(x)
+        np.testing.assert_allclose(ref.mzm_transmission(v), x, atol=1e-6)
+
+    def test_mzm_monotone(self):
+        v = jnp.linspace(0, 1, 100)
+        t = np.asarray(ref.mzm_transmission(v))
+        assert np.all(np.diff(t) >= -1e-7)
+
+    def test_mrr_roundtrip(self):
+        w = jnp.asarray(np.linspace(0.01, 1.0, 100, dtype=np.float32))
+        d = ref.mrr_weight_detuning(w)
+        np.testing.assert_allclose(ref.mrr_drop_transmission(d), w, atol=1e-5)
+
+    def test_mrr_peak_at_resonance(self):
+        t = np.asarray(ref.mrr_drop_transmission(jnp.asarray([0.0]), peak=0.9))
+        np.testing.assert_allclose(t, [0.9])
+
+    def test_mrr_fwhm_definition(self):
+        # at delta = fwhm/2 the transmission is half the peak
+        t = ref.mrr_drop_transmission(jnp.asarray([0.5]), fwhm=1.0, peak=1.0)
+        np.testing.assert_allclose(t, [0.5], atol=1e-6)
+
+
+class TestCrossbarKernel:
+    @pytest.mark.parametrize("p,q,l,b", [(1, 1, 4, 1), (3, 5, 4, 8),
+                                         (12, 12, 4, 16), (2, 2, 8, 4)])
+    def test_matches_ref(self, p, q, l, b):
+        w, x = _rand01((p, q, l), p), _rand01((q * l, b), q)
+        g = ref.crosstalk_matrix(l, 0.02)
+        got = crossbar_forward(w, x, g, dark=0.015)
+        want = ref.crossbar_forward_ref(w, x, eps=0.02, w_bits=6,
+                                        x_bits=4, dark=0.015)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_no_quant_no_talk_equals_bcm(self):
+        w, x = _rand01((2, 3, 4), 7), _rand01((12, 4), 8)
+        g = jnp.eye(4)
+        got = crossbar_forward(w, x, g, w_bits=0, x_bits=0, dark=0.0)
+        np.testing.assert_allclose(got, ref.bcm_matmul_ref(w, x), atol=1e-5)
+
+    def test_dark_offset_additive(self):
+        w, x = _rand01((2, 2, 4), 9), _rand01((8, 2), 10)
+        g = ref.crosstalk_matrix(4, 0.01)
+        y0 = crossbar_forward(w, x, g, dark=0.0)
+        y1 = crossbar_forward(w, x, g, dark=0.25)
+        np.testing.assert_allclose(y1 - y0, 0.25 * np.ones_like(y0), atol=1e-6)
+
+    def test_outputs_nonnegative(self):
+        # positive weights, positive inputs => nonnegative photocurrent
+        w, x = _rand01((3, 3, 4), 11), _rand01((12, 6), 12)
+        g = ref.crosstalk_matrix(4, 0.05)
+        assert np.all(np.asarray(crossbar_forward(w, x, g)) >= 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(p=st.integers(1, 4), q=st.integers(1, 4), b=st.integers(1, 6),
+           eps=st.floats(0.0, 0.1), seed=st.integers(0, 2 ** 16))
+    def test_property_matches_ref(self, p, q, b, eps, seed):
+        l = 4
+        w, x = _rand01((p, q, l), seed), _rand01((q * l, b), seed + 1)
+        g = ref.crosstalk_matrix(l, eps)
+        got = crossbar_forward(w, x, g, dark=0.01)
+        want = ref.crossbar_forward_ref(w, x, eps=eps, w_bits=6, x_bits=4,
+                                        dark=0.01)
+        np.testing.assert_allclose(got, want, atol=1e-4)

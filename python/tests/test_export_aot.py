@@ -1,0 +1,95 @@
+"""CPT1 bundle round-trip + AOT HLO-text artifact properties."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import export, model
+from compile.aot import to_hlo_text
+from compile.kernels.circulant import bcm_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestBundle:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a.w": rng.normal(size=(3, 4, 5)).astype(np.float32),
+            "b": rng.integers(0, 10, (7,)).astype(np.int32),
+            "scalar": np.float32(3.5).reshape(()),
+        }
+        p = tmp_path / "t.cpt"
+        export.write_bundle(p, tensors)
+        back = export.read_bundle(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_allclose(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_model_tensors_flatten(self):
+        cfgs = model.net_config("synth_cxr", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(0), cfgs)
+        t = export.model_tensors(params, state)
+        assert any(k.endswith(".w") for k in t)
+        assert any(".state.mean" in k for k in t)
+
+    def test_manifest(self, tmp_path):
+        cfgs = model.net_config("synth_cxr", "circ")
+        export.write_manifest(tmp_path / "m.json", cfgs, {"dataset": "x"})
+        m = json.loads((tmp_path / "m.json").read_text())
+        assert m["dataset"] == "x"
+        assert m["layers"][0]["kind"] == "conv"
+        assert m["layers"][0]["l"] == 4
+
+
+class TestHloText:
+    def test_lowering_has_entry_and_no_elision(self):
+        w = jax.ShapeDtypeStruct((2, 3, 4), jnp.float32)
+        x = jax.ShapeDtypeStruct((12, 4), jnp.float32)
+        fn = lambda w, x: (bcm_matmul(w, x),)
+        text = to_hlo_text(jax.jit(fn).lower(w, x))
+        assert "ENTRY" in text
+        assert "{...}" not in text          # constants must not be elided
+
+    def test_baked_constants_survive(self):
+        big = jnp.asarray(np.random.default_rng(1)
+                          .normal(size=(32, 32)).astype(np.float32))
+        fn = lambda x: (big @ x,)
+        text = to_hlo_text(jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((32, 4), jnp.float32)))
+        assert "{...}" not in text
+        assert "f32[32,32]" in text
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+class TestArtifactsOnDisk:
+    def test_manifest_lists_all_hlo(self):
+        listed = set(json.loads((ARTIFACTS / "manifest.json").read_text()))
+        on_disk = {p.name for p in ARTIFACTS.glob("*.hlo.txt")}
+        assert listed == on_disk
+        assert len(listed) >= 12
+
+    def test_artifacts_not_elided(self):
+        for p in ARTIFACTS.glob("*.hlo.txt"):
+            assert "{...}" not in p.read_text(), p.name
+
+    def test_chip_json_consistent(self):
+        d = json.loads((ARTIFACTS / "chip.json").read_text())
+        g = np.asarray(d["gamma_true"])
+        assert g.shape == (d["l"], d["l"])
+        np.testing.assert_allclose(g.sum(axis=1), 1.0, atol=0.05)
+
+    def test_goldens_cover_cases(self):
+        g = export.read_bundle(ARTIFACTS / "goldens.cpt")
+        cases = {k.split(".")[0] for k in g}
+        assert len(cases) >= 4
+        for c in cases:
+            assert {f"{c}.w", f"{c}.x", f"{c}.y"} <= set(g)

@@ -1,0 +1,165 @@
+"""StrC-ONN model: shapes, parameter accounting, digital/device consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import chip as chip_mod
+from compile import data as data_mod
+from compile import dpe as dpe_mod
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def small_batch():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.uniform(0, 1, (4, 3, 32, 32)).astype(np.float32))
+
+
+class TestShapes:
+    @pytest.mark.parametrize("name,cin,h,nc", [
+        ("synth_digits", 3, 32, 10), ("synth_textures", 3, 32, 10),
+        ("synth_cxr", 1, 64, 3),
+    ])
+    @pytest.mark.parametrize("arch", ["gemm", "circ"])
+    def test_forward_shapes(self, name, cin, h, nc, arch):
+        cfgs = model.net_config(name, arch)
+        params, state = model.init_params(jax.random.PRNGKey(0), cfgs)
+        x = jnp.zeros((2, cin, h, h))
+        logits, _ = model.apply(params, state, cfgs, x)
+        assert logits.shape == (2, nc)
+
+    def test_unknown_dataset_raises(self):
+        with pytest.raises(ValueError):
+            model.net_config("nope", "circ")
+
+
+class TestParamAccounting:
+    def test_reduction_near_paper_value(self):
+        # paper: "up to a 74.91% reduction in trainable parameters";
+        # order-4 compression is bounded by 75%, approached as padding
+        # overhead vanishes.
+        for name in data_mod.DATASETS:
+            c = model.count_params(model.net_config(name, "circ"))
+            assert 74.0 < c["reduction_pct"] <= 75.0
+
+    def test_circ_params_equal_stored_size(self):
+        cfgs = model.net_config("synth_cxr", "circ")
+        params, _ = model.init_params(jax.random.PRNGKey(0), cfgs)
+        stored = sum(int(np.prod(p["w"].shape))
+                     for p in params.values() if "w" in p)
+        assert stored == model.count_params(cfgs)["circ"]
+
+    def test_gemm_params_equal_stored_size(self):
+        cfgs = model.net_config("synth_digits", "gemm")
+        params, _ = model.init_params(jax.random.PRNGKey(0), cfgs)
+        stored = sum(int(np.prod(p["w"].shape))
+                     for p in params.values() if "w" in p)
+        assert stored == model.count_params(cfgs)["gemm"]
+
+
+class TestDeviceDigitalConsistency:
+    def test_ideal_device_matches_digital(self, small_batch):
+        """With an ideal chip (identity Γ, no quant/noise/tilt) and no
+        dynamic-range clipping, the device path must reproduce the digital
+        path — the key consistency invariant between training and
+        deployment.  act_scale is raised so no activation clips (with 0-bit
+        quantization the scale costs no precision)."""
+        import dataclasses
+        cfgs = [dataclasses.replace(c, act_scale=1e4)
+                for c in model.net_config("synth_textures", "circ")]
+        params, state = model.init_params(jax.random.PRNGKey(1), cfgs)
+        d = dpe_mod.ideal_dpe(4)
+        y_dig, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="digital")
+        y_dev, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="device", dpe=d)
+        np.testing.assert_allclose(y_dig, y_dev, atol=5e-3, rtol=1e-3)
+
+    def test_device_clipping_bounds_range(self, small_batch):
+        """The device path's finite dynamic range (act_scale) clips large
+        activations — deliberate CirPTC behaviour the DPE trains through."""
+        cfgs = model.net_config("synth_textures", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(1), cfgs)
+        d = dpe_mod.ideal_dpe(4)
+        y_dig, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="digital")
+        y_dev, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="device", dpe=d)
+        # clipping only shrinks activations, never grows them unboundedly
+        assert float(jnp.abs(y_dev).max()) <= float(jnp.abs(y_dig).max()) * 3
+
+    def test_device_quantization_changes_output(self, small_batch):
+        cfgs = model.net_config("synth_textures", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(2), cfgs)
+        chp = chip_mod.make_chip(chip_mod.ChipParams())
+        d = dpe_mod.DpeParams(l=4, gamma_hat=chp.gamma_true,
+                              dark_hat=jnp.zeros(4), resp_hat=chp.resp,
+                              w_bits=6, x_bits=4)
+        y_dig, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="digital")
+        y_dev, _ = model.apply(params, state, cfgs, small_batch,
+                               mode="device", dpe=d)
+        assert not np.allclose(np.asarray(y_dig), np.asarray(y_dev),
+                               atol=1e-4)
+
+    def test_device_noise_stochastic(self, small_batch):
+        cfgs = model.net_config("synth_textures", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(3), cfgs)
+        d = dpe_mod.ideal_dpe(4)
+        d = dpe_mod.DpeParams(**{**d.__dict__, "noise_rel": 0.05})
+        y1, _ = model.apply(params, state, cfgs, small_batch, mode="device",
+                            dpe=d, key=jax.random.PRNGKey(1))
+        y2, _ = model.apply(params, state, cfgs, small_batch, mode="device",
+                            dpe=d, key=jax.random.PRNGKey(2))
+        assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+class TestBatchNorm:
+    def test_train_updates_state(self):
+        cfgs = model.net_config("synth_textures", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(4), cfgs)
+        x = jnp.ones((4, 3, 32, 32)) * 0.5
+        _, st2 = model.apply(params, state, cfgs, x, train=True)
+        changed = any(
+            not np.allclose(st2[k]["mean"], state[k]["mean"])
+            for k in state)
+        assert changed
+
+    def test_eval_does_not_update_state(self):
+        cfgs = model.net_config("synth_textures", "circ")
+        params, state = model.init_params(jax.random.PRNGKey(5), cfgs)
+        x = jnp.ones((4, 3, 32, 32)) * 0.5
+        _, st2 = model.apply(params, state, cfgs, x, train=False)
+        for k in state:
+            np.testing.assert_allclose(st2[k]["mean"], state[k]["mean"])
+
+    def test_momentum_zero_gives_batch_stats(self):
+        cfgs = [model.LayerCfg("bn", cin=3)]
+        params, state = model.init_params(jax.random.PRNGKey(6), cfgs)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(2.0, 3.0, (16, 3, 8, 8)).astype(np.float32))
+        _, st2 = model.apply(params, state, cfgs, x, train=True,
+                             bn_momentum=0.0)
+        np.testing.assert_allclose(st2["layer0"]["mean"],
+                                   x.mean(axis=(0, 2, 3)), atol=1e-5)
+
+
+class TestDatasets:
+    @pytest.mark.parametrize("name", list(data_mod.DATASETS))
+    def test_shapes_ranges_determinism(self, name):
+        ds1 = data_mod.DATASETS[name](n_train=32, n_test=16)
+        ds2 = data_mod.DATASETS[name](n_train=32, n_test=16)
+        assert ds1["train_x"].shape[0] == 32
+        assert ds1["train_x"].min() >= 0.0 and ds1["train_x"].max() <= 1.0
+        assert ds1["train_y"].min() >= 0
+        assert ds1["train_y"].max() < ds1["classes"]
+        np.testing.assert_allclose(ds1["train_x"], ds2["train_x"])
+
+    @pytest.mark.parametrize("name", list(data_mod.DATASETS))
+    def test_all_classes_present(self, name):
+        ds = data_mod.DATASETS[name](n_train=256, n_test=64)
+        assert len(np.unique(ds["train_y"])) == ds["classes"]

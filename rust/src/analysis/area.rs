@@ -1,0 +1,101 @@
+//! Chip-area model → computing density (paper: 4.85 TOPS/mm² for a 48×48
+//! CirPTC @ 10 GHz; 5.48–5.84 TOPS/mm² with r=4 spectral folding).
+
+use crate::arch::CirPtcConfig;
+
+/// Component footprints (mm²).  PDK-representative values; the high-speed
+/// carrier-depletion MZM dominates ("modulators based on the carrier
+/// effect typically require larger footprints", paper Discussion).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// traveling-wave carrier-depletion/MOSCAP MZM incl. electrodes+driver
+    pub mzm_mm2: f64,
+    /// MRR incl. heater and pitch allowance (25 µm pitch → 6.25e-4 mm²)
+    pub mrr_mm2: f64,
+    /// photodiode + pad
+    pub pd_mm2: f64,
+    /// routing / bus waveguide overhead multiplier
+    pub routing_overhead: f64,
+}
+
+impl AreaModel {
+    pub fn paper() -> AreaModel {
+        AreaModel {
+            mzm_mm2: 0.10,
+            mrr_mm2: 6.25e-4,
+            pd_mm2: 2.5e-3,
+            routing_overhead: 1.40,
+        }
+    }
+
+    /// Total die area (mm²) of a CirPTC instance.
+    pub fn cirptc_area_mm2(&self, c: &CirPtcConfig) -> f64 {
+        let mzms = c.input_mzms() as f64 * self.mzm_mm2;
+        let rings =
+            (c.switch_mrrs() + c.active_weight_mrrs()) as f64 * self.mrr_mm2;
+        let pds = c.receivers() as f64 * self.pd_mm2;
+        (mzms + rings + pds) * self.routing_overhead
+    }
+
+    /// Uncompressed MRR-crossbar ONN of the same logical size: M·N_eff
+    /// *active* weight rings and no shared serial rails.
+    pub fn uncompressed_area_mm2(&self, c: &CirPtcConfig) -> f64 {
+        let n_eff = c.effective_n();
+        let mzms = n_eff as f64 * self.mzm_mm2;
+        let rings = (c.m * n_eff) as f64 * self.mrr_mm2;
+        let pds = c.receivers() as f64 * self.pd_mm2;
+        (mzms + rings + pds) * self.routing_overhead
+    }
+
+    /// Computing density (TOPS/mm²) — paper Discussion headline.
+    pub fn computing_density_tops_mm2(&self, c: &CirPtcConfig) -> f64 {
+        c.ops() / 1e12 / self.cirptc_area_mm2(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_48x48_near_paper() {
+        // paper: 4.85 TOPS/mm² at 48×48, 10 GHz
+        let d = AreaModel::paper()
+            .computing_density_tops_mm2(&CirPtcConfig::scaled_48());
+        assert!((4.0..6.0).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn folding_improves_density() {
+        let a = AreaModel::paper();
+        let base = a.computing_density_tops_mm2(&CirPtcConfig::scaled_48());
+        let folded = a.computing_density_tops_mm2(&CirPtcConfig::folded_48());
+        assert!(folded > base, "folded {folded} vs {base}");
+    }
+
+    #[test]
+    fn folded_cirptc_denser_than_uncompressed_same_capability() {
+        // at r=1 the two arrays have comparable area (CirPTC adds serial
+        // weight rails but shares the crossbar); the density win is that a
+        // folded CirPTC serves an M×(rN) BCM with the same physical array,
+        // where the uncompressed design must physically grow r-fold.
+        let a = AreaModel::paper();
+        let folded = CirPtcConfig::folded_48();
+        let dens_cir = CirPtcConfig::folded_48().ops() / 1e12
+            / a.cirptc_area_mm2(&folded);
+        let dens_unc = folded.ops() / 1e12 / a.uncompressed_area_mm2(&folded);
+        assert!(dens_cir > dens_unc, "{dens_cir} vs {dens_unc}");
+    }
+
+    #[test]
+    fn area_grows_with_size() {
+        let a = AreaModel::paper();
+        let mut prev = 0.0;
+        for s in [16usize, 32, 48, 64] {
+            let c = CirPtcConfig { n: s, m: s, l: 4, fold: 1, f_op: 10e9 };
+            let area = a.cirptc_area_mm2(&c);
+            assert!(area > prev);
+            prev = area;
+        }
+    }
+}

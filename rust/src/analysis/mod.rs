@@ -1,0 +1,22 @@
+//! Benchmark analysis (paper Discussion + Supplementary Notes 8, Figs.
+//! S5/S14/S16/S18, Table S6): analytical area / power / latency /
+//! efficiency models of CirPTC and the uncompressed MRR-crossbar baseline.
+//!
+//! The paper's own numbers here are *numerical analysis over cited device
+//! constants*, not testbed measurements, so this module re-derives them
+//! from the same constants (0.35 pJ/sym MOSCAP MZM, 3 mW/MRR thermal,
+//! 39/194 mW ADC, 0.65 pJ/bit TIA, PD-sensitivity-driven laser budget).
+//! Where the paper leaves a constant implicit (waveguide losses, MZM
+//! footprint) we use PDK-representative values, documented on each field;
+//! EXPERIMENTS.md records paper-vs-measured for every headline figure.
+
+pub mod area;
+pub mod power;
+pub mod sota;
+pub mod spectral;
+pub mod throughput;
+
+pub use area::AreaModel;
+pub use power::{PowerBreakdown, PowerModel, WeightTech};
+pub use spectral::required_q;
+pub use throughput::LatencyModel;

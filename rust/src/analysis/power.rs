@@ -1,0 +1,222 @@
+//! Power model → power efficiency (paper: 9.53 TOPS/W peak at 48×48;
+//! 3.82× over the uncompressed MRR crossbar; 17.13 TOPS/W with r=4
+//! folding = 6.87×; 47.94 TOPS/W with MOSCAP weight rings; laser becomes
+//! dominant past ~64 — Figs. S16 & S18).
+
+use crate::arch::CirPtcConfig;
+use crate::photonic::waveguide::LossBudget;
+use crate::photonic::{db_to_lin, Adc, Mzm, Photodiode, Tia};
+
+/// Weight-programming device technology (paper Discussion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightTech {
+    /// thermo-optic heaters: 3 mW/MRR static hold power
+    ThermoOptic,
+    /// depletion-mode / MOSCAP rings: "potentially eliminate static power"
+    Moscap,
+}
+
+/// Per-component totals (W) for one configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerBreakdown {
+    pub laser_w: f64,
+    pub input_mzm_w: f64,
+    pub weight_mrr_w: f64,
+    pub adc_w: f64,
+    pub tia_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.laser_w + self.input_mzm_w + self.weight_mrr_w + self.adc_w + self.tia_w
+    }
+
+    pub fn laser_fraction(&self) -> f64 {
+        self.laser_w / self.total_w()
+    }
+}
+
+/// The power model with all paper-cited constants.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// thermal hold power per weight MRR (paper: 3 mW)
+    pub mrr_hold_mw: f64,
+    /// PD thermal-noise-equivalent current (A RMS) — laser-budget floor
+    pub pd_thermal_a: f64,
+    /// required linear *power* SNR at the PD for 6-bit weight fidelity
+    pub required_snr: f64,
+    /// wall-plug efficiency of the laser
+    pub laser_wallplug: f64,
+    pub losses: LossBudget,
+}
+
+impl PowerModel {
+    pub fn paper() -> PowerModel {
+        PowerModel {
+            mrr_hold_mw: 3.0,
+            pd_thermal_a: 10.0e-6,
+            required_snr: 64.0, // 2^6: 6-bit amplitude fidelity at the PD
+            laser_wallplug: 0.25,
+            losses: LossBudget::paper(),
+        }
+    }
+
+    /// Minimum laser power (W, wall-plug) for a CirPTC of config `c`:
+    /// per-line received-power floor from PD sensitivity, multiplied back
+    /// up the critical-path insertion loss (exponential in size, Fig. S16e)
+    /// and by the number of WDM lines.
+    pub fn laser_w(&self, c: &CirPtcConfig, uncompressed: bool) -> f64 {
+        let pd = Photodiode::typical();
+        let p_rx = pd.sensitivity_w(self.required_snr.sqrt(), self.pd_thermal_a);
+        let il_db = if uncompressed {
+            self.losses.uncompressed_critical_path_db(c.n, c.m)
+        } else {
+            self.losses.cirptc_critical_path_db(c.n, c.m, c.l)
+        };
+        // folding sums r× more channels per PD toward the same output-SNR
+        // target, so each line carries 1/r of the receive budget (paper
+        // Fig. S18: folding raises throughput without raising receiver
+        // power — the laser comb widens but per-line power drops).
+        let lines = (c.effective_n()).max(c.l);
+        let per_line = p_rx / c.fold as f64;
+        lines as f64 * per_line * db_to_lin(il_db) / self.laser_wallplug
+    }
+
+    /// Full breakdown for CirPTC (paper Fig. S16 / S18b).
+    pub fn cirptc(&self, c: &CirPtcConfig, tech: WeightTech) -> PowerBreakdown {
+        let mzm = Mzm::moscap();
+        let hold_w = match tech {
+            WeightTech::ThermoOptic => self.mrr_hold_mw * 1e-3,
+            WeightTech::Moscap => 0.0,
+        };
+        PowerBreakdown {
+            laser_w: self.laser_w(c, false),
+            input_mzm_w: c.input_mzms() as f64 * mzm.encode_power_w(c.f_op),
+            weight_mrr_w: c.active_weight_mrrs() as f64 * hold_w,
+            adc_w: c.receivers() as f64 * Adc::paper().power_w(c.f_op),
+            tia_w: c.receivers() as f64 * Tia::paper().power_w(c.f_op),
+        }
+    }
+
+    /// Uncompressed MRR-crossbar baseline at the same logical size: M·N_eff
+    /// active weight rings (l× more), lossier critical path.
+    pub fn uncompressed(&self, c: &CirPtcConfig, tech: WeightTech) -> PowerBreakdown {
+        let mzm = Mzm::moscap();
+        let hold_w = match tech {
+            WeightTech::ThermoOptic => self.mrr_hold_mw * 1e-3,
+            WeightTech::Moscap => 0.0,
+        };
+        let n_eff = c.effective_n();
+        PowerBreakdown {
+            laser_w: self.laser_w(c, true) * c.fold as f64,
+            input_mzm_w: n_eff as f64 * mzm.encode_power_w(c.f_op),
+            weight_mrr_w: (c.m * n_eff) as f64 * hold_w,
+            adc_w: c.receivers() as f64 * Adc::paper().power_w(c.f_op),
+            tia_w: c.receivers() as f64 * Tia::paper().power_w(c.f_op),
+        }
+    }
+
+    /// Power efficiency in TOPS/W.
+    pub fn efficiency_tops_w(&self, c: &CirPtcConfig, tech: WeightTech) -> f64 {
+        c.ops() / 1e12 / self.cirptc(c, tech).total_w()
+    }
+
+    /// Efficiency of the uncompressed baseline (denominator for the
+    /// paper's 3.82× / 6.87× claims).
+    pub fn uncompressed_efficiency_tops_w(
+        &self,
+        c: &CirPtcConfig,
+        tech: WeightTech,
+    ) -> f64 {
+        c.ops() / 1e12 / self.uncompressed(c, tech).total_w()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(s: usize) -> CirPtcConfig {
+        CirPtcConfig { n: s, m: s, l: 4, fold: 1, f_op: 10e9 }
+    }
+
+    #[test]
+    fn efficiency_48_near_paper() {
+        // paper: 9.53 TOPS/W peak at 48×48 (thermo-optic weights)
+        let e = PowerModel::paper()
+            .efficiency_tops_w(&cfg(48), WeightTech::ThermoOptic);
+        assert!((6.0..13.0).contains(&e), "48x48 efficiency {e}");
+    }
+
+    #[test]
+    fn efficiency_peaks_then_declines() {
+        // paper Fig. S16: efficiency rises with size, peaks near 48, then
+        // the exponential laser term wins and it declines
+        let m = PowerModel::paper();
+        let e: Vec<f64> = [8usize, 16, 32, 48, 96, 128]
+            .iter()
+            .map(|&s| m.efficiency_tops_w(&cfg(s), WeightTech::ThermoOptic))
+            .collect();
+        assert!(e[1] > e[0] && e[2] > e[1], "rising small sizes {e:?}");
+        assert!(e[5] < e[3], "declining past the knee {e:?}");
+    }
+
+    #[test]
+    fn cirptc_beats_uncompressed_severalfold() {
+        // paper: 3.82× at 48×48
+        let m = PowerModel::paper();
+        let c = cfg(48);
+        let ratio = m.efficiency_tops_w(&c, WeightTech::ThermoOptic)
+            / m.uncompressed_efficiency_tops_w(&c, WeightTech::ThermoOptic);
+        assert!((2.0..6.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn laser_fraction_grows_with_size() {
+        // paper: laser is 43.14 % of total at M=N=64
+        let m = PowerModel::paper();
+        let f48 = m.cirptc(&cfg(48), WeightTech::ThermoOptic).laser_fraction();
+        let f96 = m.cirptc(&cfg(96), WeightTech::ThermoOptic).laser_fraction();
+        assert!(f96 > f48);
+        let f64_ = m.cirptc(&cfg(64), WeightTech::ThermoOptic).laser_fraction();
+        assert!((0.1..0.7).contains(&f64_), "laser fraction @64 = {f64_}");
+    }
+
+    #[test]
+    fn folding_improves_efficiency() {
+        // paper Fig. S18: 17.13 TOPS/W at r=4 (6.87× vs uncompressed)
+        let m = PowerModel::paper();
+        let base = m.efficiency_tops_w(
+            &CirPtcConfig::scaled_48(),
+            WeightTech::ThermoOptic,
+        );
+        let folded = m.efficiency_tops_w(
+            &CirPtcConfig::folded_48(),
+            WeightTech::ThermoOptic,
+        );
+        assert!(folded > base, "folded {folded} vs base {base}");
+    }
+
+    #[test]
+    fn moscap_removes_ring_hold_power() {
+        // paper: "this component of power can be potentially eliminated and
+        // the power efficiency can be increased to 47.94 TOPS/W"
+        let m = PowerModel::paper();
+        let c = CirPtcConfig::folded_48();
+        let thermo = m.cirptc(&c, WeightTech::ThermoOptic);
+        let moscap = m.cirptc(&c, WeightTech::Moscap);
+        assert_eq!(moscap.weight_mrr_w, 0.0);
+        assert!(moscap.total_w() < thermo.total_w());
+        let e = m.efficiency_tops_w(&c, WeightTech::Moscap);
+        assert!(e > m.efficiency_tops_w(&c, WeightTech::ThermoOptic));
+    }
+
+    #[test]
+    fn folded_weight_rings_dominate_thermo() {
+        // paper Fig. S18b: with folding, MRR thermal power dominates
+        let m = PowerModel::paper();
+        let b = m.cirptc(&CirPtcConfig::folded_48(), WeightTech::ThermoOptic);
+        assert!(b.weight_mrr_w > b.adc_w);
+        assert!(b.weight_mrr_w > b.input_mzm_w);
+    }
+}

@@ -1,0 +1,83 @@
+//! Throughput & latency (paper Eq. 3 and the single-cycle-MVM constraint:
+//! "the system clock period 1/f_op should be no less than the total
+//! latency of the CirPTC, which increases linearly with the matrix size").
+
+use crate::arch::CirPtcConfig;
+use crate::photonic::C_M_S;
+
+/// Optical + electrical latency of one MVM through the PIC.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    /// group index of the silicon bus waveguides
+    pub ng: f64,
+    /// physical pitch between crossbar cells (µm)
+    pub cell_pitch_um: f64,
+    /// fixed E-O + O-E conversion latency (s)
+    pub conversion_s: f64,
+}
+
+impl LatencyModel {
+    pub fn paper() -> LatencyModel {
+        LatencyModel { ng: 4.2, cell_pitch_um: 25.0, conversion_s: 20e-12 }
+    }
+
+    /// Critical optical path length (m): across M columns plus down N rows.
+    pub fn path_m(&self, c: &CirPtcConfig) -> f64 {
+        (c.m + c.n) as f64 * self.cell_pitch_um * 1e-6
+    }
+
+    /// Total single-MVM latency (s) — linear in matrix size.
+    pub fn latency_s(&self, c: &CirPtcConfig) -> f64 {
+        self.path_m(c) * self.ng / C_M_S + self.conversion_s
+    }
+
+    /// Maximum f_op (Hz) honouring the single-cycle constraint.
+    pub fn max_f_op(&self, c: &CirPtcConfig) -> f64 {
+        1.0 / self.latency_s(c)
+    }
+
+    /// True if the configured clock satisfies the latency bound.
+    pub fn clock_feasible(&self, c: &CirPtcConfig) -> bool {
+        c.f_op <= self.max_f_op(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_linear_in_size() {
+        let l = LatencyModel::paper();
+        let t = |s: usize| {
+            l.latency_s(&CirPtcConfig { n: s, m: s, l: 4, fold: 1, f_op: 1e9 })
+                - l.conversion_s
+        };
+        let (t16, t32, t64) = (t(16), t(32), t(64));
+        assert!(((t32 / t16) - 2.0).abs() < 1e-6);
+        assert!(((t64 / t32) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_order_of_magnitude() {
+        // 48+48 cells at 25 µm = 2.4 mm optical path; ~34 ps + 20 ps conv
+        let l = LatencyModel::paper();
+        let t = l.latency_s(&CirPtcConfig::scaled_48());
+        assert!(t > 20e-12 && t < 200e-12, "latency {t}");
+    }
+
+    #[test]
+    fn ten_ghz_feasible_at_48() {
+        // paper quotes 10 GHz for the scaled 48×48 analysis
+        let l = LatencyModel::paper();
+        assert!(l.clock_feasible(&CirPtcConfig::scaled_48()));
+    }
+
+    #[test]
+    fn very_large_array_limits_clock() {
+        let l = LatencyModel::paper();
+        let big = CirPtcConfig { n: 2048, m: 2048, l: 4, fold: 1, f_op: 10e9 };
+        assert!(!l.clock_feasible(&big));
+        assert!(l.max_f_op(&big) < 10e9);
+    }
+}

@@ -1,0 +1,142 @@
+//! One-shot calibration (paper: "cascading each building block enables a
+//! one-shot calibration mechanism ... while simplifying control
+//! complexity"; Supplementary Note 1).
+//!
+//! Each crossbar switch ring is tuned onto its assigned channel and the
+//! per-output gain is normalised so every ring achieves "a uniform maximum
+//! output" (grey dotted line in paper Fig. 2f).  After calibration, switch
+//! states are frozen; only the M·N/l weight rings are reprogrammed during
+//! inference.
+
+use crate::photonic::Mrr;
+
+use super::wavelength::WavelengthPlan;
+
+/// Result of calibrating one CirPTC crossbar.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// per-switch residual detuning after calibration (nm), row-major m×n
+    pub residual_nm: Vec<f64>,
+    /// per-column gain normalisation factors applied at the output
+    pub column_gain: Vec<f64>,
+    /// per-switch thermal trim power (mW)
+    pub trim_power_mw: Vec<f64>,
+    pub n: usize,
+    pub m: usize,
+}
+
+impl Calibration {
+    /// Calibrate an m×n crossbar whose as-fabricated resonances deviate by
+    /// `fab_offsets_nm` (row-major) from their target channels.  Heaters
+    /// can only red-shift (positive detuning), so rings are trimmed to the
+    /// next reachable target; `nm_per_mw` is the heater efficiency and
+    /// `dac_step_nm` the tuning granularity (residual quantization).
+    pub fn run(
+        plan: &WavelengthPlan,
+        m: usize,
+        n: usize,
+        fab_offsets_nm: &[f64],
+        nm_per_mw: f64,
+        dac_step_nm: f64,
+    ) -> Calibration {
+        assert_eq!(fab_offsets_nm.len(), m * n);
+        let mut residual = vec![0.0; m * n];
+        let mut trim = vec![0.0; m * n];
+        for row in 0..m {
+            for col in 0..n {
+                let idx = row * n + col;
+                // shift needed to land on the assigned channel
+                let mut need = -fab_offsets_nm[idx];
+                if need < 0.0 {
+                    // red-shift-only heater: go one FSR further
+                    need += plan.fsr_nm;
+                }
+                // quantized heater setting leaves a residual detuning
+                let steps = (need / dac_step_nm).round();
+                let applied = steps * dac_step_nm;
+                residual[idx] = applied - need;
+                trim[idx] = Mrr::tuning_power_mw(applied, nm_per_mw);
+            }
+        }
+        // column gain: normalise so each column's worst-case switch peak
+        // matches the best (uniform maximum output, Fig. 2f)
+        let ring = Mrr::new(2e4, 1550.0);
+        let mut column_gain = vec![1.0; n];
+        for (col, gain) in column_gain.iter_mut().enumerate() {
+            let worst = (0..m)
+                .map(|row| ring.drop_transmission(residual[row * n + col]))
+                .fold(f64::INFINITY, f64::min);
+            *gain = ring.peak / worst.max(1e-12);
+        }
+        Calibration { residual_nm: residual, column_gain, trim_power_mw: trim, n, m }
+    }
+
+    /// Total static trim power (mW) — the paper notes this is "negligible
+    /// when using customized MRRs or post-fabrication nonvolatile phase
+    /// trimming"; we model it so the power benches can toggle it.
+    pub fn total_trim_mw(&self) -> f64 {
+        self.trim_power_mw.iter().sum()
+    }
+
+    /// Worst-case residual detuning magnitude (nm).
+    pub fn worst_residual_nm(&self) -> f64 {
+        self.residual_nm.iter().fold(0.0f64, |a, &b| a.max(b.abs()))
+    }
+
+    /// Idempotence check: calibrating an already-calibrated array (zero
+    /// offsets) must apply no additional trim beyond FSR wrap-arounds.
+    pub fn is_idempotent_for_zero_offsets(plan: &WavelengthPlan) -> bool {
+        let cal = Calibration::run(plan, 4, 4, &[0.0; 16], 0.25, 1e-4);
+        cal.worst_residual_nm() < 1e-3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn offsets(m: usize, n: usize, sigma: f64, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        (0..m * n).map(|_| r.normal() * sigma).collect()
+    }
+
+    #[test]
+    fn residual_bounded_by_dac_step() {
+        let plan = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        let cal = Calibration::run(&plan, 8, 8, &offsets(8, 8, 0.4, 1), 0.25, 0.01);
+        assert!(cal.worst_residual_nm() <= 0.005 + 1e-9);
+    }
+
+    #[test]
+    fn trim_power_positive_and_finite() {
+        let plan = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        let cal = Calibration::run(&plan, 4, 4, &offsets(4, 4, 0.4, 2), 0.25, 0.01);
+        assert!(cal.total_trim_mw() > 0.0);
+        assert!(cal.total_trim_mw().is_finite());
+    }
+
+    #[test]
+    fn zero_offsets_idempotent() {
+        let plan = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        assert!(Calibration::is_idempotent_for_zero_offsets(&plan));
+    }
+
+    #[test]
+    fn column_gains_near_unity_after_good_cal() {
+        let plan = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        let cal = Calibration::run(&plan, 4, 4, &offsets(4, 4, 0.2, 3), 0.25, 1e-3);
+        for g in &cal.column_gain {
+            assert!((1.0..1.2).contains(g), "gain {g}");
+        }
+    }
+
+    #[test]
+    fn finer_dac_reduces_residual() {
+        let plan = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        let off = offsets(6, 6, 0.3, 4);
+        let coarse = Calibration::run(&plan, 6, 6, &off, 0.25, 0.05);
+        let fine = Calibration::run(&plan, 6, 6, &off, 0.25, 0.005);
+        assert!(fine.worst_residual_nm() < coarse.worst_residual_nm());
+    }
+}

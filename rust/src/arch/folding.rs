@@ -1,0 +1,126 @@
+//! Spectral folding (paper Discussion + Fig. S18).
+//!
+//! A single crossbar switch ring resonates every FSR, so `r` input groups
+//! launched in `r` adjacent FSRs are all routed by the *same* physical
+//! N×M array: an N×M crossbar executes an M×(r·N) BCM against a length-r·N
+//! input.  The map below assigns each logical input element its physical
+//! (rail, channel, fold) coordinate, and verifies no two logical inputs
+//! collide on the same physical wavelength resource.
+
+use super::wavelength::WavelengthPlan;
+
+/// Physical placement of one logical input element under folding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldSlot {
+    /// physical crossbar row (0..n)
+    pub row: usize,
+    /// WDM base-channel index (0..l)
+    pub channel: usize,
+    /// FSR replica index (0..r)
+    pub fold: usize,
+}
+
+/// Folding map for an n-row crossbar with block order l and fold count r.
+#[derive(Clone, Debug)]
+pub struct FoldingMap {
+    pub n: usize,
+    pub l: usize,
+    pub r: usize,
+}
+
+impl FoldingMap {
+    pub fn new(n: usize, l: usize, r: usize) -> FoldingMap {
+        assert!(n % l == 0, "rows must be a whole number of blocks");
+        assert!(r >= 1);
+        FoldingMap { n, l, r }
+    }
+
+    /// Logical input length served: r·n.
+    pub fn logical_n(&self) -> usize {
+        self.r * self.n
+    }
+
+    /// Placement of logical input index `i` (0..r·n): fold-major layout —
+    /// each consecutive n-chunk of the logical vector rides one FSR
+    /// replica of the whole array.
+    pub fn slot(&self, i: usize) -> FoldSlot {
+        assert!(i < self.logical_n());
+        let fold = i / self.n;
+        let phys = i % self.n;
+        FoldSlot { row: phys, channel: phys % self.l, fold }
+    }
+
+    /// Wavelength (nm) carrying logical input `i`.
+    pub fn wavelength_nm(&self, plan: &WavelengthPlan, i: usize) -> f64 {
+        let s = self.slot(i);
+        plan.folded_wavelength(s.channel, s.fold)
+    }
+
+    /// True iff no two logical inputs share (row, channel, fold) — i.e.
+    /// the physical resource assignment is collision-free.
+    pub fn is_collision_free(&self) -> bool {
+        let mut seen =
+            vec![false; self.n * self.r];
+        for i in 0..self.logical_n() {
+            let s = self.slot(i);
+            let key = s.fold * self.n + s.row;
+            if seen[key] {
+                return false;
+            }
+            seen[key] = true;
+        }
+        true
+    }
+
+    /// Laser lines required: l channels × r folds (cost of folding is a
+    /// wider comb, not more rings/receivers).
+    pub fn laser_lines(&self) -> usize {
+        self.l * self.r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_when_unfolded() {
+        let f = FoldingMap::new(8, 4, 1);
+        assert_eq!(f.logical_n(), 8);
+        for i in 0..8 {
+            let s = f.slot(i);
+            assert_eq!((s.row, s.fold), (i, 0));
+        }
+    }
+
+    #[test]
+    fn fold4_quadruples_capacity() {
+        let f = FoldingMap::new(48, 4, 4);
+        assert_eq!(f.logical_n(), 192);
+        assert_eq!(f.laser_lines(), 16);
+    }
+
+    #[test]
+    fn collision_free_for_paper_configs() {
+        for (n, l, r) in [(4, 4, 1), (48, 4, 1), (48, 4, 4), (64, 4, 2)] {
+            assert!(FoldingMap::new(n, l, r).is_collision_free(), "{n},{l},{r}");
+        }
+    }
+
+    #[test]
+    fn wavelengths_distinct_across_folds() {
+        let f = FoldingMap::new(8, 4, 3);
+        let plan = WavelengthPlan::uniform(4, 1540.0, 36.0);
+        let w0 = f.wavelength_nm(&plan, 0);
+        let w8 = f.wavelength_nm(&plan, 8);
+        let w16 = f.wavelength_nm(&plan, 16);
+        assert!((w8 - w0 - 36.0).abs() < 1e-9);
+        assert!((w16 - w0 - 72.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_blocks() {
+        FoldingMap::new(10, 4, 2);
+    }
+}

@@ -1,0 +1,118 @@
+//! CirPTC architecture model (paper Fig. 1b / Fig. 2): crossbar geometry,
+//! circulant wavelength allocation, one-shot calibration, and the spectral
+//! folding extension (paper Discussion / Fig. S18).
+
+pub mod calibration;
+pub mod folding;
+pub mod wavelength;
+
+pub use calibration::Calibration;
+pub use wavelength::WavelengthPlan;
+
+/// Static description of one CirPTC instance.
+#[derive(Clone, Debug)]
+pub struct CirPtcConfig {
+    /// crossbar rows (input dimension N of the BCM)
+    pub n: usize,
+    /// crossbar columns (output dimension M)
+    pub m: usize,
+    /// circulant block order l
+    pub l: usize,
+    /// spectral fold count r (1 = no folding)
+    pub fold: usize,
+    /// operating rate (Hz)
+    pub f_op: f64,
+}
+
+impl CirPtcConfig {
+    /// The fabricated order-4 prototype (paper Fig. 2).
+    pub fn prototype() -> CirPtcConfig {
+        CirPtcConfig { n: 4, m: 4, l: 4, fold: 1, f_op: 12.5e3 }
+    }
+
+    /// The paper's peak-efficiency scaled design: 48×48 @ 10 GHz.
+    pub fn scaled_48() -> CirPtcConfig {
+        CirPtcConfig { n: 48, m: 48, l: 4, fold: 1, f_op: 10e9 }
+    }
+
+    /// 48×48 with r=4 spectral folding (paper Fig. S18).
+    pub fn folded_48() -> CirPtcConfig {
+        CirPtcConfig { n: 48, m: 48, l: 4, fold: 4, f_op: 10e9 }
+    }
+
+    /// Effective BCM input dimension: folding multiplies columns served.
+    pub fn effective_n(&self) -> usize {
+        self.n * self.fold
+    }
+
+    /// Active weight-encoding MRRs: M·N_eff / l (the paper's headline
+    /// hardware saving vs M·N_eff for an uncompressed crossbar).
+    pub fn active_weight_mrrs(&self) -> usize {
+        self.m * self.effective_n() / self.l
+    }
+
+    /// Static crossbar switch rings (M·N regardless of folding — folding
+    /// reuses each physical ring across r FSRs).
+    pub fn switch_mrrs(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// Input MZMs: one per effective input channel.
+    pub fn input_mzms(&self) -> usize {
+        self.effective_n()
+    }
+
+    /// Output receive chains (PD + TIA + ADC): one per column; folding
+    /// does NOT add receivers — the root of its power-efficiency win
+    /// (paper: "increased operational throughput without expanding the
+    /// number of ADCs and TIAs").
+    pub fn receivers(&self) -> usize {
+        self.m
+    }
+
+    /// MVM operations per second: OPS = 2·M·N_eff·f_op (paper Eq. 3).
+    pub fn ops(&self) -> f64 {
+        2.0 * (self.m * self.effective_n()) as f64 * self.f_op
+    }
+
+    /// DAC channels for weight programming — proportional to active MRRs,
+    /// i.e. reduced l-fold vs GEMM designs (paper: "decreases ... the
+    /// number of DACs required for weight encoding").
+    pub fn weight_dacs(&self) -> usize {
+        self.active_weight_mrrs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_matches_eq3() {
+        let c = CirPtcConfig::scaled_48();
+        assert!((c.ops() - 2.0 * 48.0 * 48.0 * 10e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn folding_multiplies_ops_not_receivers() {
+        let base = CirPtcConfig::scaled_48();
+        let folded = CirPtcConfig::folded_48();
+        assert!((folded.ops() / base.ops() - 4.0).abs() < 1e-12);
+        assert_eq!(folded.receivers(), base.receivers());
+        assert_eq!(folded.switch_mrrs(), base.switch_mrrs());
+    }
+
+    #[test]
+    fn active_mrr_saving_is_l_fold() {
+        let c = CirPtcConfig::scaled_48();
+        assert_eq!(c.active_weight_mrrs() * c.l, c.m * c.n);
+    }
+
+    #[test]
+    fn prototype_is_order4() {
+        let p = CirPtcConfig::prototype();
+        assert_eq!((p.n, p.m, p.l), (4, 4, 4));
+        assert_eq!(p.active_weight_mrrs(), 4);
+        assert_eq!(p.switch_mrrs(), 16);
+    }
+}

@@ -1,0 +1,130 @@
+//! WDM channel plan with the circulant wavelength arrangement.
+//!
+//! The crossbar switch at (row, col) must redirect wavelength
+//! `λ_{(col - row) mod l}` — exactly the circulant gather of paper Eq. (1)
+//! implemented *in circuit topology* (paper: "the switch array maps the
+//! elements of a weighted vector to the outputs, thereby directly
+//! implementing the structured configuration").
+
+/// WDM plan: `l` channels spread over one FSR (plus folding replicas).
+#[derive(Clone, Debug)]
+pub struct WavelengthPlan {
+    /// base channel wavelengths (nm), one per circulant index
+    pub channels_nm: Vec<f64>,
+    /// free spectral range (nm)
+    pub fsr_nm: f64,
+}
+
+impl WavelengthPlan {
+    /// The prototype's four measured channels (paper Fig. 2d).
+    pub fn prototype() -> WavelengthPlan {
+        WavelengthPlan {
+            channels_nm: vec![1545.5, 1551.0, 1560.5, 1563.0],
+            fsr_nm: 38.0,
+        }
+    }
+
+    /// Evenly spaced plan: `l` channels across one FSR starting at `start`.
+    pub fn uniform(l: usize, start_nm: f64, fsr_nm: f64) -> WavelengthPlan {
+        let spacing = fsr_nm / l as f64;
+        WavelengthPlan {
+            channels_nm: (0..l).map(|i| start_nm + i as f64 * spacing).collect(),
+            fsr_nm,
+        }
+    }
+
+    pub fn l(&self) -> usize {
+        self.channels_nm.len()
+    }
+
+    /// Channel spacing (nm) of a uniform plan.
+    pub fn spacing_nm(&self) -> f64 {
+        self.fsr_nm / self.l() as f64
+    }
+
+    /// Circulant assignment: wavelength index the switch at (row, col)
+    /// must select, per Eq. (1): (col - row) mod l.
+    pub fn switch_channel(&self, row: usize, col: usize) -> usize {
+        let l = self.l();
+        (col + l - row % l) % l
+    }
+
+    /// Wavelength (nm) for fold replica `r` of channel `ch`: the same
+    /// physical ring resonates every FSR, so replica r sits one FSR up.
+    pub fn folded_wavelength(&self, ch: usize, r: usize) -> f64 {
+        self.channels_nm[ch] + r as f64 * self.fsr_nm
+    }
+
+    /// Verify the circulant property: every row and every column of an
+    /// l×l tile uses each channel exactly once (a Latin square).
+    pub fn is_latin_square(&self) -> bool {
+        let l = self.l();
+        for row in 0..l {
+            let mut seen = vec![false; l];
+            for col in 0..l {
+                let c = self.switch_channel(row, col);
+                if seen[c] {
+                    return false;
+                }
+                seen[c] = true;
+            }
+        }
+        for col in 0..l {
+            let mut seen = vec![false; l];
+            for row in 0..l {
+                let c = self.switch_channel(row, col);
+                if seen[c] {
+                    return false;
+                }
+                seen[c] = true;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototype_channels_in_band() {
+        let p = WavelengthPlan::prototype();
+        assert_eq!(p.l(), 4);
+        for &c in &p.channels_nm {
+            assert!((1530.0..1570.0).contains(&c), "C-band");
+        }
+    }
+
+    #[test]
+    fn circulant_assignment_matches_eq1() {
+        let p = WavelengthPlan::uniform(4, 1545.0, 38.0);
+        // first row: identity order; second row rotated
+        assert_eq!(p.switch_channel(0, 0), 0);
+        assert_eq!(p.switch_channel(0, 3), 3);
+        assert_eq!(p.switch_channel(1, 0), 3);
+        assert_eq!(p.switch_channel(1, 1), 0);
+    }
+
+    #[test]
+    fn assignment_is_latin_square() {
+        for l in [2usize, 4, 8] {
+            let p = WavelengthPlan::uniform(l, 1540.0, 36.0);
+            assert!(p.is_latin_square(), "l={l}");
+        }
+    }
+
+    #[test]
+    fn folding_steps_one_fsr() {
+        let p = WavelengthPlan::uniform(4, 1540.0, 36.0);
+        assert!((p.folded_wavelength(0, 1) - 1576.0).abs() < 1e-9);
+        assert!((p.folded_wavelength(2, 2) - (1540.0 + 18.0 + 72.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spacing_uniform() {
+        let p = WavelengthPlan::uniform(8, 1540.0, 32.0);
+        assert!((p.spacing_nm() - 4.0).abs() < 1e-12);
+        assert!((p.channels_nm[1] - p.channels_nm[0] - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,7 @@
+//! Minimal environment check: PJRT client comes up, artifacts dir visible.
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let rt = cirptc::runtime::Runtime::new(&dir)?;
+    println!("platform={} artifacts={}", rt.platform(), rt.available().len());
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Radix-2 complex FFT + the Eq. (2) circulant multiply path.
+//!
+//! `y = IFFT(FFT(first_column) ⊙ FFT(x))` per circulant block, summed over
+//! block-columns.  Block order must be a power of two for the radix-2
+//! transform; the paper's order-4 qualifies (the direct path is still
+//! faster at such tiny orders — see benches/ablation — but Eq. (2) is part
+//! of the paper's formal story, so both routes ship and cross-validate).
+
+use super::Bcm;
+
+/// In-place iterative radix-2 Cooley-Tukey FFT over interleaved (re, im).
+pub fn fft_inplace(re: &mut [f32], im: &mut [f32], invert: bool) {
+    let n = re.len();
+    assert_eq!(im.len(), n);
+    assert!(n.is_power_of_two(), "radix-2 fft needs power-of-two length");
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if invert { 1.0f64 } else { -1.0f64 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos() as f32, ang.sin() as f32);
+        for start in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0f32, 0.0f32);
+            for k in 0..len / 2 {
+                let a = start + k;
+                let b = a + len / 2;
+                let (tr, ti) = (
+                    re[b] * cr - im[b] * ci,
+                    re[b] * ci + im[b] * cr,
+                );
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+        }
+        len <<= 1;
+    }
+    if invert {
+        let inv = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// BCM · x via per-block FFTs (paper Eq. 2 generalised to blocks).
+pub fn bcm_mvm_fft(b: &Bcm, x: &[f32]) -> Vec<f32> {
+    let l = b.l;
+    assert!(l.is_power_of_two(), "fft path requires power-of-two order");
+    assert_eq!(x.len(), b.n());
+
+    // FFT of every input block once: (Q, l) spectra
+    let mut fx_re = vec![0.0f32; b.q * l];
+    let mut fx_im = vec![0.0f32; b.q * l];
+    for bq in 0..b.q {
+        fx_re[bq * l..(bq + 1) * l].copy_from_slice(&x[bq * l..(bq + 1) * l]);
+        let (re, im) = (
+            &mut fx_re[bq * l..(bq + 1) * l],
+            &mut fx_im[bq * l..(bq + 1) * l],
+        );
+        fft_inplace(re, im, false);
+    }
+
+    let mut y = vec![0.0f32; b.m()];
+    let mut col_re = vec![0.0f32; l];
+    let mut col_im = vec![0.0f32; l];
+    let mut acc_re = vec![0.0f32; l];
+    let mut acc_im = vec![0.0f32; l];
+    for bp in 0..b.p {
+        acc_re.iter_mut().for_each(|v| *v = 0.0);
+        acc_im.iter_mut().for_each(|v| *v = 0.0);
+        for bq in 0..b.q {
+            // first column of circulant with primary row w: col[r] = w[(-r) mod l]
+            let blk = &b.w[(bp * b.q + bq) * l..(bp * b.q + bq + 1) * l];
+            col_re[0] = blk[0];
+            for r in 1..l {
+                col_re[r] = blk[l - r];
+            }
+            col_im.iter_mut().for_each(|v| *v = 0.0);
+            fft_inplace(&mut col_re, &mut col_im, false);
+            // accumulate FFT(col) ⊙ FFT(x_block)
+            let (xr, xi) = (&fx_re[bq * l..(bq + 1) * l], &fx_im[bq * l..(bq + 1) * l]);
+            for k in 0..l {
+                acc_re[k] += col_re[k] * xr[k] - col_im[k] * xi[k];
+                acc_im[k] += col_re[k] * xi[k] + col_im[k] * xr[k];
+            }
+        }
+        fft_inplace(&mut acc_re, &mut acc_im, true);
+        y[bp * l..(bp + 1) * l].copy_from_slice(&acc_re);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, assert_close};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut r = Rng::new(1);
+        for n in [2usize, 4, 8, 16, 64] {
+            let orig: Vec<f32> = (0..n).map(|_| r.f32() - 0.5).collect();
+            let mut re = orig.clone();
+            let mut im = vec![0.0f32; n];
+            fft_inplace(&mut re, &mut im, false);
+            fft_inplace(&mut re, &mut im, true);
+            assert_close(&re, &orig, 1e-5).unwrap();
+            assert!(im.iter().all(|v| v.abs() < 1e-5));
+        }
+    }
+
+    #[test]
+    fn fft_of_delta_is_flat() {
+        let mut re = vec![1.0, 0.0, 0.0, 0.0];
+        let mut im = vec![0.0; 4];
+        fft_inplace(&mut re, &mut im, false);
+        assert_close(&re, &[1.0; 4], 1e-6).unwrap();
+        assert_close(&im, &[0.0; 4], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let mut r = Rng::new(2);
+        let x: Vec<f32> = (0..16).map(|_| r.f32() - 0.5).collect();
+        let e_time: f32 = x.iter().map(|v| v * v).sum();
+        let mut re = x.clone();
+        let mut im = vec![0.0f32; 16];
+        fft_inplace(&mut re, &mut im, false);
+        let e_freq: f32 =
+            re.iter().zip(&im).map(|(a, b)| a * a + b * b).sum::<f32>() / 16.0;
+        assert!((e_time - e_freq).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fft_mvm_matches_direct() {
+        propcheck::check("fft mvm == direct mvm", 80, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8, 16]);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x = g.vec_f32(b.n(), -1.0, 1.0);
+            assert_close(&b.mvm_fft(&x), &b.mvm(&x), 1e-3)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn fft_rejects_non_power_of_two_order() {
+        let b = Bcm::zeros(1, 1, 3);
+        b.mvm_fft(&[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Block-circulant matrix (BCM) algebra — paper Eq. (1)/(2).
+//!
+//! A `Bcm` stores an `M×N` block-circulant weight *compressed* as
+//! `(P, Q, l)` primary row vectors (`M = P·l`, `N = Q·l`): the same
+//! `MN/l`-parameter representation the paper programs onto the CirPTC's
+//! `M·N/l` active MRRs.  Three multiply paths are provided:
+//!
+//! * [`Bcm::mvm`] — direct dense-free multiply (hot path; no expansion,
+//!   weight traffic is `MN/l`, mirroring the photonic advantage);
+//! * [`Bcm::mvm_fft`] — the paper's Eq. (2) FFT route, O(n log n) per
+//!   block-row, wins only at large block order `l`;
+//! * [`Bcm::expand`] — dense expansion, the obviously-correct oracle.
+
+use crate::tensor::Tensor;
+
+pub mod fft;
+
+#[derive(Clone, Debug)]
+pub struct Bcm {
+    /// compressed primary vectors, layout [p][q][s] row-major, len P*Q*l
+    pub w: Vec<f32>,
+    pub p: usize,
+    pub q: usize,
+    pub l: usize,
+}
+
+impl Bcm {
+    pub fn new(p: usize, q: usize, l: usize, w: Vec<f32>) -> Bcm {
+        assert_eq!(w.len(), p * q * l, "compressed weight size");
+        Bcm { w, p, q, l }
+    }
+
+    pub fn zeros(p: usize, q: usize, l: usize) -> Bcm {
+        Bcm { w: vec![0.0; p * q * l], p, q, l }
+    }
+
+    /// Build from a dense (m, n) matrix by *projection*: each circulant
+    /// diagonal takes the mean of the dense entries it would tie together.
+    /// (Training embeds the constraint instead — paper: "there is no direct
+    /// correspondence or conversion between the two architectures" — but
+    /// the projection is useful for tests and for arbitrary-kernel mapping.)
+    pub fn project_dense(dense: &Tensor, l: usize) -> Bcm {
+        let (m, n) = (dense.shape[0], dense.shape[1]);
+        assert!(m % l == 0 && n % l == 0);
+        let (p, q) = (m / l, n / l);
+        let mut w = vec![0.0f32; p * q * l];
+        for bp in 0..p {
+            for bq in 0..q {
+                for s in 0..l {
+                    // average over the diagonal (c - r) mod l == s
+                    let mut acc = 0.0f32;
+                    for r in 0..l {
+                        let c = (r + s) % l;
+                        acc += dense.at2(bp * l + r, bq * l + c);
+                    }
+                    w[(bp * q + bq) * l + s] = acc / l as f32;
+                }
+            }
+        }
+        Bcm { w, p, q, l }
+    }
+
+    /// Rows (M) and cols (N) of the dense equivalent.
+    pub fn m(&self) -> usize {
+        self.p * self.l
+    }
+
+    pub fn n(&self) -> usize {
+        self.q * self.l
+    }
+
+    /// Number of independent (stored) parameters = MN/l.
+    pub fn params(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Compression ratio vs dense: always exactly 1/l.
+    pub fn compression(&self) -> f64 {
+        self.params() as f64 / (self.m() * self.n()) as f64
+    }
+
+    #[inline]
+    fn block(&self, bp: usize, bq: usize) -> &[f32] {
+        let off = (bp * self.q + bq) * self.l;
+        &self.w[off..off + self.l]
+    }
+
+    /// Dense expansion (oracle path): W[p*l+r, q*l+c] = w[p,q,(c-r) mod l].
+    pub fn expand(&self) -> Tensor {
+        let (m, n, l) = (self.m(), self.n(), self.l);
+        let mut out = vec![0.0f32; m * n];
+        for bp in 0..self.p {
+            for bq in 0..self.q {
+                let blk = self.block(bp, bq);
+                for r in 0..l {
+                    let row = (bp * l + r) * n + bq * l;
+                    for c in 0..l {
+                        // (c - r) mod l without branching on negatives
+                        out[row + c] = blk[(c + l - r) % l];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Matrix-vector multiply, direct compressed form (no expansion).
+    ///
+    /// y[p·l + r] = Σ_q Σ_c w[p,q,(c-r) mod l] · x[q·l + c]
+    pub fn mvm(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n());
+        let l = self.l;
+        let mut y = vec![0.0f32; self.m()];
+        for bp in 0..self.p {
+            let yblk = &mut y[bp * l..(bp + 1) * l];
+            for bq in 0..self.q {
+                let blk = self.block(bp, bq);
+                let xblk = &x[bq * l..(bq + 1) * l];
+                for (r, yv) in yblk.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    // split the wrap to keep inner loops branch-free
+                    for c in r..l {
+                        acc += blk[c - r] * xblk[c];
+                    }
+                    for c in 0..r {
+                        acc += blk[c + l - r] * xblk[c];
+                    }
+                    *yv += acc;
+                }
+            }
+        }
+        y
+    }
+
+    /// Matrix-matrix multiply against (N, B) columns -> (M, B).
+    ///
+    /// Hot path of the photonic simulator and the serving engine.  Works
+    /// directly on the compressed representation with batch-contiguous
+    /// SAXPY inner loops (EXPERIMENTS.md §Perf: the original
+    /// transpose + per-column `mvm` formulation was ~25× slower than a
+    /// dense matmul at 48×48/B16; this form matches dense speed while
+    /// keeping the l× weight-traffic saving).
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.shape[0], self.n());
+        let b = x.shape[1];
+        let l = self.l;
+        let mut out = vec![0.0f32; self.m() * b];
+        for bp in 0..self.p {
+            for bq in 0..self.q {
+                let blk = self.block(bp, bq);
+                for r in 0..l {
+                    let yrow = &mut out[(bp * l + r) * b..(bp * l + r + 1) * b];
+                    for c in 0..l {
+                        let coef = blk[(c + l - r) % l];
+                        if coef == 0.0 {
+                            continue;
+                        }
+                        let xrow = &x.data[(bq * l + c) * b..(bq * l + c + 1) * b];
+                        for (y, &xv) in yrow.iter_mut().zip(xrow) {
+                            *y += coef * xv;
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(&[self.m(), b], out)
+    }
+
+    /// FFT multiply path (paper Eq. 2); numerically ~1e-4 of the direct
+    /// path, asymptotically faster for large `l`.
+    pub fn mvm_fft(&self, x: &[f32]) -> Vec<f32> {
+        fft::bcm_mvm_fft(self, x)
+    }
+
+    /// Split a full-range BCM into positive-only halves and a scale, the
+    /// paper's time-domain-multiplexed sign handling.
+    pub fn split_signed(&self) -> (Bcm, Bcm, f32) {
+        let scale = self.w.iter().fold(1e-6f32, |m, &v| m.max(v.abs()));
+        let pos = self.w.iter().map(|&v| v.max(0.0) / scale).collect();
+        let neg = self.w.iter().map(|&v| (-v).max(0.0) / scale).collect();
+        (
+            Bcm::new(self.p, self.q, self.l, pos),
+            Bcm::new(self.p, self.q, self.l, neg),
+            scale,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::{self, assert_close};
+    use crate::util::rng::Rng;
+
+    fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
+        let mut r = Rng::new(seed);
+        let mut w = vec![0.0f32; p * q * l];
+        r.fill_uniform(&mut w);
+        Bcm::new(p, q, l, w)
+    }
+
+    #[test]
+    fn expand_order2_matches_eq1() {
+        // primary row [w1, w2] -> [[w1, w2], [w2, w1]]
+        let b = Bcm::new(1, 1, 2, vec![1.0, 2.0]);
+        assert_eq!(b.expand().data, vec![1.0, 2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn expand_rows_are_right_rotations() {
+        let b = rand_bcm(1, 1, 4, 3);
+        let d = b.expand();
+        for r in 1..4 {
+            for c in 0..4 {
+                assert_eq!(d.at2(r, c), d.at2(0, (c + 4 - r) % 4));
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_matches_expansion() {
+        propcheck::check("mvm == expand@x", 100, |g| {
+            let (p, q) = (g.usize_in(1, 5), g.usize_in(1, 5));
+            let l = *g.choose(&[2usize, 4, 8]);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x = g.vec_f32(b.n(), -1.0, 1.0);
+            let direct = b.mvm(&x);
+            let xt = Tensor::new(&[b.n(), 1], x.clone());
+            let dense = b.expand().matmul(&xt);
+            assert_close(&direct, &dense.data, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_matches_mvm_per_column() {
+        let b = rand_bcm(3, 2, 4, 5);
+        let mut r = Rng::new(6);
+        let mut x = vec![0.0f32; b.n() * 3];
+        r.fill_uniform(&mut x);
+        let xt = Tensor::new(&[b.n(), 3], x);
+        let y = b.matmul(&xt);
+        for col in 0..3 {
+            let xcol: Vec<f32> =
+                (0..b.n()).map(|i| xt.at2(i, col)).collect();
+            let ycol = b.mvm(&xcol);
+            for (r_, v) in ycol.iter().enumerate() {
+                assert!((y.at2(r_, col) - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_bcm() {
+        let mut b = Bcm::zeros(3, 3, 4);
+        for i in 0..3 {
+            b.w[(i * 3 + i) * 4] = 1.0;
+        }
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(b.mvm(&x), x);
+    }
+
+    #[test]
+    fn params_is_mn_over_l() {
+        let b = Bcm::zeros(5, 7, 4);
+        assert_eq!(b.params(), 5 * 7 * 4);
+        assert_eq!(b.params(), b.m() * b.n() / b.l);
+        assert!((b.compression() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn project_dense_roundtrips_circulant() {
+        // projecting an already-circulant dense matrix is lossless
+        let b = rand_bcm(2, 3, 4, 7);
+        let back = Bcm::project_dense(&b.expand(), 4);
+        assert_close(&b.w, &back.w, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn split_signed_reconstructs() {
+        propcheck::check("sign split reconstructs", 50, |g| {
+            let b = {
+                let mut w = g.vec_f32(2 * 2 * 4, -3.0, 3.0);
+                // ensure at least one negative + one positive
+                w[0] = -2.0;
+                w[1] = 2.0;
+                Bcm::new(2, 2, 4, w)
+            };
+            let (bp, bn, s) = b.split_signed();
+            for (i, &v) in b.w.iter().enumerate() {
+                let rec = (bp.w[i] - bn.w[i]) * s;
+                prop_assert!((rec - v).abs() < 1e-5, "elem {i}: {rec} vs {v}");
+                prop_assert!((0.0..=1.0).contains(&bp.w[i]));
+                prop_assert!((0.0..=1.0).contains(&bn.w[i]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linearity() {
+        let b = rand_bcm(2, 2, 4, 9);
+        let mut r = Rng::new(10);
+        let mut x1 = vec![0.0f32; 8];
+        let mut x2 = vec![0.0f32; 8];
+        r.fill_uniform(&mut x1);
+        r.fill_uniform(&mut x2);
+        let sum: Vec<f32> = x1.iter().zip(&x2).map(|(a, b)| a + 2.0 * b).collect();
+        let lhs = b.mvm(&sum);
+        let y1 = b.mvm(&x1);
+        let y2 = b.mvm(&x2);
+        for i in 0..lhs.len() {
+            assert!((lhs[i] - (y1[i] + 2.0 * y2[i])).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Dynamic batcher: groups incoming requests up to `max_batch` or until
+//! `max_wait_us` expires, whichever first (the standard serving trade-off
+//! between throughput and tail latency — the knob the serving bench sweeps).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// maximum time the *oldest* request may wait before dispatch (µs)
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait_us: 2000 }
+    }
+}
+
+/// A dispatched batch.
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub formed: Instant,
+}
+
+/// Batcher loop: drains the intake channel into batches.  Exits when the
+/// intake channel closes (coordinator drop), flushing any pending batch.
+pub fn run(
+    rx: mpsc::Receiver<Request>,
+    out: mpsc::Sender<Batch>,
+    cfg: BatcherConfig,
+) {
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        let timeout = if pending.is_empty() {
+            // idle: block until something arrives (bounded poll so channel
+            // close is observed promptly)
+            Duration::from_millis(50)
+        } else {
+            max_wait
+                .checked_sub(pending[0].enqueued.elapsed())
+                .unwrap_or(Duration::ZERO)
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    dispatch(&mut pending, &out);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &out);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &out);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch(pending: &mut Vec<Request>, out: &mpsc::Sender<Batch>) {
+    let batch = Batch {
+        requests: std::mem::take(pending),
+        formed: Instant::now(),
+    };
+    // receiver gone ⇒ shutting down; requests drop, senders see RecvError
+    let _ = out.send(batch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::thread;
+
+    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::Response>) {
+        let (reply, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                image: Tensor::zeros(&[1, 2, 2]),
+                enqueued: Instant::now(),
+                reply,
+            },
+            rx,
+        )
+    }
+
+    fn start(cfg: BatcherConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<Batch>) {
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        thread::spawn(move || run(rx, btx, cfg));
+        (tx, brx)
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let (tx, brx) =
+            start(BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 });
+        for i in 0..4 {
+            tx.send(req(i).0).unwrap();
+        }
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 4);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let (tx, brx) =
+            start(BatcherConfig { max_batch: 64, max_wait_us: 3_000 });
+        tx.send(req(1).0).unwrap();
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 1, "partial batch must flush");
+    }
+
+    #[test]
+    fn flushes_remainder_on_shutdown() {
+        let (tx, brx) =
+            start(BatcherConfig { max_batch: 64, max_wait_us: 10_000_000 });
+        tx.send(req(1).0).unwrap();
+        tx.send(req(2).0).unwrap();
+        drop(tx);
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn order_preserved_within_batch() {
+        let (tx, brx) =
+            start(BatcherConfig { max_batch: 3, max_wait_us: 1_000_000 });
+        for i in [10u64, 11, 12] {
+            tx.send(req(i).0).unwrap();
+        }
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10, 11, 12]);
+    }
+}

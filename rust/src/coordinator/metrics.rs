@@ -1,0 +1,118 @@
+//! Serving metrics: counters + a lock-striped latency reservoir giving
+//! p50/p99 (the numbers the classification_serving example reports).
+
+use std::sync::Mutex;
+
+use crate::util::threadpool::WorkCounter;
+
+/// All coordinator metrics (shared via Arc).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: WorkCounter,
+    pub completed: WorkCounter,
+    pub errors: WorkCounter,
+    pub batches: WorkCounter,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn record_latency_us(&self, us: u64) {
+        let mut v = self.latencies_us.lock().unwrap();
+        // bounded reservoir: keep the most recent 100k samples
+        if v.len() >= 100_000 {
+            v.drain(..50_000);
+        }
+        v.push(us.max(1));
+    }
+
+    /// (p50, p99) end-to-end latency in µs.
+    pub fn latency_percentiles_us(&self) -> (u64, u64) {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return (0, 0);
+        }
+        v.sort_unstable();
+        let pick = |q: f64| v[((v.len() - 1) as f64 * q) as usize];
+        (pick(0.5), pick(0.99))
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let v = self.latencies_us.lock().unwrap();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<u64>() as f64 / v.len() as f64
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.completed.get() as f64 / b as f64
+        }
+    }
+
+    /// One-line summary for logs / benches.
+    pub fn summary(&self) -> String {
+        let (p50, p99) = self.latency_percentiles_us();
+        format!(
+            "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
+             p50={}µs p99={}µs",
+            self.submitted.get(),
+            self.completed.get(),
+            self.errors.get(),
+            self.batches.get(),
+            self.mean_batch_size(),
+            p50,
+            p99
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::default();
+        for us in 1..=100 {
+            m.record_latency_us(us);
+        }
+        let (p50, p99) = m.latency_percentiles_us();
+        assert_eq!(p50, 50);
+        assert_eq!(p99, 99);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_percentiles_us(), (0, 0));
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::default();
+        for i in 0..150_000u64 {
+            m.record_latency_us(i + 1);
+        }
+        let v = m.latencies_us.lock().unwrap();
+        assert!(v.len() <= 100_000);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let m = Metrics::default();
+        m.submitted.add(3);
+        m.completed.add(3);
+        m.batches.add(1);
+        m.record_latency_us(10);
+        let s = m.summary();
+        assert!(s.contains("submitted=3"));
+        assert!(s.contains("mean_batch=3.00"));
+    }
+}

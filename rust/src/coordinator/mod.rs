@@ -1,0 +1,216 @@
+//! L3 serving coordinator (vLLM-router-style): request intake → dynamic
+//! batcher → worker pool → per-request responses, with latency/throughput
+//! metrics.
+//!
+//! The coordinator is generic over [`InferenceBackend`], so the same
+//! router/batcher serves the pure-rust digital engine, the photonic-chip
+//! simulator, and the AOT XLA artifacts (`runtime::Executable`) — the
+//! paper's digital-vs-CirPTC comparisons run through identical serving
+//! machinery.
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+pub mod worker;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use metrics::Metrics;
+pub use scheduler::TileScheduler;
+pub use worker::{BackendFactory, InferenceBackend};
+
+/// One classification request.
+pub struct Request {
+    pub id: u64,
+    pub image: Tensor,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The response delivered to the submitter.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub compute_us: u64,
+}
+
+/// Handle returned by [`Coordinator::submit`].
+pub struct Pending {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+}
+
+/// The running coordinator: intake channel + batcher thread + workers.
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    next_id: std::sync::atomic::AtomicU64,
+    pub metrics: Arc<Metrics>,
+    // keep the threads alive; joined on drop
+    _batcher: worker::JoinOnDrop,
+    _workers: Vec<worker::JoinOnDrop>,
+}
+
+impl Coordinator {
+    /// Start a coordinator over a set of backend *factories* (one worker
+    /// thread per factory; each worker constructs its backend on its own
+    /// thread — required because PJRT clients are thread-local (!Send),
+    /// and desirable because the photonic sim is stateful: each worker
+    /// owns its own "chip").
+    pub fn start(backends: Vec<BackendFactory>, cfg: BatcherConfig) -> Coordinator {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        let _batcher = worker::spawn_named("cirptc-batcher", {
+            let cfg = cfg.clone();
+            move || batcher::run(rx, batch_tx, cfg)
+        });
+
+        let _workers = backends
+            .into_iter()
+            .enumerate()
+            .map(|(i, factory)| {
+                let rx = Arc::clone(&batch_rx);
+                let metrics = Arc::clone(&metrics);
+                worker::spawn_named(&format!("cirptc-worker-{i}"), move || {
+                    worker::run(factory(), rx, metrics)
+                })
+            })
+            .collect();
+
+        Coordinator {
+            tx,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+            metrics,
+            _batcher,
+            _workers,
+        }
+    }
+
+    /// Submit one image; returns a handle to await the response.
+    pub fn submit(&self, image: Tensor) -> Pending {
+        let (reply, rx) = mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Request { id, image, enqueued: Instant::now(), reply })
+            .expect("coordinator alive");
+        self.metrics.submitted.add(1);
+        Pending { rx }
+    }
+
+    /// Submit a whole slice and wait for all responses (ordered by input).
+    pub fn classify_all(&self, images: &[Tensor]) -> Result<Vec<Response>> {
+        let pendings: Vec<Pending> =
+            images.iter().map(|im| self.submit(im.clone())).collect();
+        pendings.into_iter().map(|p| p.wait()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Backend that returns the negated channel means as "logits".
+    struct MeanBackend;
+
+    impl InferenceBackend for MeanBackend {
+        fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            Ok(imgs
+                .iter()
+                .map(|im| {
+                    let m: f32 =
+                        im.data.iter().sum::<f32>() / im.numel() as f32;
+                    vec![m, -m, 2.0 * m]
+                })
+                .collect())
+        }
+
+        fn name(&self) -> String {
+            "mean".into()
+        }
+    }
+
+    fn img(seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut d = vec![0.0f32; 3 * 4 * 4];
+        r.fill_uniform(&mut d);
+        Tensor::new(&[3, 4, 4], d)
+    }
+
+    #[test]
+    fn end_to_end_single() {
+        let c = Coordinator::start(
+            vec![Box::new(|| Box::new(MeanBackend) as _)],
+            BatcherConfig { max_batch: 4, max_wait_us: 500 },
+        );
+        let r = c.submit(img(1)).wait().unwrap();
+        assert_eq!(r.logits.len(), 3);
+        assert!((r.logits[2] - 2.0 * r.logits[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conservation_no_request_lost_or_duplicated() {
+        let c = Coordinator::start(
+            vec![
+                Box::new(|| Box::new(MeanBackend) as _),
+                Box::new(|| Box::new(MeanBackend) as _),
+            ],
+            BatcherConfig { max_batch: 8, max_wait_us: 200 },
+        );
+        let images: Vec<Tensor> = (0..100).map(img).collect();
+        let responses = c.classify_all(&images).unwrap();
+        assert_eq!(responses.len(), 100);
+        // every id exactly once
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+        assert_eq!(c.metrics.completed.get(), 100);
+        assert_eq!(c.metrics.submitted.get(), 100);
+    }
+
+    #[test]
+    fn responses_match_inputs() {
+        let c = Coordinator::start(
+            vec![Box::new(|| Box::new(MeanBackend) as _)],
+            BatcherConfig { max_batch: 3, max_wait_us: 100 },
+        );
+        let images: Vec<Tensor> = (0..10).map(img).collect();
+        let responses = c.classify_all(&images).unwrap();
+        for (im, r) in images.iter().zip(&responses) {
+            let m: f32 = im.data.iter().sum::<f32>() / im.numel() as f32;
+            assert!((r.logits[0] - m).abs() < 1e-6, "response routed wrongly");
+        }
+    }
+
+    #[test]
+    fn metrics_latencies_recorded() {
+        let c = Coordinator::start(
+            vec![Box::new(|| Box::new(MeanBackend) as _)],
+            BatcherConfig { max_batch: 2, max_wait_us: 100 },
+        );
+        let images: Vec<Tensor> = (0..20).map(img).collect();
+        c.classify_all(&images).unwrap();
+        let (p50, p99) = c.metrics.latency_percentiles_us();
+        assert!(p50 > 0 && p99 >= p50);
+        assert!(c.metrics.batches.get() >= 10, "max_batch=2 => ≥10 batches");
+    }
+}

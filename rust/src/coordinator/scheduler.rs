@@ -1,0 +1,175 @@
+//! Tile scheduler: maps the BCM tiles of a large MVM onto a farm of
+//! (simulated) CirPTC chips, respecting each chip's physical size and the
+//! weight-reprogramming cost (paper: weights are "shared and remain
+//! constant during the inference phase", so the scheduler maximises tile
+//! reuse before reprogramming — time-domain hardware reuse).
+
+use crate::arch::CirPtcConfig;
+
+/// One unit of chip work: a (P_t × Q_t) sub-BCM against a batch column set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// block-row range [p0, p1) of the full BCM
+    pub p0: usize,
+    pub p1: usize,
+    /// block-col range [q0, q1)
+    pub q0: usize,
+    pub q1: usize,
+    /// chip this tile is assigned to
+    pub chip: usize,
+    /// sequence number on that chip (weights reprogrammed when it changes)
+    pub step: usize,
+}
+
+/// Schedule description for one MVM.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub tiles: Vec<Tile>,
+    pub chips: usize,
+    /// weight reprogramming events (tile loads)
+    pub reprograms: usize,
+}
+
+/// Static tile scheduler over identical chips.
+pub struct TileScheduler {
+    pub chip: CirPtcConfig,
+    pub n_chips: usize,
+}
+
+impl TileScheduler {
+    pub fn new(chip: CirPtcConfig, n_chips: usize) -> TileScheduler {
+        assert!(n_chips >= 1);
+        TileScheduler { chip, n_chips }
+    }
+
+    /// Tile capacity of one chip in block units.
+    fn cap(&self) -> (usize, usize) {
+        (self.chip.m / self.chip.l, self.chip.effective_n() / self.chip.l)
+    }
+
+    /// Partition a (P × Q)-block BCM into chip-sized tiles, round-robin
+    /// across chips; per-chip step counts weight loads.
+    pub fn schedule(&self, p_blocks: usize, q_blocks: usize) -> Schedule {
+        let (cap_p, cap_q) = self.cap();
+        assert!(cap_p > 0 && cap_q > 0);
+        let mut tiles = Vec::new();
+        let mut steps = vec![0usize; self.n_chips];
+        let mut rr = 0usize;
+        for p0 in (0..p_blocks).step_by(cap_p) {
+            for q0 in (0..q_blocks).step_by(cap_q) {
+                let chip = rr % self.n_chips;
+                tiles.push(Tile {
+                    p0,
+                    p1: (p0 + cap_p).min(p_blocks),
+                    q0,
+                    q1: (q0 + cap_q).min(q_blocks),
+                    chip,
+                    step: steps[chip],
+                });
+                steps[chip] += 1;
+                rr += 1;
+            }
+        }
+        Schedule {
+            reprograms: tiles.len(),
+            tiles,
+            chips: self.n_chips,
+        }
+    }
+
+    /// Estimated MVM latency (cycles) for the schedule with `batch`
+    /// input columns: per tile, weight-load cost + one cycle per column;
+    /// chips run in parallel.
+    pub fn estimated_cycles(
+        &self,
+        sched: &Schedule,
+        batch: usize,
+        weight_load_cycles: usize,
+    ) -> usize {
+        let mut per_chip = vec![0usize; self.n_chips];
+        for t in &sched.tiles {
+            per_chip[t.chip] += weight_load_cycles + batch;
+        }
+        per_chip.into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Verify a schedule covers every block exactly once (test invariant).
+pub fn covers_exactly_once(sched: &Schedule, p_blocks: usize, q_blocks: usize) -> bool {
+    let mut cover = vec![0u8; p_blocks * q_blocks];
+    for t in &sched.tiles {
+        for p in t.p0..t.p1 {
+            for q in t.q0..t.q1 {
+                cover[p * q_blocks + q] += 1;
+            }
+        }
+    }
+    cover.iter().all(|&c| c == 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck;
+
+    fn chip() -> CirPtcConfig {
+        CirPtcConfig { n: 16, m: 16, l: 4, fold: 1, f_op: 1e9 }
+    }
+
+    #[test]
+    fn exact_fit_single_tile() {
+        let s = TileScheduler::new(chip(), 1).schedule(4, 4);
+        assert_eq!(s.tiles.len(), 1);
+        assert!(covers_exactly_once(&s, 4, 4));
+    }
+
+    #[test]
+    fn larger_matrix_tiles_and_covers() {
+        propcheck::check("schedule covers exactly once", 60, |g| {
+            let p = g.usize_in(1, 20);
+            let q = g.usize_in(1, 20);
+            let chips = g.usize_in(1, 4);
+            let s = TileScheduler::new(chip(), chips).schedule(p, q);
+            prop_assert!(covers_exactly_once(&s, p, q), "p={p} q={q}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multi_chip_balances() {
+        let s = TileScheduler::new(chip(), 4).schedule(16, 16);
+        // 16 tiles round-robin across 4 chips => 4 each
+        let mut per = [0usize; 4];
+        for t in &s.tiles {
+            per[t.chip] += 1;
+        }
+        assert_eq!(per, [4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn more_chips_fewer_cycles() {
+        let sched1 = TileScheduler::new(chip(), 1);
+        let sched4 = TileScheduler::new(chip(), 4);
+        let s1 = sched1.schedule(16, 16);
+        let s4 = sched4.schedule(16, 16);
+        let c1 = sched1.estimated_cycles(&s1, 32, 10);
+        let c4 = sched4.estimated_cycles(&s4, 32, 10);
+        assert!(c4 < c1, "{c4} !< {c1}");
+        assert_eq!(c4 * 4, c1, "perfect balance at this size");
+    }
+
+    #[test]
+    fn steps_monotone_per_chip() {
+        let s = TileScheduler::new(chip(), 2).schedule(8, 8);
+        let mut last = vec![None::<usize>; 2];
+        for t in &s.tiles {
+            if let Some(prev) = last[t.chip] {
+                assert_eq!(t.step, prev + 1);
+            } else {
+                assert_eq!(t.step, 0);
+            }
+            last[t.chip] = Some(t.step);
+        }
+    }
+}

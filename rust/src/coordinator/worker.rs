@@ -1,0 +1,201 @@
+//! Worker loop: pulls batches from the shared queue, runs the backend,
+//! replies to each request, and records metrics.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::onn::{Backend, Engine};
+use crate::tensor::Tensor;
+
+use super::metrics::Metrics;
+use super::{Batch, Response};
+
+/// Anything that can classify a batch of images.
+pub trait InferenceBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>>;
+    fn name(&self) -> String;
+}
+
+/// Constructs a backend *on the worker's own thread*.  PJRT clients are
+/// `!Send` (Rc-based), so XLA backends cannot cross threads; the factory
+/// pattern lets every worker build its own client/sim locally.
+pub type BackendFactory = Box<dyn FnOnce() -> Box<dyn InferenceBackend> + Send>;
+
+/// The ONN engine + execution mode as a serving backend.
+pub struct EngineBackend {
+    pub engine: Arc<Engine>,
+    pub mode: Backend,
+}
+
+impl InferenceBackend for EngineBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        self.engine.forward_batch(imgs, &mut self.mode)
+    }
+
+    fn name(&self) -> String {
+        match self.mode {
+            Backend::Digital => "engine/digital".into(),
+            Backend::PhotonicSim(_) => "engine/photonic-sim".into(),
+        }
+    }
+}
+
+/// An AOT XLA artifact as a serving backend.  Owns its own Runtime (PJRT
+/// client), so it must be constructed by a [`BackendFactory`] on the
+/// worker thread.  The artifact has a fixed batch dimension, so short
+/// batches are zero-padded up to it.
+pub struct XlaBackend {
+    pub rt: crate::runtime::Runtime,
+    pub model: String,
+    pub batch: usize,
+    pub classes: usize,
+    pub input_chw: (usize, usize, usize),
+}
+
+impl XlaBackend {
+    pub fn new(
+        artifacts: &std::path::Path,
+        model: &str,
+        batch: usize,
+        classes: usize,
+        input_chw: (usize, usize, usize),
+    ) -> Result<XlaBackend> {
+        let mut rt = crate::runtime::Runtime::new(artifacts)?;
+        rt.load(model)?; // compile eagerly so serving never stalls
+        Ok(XlaBackend { rt, model: model.to_string(), batch, classes, input_chw })
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let (c, h, w) = self.input_chw;
+        let per = c * h * w;
+        let mut out = Vec::with_capacity(imgs.len());
+        for chunk in imgs.chunks(self.batch) {
+            let mut data = vec![0.0f32; self.batch * per];
+            for (i, im) in chunk.iter().enumerate() {
+                data[i * per..(i + 1) * per].copy_from_slice(&im.data);
+            }
+            let x = Tensor::new(&[self.batch, c, h, w], data);
+            let flat = self.rt.load(&self.model)?.run(&[&x])?;
+            for i in 0..chunk.len() {
+                out.push(flat[i * self.classes..(i + 1) * self.classes].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> String {
+        format!("xla/{}", self.model)
+    }
+}
+
+/// Worker loop body (runs on its own thread).
+pub fn run(
+    mut backend: Box<dyn InferenceBackend>,
+    rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // take one batch while holding the lock, then release before compute
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return, // queue closed
+        };
+        let images: Vec<Tensor> =
+            batch.requests.iter().map(|r| r.image.clone()).collect();
+        let t0 = Instant::now();
+        match backend.infer_batch(&images) {
+            Ok(all_logits) => {
+                let compute_us =
+                    (t0.elapsed().as_micros() as u64).max(1) / images.len() as u64;
+                for (req, logits) in batch.requests.into_iter().zip(all_logits) {
+                    let queue_us =
+                        batch.formed.duration_since(req.enqueued).as_micros()
+                            as u64;
+                    let total =
+                        req.enqueued.elapsed().as_micros() as u64;
+                    metrics.record_latency_us(total);
+                    metrics.completed.add(1);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        logits,
+                        queue_us,
+                        compute_us,
+                    });
+                }
+                metrics.batches.add(1);
+            }
+            Err(e) => {
+                // fail the whole batch: drop reply senders (receivers see
+                // a closed channel) and count the errors
+                log::error!("backend {} failed: {e:#}", backend.name());
+                metrics.errors.add(batch.requests.len());
+            }
+        }
+    }
+}
+
+/// Join handle that detaches on drop failure-free (workers exit when their
+/// channels close, so drop order guarantees termination).
+pub struct JoinOnDrop(Option<thread::JoinHandle<()>>);
+
+impl Drop for JoinOnDrop {
+    fn drop(&mut self) {
+        if let Some(h) = self.0.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+pub fn spawn_named<F: FnOnce() + Send + 'static>(name: &str, f: F) -> JoinOnDrop {
+    JoinOnDrop(Some(
+        thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn thread"),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountBackend(usize);
+
+    impl InferenceBackend for CountBackend {
+        fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            self.0 += imgs.len();
+            Ok(imgs.iter().map(|_| vec![0.0]).collect())
+        }
+        fn name(&self) -> String {
+            "count".into()
+        }
+    }
+
+    #[test]
+    fn worker_exits_on_queue_close() {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let h = spawn_named("t", {
+            let rx = Arc::clone(&rx);
+            let m = Arc::clone(&metrics);
+            move || run(Box::new(CountBackend(0)), rx, m)
+        });
+        drop(tx);
+        drop(h); // join must not hang
+    }
+
+    #[test]
+    fn xla_backend_padding_logic() {
+        // shape math only (no PJRT in unit tests): chunks + per-image strides
+        let imgs: Vec<Tensor> = (0..5).map(|_| Tensor::zeros(&[1, 2, 2])).collect();
+        let chunks: Vec<usize> = imgs.chunks(4).map(|c| c.len()).collect();
+        assert_eq!(chunks, vec![4, 1]);
+    }
+}

@@ -1,0 +1,213 @@
+//! CPT1 tensor-bundle reader/writer — the python↔rust weight interchange
+//! (format spec in `python/compile/export.py`):
+//!
+//! ```text
+//! magic  b"CPT1"
+//! u32    n_tensors
+//! repeat: u32 name_len; name; u8 dtype(0=f32,1=i32); u8 ndim; u32[ndim]; data
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor in a bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Entry {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Entry {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Entry::F32 { shape, .. } | Entry::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Entry::F32 { data, .. } => Ok(data),
+            Entry::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Entry::I32 { data, .. } => Ok(data),
+            Entry::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+/// A named-tensor bundle.
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub tensors: BTreeMap<String, Entry>,
+}
+
+const MAGIC: &[u8; 4] = b"CPT1";
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+impl Bundle {
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = std::io::BufReader::new(file);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let n = read_u32(&mut r)?;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("tensor name utf-8")?;
+            let dtype = read_u8(&mut r)?;
+            let ndim = read_u8(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let count: usize = shape.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; count * 4];
+            r.read_exact(&mut raw)?;
+            let entry = match dtype {
+                0 => Entry::F32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                1 => Entry::I32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                d => bail!("unknown dtype {d} for tensor {name}"),
+            };
+            tensors.insert(name, entry);
+        }
+        Ok(Bundle { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, entry) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            match entry {
+                Entry::F32 { shape, data } => {
+                    w.write_all(&[0u8, shape.len() as u8])?;
+                    for d in shape {
+                        w.write_all(&(*d as u32).to_le_bytes())?;
+                    }
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Entry::I32 { shape, data } => {
+                    w.write_all(&[1u8, shape.len() as u8])?;
+                    for d in shape {
+                        w.write_all(&(*d as u32).to_le_bytes())?;
+                    }
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn insert_f32(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.tensors
+            .insert(name.into(), Entry::F32 { shape: shape.to_vec(), data });
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' missing from bundle"))
+    }
+
+    /// f32 tensor accessor with shape check.
+    pub fn f32_checked(&self, name: &str, shape: &[usize]) -> Result<&[f32]> {
+        let e = self.get(name)?;
+        if e.shape() != shape {
+            bail!("tensor '{name}': shape {:?}, expected {shape:?}", e.shape());
+        }
+        e.as_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = Bundle::default();
+        b.insert_f32("a.w", &[2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.0]);
+        b.tensors.insert(
+            "labels".into(),
+            Entry::I32 { shape: vec![4], data: vec![0, 1, 2, 3] },
+        );
+        let dir = std::env::temp_dir().join("cirptc_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.cpt");
+        b.save(&path).unwrap();
+        let back = Bundle::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a.w").unwrap(), b.get("a.w").unwrap());
+        assert_eq!(back.get("labels").unwrap().as_i32().unwrap(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let b = Bundle::default();
+        assert!(b.get("nope").is_err());
+    }
+
+    #[test]
+    fn shape_check() {
+        let mut b = Bundle::default();
+        b.insert_f32("x", &[2, 2], vec![0.0; 4]);
+        assert!(b.f32_checked("x", &[2, 2]).is_ok());
+        assert!(b.f32_checked("x", &[4]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("cirptc_bundle_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cpt");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(Bundle::load(&path).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic dataset generators — rust mirrors of `python/compile/data.py`
+//! (same class structure; exact bitwise parity with numpy is not required
+//! because the *served* test sets are exported by python into
+//! `artifacts/models/*_testset.cpt`; these generators power rust-only
+//! workloads: the Fig. 3 image-processing bench and load generation).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A labelled image-classification split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    /// (n, c, h, w) row-major
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+}
+
+impl Split {
+    pub fn image(&self, i: usize) -> Tensor {
+        let sz = self.c * self.h * self.w;
+        Tensor::new(&[self.c, self.h, self.w],
+                    self.images[i * sz..(i + 1) * sz].to_vec())
+    }
+}
+
+const GLYPHS: [[u8; 7]; 10] = [
+    // 5-bit rows, MSB = left column (mirrors python _DIGIT_GLYPHS)
+    [0b11111, 0b10001, 0b10001, 0b10001, 0b10001, 0b10001, 0b11111],
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110],
+    [0b11111, 0b00001, 0b00001, 0b11111, 0b10000, 0b10000, 0b11111],
+    [0b11111, 0b00001, 0b00001, 0b01111, 0b00001, 0b00001, 0b11111],
+    [0b10001, 0b10001, 0b10001, 0b11111, 0b00001, 0b00001, 0b00001],
+    [0b11111, 0b10000, 0b10000, 0b11111, 0b00001, 0b00001, 0b11111],
+    [0b11111, 0b10000, 0b10000, 0b11111, 0b10001, 0b10001, 0b11111],
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000],
+    [0b11111, 0b10001, 0b10001, 0b11111, 0b10001, 0b10001, 0b11111],
+    [0b11111, 0b10001, 0b10001, 0b11111, 0b00001, 0b00001, 0b11111],
+];
+
+/// SVHN stand-in: colored digit glyphs on textured backgrounds.
+pub fn synth_digits(n: usize, seed: u64) -> Split {
+    let (c, sz) = (3usize, 32usize);
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * c * sz * sz];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let digit = rng.below(10);
+        labels[i] = digit as u8;
+        let img = &mut images[i * c * sz * sz..(i + 1) * c * sz * sz];
+        for v in img.iter_mut() {
+            *v = rng.range(0.0, 0.35) as f32;
+        }
+        let scale = rng.int_in(2, 3) as usize;
+        let (gh, gw) = (7 * scale, 5 * scale);
+        let r0 = rng.below(sz - gh + 1);
+        let c0 = rng.below(sz - gw + 1);
+        let color: Vec<f32> = (0..3).map(|_| rng.range(0.6, 1.0) as f32).collect();
+        for gy in 0..gh {
+            for gx in 0..gw {
+                let on = GLYPHS[digit][gy / scale] >> (4 - gx / scale) & 1 == 1;
+                if on {
+                    for ch in 0..3 {
+                        img[ch * sz * sz + (r0 + gy) * sz + c0 + gx] = color[ch];
+                    }
+                }
+            }
+        }
+        for v in img.iter_mut() {
+            *v = (*v + rng.normal_f32(0.0, 0.05)).clamp(0.0, 1.0);
+        }
+    }
+    Split { images, labels, n, c, h: sz, w: sz, classes: 10 }
+}
+
+/// CIFAR-10 stand-in: oriented/frequency Gabor-texture classes.
+pub fn synth_textures(n: usize, seed: u64) -> Split {
+    let (c, sz) = (3usize, 32usize);
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * c * sz * sz];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = rng.below(10);
+        labels[i] = class as u8;
+        let theta = std::f64::consts::PI * (class % 5) as f64 / 5.0
+            + rng.normal() * 0.08;
+        let freq = [2.0, 4.0][class / 5] * rng.range(0.9, 1.1);
+        let phase = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let tint: Vec<f64> = (0..3).map(|_| rng.range(0.7, 1.0)).collect();
+        let img = &mut images[i * c * sz * sz..(i + 1) * c * sz * sz];
+        for y in 0..sz {
+            for x in 0..sz {
+                let u = theta.cos() * (x as f64 / sz as f64)
+                    + theta.sin() * (y as f64 / sz as f64);
+                let base = 0.5
+                    + 0.45 * (2.0 * std::f64::consts::PI * freq * u + phase).sin();
+                for ch in 0..3 {
+                    img[ch * sz * sz + y * sz + x] = (base * tint[ch]) as f32;
+                }
+            }
+        }
+        for v in img.iter_mut() {
+            *v = (*v + rng.normal_f32(0.0, 0.08)).clamp(0.0, 1.0);
+        }
+    }
+    Split { images, labels, n, c, h: sz, w: sz, classes: 10 }
+}
+
+/// COVID-QU-Ex stand-in: 3-class grayscale CXR-like images
+/// (0 normal / 1 diffuse "covid" haze / 2 focal opacities).
+pub fn synth_cxr(n: usize, seed: u64) -> Split {
+    let sz = 64usize;
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * sz * sz];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = rng.below(3);
+        labels[i] = class as u8;
+        let gain = rng.range(0.9, 1.1);
+        let img = &mut images[i * sz * sz..(i + 1) * sz * sz];
+        for y in 0..sz {
+            for x in 0..sz {
+                let (xf, yf) = (x as f64 / sz as f64, y as f64 / sz as f64);
+                let mut v = 0.15 + 0.1 * yf;
+                for cx in [0.32, 0.68] {
+                    let d = ((xf - cx) / 0.18).powi(2)
+                        + ((yf - 0.52) / 0.32).powi(2);
+                    v += 0.55 * (-d * 1.5).exp();
+                }
+                img[y * sz + x] = (v * gain) as f32;
+            }
+        }
+        match class {
+            1 => {
+                let haze = rng.range(0.12, 0.25);
+                let th = rng.range(0.0, std::f64::consts::PI);
+                for y in 0..sz {
+                    for x in 0..sz {
+                        let u = th.cos() * (x as f64 / sz as f64)
+                            + th.sin() * (y as f64 / sz as f64);
+                        img[y * sz + x] += (haze
+                            * (0.6
+                                + 0.4
+                                    * (2.0 * std::f64::consts::PI * 3.0 * u)
+                                        .sin()))
+                            as f32;
+                    }
+                }
+            }
+            2 => {
+                for _ in 0..rng.int_in(1, 3) {
+                    let cx = rng.range(0.2, 0.8);
+                    let cy = rng.range(0.3, 0.75);
+                    let rad = rng.range(0.05, 0.12);
+                    for y in 0..sz {
+                        for x in 0..sz {
+                            let d = ((x as f64 / sz as f64 - cx).powi(2)
+                                + (y as f64 / sz as f64 - cy).powi(2))
+                                / (rad * rad);
+                            img[y * sz + x] += (0.35 * (-d).exp()) as f32;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        for v in img.iter_mut() {
+            *v = (*v + rng.normal_f32(0.0, 0.04)).clamp(0.0, 1.0);
+        }
+    }
+    Split { images, labels, n, c: 1, h: sz, w: sz, classes: 3 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_well_formed() {
+        let s = synth_digits(64, 1);
+        assert_eq!(s.images.len(), 64 * 3 * 32 * 32);
+        assert!(s.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(s.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = synth_textures(16, 7);
+        let b = synth_textures(16, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = synth_textures(16, 8);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn cxr_classes_distinguishable() {
+        // class means should differ: haze/opacity add brightness
+        let s = synth_cxr(150, 3);
+        let mut sums = [0.0f64; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..s.n {
+            let img = &s.images[i * 64 * 64..(i + 1) * 64 * 64];
+            sums[s.labels[i] as usize] +=
+                img.iter().map(|&v| v as f64).sum::<f64>();
+            counts[s.labels[i] as usize] += 1;
+        }
+        let mean =
+            |k: usize| sums[k] / (counts[k].max(1) as f64 * 64.0 * 64.0);
+        assert!(mean(1) > mean(0) + 0.02, "haze brighter than normal");
+        assert!(mean(2) > mean(0), "opacities brighter than normal");
+    }
+
+    #[test]
+    fn all_classes_generated() {
+        let s = synth_digits(200, 5);
+        let mut seen = [false; 10];
+        for &l in &s.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn image_accessor_shape() {
+        let s = synth_cxr(4, 9);
+        let img = s.image(2);
+        assert_eq!(img.shape, vec![1, 64, 64]);
+    }
+}

@@ -1,0 +1,133 @@
+//! The convolution kernels demonstrated on-chip in paper Fig. 3: blur,
+//! Sobel (vertical/horizontal), sharpen, emboss — plus the block-circulant
+//! extension that lets an *arbitrary* kernel run on CirPTC by targeting a
+//! single crossbar column (paper Supplementary Note 5: "we can still
+//! implement arbitrary kernels by exclusively targeting one column in the
+//! crossbar array after block-circulant extension").
+
+use crate::circulant::Bcm;
+use crate::tensor::Tensor;
+
+/// A named 3×3 image kernel.
+#[derive(Clone, Debug)]
+pub struct ImageKernel {
+    pub name: &'static str,
+    pub k: [f32; 9],
+}
+
+pub fn blur() -> ImageKernel {
+    ImageKernel { name: "blur", k: [1.0 / 9.0; 9] }
+}
+
+pub fn sobel_v() -> ImageKernel {
+    ImageKernel {
+        name: "sobel_v",
+        k: [-1.0, 0.0, 1.0, -2.0, 0.0, 2.0, -1.0, 0.0, 1.0],
+    }
+}
+
+pub fn sobel_h() -> ImageKernel {
+    ImageKernel {
+        name: "sobel_h",
+        k: [-1.0, -2.0, -1.0, 0.0, 0.0, 0.0, 1.0, 2.0, 1.0],
+    }
+}
+
+pub fn sharpen() -> ImageKernel {
+    ImageKernel {
+        name: "sharpen",
+        k: [0.0, -1.0, 0.0, -1.0, 5.0, -1.0, 0.0, -1.0, 0.0],
+    }
+}
+
+pub fn emboss() -> ImageKernel {
+    ImageKernel {
+        name: "emboss",
+        k: [-2.0, -1.0, 0.0, -1.0, 1.0, 1.0, 0.0, 1.0, 2.0],
+    }
+}
+
+/// The four kernels applied to the CXR image in paper Fig. 3e.
+pub fn fig3e_kernels() -> Vec<ImageKernel> {
+    vec![blur(), sobel_v(), sobel_h(), sharpen()]
+}
+
+/// Block-circulant extension of one arbitrary 3×3 kernel: the 9 taps are
+/// zero-padded to 12 (the paper's "addition of 3 rows of padding") and laid
+/// out as a (1, 3, 4) compressed BCM whose *first dense row* equals the
+/// padded kernel — so the kernel's exact output appears on dense row 0
+/// (one crossbar column), and rows 1..3 carry the circulant replicas.
+pub fn extend_kernel(k: &ImageKernel, l: usize) -> Bcm {
+    let n_pad = (9 + l - 1) / l * l;
+    let q = n_pad / l;
+    let mut w = vec![0.0f32; q * l];
+    w[..9].copy_from_slice(&k.k);
+    Bcm::new(1, q, l, w)
+}
+
+/// Dense weight-matrix form (Cout rows = kernels) for digital reference.
+pub fn kernels_to_matrix(ks: &[ImageKernel]) -> Tensor {
+    let mut data = Vec::with_capacity(ks.len() * 9);
+    for k in ks {
+        data.extend_from_slice(&k.k);
+    }
+    Tensor::new(&[ks.len(), 9], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, im2col};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn blur_sums_to_one() {
+        assert!((blur().k.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sobel_sums_to_zero() {
+        assert!(sobel_v().k.iter().sum::<f32>().abs() < 1e-6);
+        assert!(sobel_h().k.iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn extension_first_row_is_kernel() {
+        let b = extend_kernel(&sobel_v(), 4);
+        let dense = b.expand();
+        assert_eq!(dense.shape, vec![4, 12]);
+        for (i, &tap) in sobel_v().k.iter().enumerate() {
+            assert_eq!(dense.at2(0, i), tap);
+        }
+        for i in 9..12 {
+            assert_eq!(dense.at2(0, i), 0.0, "padding column {i}");
+        }
+    }
+
+    #[test]
+    fn extended_kernel_convolves_exactly() {
+        // one-channel image: BCM row 0 on padded im2col == direct conv
+        let mut r = Rng::new(3);
+        let mut img = vec![0.0f32; 8 * 8];
+        r.fill_uniform(&mut img);
+        let img = Tensor::new(&[1, 8, 8], img);
+        let k = sharpen();
+        let want = conv2d(&img, &kernels_to_matrix(&[k.clone()]), 3, false);
+
+        let bcm = extend_kernel(&k, 4);
+        let xm = im2col(&img, 3);
+        // pad patch matrix rows 9 -> 12
+        let cols = xm.shape[1];
+        let mut xp = Tensor::zeros(&[12, cols]);
+        xp.data[..9 * cols].copy_from_slice(&xm.data);
+        let y = bcm.matmul(&xp);
+        for c in 0..cols {
+            assert!((y.at2(0, c) - want.data[c]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fig3e_has_four_kernels() {
+        assert_eq!(fig3e_kernels().len(), 4);
+    }
+}

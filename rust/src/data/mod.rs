@@ -1,0 +1,8 @@
+//! Data layer: the CPT1 tensor-bundle interchange format and the synthetic
+//! dataset generators (rust mirrors of `python/compile/data.py`).
+
+pub mod bundle;
+pub mod datasets;
+pub mod kernels;
+
+pub use bundle::Bundle;

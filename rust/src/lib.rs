@@ -1,0 +1,29 @@
+//! # cirptc — block-circulant photonic tensor core (StrC-ONN) reproduction
+//!
+//! Production-quality reproduction of *"A Hardware-Efficient Photonic
+//! Tensor Core: Accelerating Deep Neural Networks with Structured
+//! Compression"* (Ning et al., Optica 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator, photonic-chip
+//!   simulator, analytical benchmark models and every substrate;
+//! * **L2** (`python/compile/model.py`) — the StrC-ONN in JAX, AOT-lowered
+//!   to the HLO artifacts this crate loads via PJRT;
+//! * **L1** (`python/compile/kernels/`) — Pallas block-circulant kernels.
+//!
+//! Python never runs on the request path: `make artifacts` once, then the
+//! `cirptc` binary serves from `artifacts/` alone.  See DESIGN.md for the
+//! full system inventory and the per-experiment index.
+
+pub mod analysis;
+pub mod arch;
+pub mod circulant;
+pub mod coordinator;
+pub mod data;
+pub mod onn;
+pub mod photonic;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,202 @@
+//! `cirptc` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   info                       artifact + chip inventory
+//!   serve  [--model M]         serve the exported test set, print metrics
+//!   mvm    [--size S]          one BCM matmul through sim + XLA paths
+//!   analyze                    print the benchmark-analysis summary
+//!
+//! Everything here is also exercised by examples/ and benches/; the binary
+//! is the operational front door.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use cirptc::analysis::{AreaModel, PowerModel, WeightTech};
+use cirptc::arch::CirPtcConfig;
+use cirptc::circulant::Bcm;
+use cirptc::coordinator::{BatcherConfig, Coordinator};
+use cirptc::coordinator::worker::EngineBackend;
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine};
+use cirptc::runtime::Runtime;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{argmax, Tensor};
+use cirptc::util::cli::Args;
+use cirptc::util::rng::Rng;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.positional().first().map(String::as_str) {
+        Some("info") => info(&args),
+        Some("serve") => serve(&args),
+        Some("mvm") => mvm(&args),
+        Some("analyze") => analyze(),
+        _ => {
+            eprintln!(
+                "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
+                 [--model NAME] [--backend digital|photonic|xla] [--size S]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts in {}:", dir.display());
+    for name in rt.available() {
+        println!("  {name}");
+    }
+    let chip = ChipDescription::load(&dir.join("chip.json"))?;
+    println!(
+        "chip: order-{} eps-derived Γ, dark={}, σ_rel={}, w/x bits={}/{}",
+        chip.l, chip.dark, chip.sigma_rel, chip.w_bits, chip.x_bits
+    );
+    // verify one artifact compiles
+    let _ = rt.load("bcm_16x16_b8")?;
+    println!("bcm_16x16_b8 compiled OK");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let model = args.str_or("model", "synth_cxr");
+    let backend = args.str_or("backend", "photonic");
+    let workers = args.usize_or("workers", 2);
+
+    // substrate-specific weights: DPE bundle for the photonic path, the
+    // digitally-trained baseline for the digital path (see
+    // python/compile/recalib.py for why BN calibration follows substrate)
+    let variant = if backend == "digital" { "digital" } else { "dpe" };
+    let mut bundle = dir.join(format!("models/{model}_{variant}.cpt"));
+    if !bundle.exists() {
+        bundle = dir.join(format!("models/{model}_dpe.cpt"));
+    }
+    let engine = Arc::new(Engine::load(
+        &dir.join(format!("models/{model}.json")),
+        &bundle,
+    )?);
+    let chip = ChipDescription::load(&dir.join("chip.json"))?;
+    let test = Bundle::load(&dir.join(format!("models/{model}_testset.cpt")))?;
+    let (c, h) = engine.manifest.input_shape();
+    let xs = test.get("x")?.as_f32()?;
+    let ys = test.get("y")?.as_i32()?;
+    let n = ys.len();
+    let images: Vec<Tensor> = (0..n)
+        .map(|i| {
+            Tensor::new(&[c, h, h], xs[i * c * h * h..(i + 1) * c * h * h].to_vec())
+        })
+        .collect();
+
+    let backends: Vec<cirptc::coordinator::BackendFactory> = (0..workers)
+        .map(|i| {
+            let engine = Arc::clone(&engine);
+            let backend = backend.clone();
+            let mut d = chip.clone();
+            d.seed ^= i as u64; // independent chip instances
+            Box::new(move || {
+                let mode = match backend.as_str() {
+                    "digital" => Backend::Digital,
+                    _ => Backend::PhotonicSim(ChipSim::new(d)),
+                };
+                Box::new(EngineBackend { engine, mode })
+                    as Box<dyn cirptc::coordinator::InferenceBackend>
+            }) as cirptc::coordinator::BackendFactory
+        })
+        .collect();
+
+    let coord = Coordinator::start(
+        backends,
+        BatcherConfig {
+            max_batch: args.usize_or("batch", 8),
+            max_wait_us: args.usize_or("wait-us", 2000) as u64,
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let responses = coord.classify_all(&images)?;
+    let wall = t0.elapsed();
+    let correct = responses
+        .iter()
+        .zip(ys)
+        .filter(|(r, &y)| argmax(&r.logits) == y as usize)
+        .count();
+    println!(
+        "served {n} requests on {model} [{backend}] in {:.2}s  \
+         acc={:.4}  throughput={:.1} req/s",
+        wall.as_secs_f64(),
+        correct as f64 / n as f64,
+        n as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", coord.metrics.summary());
+    Ok(())
+}
+
+fn mvm(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let size = args.usize_or("size", 48);
+    let (p, q, l, b) = (size / 4, size / 4, 4usize, 16usize);
+    let mut rng = Rng::new(1);
+    let mut w = vec![0.0f32; p * q * l];
+    rng.fill_uniform(&mut w);
+    let bcm = Bcm::new(p, q, l, w.clone());
+    let mut x = vec![0.0f32; size * b];
+    rng.fill_uniform(&mut x);
+    let xt = Tensor::new(&[size, b], x);
+
+    // rust photonic-sim path
+    let chip = ChipDescription::load(&dir.join("chip.json"))
+        .unwrap_or_else(|_| ChipDescription::ideal(4));
+    let mut sim = ChipSim::deterministic(chip);
+    let y_sim = sim.forward(&bcm, &xt);
+
+    // XLA AOT path (if the matching artifact exists)
+    let mut rt = Runtime::new(&dir)?;
+    let name = format!("crossbar_{size}x{size}_b{b}");
+    match rt.load(&name) {
+        Ok(exe) => {
+            let wt = Tensor::new(&[p, q, l], w);
+            let y_xla = exe.run(&[&wt, &xt])?;
+            let diff = y_sim
+                .data
+                .iter()
+                .zip(&y_xla)
+                .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+            println!(
+                "mvm {size}x{size}: sim vs XLA max |Δ| = {diff:.2e} \
+                 ({} outputs)",
+                y_xla.len()
+            );
+        }
+        Err(e) => println!("mvm {size}x{size}: sim OK; XLA artifact: {e:#}"),
+    }
+    Ok(())
+}
+
+fn analyze() -> Result<()> {
+    let area = AreaModel::paper();
+    let power = PowerModel::paper();
+    for (label, cfg, tech) in [
+        ("48x48 thermo", CirPtcConfig::scaled_48(), WeightTech::ThermoOptic),
+        ("48x48 r=4 thermo", CirPtcConfig::folded_48(), WeightTech::ThermoOptic),
+        ("48x48 r=4 MOSCAP", CirPtcConfig::folded_48(), WeightTech::Moscap),
+    ] {
+        println!(
+            "{label:<18} density={:.2} TOPS/mm²  efficiency={:.2} TOPS/W  \
+             (vs uncompressed ×{:.2})",
+            area.computing_density_tops_mm2(&cfg),
+            power.efficiency_tops_w(&cfg, tech),
+            power.efficiency_tops_w(&cfg, tech)
+                / power.uncompressed_efficiency_tops_w(&cfg, tech),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,412 @@
+//! Layer-graph execution: digital fp32 or photonic-simulated CirPTC.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::circulant::Bcm;
+use crate::data::Bundle;
+use crate::simulator::ChipSim;
+use crate::tensor::{self, Tensor};
+
+use super::manifest::{LayerKind, LayerSpec, Manifest};
+
+/// Execution backend for conv/FC layers.
+#[derive(Debug)]
+pub enum Backend {
+    /// fp32 dense math (expansion of compressed weights)
+    Digital,
+    /// every linear layer streamed through the CirPTC simulator as
+    /// sign-split positive-only BCM tiles (paper lookup-mode inference)
+    PhotonicSim(ChipSim),
+}
+
+fn ceil_to(x: usize, m: usize) -> usize {
+    (x + m - 1) / m * m
+}
+
+/// Weights of one linear layer in both representations.
+struct LinearWeights {
+    /// compressed BCM (circ arch) — padded dims (P·l ≥ cout, Q·l ≥ n)
+    bcm: Option<Bcm>,
+    /// dense (m, n) weight (gemm arch, or the expansion cache for circ)
+    dense: Tensor,
+    bias: Vec<f32>,
+}
+
+struct BnWeights {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    mean: Vec<f32>,
+    var: Vec<f32>,
+}
+
+enum LayerState {
+    Linear(LinearWeights),
+    Bn(BnWeights),
+    Stateless,
+}
+
+/// A loaded StrC-ONN ready to execute.
+pub struct Engine {
+    pub manifest: Manifest,
+    layers: Vec<LayerState>,
+}
+
+impl Engine {
+    /// Load manifest + weight bundle (as exported by `compile.train`).
+    pub fn load(manifest_path: &Path, bundle_path: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(manifest_path)?;
+        let bundle = Bundle::load(bundle_path)?;
+        Engine::from_parts(manifest, &bundle)
+    }
+
+    pub fn from_parts(manifest: Manifest, bundle: &Bundle) -> Result<Engine> {
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for (i, spec) in manifest.layers.iter().enumerate() {
+            let name = format!("layer{i}");
+            let state = match spec.kind {
+                LayerKind::Conv | LayerKind::Fc => {
+                    let n_in = if spec.kind == LayerKind::Conv {
+                        spec.cin * spec.k * spec.k
+                    } else {
+                        spec.cin
+                    };
+                    let w = bundle.get(&format!("{name}.w"))?;
+                    let bias =
+                        bundle.get(&format!("{name}.b"))?.as_f32()?.to_vec();
+                    if spec.arch == "circ" {
+                        let (p, q) = (
+                            ceil_to(spec.cout, spec.l) / spec.l,
+                            ceil_to(n_in, spec.l) / spec.l,
+                        );
+                        let data = w.as_f32()?;
+                        if w.shape() != [p, q, spec.l] {
+                            bail!(
+                                "{name}.w shape {:?}, expected [{p},{q},{}]",
+                                w.shape(), spec.l
+                            );
+                        }
+                        let bcm =
+                            Bcm::new(p, q, spec.l, data.to_vec());
+                        // dense expansion sliced to logical dims, cached
+                        // for the digital path
+                        let full = bcm.expand();
+                        let mut dense =
+                            Tensor::zeros(&[spec.cout, n_in]);
+                        for r in 0..spec.cout {
+                            for c in 0..n_in {
+                                dense.set2(r, c, full.at2(r, c));
+                            }
+                        }
+                        LayerState::Linear(LinearWeights {
+                            bcm: Some(bcm),
+                            dense,
+                            bias,
+                        })
+                    } else {
+                        let data = w.as_f32()?.to_vec();
+                        LayerState::Linear(LinearWeights {
+                            bcm: None,
+                            dense: Tensor::new(&[spec.cout, n_in], data),
+                            bias,
+                        })
+                    }
+                }
+                LayerKind::Bn => LayerState::Bn(BnWeights {
+                    gamma: bundle.get(&format!("{name}.gamma"))?.as_f32()?.to_vec(),
+                    beta: bundle.get(&format!("{name}.beta"))?.as_f32()?.to_vec(),
+                    mean: bundle
+                        .get(&format!("{name}.state.mean"))?
+                        .as_f32()?
+                        .to_vec(),
+                    var: bundle
+                        .get(&format!("{name}.state.var"))?
+                        .as_f32()?
+                        .to_vec(),
+                }),
+                _ => LayerState::Stateless,
+            };
+            layers.push(state);
+        }
+        Ok(Engine { manifest, layers })
+    }
+
+    /// Forward one image (c, h, w) → logits.
+    pub fn forward(&self, img: &Tensor, backend: &mut Backend) -> Result<Vec<f32>> {
+        let mut act = Activation::Image(img.clone());
+        for (i, spec) in self.manifest.layers.iter().enumerate() {
+            act = self.run_layer(i, spec, act, backend)?;
+        }
+        match act {
+            Activation::Vector(v) => Ok(v),
+            Activation::Image(_) => bail!("network did not end in a vector"),
+        }
+    }
+
+    /// Forward a batch; returns (batch, classes) logits row-major.
+    pub fn forward_batch(
+        &self,
+        imgs: &[Tensor],
+        backend: &mut Backend,
+    ) -> Result<Vec<Vec<f32>>> {
+        imgs.iter().map(|im| self.forward(im, backend)).collect()
+    }
+
+    fn run_layer(
+        &self,
+        idx: usize,
+        spec: &LayerSpec,
+        act: Activation,
+        backend: &mut Backend,
+    ) -> Result<Activation> {
+        Ok(match (&self.layers[idx], spec.kind) {
+            (LayerState::Linear(wts), LayerKind::Conv) => {
+                let img = act.image()?;
+                let y = match backend {
+                    Backend::Digital => {
+                        tensor::conv2d(&img, &wts.dense, spec.k, true)
+                    }
+                    Backend::PhotonicSim(sim) => {
+                        photonic_conv(sim, wts, spec, &img)?
+                    }
+                };
+                Activation::Image(add_channel_bias(y, &wts.bias))
+            }
+            (LayerState::Linear(wts), LayerKind::Fc) => {
+                let v = act.vector()?;
+                let y = match backend {
+                    Backend::Digital => {
+                        let x = Tensor::new(&[v.len(), 1], v);
+                        let out = wts.dense.matmul(&x);
+                        out.data
+                    }
+                    Backend::PhotonicSim(sim) => {
+                        photonic_fc(sim, wts, spec, &v)?
+                    }
+                };
+                Activation::Vector(
+                    y.iter().zip(&wts.bias).map(|(a, b)| a + b).collect(),
+                )
+            }
+            (LayerState::Bn(bn), LayerKind::Bn) => {
+                let img = act.image()?;
+                Activation::Image(tensor::batchnorm(
+                    &img, &bn.mean, &bn.var, &bn.gamma, &bn.beta, 1e-5,
+                ))
+            }
+            (_, LayerKind::Relu) => match act {
+                Activation::Image(t) => Activation::Image(t.relu()),
+                Activation::Vector(v) => Activation::Vector(
+                    v.into_iter().map(|x| x.max(0.0)).collect(),
+                ),
+            },
+            (_, LayerKind::Pool) => {
+                Activation::Image(tensor::maxpool(&act.image()?, spec.pool))
+            }
+            (_, LayerKind::Flatten) => {
+                Activation::Vector(act.image()?.data)
+            }
+            (st, k) => bail!(
+                "layer {idx}: state/kind mismatch ({k:?} vs {})",
+                match st {
+                    LayerState::Linear(_) => "linear",
+                    LayerState::Bn(_) => "bn",
+                    LayerState::Stateless => "stateless",
+                }
+            ),
+        })
+    }
+}
+
+enum Activation {
+    Image(Tensor),
+    Vector(Vec<f32>),
+}
+
+impl Activation {
+    fn image(self) -> Result<Tensor> {
+        match self {
+            Activation::Image(t) => Ok(t),
+            Activation::Vector(_) => bail!("expected image activation"),
+        }
+    }
+
+    fn vector(self) -> Result<Vec<f32>> {
+        match self {
+            Activation::Vector(v) => Ok(v),
+            Activation::Image(t) => Ok(t.data),
+        }
+    }
+}
+
+fn add_channel_bias(mut img: Tensor, bias: &[f32]) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    for ci in 0..c.min(bias.len()) {
+        for v in &mut img.data[ci * h * w..(ci + 1) * h * w] {
+            *v += bias[ci];
+        }
+    }
+    img
+}
+
+/// Conv layer on the simulated chip: clip to the device dynamic range,
+/// im2col, zero-pad to the BCM's padded input dim, sign-split BCM matmul
+/// on chip, rescale, keep the logical output rows (paper Fig. 1a flow).
+fn photonic_conv(
+    sim: &mut ChipSim,
+    wts: &LinearWeights,
+    spec: &LayerSpec,
+    img: &Tensor,
+) -> Result<Tensor> {
+    let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
+    let s = spec.act_scale;
+    let clipped = img.map(|x| (x / s).clamp(0.0, 1.0));
+    let xm = tensor::im2col_same(&clipped, spec.k);
+    let cols = xm.shape[1];
+    let n_pad = bcm.n();
+    let mut xp = Tensor::zeros(&[n_pad, cols]);
+    xp.data[..xm.shape[0] * cols].copy_from_slice(&xm.data);
+    let y = sim.forward_signed(bcm, &xp).scale(s);
+    // keep logical rows [0, cout)
+    let (h, w) = (img.shape[1], img.shape[2]);
+    let mut out = Tensor::zeros(&[spec.cout, h, w]);
+    out.data
+        .copy_from_slice(&y.data[..spec.cout * cols]);
+    Ok(out)
+}
+
+/// FC layer on the simulated chip (same pipeline, single column).
+fn photonic_fc(
+    sim: &mut ChipSim,
+    wts: &LinearWeights,
+    spec: &LayerSpec,
+    v: &[f32],
+) -> Result<Vec<f32>> {
+    let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
+    let s = spec.act_scale;
+    let n_pad = bcm.n();
+    let mut xp = Tensor::zeros(&[n_pad, 1]);
+    for (i, &x) in v.iter().enumerate() {
+        xp.data[i] = (x / s).clamp(0.0, 1.0);
+    }
+    let y = sim.forward_signed(bcm, &xp).scale(s);
+    Ok(y.data[..spec.cout].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::ChipDescription;
+    use crate::util::rng::Rng;
+
+    /// Build a tiny 2-layer circ model entirely in memory.
+    fn tiny_engine() -> Engine {
+        let manifest = Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 3,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 4, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 64, "cout": 3, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap();
+        let mut bundle = Bundle::default();
+        let mut rng = Rng::new(42);
+        // conv: cout 4 -> P=1, n=9 -> Q=3
+        let mut w0 = vec![0.0f32; 1 * 3 * 4];
+        rng.fill_uniform(&mut w0);
+        for v in w0.iter_mut() {
+            *v = (*v - 0.5) * 0.5;
+        }
+        bundle.insert_f32("layer0.w", &[1, 3, 4], w0);
+        bundle.insert_f32("layer0.b", &[4], vec![0.0; 4]);
+        // fc: 64 -> 3: P=1 (pad to 4), Q=16
+        let mut w4 = vec![0.0f32; 1 * 16 * 4];
+        rng.fill_uniform(&mut w4);
+        for v in w4.iter_mut() {
+            *v = (*v - 0.5) * 0.2;
+        }
+        bundle.insert_f32("layer4.w", &[1, 16, 4], w4);
+        bundle.insert_f32("layer4.b", &[3], vec![0.1, 0.2, 0.3]);
+        Engine::from_parts(manifest, &bundle).unwrap()
+    }
+
+    fn input() -> Tensor {
+        let mut rng = Rng::new(7);
+        let mut d = vec![0.0f32; 8 * 8];
+        rng.fill_uniform(&mut d);
+        Tensor::new(&[1, 8, 8], d)
+    }
+
+    #[test]
+    fn digital_forward_shape() {
+        let e = tiny_engine();
+        let y = e.forward(&input(), &mut Backend::Digital).unwrap();
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn photonic_ideal_matches_digital() {
+        let e = tiny_engine();
+        let y_dig = e.forward(&input(), &mut Backend::Digital).unwrap();
+        let sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let y_pho = e
+            .forward(&input(), &mut Backend::PhotonicSim(sim))
+            .unwrap();
+        for (a, b) in y_dig.iter().zip(&y_pho) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn photonic_nonideal_differs_but_finite() {
+        let e = tiny_engine();
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.015;
+        let sim = ChipSim::deterministic(desc);
+        let y = e
+            .forward(&input(), &mut Backend::PhotonicSim(sim))
+            .unwrap();
+        let y_dig = e.forward(&input(), &mut Backend::Digital).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+        let diff: f32 = y
+            .iter()
+            .zip(&y_dig)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-6, "quantization must perturb outputs");
+    }
+
+    #[test]
+    fn batch_forward_consistent() {
+        let e = tiny_engine();
+        let imgs = vec![input(), input()];
+        let ys = e.forward_batch(&imgs, &mut Backend::Digital).unwrap();
+        assert_eq!(ys.len(), 2);
+        assert_eq!(ys[0], ys[1]);
+    }
+
+    #[test]
+    fn chip_passes_counted() {
+        let e = tiny_engine();
+        let sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let mut be = Backend::PhotonicSim(sim);
+        e.forward(&input(), &mut be).unwrap();
+        if let Backend::PhotonicSim(sim) = &be {
+            // two linear layers × 2 sign-split passes
+            assert_eq!(sim.passes(), 4);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Model manifest: the JSON layer-stack description exported by
+//! `python/compile/export.py::write_manifest`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Bn,
+    Relu,
+    Pool,
+    Flatten,
+}
+
+impl LayerKind {
+    fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "fc" => LayerKind::Fc,
+            "bn" => LayerKind::Bn,
+            "relu" => LayerKind::Relu,
+            "pool" => LayerKind::Pool,
+            "flatten" => LayerKind::Flatten,
+            other => bail!("unknown layer kind '{other}'"),
+        })
+    }
+}
+
+/// One layer of the stack (mirror of python `LayerCfg`).
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub pool: usize,
+    /// "circ" or "gemm"
+    pub arch: String,
+    pub l: usize,
+    pub act_scale: f32,
+}
+
+/// Parsed model manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dataset: String,
+    pub classes: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let dataset = j
+            .get("dataset")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let classes =
+            j.get("classes").and_then(Json::as_usize).context("classes")?;
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("layers array")?
+            .iter()
+            .map(|lj| {
+                let get = |k: &str| lj.get(k).and_then(Json::as_usize).unwrap_or(0);
+                Ok(LayerSpec {
+                    kind: LayerKind::parse(
+                        lj.get("kind").and_then(Json::as_str).context("kind")?,
+                    )?,
+                    cin: get("cin"),
+                    cout: get("cout"),
+                    k: get("k"),
+                    pool: get("pool").max(2),
+                    arch: lj
+                        .get("arch")
+                        .and_then(Json::as_str)
+                        .unwrap_or("circ")
+                        .to_string(),
+                    l: get("l").max(1),
+                    act_scale: lj
+                        .get("act_scale")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(4.0) as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if layers.is_empty() {
+            bail!("manifest has no layers");
+        }
+        Ok(Manifest { dataset, classes, layers })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    /// (channels, height) of the expected input.
+    pub fn input_shape(&self) -> (usize, usize) {
+        match self.dataset.as_str() {
+            "synth_cxr" => (1, 64),
+            _ => (3, 32),
+        }
+    }
+
+    /// Trainable-parameter counts: (dense-equivalent, stored-compressed).
+    pub fn param_counts(&self) -> (usize, usize) {
+        let ceil_to = |x: usize, m: usize| (x + m - 1) / m * m;
+        let mut dense = 0;
+        let mut stored = 0;
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Conv => {
+                    let n = l.cin * l.k * l.k;
+                    dense += l.cout * n;
+                    stored += if l.arch == "circ" {
+                        ceil_to(l.cout, l.l) / l.l * ceil_to(n, l.l)
+                    } else {
+                        l.cout * n
+                    };
+                }
+                LayerKind::Fc => {
+                    dense += l.cout * l.cin;
+                    stored += if l.arch == "circ" {
+                        ceil_to(l.cout, l.l) / l.l * ceil_to(l.cin, l.l)
+                    } else {
+                        l.cout * l.cin
+                    };
+                }
+                _ => {}
+            }
+        }
+        (dense, stored)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dataset": "synth_cxr", "classes": 3,
+      "layers": [
+        {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "fc", "cin": 8192, "cout": 3, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dataset, "synth_cxr");
+        assert_eq!(m.classes, 3);
+        assert_eq!(m.layers.len(), 6);
+        assert_eq!(m.layers[0].kind, LayerKind::Conv);
+        assert_eq!(m.layers[5].kind, LayerKind::Fc);
+        assert_eq!(m.input_shape(), (1, 64));
+    }
+
+    #[test]
+    fn param_counts_quarter_for_circ() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let (dense, stored) = m.param_counts();
+        // conv: 8×9 dense=72, stored=2×12=24 (padding); fc: 3·8192 dense,
+        // stored ceil(3,4)/4 * 8192 = 8192
+        assert_eq!(dense, 72 + 3 * 8192);
+        assert_eq!(stored, 24 + 8192);
+        assert!((stored as f64) < 0.35 * dense as f64);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("\"conv\"", "\"wizard\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_layers() {
+        assert!(Manifest::parse(
+            r#"{"dataset": "x", "classes": 2, "layers": []}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! StrC-ONN inference engine — the L3 twin of `python/compile/model.py`.
+//!
+//! Loads a trained model (JSON manifest + CPT1 weight bundle, both written
+//! by `python -m compile.train`) and executes it through either:
+//!
+//! * [`Backend::Digital`]      — pure-rust fp32 tensor math (baseline);
+//! * [`Backend::PhotonicSim`]  — every conv/FC layer streamed through the
+//!   CirPTC [`crate::simulator::ChipSim`] as sign-split BCM tiles with
+//!   quantization, crosstalk, dark current and noise (the paper's
+//!   lookup-mode on-chip inference);
+//! * the XLA runtime path (whole-network AOT artifact) lives in
+//!   [`crate::coordinator`] — it needs no layer graph.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Backend, Engine};
+pub use manifest::{LayerKind, LayerSpec, Manifest};

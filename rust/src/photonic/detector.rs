@@ -1,0 +1,137 @@
+//! Receive chain: photodiode → TIA → ADC (paper Fig. 1b output path).
+//!
+//! The PD sums all wavelengths on its column bus (WDM accumulation — the
+//! "free" adds of the MVM); the TIA and ADC set the electrical power floor
+//! that dominates total power at high rates (paper Fig. S16b/f).
+
+/// Photodiode with responsivity, dark current and noise parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Photodiode {
+    /// responsivity (A/W)
+    pub responsivity: f64,
+    /// dark current (A)
+    pub dark_a: f64,
+    /// electrical bandwidth (Hz)
+    pub bandwidth_hz: f64,
+}
+
+impl Photodiode {
+    pub fn typical() -> Photodiode {
+        Photodiode { responsivity: 1.0, dark_a: 50e-9, bandwidth_hz: 30e9 }
+    }
+
+    /// Photocurrent (A) for incident optical power (W), including dark.
+    pub fn current(&self, power_w: f64) -> f64 {
+        self.responsivity * power_w + self.dark_a
+    }
+
+    /// Shot-noise RMS current (A): sqrt(2 q I B).
+    pub fn shot_noise_a(&self, power_w: f64) -> f64 {
+        const Q_E: f64 = 1.602e-19;
+        (2.0 * Q_E * self.current(power_w) * self.bandwidth_hz).sqrt()
+    }
+
+    /// Minimum detectable optical power (W) for a target SNR (linear) given
+    /// thermal-noise-equivalent current `i_th` (A RMS) — sets the laser
+    /// budget floor (paper: "minimum required laser power must overcome the
+    /// capacitance and shot noise of the photodetector").
+    pub fn sensitivity_w(&self, snr: f64, i_th: f64) -> f64 {
+        // solve R·P = snr · sqrt(shot² + th²); iterate twice (shot depends on P)
+        let mut p = snr * i_th / self.responsivity;
+        for _ in 0..20 {
+            let noise = (self.shot_noise_a(p).powi(2) + i_th * i_th).sqrt();
+            p = snr * noise / self.responsivity;
+        }
+        p
+    }
+}
+
+/// Trans-impedance amplifier (off-chip in the prototype; paper cites
+/// 0.65 pJ/bit for a 28-nm receiver front-end).
+#[derive(Clone, Copy, Debug)]
+pub struct Tia {
+    pub energy_per_bit_j: f64,
+    pub gain_ohm: f64,
+}
+
+impl Tia {
+    pub fn paper() -> Tia {
+        Tia { energy_per_bit_j: 0.65e-12, gain_ohm: 10e3 }
+    }
+
+    /// Output voltage for an input photocurrent.
+    pub fn volts(&self, current_a: f64) -> f64 {
+        current_a * self.gain_ohm
+    }
+
+    /// Power (W) at bit rate `bps`.
+    pub fn power_w(&self, bps: f64) -> f64 {
+        self.energy_per_bit_j * bps
+    }
+}
+
+/// ADC power model (paper cites 39 mW @ 10 GHz, 194 mW @ 25 GHz).
+/// Interpolate as a power law P = a·f^k through the two cited points.
+#[derive(Clone, Copy, Debug)]
+pub struct Adc {
+    pub a: f64,
+    pub k: f64,
+}
+
+impl Adc {
+    pub fn paper() -> Adc {
+        // fit through (10 GHz, 39 mW) and (25 GHz, 194 mW)
+        let k = (194.0f64 / 39.0).ln() / (25.0f64 / 10.0).ln();
+        let a = 39e-3 / (10e9f64).powf(k);
+        Adc { a, k }
+    }
+
+    pub fn power_w(&self, f_hz: f64) -> f64 {
+        self.a * f_hz.powf(self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pd_current_includes_dark() {
+        let pd = Photodiode::typical();
+        assert!((pd.current(1e-3) - (1e-3 + 50e-9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shot_noise_grows_with_power() {
+        let pd = Photodiode::typical();
+        assert!(pd.shot_noise_a(1e-3) > pd.shot_noise_a(1e-6));
+    }
+
+    #[test]
+    fn sensitivity_converges_and_scales() {
+        let pd = Photodiode::typical();
+        let p1 = pd.sensitivity_w(10.0, 1e-6);
+        let p2 = pd.sensitivity_w(100.0, 1e-6);
+        assert!(p1.is_finite() && p1 > 0.0);
+        assert!(p2 > p1, "higher SNR needs more power");
+    }
+
+    #[test]
+    fn tia_power_paper_value() {
+        // 0.65 pJ/bit at 10 Gb/s = 6.5 mW
+        assert!((Tia::paper().power_w(10e9) - 6.5e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adc_fits_both_paper_points() {
+        let adc = Adc::paper();
+        assert!((adc.power_w(10e9) - 39e-3).abs() < 1e-6);
+        assert!((adc.power_w(25e9) - 194e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adc_superlinear() {
+        let adc = Adc::paper();
+        assert!(adc.k > 1.0, "ADC power superlinear in rate, k={}", adc.k);
+    }
+}

@@ -1,0 +1,67 @@
+//! Photonic device physics — the substrate the paper's testbed provides in
+//! silicon (paper Fig. 2 d-f fits these same models to chip measurements).
+//!
+//! Everything is deterministic, unit-tested math; stochastic behaviour
+//! (noise, fabrication variance) lives in [`crate::simulator`].
+
+pub mod detector;
+pub mod mrr;
+pub mod mzm;
+pub mod waveguide;
+
+pub use detector::{Adc, Photodiode, Tia};
+pub use mrr::Mrr;
+pub use mzm::Mzm;
+
+/// Speed of light (m/s) — used for FSR/group-delay conversions.
+pub const C_M_S: f64 = 2.998e8;
+
+/// Default operating wavelength (nm), C-band as in the paper (1545–1563 nm).
+pub const LAMBDA_NM: f64 = 1550.0;
+
+/// Convert a dB value to a linear power ratio.
+#[inline]
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Convert a linear power ratio to dB.
+#[inline]
+pub fn lin_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+/// dBm to milliwatts.
+#[inline]
+pub fn dbm_to_mw(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0)
+}
+
+/// Milliwatts to dBm.
+#[inline]
+pub fn mw_to_dbm(mw: f64) -> f64 {
+    10.0 * mw.log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn db_roundtrip() {
+        for db in [-30.0, -3.0, 0.0, 3.0, 10.0] {
+            assert!((lin_to_db(db_to_lin(db)) - db).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn db3_is_half() {
+        assert!((db_to_lin(-3.0103) - 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dbm_zero_is_1mw() {
+        assert!((dbm_to_mw(0.0) - 1.0).abs() < 1e-12);
+        assert!((mw_to_dbm(1.0)).abs() < 1e-12);
+    }
+}

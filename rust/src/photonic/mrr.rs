@@ -1,0 +1,133 @@
+//! Add-drop microring resonator (MRR) model.
+//!
+//! The CirPTC uses MRRs in two roles (paper Fig. 2):
+//!   * serial **weight-encoding** rings — thermally detuned off resonance to
+//!     set a drop-port amplitude in [0, peak] (Fig. 2f, one branch of the
+//!     Lorentzian to avoid spectral overlap);
+//!   * crossbar **switch** rings — statically calibrated onto one WDM
+//!     channel, redirecting that wavelength to a column bus.
+//!
+//! The drop-port intensity response near resonance is Lorentzian:
+//!     T(δ) = peak / (1 + (2 δ / FWHM)²),  FWHM = λ / Q.
+
+#[derive(Clone, Copy, Debug)]
+pub struct Mrr {
+    /// loaded quality factor
+    pub q: f64,
+    /// resonance wavelength (nm)
+    pub lambda_nm: f64,
+    /// peak drop-port transmission (≤ 1; asymmetric lossy coupling in the
+    /// paper gives < 1, producing the "forbidden zone" of Fig. 2f)
+    pub peak: f64,
+    /// through-port insertion loss at far detuning (dB, positive number)
+    pub through_loss_db: f64,
+}
+
+impl Mrr {
+    pub fn new(q: f64, lambda_nm: f64) -> Mrr {
+        Mrr { q, lambda_nm, peak: 0.95, through_loss_db: 0.01 }
+    }
+
+    /// Full-width half-maximum linewidth (nm).
+    pub fn fwhm_nm(&self) -> f64 {
+        self.lambda_nm / self.q
+    }
+
+    /// Drop-port transmission at detuning `delta_nm` from resonance.
+    pub fn drop_transmission(&self, delta_nm: f64) -> f64 {
+        let x = 2.0 * delta_nm / self.fwhm_nm();
+        self.peak / (1.0 + x * x)
+    }
+
+    /// Drop-port *amplitude* (field) transmission — sqrt of intensity.
+    pub fn drop_amplitude(&self, delta_nm: f64) -> f64 {
+        self.drop_transmission(delta_nm).sqrt()
+    }
+
+    /// Detuning (nm, ≤ 0: left branch as in Fig. 2f) that realises a target
+    /// drop transmission `t` in (0, peak].
+    pub fn detuning_for(&self, t: f64) -> f64 {
+        let t = t.clamp(1e-9, self.peak);
+        -0.5 * self.fwhm_nm() * (self.peak / t - 1.0).sqrt()
+    }
+
+    /// Free spectral range (nm) for a ring of radius `radius_um` with group
+    /// index `ng`: FSR = λ² / (2π R n_g).
+    pub fn fsr_nm(radius_um: f64, ng: f64, lambda_nm: f64) -> f64 {
+        let lambda_m = lambda_nm * 1e-9;
+        let circumference = 2.0 * std::f64::consts::PI * radius_um * 1e-6;
+        lambda_m * lambda_m / (circumference * ng) * 1e9
+    }
+
+    /// Thermal tuning power (mW) to shift resonance by `delta_nm`, given a
+    /// tuning efficiency in nm/mW (typ. ~0.25 nm/mW for foundry heaters).
+    pub fn tuning_power_mw(delta_nm: f64, nm_per_mw: f64) -> f64 {
+        delta_nm.abs() / nm_per_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> Mrr {
+        Mrr::new(1.0e4, 1550.0)
+    }
+
+    #[test]
+    fn peak_at_resonance() {
+        let m = ring();
+        assert!((m.drop_transmission(0.0) - m.peak).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_power_at_half_fwhm() {
+        let m = ring();
+        let t = m.drop_transmission(m.fwhm_nm() / 2.0);
+        assert!((t - m.peak / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detuning_roundtrip() {
+        let m = ring();
+        for target in [0.05, 0.3, 0.6, 0.9] {
+            let d = m.detuning_for(target);
+            assert!(d <= 0.0, "left branch");
+            assert!((m.drop_transmission(d) - target).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn monotone_on_branch() {
+        let m = ring();
+        let mut last = f64::INFINITY;
+        for i in 0..100 {
+            let d = -(i as f64) * m.fwhm_nm() / 20.0;
+            let t = m.drop_transmission(d);
+            assert!(t <= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn higher_q_narrower_line() {
+        let lo = Mrr::new(1e4, 1550.0);
+        let hi = Mrr::new(1e5, 1550.0);
+        assert!(hi.fwhm_nm() < lo.fwhm_nm());
+        // at the same absolute detuning the high-Q ring leaks less
+        assert!(hi.drop_transmission(0.1) < lo.drop_transmission(0.1));
+    }
+
+    #[test]
+    fn fsr_physical_range() {
+        // 5 µm ring, ng 4.2: FSR ≈ 18 nm (silicon photonics textbook value)
+        let fsr = Mrr::fsr_nm(5.0, 4.2, 1550.0);
+        assert!(fsr > 15.0 && fsr < 22.0, "fsr={fsr}");
+    }
+
+    #[test]
+    fn tuning_power_linear() {
+        assert!((Mrr::tuning_power_mw(0.5, 0.25) - 2.0).abs() < 1e-12);
+        assert!((Mrr::tuning_power_mw(-0.5, 0.25) - 2.0).abs() < 1e-12);
+    }
+}

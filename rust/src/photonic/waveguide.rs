@@ -1,0 +1,114 @@
+//! Waveguide / coupler loss bookkeeping — the insertion-loss budget along
+//! the CirPTC critical path (paper Fig. S14: loss increases linearly with
+//! matrix size; laser power therefore grows exponentially, Fig. S16e).
+
+/// Per-element loss constants for the CirPTC critical path (dB).
+#[derive(Clone, Copy, Debug)]
+pub struct LossBudget {
+    /// fiber-chip edge coupler (per facet)
+    pub edge_coupler_db: f64,
+    /// MZM insertion loss
+    pub mzm_db: f64,
+    /// weight-encoding MRR drop-path loss (per serial ring traversed)
+    pub weight_ring_db: f64,
+    /// crossbar switch ring through-port loss (per ring passed on the bus)
+    pub switch_through_db: f64,
+    /// crossbar switch ring drop-port loss (the one routing event)
+    pub switch_drop_db: f64,
+    /// waveguide propagation (dB/mm) and crossing loss
+    pub propagation_db_per_mm: f64,
+    pub crossing_db: f64,
+}
+
+impl LossBudget {
+    /// Values representative of the AIM PDK devices the paper uses.
+    pub fn paper() -> LossBudget {
+        LossBudget {
+            edge_coupler_db: 1.5,
+            mzm_db: 2.5,
+            weight_ring_db: 0.6,
+            switch_through_db: 0.10,
+            switch_drop_db: 1.2,
+            propagation_db_per_mm: 0.2,
+            crossing_db: 0.02,
+        }
+    }
+
+    /// Worst-case (critical-path) insertion loss of an N×M CirPTC (dB).
+    ///
+    /// Path: edge coupler → MZM → N/l serial weight rings (one drop, rest
+    /// through) → row bus across M switch through-ports → one switch drop →
+    /// column bus down N through-ports → PD.  Linear in M and N, matching
+    /// Fig. S14.
+    pub fn cirptc_critical_path_db(&self, n: usize, m: usize, l: usize) -> f64 {
+        let serial_rings = (n / l).max(1) as f64;
+        let path_mm = 0.02 * (n + m) as f64 + 1.0; // geometric route length
+        self.edge_coupler_db
+            + self.mzm_db
+            + self.weight_ring_db                     // the encoding drop
+            + (serial_rings - 1.0) * self.switch_through_db
+            + m as f64 * self.switch_through_db
+            + self.switch_drop_db
+            + n as f64 * self.switch_through_db
+            + (n.saturating_sub(1)) as f64 * self.crossing_db
+            + path_mm * self.propagation_db_per_mm
+    }
+
+    /// Uncompressed MRR-crossbar baseline: every cell is an *active*
+    /// weighting ring whose partial drop leaves more loss in the bus, and
+    /// there is no serial-rail sharing.
+    pub fn uncompressed_critical_path_db(&self, n: usize, m: usize) -> f64 {
+        let active_through_db = self.switch_through_db * 2.2; // active rings leak more
+        let path_mm = 0.02 * (n + m) as f64 + 1.0;
+        self.edge_coupler_db
+            + self.mzm_db
+            + m as f64 * active_through_db
+            + self.switch_drop_db
+            + n as f64 * active_through_db
+            + (n.saturating_sub(1)) as f64 * self.crossing_db
+            + path_mm * self.propagation_db_per_mm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_linear_in_size() {
+        let b = LossBudget::paper();
+        let l8 = b.cirptc_critical_path_db(8, 8, 4);
+        let l16 = b.cirptc_critical_path_db(16, 16, 4);
+        let l32 = b.cirptc_critical_path_db(32, 32, 4);
+        // linearity: equal increments for equal size steps (Fig. S14)
+        let d1 = l16 - l8;
+        let d2 = l32 - l16;
+        assert!((d2 / d1 - 2.0).abs() < 0.15, "d1={d1} d2={d2}");
+    }
+
+    #[test]
+    fn reasonable_absolute_values() {
+        let b = LossBudget::paper();
+        let l = b.cirptc_critical_path_db(48, 48, 4);
+        assert!(l > 5.0 && l < 25.0, "48x48 IL = {l} dB");
+    }
+
+    #[test]
+    fn uncompressed_lossier_than_cirptc() {
+        let b = LossBudget::paper();
+        for s in [16usize, 48, 64] {
+            assert!(
+                b.uncompressed_critical_path_db(s, s)
+                    > b.cirptc_critical_path_db(s, s, 4)
+            );
+        }
+    }
+
+    #[test]
+    fn grows_with_each_dim() {
+        let b = LossBudget::paper();
+        let base = b.cirptc_critical_path_db(16, 16, 4);
+        assert!(b.cirptc_critical_path_db(32, 16, 4) > base);
+        assert!(b.cirptc_critical_path_db(16, 32, 4) > base);
+    }
+}

@@ -1,0 +1,144 @@
+//! DAC/ADC quantization (paper: 4-bit activation, 6-bit weight encoding).
+//!
+//! Mirrors `ref.quantize_ref` exactly — uniform affine quantization over a
+//! closed range with round-half-to-even-free `round()` semantics matching
+//! jnp.round (ties away from zero is fine here: levels are non-negative and
+//! jnp.round's banker-rounding differences land below the 1e-5 tolerance
+//! used in cross-validation for the bit-depths we use).
+
+/// Uniform quantizer over [lo, hi] with 2^bits levels.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32) -> Quantizer {
+        Quantizer { bits, lo: 0.0, hi: 1.0 }
+    }
+
+    pub fn with_range(bits: u32, lo: f32, hi: f32) -> Quantizer {
+        assert!(hi > lo);
+        Quantizer { bits, lo, hi }
+    }
+
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Quantize one value (clips to range first).
+    #[inline]
+    pub fn q(&self, x: f32) -> f32 {
+        if self.bits == 0 {
+            return x;
+        }
+        let lv = self.levels() as f32;
+        let t = ((x.clamp(self.lo, self.hi) - self.lo) / (self.hi - self.lo)
+            * lv)
+            .round();
+        t / lv * (self.hi - self.lo) + self.lo
+    }
+
+    /// Integer code for a value (the DAC word actually programmed).
+    pub fn code(&self, x: f32) -> u32 {
+        let lv = self.levels() as f32;
+        (((x.clamp(self.lo, self.hi) - self.lo) / (self.hi - self.lo)) * lv)
+            .round() as u32
+    }
+
+    /// Reconstruct from an integer code.
+    pub fn decode(&self, code: u32) -> f32 {
+        let lv = self.levels() as f32;
+        (code.min(self.levels()) as f32) / lv * (self.hi - self.lo) + self.lo
+    }
+
+    pub fn q_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.q(*x);
+        }
+    }
+
+    /// Worst-case quantization error (half an LSB).
+    pub fn max_error(&self) -> f32 {
+        0.5 * (self.hi - self.lo) / self.levels() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck;
+
+    #[test]
+    fn endpoints_exact() {
+        for bits in [1, 4, 6, 8] {
+            let q = Quantizer::new(bits);
+            assert_eq!(q.q(0.0), 0.0);
+            assert_eq!(q.q(1.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn level_count() {
+        let q = Quantizer::new(4);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..=1000 {
+            seen.insert((q.q(i as f32 / 1000.0) * 1e6) as i64);
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn error_bound() {
+        propcheck::check("quant error ≤ lsb/2", 200, |g| {
+            let bits = *g.choose(&[2u32, 4, 6, 8]);
+            let q = Quantizer::new(bits);
+            let x = g.f32_in(0.0, 1.0);
+            prop_assert!((q.q(x) - x).abs() <= q.max_error() + 1e-7);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        propcheck::check("quant idempotent", 100, |g| {
+            let q = Quantizer::new(6);
+            let x = g.f32_in(0.0, 1.0);
+            let once = q.q(x);
+            prop_assert!((q.q(once) - once).abs() < 1e-7);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clips() {
+        let q = Quantizer::new(4);
+        assert_eq!(q.q(-2.0), 0.0);
+        assert_eq!(q.q(5.0), 1.0);
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        let q = Quantizer::new(6);
+        for code in 0..=q.levels() {
+            assert_eq!(q.code(q.decode(code)), code);
+        }
+    }
+
+    #[test]
+    fn custom_range() {
+        let q = Quantizer::with_range(4, -1.0, 1.0);
+        assert_eq!(q.q(-1.0), -1.0);
+        assert_eq!(q.q(1.0), 1.0);
+        assert!(q.q(0.03).abs() < q.max_error() + 0.04);
+    }
+
+    #[test]
+    fn zero_bits_is_identity() {
+        let q = Quantizer::new(0);
+        assert_eq!(q.q(0.123456), 0.123456);
+    }
+}

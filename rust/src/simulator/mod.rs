@@ -1,0 +1,404 @@
+//! Functional CirPTC chip simulator — the request-path twin of the python
+//! chip model (`python/compile/chip.py`).
+//!
+//! The simulator is constructed from `artifacts/chip.json` (the chip
+//! description exported at build time, holding the *as-fabricated* hidden
+//! parameters: true crosstalk operator Γ, per-wavelength responsivity,
+//! dark current, noise magnitudes and DAC resolutions) and executes BCM
+//! tiles exactly as the chip would in lookup mode:
+//!
+//!   quantize(w, 6b) ∘ resp  →  Γ · quantize(x, 4b)  →  crossbar matmul
+//!   → + dark  → + noise(σ_rel·|y| + σ_abs)
+//!
+//! The deterministic part is cross-validated against golden vectors from
+//! the python side (`artifacts/goldens.cpt`) in `rust/tests/`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::circulant::Bcm;
+use crate::quant::Quantizer;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// As-fabricated chip description (see `PhotonicChip.export_dict`).
+#[derive(Clone, Debug)]
+pub struct ChipDescription {
+    pub l: usize,
+    pub gamma: Vec<f32>, // (l, l) row-major true crosstalk operator
+    pub resp: Vec<f32>,  // (l,) per-wavelength responsivity
+    pub dark: f32,
+    pub sigma_rel: f32,
+    pub sigma_abs: f32,
+    pub w_bits: u32,
+    pub x_bits: u32,
+    pub seed: u64,
+}
+
+impl ChipDescription {
+    /// An ideal chip: identity Γ, flat response, no noise or quantization.
+    pub fn ideal(l: usize) -> ChipDescription {
+        let mut gamma = vec![0.0f32; l * l];
+        for i in 0..l {
+            gamma[i * l + i] = 1.0;
+        }
+        ChipDescription {
+            l,
+            gamma,
+            resp: vec![1.0; l],
+            dark: 0.0,
+            sigma_rel: 0.0,
+            sigma_abs: 0.0,
+            w_bits: 0,
+            x_bits: 0,
+            seed: 0,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChipDescription> {
+        let l = j.get("l").and_then(Json::as_usize).context("chip.l")?;
+        let gamma = j.get("gamma_true").context("gamma_true")?.as_f32_flat();
+        let resp = j.get("resp").context("resp")?.as_f32_flat();
+        if gamma.len() != l * l || resp.len() != l {
+            bail!("chip.json shape mismatch: l={l} gamma={} resp={}",
+                  gamma.len(), resp.len());
+        }
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(ChipDescription {
+            l,
+            gamma,
+            resp,
+            dark: f("dark") as f32,
+            sigma_rel: f("sigma_rel") as f32,
+            sigma_abs: f("sigma_abs") as f32,
+            w_bits: f("w_bits") as u32,
+            x_bits: f("x_bits") as u32,
+            seed: f("seed") as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ChipDescription> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        ChipDescription::from_json(&j)
+    }
+}
+
+/// The executable simulator.
+#[derive(Debug)]
+pub struct ChipSim {
+    pub desc: ChipDescription,
+    wq: Quantizer,
+    xq: Quantizer,
+    rng: Rng,
+    /// stochastic noise enabled (lookup-mode realism) or not (deterministic
+    /// cross-validation)
+    pub noisy: bool,
+    /// MVM tiles executed (for metrics / utilization accounting)
+    pub tiles_executed: u64,
+}
+
+impl ChipSim {
+    pub fn new(desc: ChipDescription) -> ChipSim {
+        ChipSim {
+            wq: Quantizer::new(desc.w_bits),
+            xq: Quantizer::new(desc.x_bits),
+            rng: Rng::new(desc.seed ^ 0xC19_97C),
+            noisy: true,
+            desc,
+            tiles_executed: 0,
+        }
+    }
+
+    pub fn deterministic(desc: ChipDescription) -> ChipSim {
+        let mut s = ChipSim::new(desc);
+        s.noisy = false;
+        s
+    }
+
+    /// Program + run one BCM tile: w (P,Q,l) in [0,1], x (N,B) in [0,1].
+    /// Returns the (M,B) photocurrent tensor.
+    pub fn forward(&mut self, w: &Bcm, x: &Tensor) -> Tensor {
+        assert_eq!(w.l, self.desc.l, "block order mismatch with chip");
+        assert_eq!(x.shape[0], w.n());
+        let l = self.desc.l;
+        let b = x.shape[1];
+
+        // device-domain weight encoding: quantize then responsivity tilt
+        let mut wenc = w.clone();
+        for (i, v) in wenc.w.iter_mut().enumerate() {
+            *v = self.wq.q(*v) * self.desc.resp[i % l];
+        }
+
+        // input encoding: quantize then Γ mixing within each l-block.
+        // Row-contiguous SAXPY form (EXPERIMENTS.md §Perf): quantize each
+        // input row once, then accumulate Γ-weighted rows — batch-stride-1
+        // throughout instead of the naive per-(col, channel) gather.
+        let mut xq = x.data.clone();
+        self.xq.q_slice(&mut xq);
+        let mut xenc = vec![0.0f32; x.data.len()];
+        let q_blocks = w.n() / l;
+        for qb in 0..q_blocks {
+            for i in 0..l {
+                let (dst_lo, dst_hi) = ((qb * l + i) * b, (qb * l + i + 1) * b);
+                for j in 0..l {
+                    let g = self.desc.gamma[i * l + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let src = &xq[(qb * l + j) * b..(qb * l + j + 1) * b];
+                    let dst = &mut xenc[dst_lo..dst_hi];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d += g * s;
+                    }
+                }
+            }
+        }
+        let xenc = Tensor::new(&[w.n(), b], xenc);
+
+        // crossbar matmul + dark + noise
+        let mut y = wenc.matmul(&xenc);
+        let (dark, srel, sabs) =
+            (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
+        for v in y.data.iter_mut() {
+            *v += dark;
+        }
+        if self.noisy && (srel > 0.0 || sabs > 0.0) {
+            for v in y.data.iter_mut() {
+                let n = v.abs() * srel * self.rng.normal() as f32
+                    + sabs * self.rng.normal() as f32;
+                *v += n;
+            }
+        }
+        self.tiles_executed += 1;
+        y
+    }
+
+    /// Full-range matmul via the paper's sign-split time multiplexing:
+    /// two positive-only passes, post-processing subtraction (cancels the
+    /// dark offset exactly), rescale.
+    pub fn forward_signed(&mut self, w: &Bcm, x: &Tensor) -> Tensor {
+        let (wp, wn, scale) = w.split_signed();
+        let yp = self.forward(&wp, x);
+        let yn = self.forward(&wn, x);
+        yp.sub(&yn).scale(scale)
+    }
+
+    /// Spectral-folded execution (paper Fig. S18): an M×(r·N_phys) BCM run
+    /// on an N_phys-row physical crossbar by launching `fold` input groups
+    /// in adjacent FSRs.  All folds sum *simultaneously* at each column PD
+    /// (one detection event: one dark offset, one noise draw), but each
+    /// FSR replica sees a slightly different PD responsivity — the
+    /// "wavelength-dependent response of PDs" the paper flags as folding's
+    /// calibration cost, modelled as a per-fold gain slope of
+    /// `fold_resp_slope` per FSR.
+    pub fn forward_folded(&mut self, w: &Bcm, x: &Tensor, fold: usize,
+                          fold_resp_slope: f32) -> Tensor {
+        assert!(fold >= 1 && w.q % fold == 0,
+                "logical width must split into {fold} folds");
+        let q_phys = w.q / fold;
+        let n_phys = q_phys * w.l;
+        let b = x.shape[1];
+        let mut acc = Tensor::zeros(&[w.m(), b]);
+        // accumulate the folds optically (no per-fold dark/noise)
+        let (dark, srel, sabs) =
+            (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
+        for r in 0..fold {
+            // sub-BCM of this fold: block-columns [r*q_phys, (r+1)*q_phys)
+            let mut wsub = Bcm::zeros(w.p, q_phys, w.l);
+            for bp in 0..w.p {
+                for bq in 0..q_phys {
+                    let src = (bp * w.q + r * q_phys + bq) * w.l;
+                    let dst = (bp * q_phys + bq) * w.l;
+                    wsub.w[dst..dst + w.l]
+                        .copy_from_slice(&w.w[src..src + w.l]);
+                }
+            }
+            let xsub = Tensor::new(&[n_phys, b],
+                x.data[r * n_phys * b..(r + 1) * n_phys * b].to_vec());
+            // suppress per-pass dark/noise: folds are one detection event
+            self.desc.dark = 0.0;
+            self.desc.sigma_rel = 0.0;
+            self.desc.sigma_abs = 0.0;
+            let y = self.forward(&wsub, &xsub);
+            self.desc.dark = dark;
+            self.desc.sigma_rel = srel;
+            self.desc.sigma_abs = sabs;
+            let gain = 1.0 + fold_resp_slope * r as f32;
+            for (a, v) in acc.data.iter_mut().zip(&y.data) {
+                *a += gain * v;
+            }
+        }
+        // single PD detection: dark + one noise draw
+        for v in acc.data.iter_mut() {
+            *v += dark;
+        }
+        if self.noisy && (srel > 0.0 || sabs > 0.0) {
+            for v in acc.data.iter_mut() {
+                *v += v.abs() * srel * self.rng.normal() as f32
+                    + sabs * self.rng.normal() as f32;
+            }
+        }
+        acc
+    }
+
+    /// Chip passes consumed so far (two per signed matmul).
+    pub fn passes(&self) -> u64 {
+        self.tiles_executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::assert_close;
+
+    fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
+        let mut r = Rng::new(seed);
+        let mut w = vec![0.0f32; p * q * l];
+        r.fill_uniform(&mut w);
+        Bcm::new(p, q, l, w)
+    }
+
+    fn rand_x(n: usize, b: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut x = vec![0.0f32; n * b];
+        r.fill_uniform(&mut x);
+        Tensor::new(&[n, b], x)
+    }
+
+    #[test]
+    fn ideal_chip_is_exact_bcm() {
+        let mut sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let w = rand_bcm(2, 3, 4, 1);
+        let x = rand_x(12, 5, 2);
+        let got = sim.forward(&w, &x);
+        let want = w.matmul(&x);
+        assert_close(&got.data, &want.data, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn deterministic_repeatable() {
+        let mut d = ChipDescription::ideal(4);
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.dark = 0.015;
+        let mut sim = ChipSim::deterministic(d);
+        let w = rand_bcm(2, 2, 4, 3);
+        let x = rand_x(8, 4, 4);
+        let y1 = sim.forward(&w, &x);
+        let y2 = sim.forward(&w, &x);
+        assert_close(&y1.data, &y2.data, 0.0).unwrap();
+    }
+
+    #[test]
+    fn noise_perturbs() {
+        let mut d = ChipDescription::ideal(4);
+        d.sigma_abs = 0.01;
+        let mut sim = ChipSim::new(d);
+        let w = rand_bcm(2, 2, 4, 5);
+        let x = rand_x(8, 4, 6);
+        let y1 = sim.forward(&w, &x);
+        let y2 = sim.forward(&w, &x);
+        assert!(y1.max_abs_diff(&y2) > 0.0);
+    }
+
+    #[test]
+    fn signed_cancels_dark() {
+        let mut d = ChipDescription::ideal(4);
+        d.dark = 0.4;
+        let mut sim = ChipSim::deterministic(d);
+        // full-range weights
+        let mut w = rand_bcm(2, 2, 4, 7);
+        for (i, v) in w.w.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *v = -*v;
+            }
+        }
+        let x = rand_x(8, 3, 8);
+        let got = sim.forward_signed(&w, &x);
+        let want = w.matmul(&x);
+        assert_close(&got.data, &want.data, 1e-4).unwrap();
+        assert_eq!(sim.passes(), 2);
+    }
+
+    #[test]
+    fn quantization_bounds_error() {
+        let mut d = ChipDescription::ideal(4);
+        d.w_bits = 6;
+        d.x_bits = 4;
+        let mut sim = ChipSim::deterministic(d);
+        let w = rand_bcm(2, 3, 4, 9);
+        let x = rand_x(12, 4, 10);
+        let got = sim.forward(&w, &x);
+        let want = w.matmul(&x);
+        // error bounded by N * (w_lsb + x_lsb) roughly
+        let bound = 12.0 * (0.5 / 63.0 + 0.5 / 15.0) * 1.5;
+        assert!(got.max_abs_diff(&want) < bound);
+    }
+
+    #[test]
+    fn gamma_mixing_applied() {
+        let mut d = ChipDescription::ideal(2);
+        // swap-ish mixing
+        d.gamma = vec![0.8, 0.2, 0.2, 0.8];
+        let mut sim = ChipSim::deterministic(d);
+        let w = Bcm::new(1, 1, 2, vec![1.0, 0.0]); // identity block
+        let x = Tensor::new(&[2, 1], vec![1.0, 0.0]);
+        let y = sim.forward(&w, &x);
+        assert!((y.data[0] - 0.8).abs() < 1e-6);
+        assert!((y.data[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn folded_equals_unfolded_on_ideal_chip() {
+        // with flat PD response across FSRs, folding is numerically
+        // identical to the unfolded wide BCM (paper Fig. S18 identity)
+        let mut d = ChipDescription::ideal(4);
+        d.dark = 0.02;
+        let w = rand_bcm(2, 8, 4, 21);     // logical 8x32
+        let x = rand_x(32, 3, 22);
+        let mut sim = ChipSim::deterministic(d.clone());
+        let y_wide = sim.forward(&w, &x);
+        let mut sim2 = ChipSim::deterministic(d);
+        let y_fold = sim2.forward_folded(&w, &x, 4, 0.0);
+        assert_close(&y_wide.data, &y_fold.data, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn fold_response_slope_biases_later_folds() {
+        let d = ChipDescription::ideal(4);
+        let w = rand_bcm(1, 4, 4, 23);
+        let x = rand_x(16, 1, 24);
+        let mut sim = ChipSim::deterministic(d.clone());
+        let y0 = sim.forward_folded(&w, &x, 4, 0.0);
+        let mut sim2 = ChipSim::deterministic(d);
+        let y1 = sim2.forward_folded(&w, &x, 4, 0.05);
+        // positive slope adds energy from folds 1..3
+        assert!(y1.data[0] > y0.data[0]);
+    }
+
+    #[test]
+    fn folded_single_dark_offset() {
+        let mut d = ChipDescription::ideal(4);
+        d.dark = 0.5;
+        let w = Bcm::zeros(1, 4, 4);           // zero weights: output = dark
+        let x = rand_x(16, 1, 25);
+        let mut sim = ChipSim::deterministic(d);
+        let y = sim.forward_folded(&w, &x, 4, 0.0);
+        // one detection event => exactly one dark, not r darks
+        assert!((y.data[0] - 0.5).abs() < 1e-6, "got {}", y.data[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "block order mismatch")]
+    fn rejects_wrong_order() {
+        let mut sim = ChipSim::new(ChipDescription::ideal(4));
+        let w = rand_bcm(1, 1, 8, 11);
+        let x = rand_x(8, 1, 12);
+        sim.forward(&w, &x);
+    }
+}

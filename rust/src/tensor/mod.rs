@@ -1,0 +1,405 @@
+//! Minimal dense tensor library for the L3 request path.
+//!
+//! Row-major `f32` storage with explicit shapes; implements exactly the ops
+//! the StrC-ONN inference engine needs (matmul, im2col, conv-as-matmul,
+//! max-pool, batch-norm, activations).  Mirrors the semantics of
+//! `python/compile/kernels/ref.py` and is validated against golden files
+//! exported from it.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor helpers (row-major).
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        let w = self.shape[1];
+        self.data[r * w + c] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// C = A(m,k) @ B(k,n), cache-friendly ikj loop order.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add_scalar(&self, s: f32) -> Tensor {
+        self.map(|x| x + s)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Root-mean-square error against another tensor, normalised by the
+    /// other's dynamic range (the paper's Fig. 3d metric).
+    pub fn normalized_rmse(&self, ideal: &Tensor) -> f32 {
+        assert_eq!(self.shape, ideal.shape);
+        let mse: f64 = self
+            .data
+            .iter()
+            .zip(&ideal.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.numel() as f64;
+        let lo = ideal.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = ideal.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let range = (hi - lo).max(1e-9);
+        (mse.sqrt() as f32) / range
+    }
+}
+
+// ---------------------------------------------------------------------------
+// image ops (paper Fig. 1a pipeline)
+// ---------------------------------------------------------------------------
+
+/// im2col for a (C, H, W) image, stride 1, no padding:
+/// -> (C*k*k, (H-k+1)*(W-k+1)); mirrors `ref.im2col_ref`.
+pub fn im2col(img: &Tensor, k: usize) -> Tensor {
+    assert_eq!(img.rank(), 3);
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    assert!(h >= k && w >= k);
+    let (oh, ow) = (h - k + 1, w - k + 1);
+    let rows = c * k * k;
+    let cols = oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    for ci in 0..c {
+        for di in 0..k {
+            for dj in 0..k {
+                let r = ci * k * k + di * k + dj;
+                for i in 0..oh {
+                    let src = &img.data[ci * h * w + (i + di) * w + dj..];
+                    let dst = &mut out[r * cols + i * ow..r * cols + i * ow + ow];
+                    dst.copy_from_slice(&src[..ow]);
+                }
+            }
+        }
+    }
+    Tensor::new(&[rows, cols], out)
+}
+
+/// Same-padding im2col: pads by k/2 with zeros (matches `lax.conv` SAME).
+pub fn im2col_same(img: &Tensor, k: usize) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    let pad = k / 2;
+    let mut padded = Tensor::zeros(&[c, h + 2 * pad, w + 2 * pad]);
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    for ci in 0..c {
+        for i in 0..h {
+            let src = &img.data[ci * h * w + i * w..ci * h * w + (i + 1) * w];
+            let off = ci * ph * pw + (i + pad) * pw + pad;
+            padded.data[off..off + w].copy_from_slice(src);
+        }
+    }
+    im2col(&padded, k)
+}
+
+/// Convolution via im2col: img (C,H,W), weight (Cout, C*k*k) -> (Cout,OH,OW).
+pub fn conv2d(img: &Tensor, wmat: &Tensor, k: usize, same: bool) -> Tensor {
+    let (h, w) = (img.shape[1], img.shape[2]);
+    let xm = if same { im2col_same(img, k) } else { im2col(img, k) };
+    let (oh, ow) = if same { (h, w) } else { (h - k + 1, w - k + 1) };
+    let y = wmat.matmul(&xm);
+    let cout = wmat.shape[0];
+    y.reshape(&[cout, oh, ow])
+}
+
+/// 2x2 (or pxp) max pooling on (C, H, W).
+pub fn maxpool(img: &Tensor, p: usize) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    let (oh, ow) = (h / p, w / p);
+    let mut out = vec![f32::NEG_INFINITY; c * oh * ow];
+    for ci in 0..c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for di in 0..p {
+                    for dj in 0..p {
+                        m = m.max(img.data[ci * h * w + (i * p + di) * w + j * p + dj]);
+                    }
+                }
+                out[ci * oh * ow + i * ow + j] = m;
+            }
+        }
+    }
+    Tensor::new(&[c, oh, ow], out)
+}
+
+/// Batch-norm inference transform on (C, H, W) with per-channel stats.
+pub fn batchnorm(
+    img: &Tensor,
+    mean: &[f32],
+    var: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> Tensor {
+    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
+    assert!(mean.len() == c && var.len() == c && gamma.len() == c && beta.len() == c);
+    let mut out = img.data.clone();
+    for ci in 0..c {
+        let inv = 1.0 / (var[ci] + eps).sqrt();
+        for v in &mut out[ci * h * w..(ci + 1) * h * w] {
+            *v = (*v - mean[ci]) * inv * gamma[ci] + beta[ci];
+        }
+    }
+    Tensor::new(&[c, h, w], out)
+}
+
+/// Numerically-stable softmax over the last axis of a 1-D tensor.
+pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = x.iter().map(|&v| (v - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+pub fn argmax(x: &[f32]) -> usize {
+    x.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut i3 = Tensor::zeros(&[3, 3]);
+        for k in 0..3 {
+            i3.set2(k, k, 1.0);
+        }
+        assert_eq!(a.matmul(&i3).data, a.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose2().transpose2(), a);
+        assert_eq!(a.transpose2().at2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn im2col_counts_patches() {
+        let img = Tensor::new(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let cols = im2col(&img, 3);
+        assert_eq!(cols.shape, vec![9, 4]);
+        // first patch = rows 0..3 x cols 0..3
+        assert_eq!(cols.at2(0, 0), 0.0);
+        assert_eq!(cols.at2(8, 0), 10.0);
+        // last patch starts at (1,1)
+        assert_eq!(cols.at2(0, 3), 5.0);
+    }
+
+    #[test]
+    fn conv_blur_flat_image() {
+        let img = Tensor::full(&[1, 5, 5], 2.0);
+        let wm = Tensor::full(&[1, 9], 1.0 / 9.0);
+        let y = conv2d(&img, &wm, 3, false);
+        assert_eq!(y.shape, vec![1, 3, 3]);
+        for v in &y.data {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_same_preserves_shape() {
+        let img = Tensor::full(&[2, 6, 6], 1.0);
+        let wm = Tensor::full(&[3, 2 * 9], 1.0);
+        let y = conv2d(&img, &wm, 3, true);
+        assert_eq!(y.shape, vec![3, 6, 6]);
+        // interior pixels see all 18 ones
+        assert!((y.data[7 * 1 + 6] - 18.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn maxpool_reduces() {
+        let img = Tensor::new(&[1, 2, 2], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = maxpool(&img, 2);
+        assert_eq!(y.shape, vec![1, 1, 1]);
+        assert_eq!(y.data[0], 5.0);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let img = Tensor::new(&[1, 1, 4], vec![2.0, 4.0, 6.0, 8.0]);
+        let y = batchnorm(&img, &[5.0], &[5.0], &[1.0], &[0.0], 0.0);
+        let s: f32 = y.data.iter().sum();
+        assert!(s.abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_stable_large_logits() {
+        let p = softmax(&[1000.0, 1001.0]);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+    }
+
+    #[test]
+    fn normalized_rmse_zero_for_identical() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(a.normalized_rmse(&a) < 1e-9);
+    }
+}

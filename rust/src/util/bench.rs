@@ -1,0 +1,147 @@
+//! Benchmark harness (criterion is not vendored offline).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p99 statistics and
+//! a uniform one-line report format shared by all `benches/` binaries so
+//! `cargo bench` output reads like the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of per-iteration wall times.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub total: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total: f64 = ns.iter().sum();
+        let pick = |q: f64| ns[((ns.len() - 1) as f64 * q) as usize];
+        Stats {
+            iters: ns.len(),
+            mean_ns: total / ns.len() as f64,
+            p50_ns: pick(0.50),
+            p99_ns: pick(0.99),
+            min_ns: ns[0],
+            total: Duration::from_nanos(total as u64),
+        }
+    }
+
+    /// Throughput in "units/s" given units of work per iteration.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic warmup; bounded by both a target iteration count
+/// and a wall-clock budget.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Stats {
+    bench_cfg(name, 3, 30, Duration::from_secs(2), &mut f)
+}
+
+/// Fully configurable variant.
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    target_iters: usize,
+    budget: Duration,
+    f: &mut F,
+) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(target_iters);
+    let start = Instant::now();
+    while samples.len() < target_iters
+        && (samples.is_empty() || start.elapsed() < budget)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let s = Stats::from_samples(samples);
+    println!(
+        "bench {name:<42} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} iters)",
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p99_ns),
+        s.iters
+    );
+    s
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header used by the bench binaries to mirror paper table titles.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A paper-style table row: label + columns.
+pub fn row(label: &str, cols: &[(&str, String)]) {
+    let cells: Vec<String> = cols
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    println!("  {label:<36} {}", cells.join("  "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.p50_ns, 50.0);
+        assert_eq!(s.p99_ns, 99.0);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut n = 0;
+        let s = bench_cfg("noop", 1, 5, Duration::from_secs(1), &mut || {
+            n += 1;
+        });
+        assert_eq!(s.iters, 5);
+        assert_eq!(n, 6); // warmup + 5
+    }
+
+    #[test]
+    fn per_second() {
+        let s = Stats::from_samples(vec![1e9]); // 1 s per iter
+        assert!((s.per_second(10.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

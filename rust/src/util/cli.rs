@@ -1,0 +1,143 @@
+//! Tiny declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+    spec: Vec<(String, String)>, // (name, help) for --help
+    program: String,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(program: &str, it: I) -> Args {
+        let mut a = Args {
+            program: program.to_string(),
+            ..Default::default()
+        };
+        let mut iter = it.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.pos.push(arg);
+            }
+        }
+        a
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Args {
+        let mut argv = std::env::args();
+        let program = argv.next().unwrap_or_default();
+        Args::parse_from(&program, argv)
+    }
+
+    /// Register help text for an option (used by `usage()`).
+    pub fn describe(&mut self, name: &str, help: &str) -> &mut Self {
+        self.spec.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options]\n", self.program);
+        for (name, help) in &self.spec {
+            s.push_str(&format!("  --{name:<24} {help}\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from("prog", s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = args(&["--size", "48", "--mode=photonic"]);
+        assert_eq!(a.usize_or("size", 0), 48);
+        assert_eq!(a.str_or("mode", ""), "photonic");
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // note: `--flag value`-style ambiguity is resolved greedily (the
+        // next non--- token becomes the value), so boolean flags go last
+        // or use `--flag=`; this matches the documented grammar.
+        let a = args(&["serve", "model.hlo", "--verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["serve", "model.hlo"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("batch", 16), 16);
+        assert_eq!(a.f64_or("eps", 0.02), 0.02);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--fast", "--n", "3"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn usage_lists_described() {
+        let mut a = args(&[]);
+        a.describe("size", "matrix size");
+        assert!(a.usage().contains("--size"));
+        assert!(a.usage().contains("matrix size"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates built from scratch (the offline vendor set has
+//! no serde / rand / clap / rayon / criterion / proptest — see DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,153 @@
+//! Miniature property-based testing harness (proptest is not vendored).
+//!
+//! A property is a closure over a seeded [`Gen`]; `check` runs it across
+//! many seeds and, on failure, reports the seed so the case can be replayed
+//! deterministically:
+//!
+//! ```ignore
+//! propcheck::check("mvm linear", 200, |g| {
+//!     let w = g.vec_f32(16, -1.0, 1.0);
+//!     ...
+//!     prop_assert!(err < 1e-5, "err={err}");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Value generator wrapping a seeded RNG.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of one property execution.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` seeded executions of `prop`; panic with the failing seed on
+/// the first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for seed in 0..cases {
+        let mut g = Gen { rng: Rng::new(0xC1AC0 ^ seed.wrapping_mul(0x9E3779B97F4A7C15)), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a reported failure).
+pub fn replay<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let mut g = Gen { rng: Rng::new(0xC1AC0 ^ seed.wrapping_mul(0x9E3779B97F4A7C15)), seed };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed at replayed seed {seed}: {msg}");
+    }
+}
+
+/// Assert inside a property, returning Err instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("elem {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 100, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // the same seed must generate the same values
+        let mut v1 = None;
+        replay("capture", 3, |g| {
+            v1 = Some(g.vec_f32(8, 0.0, 1.0));
+            Ok(())
+        });
+        let mut v2 = None;
+        replay("capture", 3, |g| {
+            v2 = Some(g.vec_f32(8, 0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("usize_in bounds", 50, |g| {
+            let x = g.usize_in(3, 9);
+            prop_assert!((3..=9).contains(&x), "x={x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Fixed-size thread pool with a scoped parallel-for (rayon/tokio are not
+//! vendored offline).  The coordinator's worker pool and the simulator's
+//! tile-parallel execution are built on this.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared queue.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("cirptc-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = rx.lock().unwrap().recv();
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, handles, size }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Default pool size: available parallelism.
+    pub fn default_size() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Blocking parallel map over `0..n`, preserving order.
+    ///
+    /// Splits into `size * 4` chunks for load balancing; `f` must be
+    /// cloneable state-free (wrap shared state in Arc).
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let chunks = (self.size * 4).min(n);
+        let chunk = n.div_ceil(chunks);
+        let (tx, rx) = mpsc::channel::<(usize, Vec<T>)>();
+        let mut sent = 0;
+        for (ci, start) in (0..n).step_by(chunk).enumerate() {
+            let end = (start + chunk).min(n);
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let out: Vec<T> = (start..end).map(|i| f(i)).collect();
+                let _ = tx.send((ci, out));
+            });
+            sent += 1;
+        }
+        drop(tx);
+        let mut parts: Vec<(usize, Vec<T>)> = rx.iter().collect();
+        assert_eq!(parts.len(), sent, "worker panicked");
+        parts.sort_by_key(|(ci, _)| *ci);
+        parts.into_iter().flat_map(|(_, v)| v).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Global chunked-work counter useful for progress metrics in benches.
+pub struct WorkCounter(AtomicUsize);
+
+impl WorkCounter {
+    pub const fn new() -> Self {
+        WorkCounter(AtomicUsize::new(0))
+    }
+    pub fn add(&self, n: usize) -> usize {
+        self.0.fetch_add(n, Ordering::Relaxed)
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for WorkCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(1000, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn execute_runs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_worker_pool() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(17, |i| i + 1);
+        assert_eq!(out[16], 17);
+    }
+
+    #[test]
+    fn work_counter() {
+        let c = WorkCounter::new();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+}

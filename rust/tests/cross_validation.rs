@@ -1,0 +1,132 @@
+//! Cross-validation: the rust simulator / engine against golden vectors
+//! and artifacts exported by the python build path.  These tests skip
+//! gracefully when `make artifacts` has not run yet (CI bootstrap), but
+//! the Makefile's `test` target guarantees artifacts exist.
+
+use std::path::PathBuf;
+
+use cirptc::circulant::Bcm;
+use cirptc::data::Bundle;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("chip.json").exists().then_some(dir)
+}
+
+#[test]
+fn chip_json_parses_and_matches_python_export() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let chip = ChipDescription::load(&dir.join("chip.json")).unwrap();
+    assert_eq!(chip.l, 4);
+    assert_eq!(chip.w_bits, 6);
+    assert_eq!(chip.x_bits, 4);
+    // Γ rows near-normalised (python normalises then perturbs)
+    for i in 0..4 {
+        let row: f32 = chip.gamma[i * 4..(i + 1) * 4].iter().sum();
+        assert!((row - 1.0).abs() < 0.05, "row {i} sums to {row}");
+    }
+}
+
+/// The core numerical contract: the rust simulator's deterministic forward
+/// must match the python chip model on the exported golden vectors.
+#[test]
+fn simulator_matches_python_goldens() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let goldens = Bundle::load(&dir.join("goldens.cpt")).unwrap();
+    let chip = ChipDescription::load(&dir.join("chip.json")).unwrap();
+    let cases: Vec<String> = {
+        let mut c: Vec<String> = goldens
+            .tensors
+            .keys()
+            .filter_map(|k| k.strip_suffix(".w").map(String::from))
+            .collect();
+        c.sort();
+        c
+    };
+    assert!(cases.len() >= 4);
+    for case in cases {
+        let w = goldens.get(&format!("{case}.w")).unwrap();
+        let x = goldens.get(&format!("{case}.x")).unwrap();
+        let y = goldens.get(&format!("{case}.y")).unwrap();
+        let ws = w.shape().to_vec();
+        let (p, q, l) = (ws[0], ws[1], ws[2]);
+        let bcm = Bcm::new(p, q, l, w.as_f32().unwrap().to_vec());
+        let xt = Tensor::new(x.shape(), x.as_f32().unwrap().to_vec());
+        let got = if l == chip.l {
+            let mut sim = ChipSim::deterministic(chip.clone());
+            sim.forward(&bcm, &xt)
+        } else {
+            // python used the pure crossbar_forward_ref (no chip instance)
+            // for off-order cases: quantize only, identity Γ, no tilt
+            let mut ideal = ChipDescription::ideal(l);
+            ideal.w_bits = 6;
+            ideal.x_bits = 4;
+            let mut sim = ChipSim::deterministic(ideal);
+            sim.forward(&bcm, &xt)
+        };
+        let want = y.as_f32().unwrap();
+        let max_diff = got
+            .data
+            .iter()
+            .zip(want)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(
+            max_diff < 2e-3,
+            "case {case}: rust sim vs python chip max |Δ| = {max_diff}"
+        );
+    }
+}
+
+#[test]
+fn trained_model_bundles_load_into_engine() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for model in ["synth_cxr", "synth_digits", "synth_textures"] {
+        let manifest = dir.join(format!("models/{model}.json"));
+        let bundle = dir.join(format!("models/{model}_dpe.cpt"));
+        if !manifest.exists() {
+            eprintln!("skipping {model}: train.py not run");
+            continue;
+        }
+        let engine = cirptc::onn::Engine::load(&manifest, &bundle).unwrap();
+        let (c, h) = engine.manifest.input_shape();
+        let img = Tensor::full(&[c, h, h], 0.5);
+        let logits = engine
+            .forward(&img, &mut cirptc::onn::Backend::Digital)
+            .unwrap();
+        assert_eq!(logits.len(), engine.manifest.classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Compressed-parameter accounting matches the paper's ~74.9 % reduction.
+#[test]
+fn parameter_reduction_from_manifests() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for model in ["synth_cxr", "synth_digits", "synth_textures"] {
+        let path = dir.join(format!("models/{model}.json"));
+        if !path.exists() {
+            continue;
+        }
+        let m = cirptc::onn::Manifest::load(&path).unwrap();
+        let (dense, stored) = m.param_counts();
+        let reduction = 100.0 * (1.0 - stored as f64 / dense as f64);
+        assert!(
+            (74.0..=75.0).contains(&reduction),
+            "{model}: reduction {reduction:.2}% (paper: 74.91%)"
+        );
+    }
+}

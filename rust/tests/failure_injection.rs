@@ -1,0 +1,148 @@
+//! Failure injection: the serving stack must degrade cleanly, never hang
+//! or double-deliver, when backends fail or inputs are malformed.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use cirptc::coordinator::{
+    BackendFactory, BatcherConfig, Coordinator, InferenceBackend,
+};
+use cirptc::tensor::Tensor;
+
+/// Fails every other batch.
+struct FlakyBackend {
+    calls: Arc<AtomicUsize>,
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n % 2 == 1 {
+            bail!("injected failure on batch {n}");
+        }
+        Ok(imgs.iter().map(|_| vec![1.0, 0.0]).collect())
+    }
+    fn name(&self) -> String {
+        "flaky".into()
+    }
+}
+
+/// Always fails.
+struct DeadBackend;
+
+impl InferenceBackend for DeadBackend {
+    fn infer_batch(&mut self, _imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        bail!("dead backend")
+    }
+    fn name(&self) -> String {
+        "dead".into()
+    }
+}
+
+fn img() -> Tensor {
+    Tensor::full(&[1, 2, 2], 0.5)
+}
+
+#[test]
+fn failed_batches_are_counted_and_requests_fail_cleanly() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let coord = Coordinator::start(
+        vec![Box::new(move || {
+            Box::new(FlakyBackend { calls: calls2 }) as Box<dyn InferenceBackend>
+        }) as BackendFactory],
+        BatcherConfig { max_batch: 4, max_wait_us: 200 },
+    );
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    // submit serially so batches alternate deterministically enough
+    for _ in 0..40 {
+        match coord.submit(img()).wait() {
+            Ok(r) => {
+                assert_eq!(r.logits, vec![1.0, 0.0]);
+                ok += 1;
+            }
+            Err(_) => failed += 1, // reply channel closed: clean failure
+        }
+    }
+    assert_eq!(ok + failed, 40, "no request may hang or be lost");
+    assert!(ok > 0, "some batches succeed");
+    assert!(failed > 0, "some batches fail");
+    assert_eq!(coord.metrics.errors.get() + coord.metrics.completed.get(), 40);
+}
+
+#[test]
+fn dead_backend_fails_everything_without_hanging() {
+    let coord = Coordinator::start(
+        vec![Box::new(|| Box::new(DeadBackend) as Box<dyn InferenceBackend>)
+            as BackendFactory],
+        BatcherConfig { max_batch: 8, max_wait_us: 100 },
+    );
+    for _ in 0..10 {
+        assert!(coord.submit(img()).wait().is_err());
+    }
+    assert_eq!(coord.metrics.errors.get(), 10);
+    assert_eq!(coord.metrics.completed.get(), 0);
+}
+
+#[test]
+fn mixed_healthy_and_dead_workers_still_serve() {
+    // with one dead and one healthy worker, throughput drops but every
+    // request eventually gets an answer or a clean failure; retrying the
+    // failures on the healthy worker must succeed
+    let coord = Coordinator::start(
+        vec![
+            Box::new(|| Box::new(DeadBackend) as Box<dyn InferenceBackend>)
+                as BackendFactory,
+            Box::new(|| {
+                Box::new(FlakyBackend { calls: Arc::new(AtomicUsize::new(0)) })
+                    as Box<dyn InferenceBackend>
+            }) as BackendFactory,
+        ],
+        BatcherConfig { max_batch: 2, max_wait_us: 100 },
+    );
+    let mut answered = 0;
+    for _ in 0..30 {
+        if coord.submit(img()).wait().is_ok() {
+            answered += 1;
+        }
+    }
+    assert!(answered > 0, "healthy worker must still answer");
+}
+
+#[test]
+fn engine_rejects_mismatched_manifest_and_bundle() {
+    use cirptc::data::Bundle;
+    use cirptc::onn::{Engine, Manifest};
+    let manifest = Manifest::parse(
+        r#"{"dataset": "synth_cxr", "classes": 3,
+            "layers": [{"kind": "fc", "cin": 16, "cout": 4, "k": 3,
+                        "pool": 2, "arch": "circ", "l": 4,
+                        "act_scale": 4.0}]}"#,
+    )
+    .unwrap();
+    // bundle missing the layer weights entirely
+    let empty = Bundle::default();
+    assert!(Engine::from_parts(manifest.clone(), &empty).is_err());
+    // bundle with wrong-shaped weights
+    let mut bad = Bundle::default();
+    bad.insert_f32("layer0.w", &[2, 2, 4], vec![0.0; 16]); // wrong P/Q
+    bad.insert_f32("layer0.b", &[4], vec![0.0; 4]);
+    assert!(Engine::from_parts(manifest, &bad).is_err());
+}
+
+#[test]
+fn simulator_rejects_malformed_chip_json() {
+    use cirptc::simulator::ChipDescription;
+    use cirptc::util::json::Json;
+    // gamma shape inconsistent with l
+    let j = Json::parse(
+        r#"{"l": 4, "gamma_true": [[1, 0], [0, 1]], "resp": [1, 1, 1, 1],
+            "dark": 0.0, "sigma_rel": 0.0, "sigma_abs": 0.0,
+            "w_bits": 6, "x_bits": 4, "seed": 1}"#,
+    )
+    .unwrap();
+    assert!(ChipDescription::from_json(&j).is_err());
+}

@@ -1,0 +1,168 @@
+//! Runtime integration: AOT HLO artifacts load, compile and execute on the
+//! PJRT CPU client, and their numerics match the pure-rust implementations
+//! (the L1 Pallas kernel ≡ rust BCM algebra contract).
+
+use std::path::PathBuf;
+
+use cirptc::circulant::Bcm;
+use cirptc::runtime::Runtime;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut r = Rng::new(seed);
+    let mut d = vec![0.0f32; shape.iter().product()];
+    r.fill_uniform(&mut d);
+    Tensor::new(shape, d)
+}
+
+#[test]
+fn pallas_bcm_artifact_matches_rust_bcm() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).unwrap();
+    for (p, q, l, b, name) in [
+        (4usize, 4usize, 4usize, 8usize, "bcm_16x16_b8"),
+        (12, 12, 4, 16, "bcm_48x48_b16"),
+        (16, 16, 4, 16, "bcm_64x64_b16"),
+    ] {
+        let exe = rt.load(name).unwrap();
+        let w = rand_tensor(&[p, q, l], 10 + p as u64);
+        let x = rand_tensor(&[q * l, b], 20 + p as u64);
+        let y_xla = exe.run(&[&w, &x]).unwrap();
+        let bcm = Bcm::new(p, q, l, w.data.clone());
+        let y_rust = bcm.matmul(&x);
+        assert_eq!(y_xla.len(), y_rust.numel());
+        let max_diff = y_xla
+            .iter()
+            .zip(&y_rust.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(max_diff < 1e-4, "{name}: pallas-vs-rust max |Δ| = {max_diff}");
+    }
+}
+
+#[test]
+fn crossbar_artifact_matches_simulator() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let chip = ChipDescription::load(&dir.join("chip.json")).unwrap();
+    let (p, q, l, b) = (12usize, 12usize, 4usize, 16usize);
+    let exe = rt.load("crossbar_48x48_b16").unwrap();
+    let w = rand_tensor(&[p, q, l], 31);
+    let x = rand_tensor(&[q * l, b], 32);
+    let y_xla = exe.run(&[&w, &x]).unwrap();
+    // The AOT crossbar graph uses the *nominal* Γ (no per-instance fab
+    // perturbation or resp tilt — those are serving-time, sim-side); mirror
+    // that config here.
+    let mut desc = ChipDescription::ideal(l);
+    desc.w_bits = chip.w_bits;
+    desc.x_bits = chip.x_bits;
+    desc.dark = chip.dark;
+    // nominal Γ from eps (reconstruct the python crosstalk_matrix(4, eps))
+    let eps = 0.02f64;
+    for i in 0..l {
+        let mut row = [0.0f64; 4];
+        let mut sum = 0.0;
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = eps.powi((i as i32 - j as i32).abs());
+            sum += *r;
+        }
+        for j in 0..l {
+            desc.gamma[i * l + j] = (row[j] / sum) as f32;
+        }
+    }
+    let mut sim = ChipSim::deterministic(desc);
+    let y_sim = sim.forward(&Bcm::new(p, q, l, w.data.clone()), &x);
+    let max_diff = y_xla
+        .iter()
+        .zip(&y_sim.data)
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+    assert!(
+        max_diff < 2e-3,
+        "crossbar artifact vs rust sim max |Δ| = {max_diff}"
+    );
+}
+
+#[test]
+fn gemm_artifact_matches_dense_matmul() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("gemm_16x16_b8").unwrap();
+    let w = rand_tensor(&[16, 16], 41);
+    let x = rand_tensor(&[16, 8], 42);
+    let y = exe.run(&[&w, &x]).unwrap();
+    let want = w.matmul(&x);
+    let max_diff = y
+        .iter()
+        .zip(&want.data)
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+    assert!(max_diff < 1e-4);
+}
+
+#[test]
+fn model_artifact_runs_batch() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("model_synth_cxr").unwrap();
+    let x = rand_tensor(&[8, 1, 64, 64], 50);
+    let y = exe.run(&[&x]).unwrap();
+    assert_eq!(y.len(), 8 * 3);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+/// XLA digital model artifact ≡ rust engine digital path on the same
+/// weights — the strongest end-to-end L2↔L3 consistency check.
+#[test]
+fn model_artifact_matches_rust_engine() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = dir.join("models/synth_cxr.json");
+    if !manifest.exists() {
+        eprintln!("skipping: train.py not run");
+        return;
+    }
+    // model_synth_cxr bakes the *digitally-trained* weights (aot.py);
+    // compare against the engine loading the same bundle
+    let bundle = dir.join("models/synth_cxr_digital.cpt");
+    let bundle = if bundle.exists() {
+        bundle
+    } else {
+        dir.join("models/synth_cxr_dpe.cpt")
+    };
+    let engine = cirptc::onn::Engine::load(&manifest, &bundle).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("model_synth_cxr").unwrap();
+
+    let img = rand_tensor(&[1, 64, 64], 60);
+    let mut batch = vec![0.0f32; 8 * 64 * 64];
+    batch[..64 * 64].copy_from_slice(&img.data);
+    let y_xla = exe.run(&[&Tensor::new(&[8, 1, 64, 64], batch)]).unwrap();
+    let y_rust = engine
+        .forward(&img, &mut cirptc::onn::Backend::Digital)
+        .unwrap();
+    for (i, (a, b)) in y_xla[..3].iter().zip(&y_rust).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-2,
+            "logit {i}: xla {a} vs rust {b}"
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! End-to-end serving: coordinator + engine backends over the exported
+//! test set; checks accuracy ordering (digital >= photonic-with-noise)
+//! and metrics plumbing.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cirptc::coordinator::worker::EngineBackend;
+use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator, InferenceBackend};
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{argmax, Tensor};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("models/synth_cxr.json").exists().then_some(dir)
+}
+
+fn serve_accuracy(dir: &PathBuf, photonic: bool, n: usize) -> f64 {
+    // substrate-specific weights: DPE bundle on the photonic path, the
+    // digitally-trained circulant baseline on the digital path (BN
+    // calibration follows the execution substrate — compile/recalib.py)
+    let variant = if photonic { "dpe" } else { "digital" };
+    let bundle = dir.join(format!("models/synth_cxr_{variant}.cpt"));
+    let bundle = if bundle.exists() {
+        bundle
+    } else {
+        dir.join("models/synth_cxr_dpe.cpt")
+    };
+    let engine = Arc::new(
+        Engine::load(&dir.join("models/synth_cxr.json"), &bundle).unwrap(),
+    );
+    let chip = ChipDescription::load(&dir.join("chip.json")).unwrap();
+    let test = Bundle::load(&dir.join("models/synth_cxr_testset.cpt")).unwrap();
+    let xs = test.get("x").unwrap().as_f32().unwrap();
+    let ys = test.get("y").unwrap().as_i32().unwrap();
+    let n = n.min(ys.len());
+    let images: Vec<Tensor> = (0..n)
+        .map(|i| Tensor::new(&[1, 64, 64], xs[i * 64 * 64..(i + 1) * 64 * 64].to_vec()))
+        .collect();
+    let backends: Vec<BackendFactory> = (0..2)
+        .map(|_| {
+            let engine = Arc::clone(&engine);
+            let chip = chip.clone();
+            Box::new(move || {
+                let mode = if photonic {
+                    Backend::PhotonicSim(ChipSim::new(chip))
+                } else {
+                    Backend::Digital
+                };
+                Box::new(EngineBackend { engine, mode })
+                    as Box<dyn InferenceBackend>
+            }) as BackendFactory
+        })
+        .collect();
+    let coord = Coordinator::start(
+        backends,
+        BatcherConfig { max_batch: 8, max_wait_us: 1000 },
+    );
+    let responses = coord.classify_all(&images).unwrap();
+    assert_eq!(coord.metrics.completed.get(), n);
+    responses
+        .iter()
+        .zip(ys)
+        .filter(|(r, &y)| argmax(&r.logits) == y as usize)
+        .count() as f64
+        / n as f64
+}
+
+#[test]
+fn serving_pipeline_digital_and_photonic() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` + train");
+        return;
+    };
+    let n = 48; // photonic sim is slow in debug builds; subset suffices
+    let acc_digital = serve_accuracy(&dir, false, n);
+    let acc_photonic = serve_accuracy(&dir, true, n);
+    // the DPE-trained model must classify well above chance (1/3) both
+    // digitally and on the noisy simulated chip (paper Fig. 4e ordering)
+    assert!(acc_digital > 0.6, "digital acc {acc_digital}");
+    assert!(acc_photonic > 0.55, "photonic acc {acc_photonic}");
+    assert!(
+        acc_digital >= acc_photonic - 0.1,
+        "digital {acc_digital} vs photonic {acc_photonic}"
+    );
+}
