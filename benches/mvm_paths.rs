@@ -10,6 +10,7 @@
 use std::path::PathBuf;
 
 use cirptc::circulant::Bcm;
+#[cfg(feature = "pjrt")]
 use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::Tensor;
@@ -89,6 +90,7 @@ fn main() {
     )]);
 
     section("AOT Pallas artifact via PJRT (includes dispatch overhead)");
+    #[cfg(feature = "pjrt")]
     match Runtime::new(&dir) {
         Ok(mut rt) => match rt.load("bcm_48x48_b16") {
             Ok(_) => {
@@ -106,4 +108,6 @@ fn main() {
         },
         Err(e) => println!("  skipped (PJRT): {e:#}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("  skipped: pjrt feature disabled (cargo bench --features pjrt)");
 }

@@ -18,13 +18,16 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use cirptc::coordinator::worker::{EngineBackend, XlaBackend};
+use cirptc::coordinator::worker::EngineBackend;
+#[cfg(feature = "pjrt")]
+use cirptc::coordinator::worker::XlaBackend;
 use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
 use cirptc::data::Bundle;
 use cirptc::onn::{Backend, Engine};
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
 use cirptc::util::cli::Args;
+use cirptc::util::error::Result;
 
 struct RunResult {
     acc: f64,
@@ -41,7 +44,7 @@ fn run_backends(
     classes: usize,
     backends: Vec<BackendFactory>,
     max_batch: usize,
-) -> anyhow::Result<RunResult> {
+) -> Result<RunResult> {
     let coord = Coordinator::start(
         backends,
         BatcherConfig { max_batch, max_wait_us: 1500 },
@@ -77,7 +80,7 @@ fn print_result(label: &str, r: &RunResult) {
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let workers = args.usize_or("workers", 2);
@@ -168,18 +171,24 @@ fn main() -> anyhow::Result<()> {
             println!("  photonic confusion matrix: {:?}", r.confusion);
         }
 
-        // -- XLA AOT artifact (PJRT client built on the worker thread) -----
-        let art = dir.clone();
-        let mname = format!("model_{model}");
-        let chw = (c, h, h);
-        let factory: BackendFactory = Box::new(move || {
-            Box::new(
-                XlaBackend::new(&art, &mname, 8, classes, chw)
-                    .expect("XLA backend"),
-            ) as Box<dyn cirptc::coordinator::InferenceBackend>
-        });
-        let r = run_backends(&images, labels, classes, vec![factory], 8)?;
-        print_result("xla-aot ", &r);
+        // -- XLA AOT artifact (PJRT client built on the worker thread;
+        //    pjrt feature only — the default build serves digital+photonic)
+        #[cfg(feature = "pjrt")]
+        {
+            let art = dir.clone();
+            let mname = format!("model_{model}");
+            let chw = (c, h, h);
+            let factory: BackendFactory = Box::new(move || {
+                Box::new(
+                    XlaBackend::new(&art, &mname, 8, classes, chw)
+                        .expect("XLA backend"),
+                ) as Box<dyn cirptc::coordinator::InferenceBackend>
+            });
+            let r = run_backends(&images, labels, classes, vec![factory], 8)?;
+            print_result("xla-aot ", &r);
+        }
+        #[cfg(not(feature = "pjrt"))]
+        println!("  xla-aot   skipped (build with --features pjrt)");
     }
     println!("\nclassification_serving OK");
     Ok(())

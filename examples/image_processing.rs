@@ -21,6 +21,7 @@ use cirptc::data::kernels::{self, extend_kernel};
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{conv2d, im2col, Tensor};
 use cirptc::util::cli::Args;
+use cirptc::util::error::Result;
 
 /// Run one 3×3 kernel over a (C,H,W) image on the simulated chip.
 fn chip_convolve(
@@ -47,7 +48,7 @@ fn chip_convolve(
     out
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse();
     let n_images = args.usize_or("images", 8);
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));

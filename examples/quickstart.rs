@@ -11,12 +11,14 @@
 use std::path::PathBuf;
 
 use cirptc::circulant::Bcm;
+#[cfg(feature = "pjrt")]
 use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::Tensor;
+use cirptc::util::error::Result;
 use cirptc::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = PathBuf::from("artifacts");
 
     // -- build a 48×48 order-4 BCM (the paper's peak-efficiency size) ----
@@ -55,7 +57,8 @@ fn main() -> anyhow::Result<()> {
         y_sim.max_abs_diff(&y_rust)
     );
 
-    // -- 3. AOT Pallas kernel via PJRT -------------------------------------
+    // -- 3. AOT Pallas kernel via PJRT (pjrt feature only) -----------------
+    #[cfg(feature = "pjrt")]
     match Runtime::new(&dir) {
         Ok(mut rt) => match rt.load("bcm_48x48_b16") {
             Ok(exe) => {
@@ -75,6 +78,8 @@ fn main() -> anyhow::Result<()> {
         },
         Err(e) => println!("[3] PJRT unavailable: {e:#}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("[3] skipped: pjrt feature disabled (cargo run --features pjrt)");
 
     println!("quickstart OK");
     Ok(())

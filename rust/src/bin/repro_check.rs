@@ -1,7 +1,24 @@
-//! Minimal environment check: PJRT client comes up, artifacts dir visible.
-fn main() -> anyhow::Result<()> {
+//! Minimal environment check: artifacts dir visible; with `--features
+//! pjrt` the PJRT client must come up too.
+use cirptc::util::error::Result;
+
+fn main() -> Result<()> {
     let dir = std::path::PathBuf::from("artifacts");
-    let rt = cirptc::runtime::Runtime::new(&dir)?;
-    println!("platform={} artifacts={}", rt.platform(), rt.available().len());
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = cirptc::runtime::Runtime::new(&dir)?;
+        println!(
+            "platform={} artifacts={}",
+            rt.platform(),
+            rt.available()?.len()
+        );
+    }
+    #[cfg(not(feature = "pjrt"))]
+    match cirptc::runtime::available_artifacts(&dir) {
+        Ok(names) => println!("platform=rust-native artifacts={}", names.len()),
+        // diagnosable, but not fatal: the pure-rust build serves without
+        // AOT artifacts
+        Err(e) => println!("platform=rust-native artifacts=unavailable ({e:#})"),
+    }
     Ok(())
 }

@@ -17,9 +17,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::Metrics;

@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// One named tensor in a bundle.
 #[derive(Clone, Debug, PartialEq)]

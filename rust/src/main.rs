@@ -3,28 +3,31 @@
 //! Subcommands:
 //!   info                       artifact + chip inventory
 //!   serve  [--model M]         serve the exported test set, print metrics
-//!   mvm    [--size S]          one BCM matmul through sim + XLA paths
+//!   mvm    [--size S]          one BCM matmul through sim (+ XLA with
+//!                              `--features pjrt`)
 //!   analyze                    print the benchmark-analysis summary
 //!
 //! Everything here is also exercised by examples/ and benches/; the binary
-//! is the operational front door.
+//! is the operational front door.  The default build is pure rust; the
+//! `pjrt` cargo feature re-enables the XLA artifact paths.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use cirptc::analysis::{AreaModel, PowerModel, WeightTech};
 use cirptc::arch::CirPtcConfig;
 use cirptc::circulant::Bcm;
-use cirptc::coordinator::{BatcherConfig, Coordinator};
 use cirptc::coordinator::worker::EngineBackend;
+use cirptc::coordinator::{BatcherConfig, Coordinator};
 use cirptc::data::Bundle;
 use cirptc::onn::{Backend, Engine};
+use cirptc::runtime::available_artifacts;
+#[cfg(feature = "pjrt")]
 use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
 use cirptc::util::cli::Args;
+use cirptc::util::error::Result;
 use cirptc::util::rng::Rng;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -41,7 +44,7 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
-                 [--model NAME] [--backend digital|photonic|xla] [--size S]"
+                 [--model NAME] [--backend digital|photonic] [--size S]"
             );
             Ok(())
         }
@@ -50,10 +53,14 @@ fn main() -> Result<()> {
 
 fn info(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
+    #[cfg(feature = "pjrt")]
     let mut rt = Runtime::new(&dir)?;
+    #[cfg(feature = "pjrt")]
     println!("platform: {}", rt.platform());
+    #[cfg(not(feature = "pjrt"))]
+    println!("platform: rust-native (pjrt feature disabled)");
     println!("artifacts in {}:", dir.display());
-    for name in rt.available() {
+    for name in available_artifacts(&dir)? {
         println!("  {name}");
     }
     let chip = ChipDescription::load(&dir.join("chip.json"))?;
@@ -61,9 +68,12 @@ fn info(args: &Args) -> Result<()> {
         "chip: order-{} eps-derived Γ, dark={}, σ_rel={}, w/x bits={}/{}",
         chip.l, chip.dark, chip.sigma_rel, chip.w_bits, chip.x_bits
     );
-    // verify one artifact compiles
-    let _ = rt.load("bcm_16x16_b8")?;
-    println!("bcm_16x16_b8 compiled OK");
+    // verify one artifact compiles (needs the PJRT client)
+    #[cfg(feature = "pjrt")]
+    {
+        let _ = rt.load("bcm_16x16_b8")?;
+        println!("bcm_16x16_b8 compiled OK");
+    }
     Ok(())
 }
 
@@ -152,32 +162,43 @@ fn mvm(args: &Args) -> Result<()> {
     rng.fill_uniform(&mut x);
     let xt = Tensor::new(&[size, b], x);
 
-    // rust photonic-sim path
+    // rust photonic-sim path vs the direct compressed reference
     let chip = ChipDescription::load(&dir.join("chip.json"))
         .unwrap_or_else(|_| ChipDescription::ideal(4));
     let mut sim = ChipSim::deterministic(chip);
     let y_sim = sim.forward(&bcm, &xt);
+    let y_ref = bcm.matmul(&xt);
+    println!(
+        "mvm {size}x{size}: sim vs digital max |Δ| = {:.2e} ({} outputs)",
+        y_sim.max_abs_diff(&y_ref),
+        y_ref.numel()
+    );
 
-    // XLA AOT path (if the matching artifact exists)
-    let mut rt = Runtime::new(&dir)?;
-    let name = format!("crossbar_{size}x{size}_b{b}");
-    match rt.load(&name) {
-        Ok(exe) => {
-            let wt = Tensor::new(&[p, q, l], w);
-            let y_xla = exe.run(&[&wt, &xt])?;
-            let diff = y_sim
-                .data
-                .iter()
-                .zip(&y_xla)
-                .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
-            println!(
-                "mvm {size}x{size}: sim vs XLA max |Δ| = {diff:.2e} \
-                 ({} outputs)",
-                y_xla.len()
-            );
+    // XLA AOT path (if the pjrt feature is on and the artifact exists)
+    #[cfg(feature = "pjrt")]
+    {
+        let mut rt = Runtime::new(&dir)?;
+        let name = format!("crossbar_{size}x{size}_b{b}");
+        match rt.load(&name) {
+            Ok(exe) => {
+                let wt = Tensor::new(&[p, q, l], w);
+                let y_xla = exe.run(&[&wt, &xt])?;
+                let diff = y_sim
+                    .data
+                    .iter()
+                    .zip(&y_xla)
+                    .fold(0.0f32, |m, (a, c)| m.max((a - c).abs()));
+                println!(
+                    "mvm {size}x{size}: sim vs XLA max |Δ| = {diff:.2e} \
+                     ({} outputs)",
+                    y_xla.len()
+                );
+            }
+            Err(e) => println!("mvm {size}x{size}: sim OK; XLA artifact: {e:#}"),
         }
-        Err(e) => println!("mvm {size}x{size}: sim OK; XLA artifact: {e:#}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("mvm {size}x{size}: XLA path disabled (build with --features pjrt)");
     Ok(())
 }
 

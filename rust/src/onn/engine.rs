@@ -2,12 +2,12 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::circulant::Bcm;
 use crate::data::Bundle;
 use crate::simulator::ChipSim;
 use crate::tensor::{self, Tensor};
+use crate::util::error::{Context, Result};
 
 use super::manifest::{LayerKind, LayerSpec, Manifest};
 

@@ -3,8 +3,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,7 +55,7 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let j = Json::parse(text)?;
         let dataset = j
             .get("dataset")
             .and_then(Json::as_str)

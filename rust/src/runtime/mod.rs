@@ -5,105 +5,42 @@
 //! instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).  All artifacts are
 //! lowered with `return_tuple=True`, so outputs unwrap with `to_tuple1`.
+//!
+//! Everything that touches PJRT lives in the `pjrt` submodule, compiled
+//! only under the off-by-default `pjrt` cargo feature; the default build
+//! is pure rust.  [`available_artifacts`] (plain directory inspection)
+//! compiles in every configuration so the CLI and environment checks
+//! work offline.
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 
-use crate::tensor::Tensor;
-
-/// A compiled, executable HLO module.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-/// The PJRT client plus a cache of compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: BTreeMap<String, Executable>,
-    pub artifacts_dir: PathBuf,
-}
-
-impl Runtime {
-    /// CPU PJRT client rooted at an artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            cache: BTreeMap::new(),
-            artifacts_dir: artifacts_dir.to_path_buf(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile `<name>.hlo.txt` from the artifacts dir (cached).
-    pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                bail!(
-                    "artifact {} not found — run `make artifacts` first",
-                    path.display()
-                );
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("utf-8 path")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.cache.insert(
-                name.to_string(),
-                Executable { exe, name: name.to_string() },
-            );
+/// Artifact names (`<name>.hlo.txt`) present under `dir`, sorted.
+///
+/// I/O failures (missing or unreadable directory) surface as errors
+/// instead of an empty listing, so "no artifacts" always means the
+/// directory was readable and genuinely empty.
+pub fn available_artifacts(dir: &Path) -> Result<Vec<String>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing artifacts dir {}", dir.display()))?;
+    let mut names = Vec::new();
+    for entry in entries {
+        let entry = entry
+            .with_context(|| format!("reading artifacts dir {}", dir.display()))?;
+        if let Some(name) = entry
+            .file_name()
+            .to_str()
+            .and_then(|n| n.strip_suffix(".hlo.txt"))
+        {
+            names.push(name.to_string());
         }
-        Ok(&self.cache[name])
     }
-
-    /// Artifact names available on disk.
-    pub fn available(&self) -> Vec<String> {
-        let mut v: Vec<String> = std::fs::read_dir(&self.artifacts_dir)
-            .into_iter()
-            .flatten()
-            .flatten()
-            .filter_map(|e| {
-                e.file_name()
-                    .to_str()
-                    .and_then(|n| n.strip_suffix(".hlo.txt"))
-                    .map(String::from)
-            })
-            .collect();
-        v.sort();
-        v
-    }
+    names.sort();
+    Ok(names)
 }
 
-impl Executable {
-    /// Execute with f32 tensors; returns the elements of the 1-tuple output
-    /// as a flat f32 vector (output shapes are fixed by the AOT signature,
-    /// which the caller knows).
-    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> =
-                    t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .context("literal reshape")
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let tuple = lit.to_tuple1().context("unwrapping 1-tuple output")?;
-        Ok(tuple.to_vec::<f32>()?)
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,92 @@
+//! The PJRT-backed [`Runtime`] / [`Executable`] pair (pjrt feature only).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::tensor::Tensor;
+use crate::util::error::{Context, Result};
+
+/// A compiled, executable HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Executable>,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: BTreeMap::new(),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile `<name>.hlo.txt` from the artifacts dir (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf-8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable { exe, name: name.to_string() },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Artifact names available on disk (I/O errors surface, they are not
+    /// swallowed into an empty listing).
+    pub fn available(&self) -> Result<Vec<String>> {
+        super::available_artifacts(&self.artifacts_dir)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensors; returns the elements of the 1-tuple output
+    /// as a flat f32 vector (output shapes are fixed by the AOT signature,
+    /// which the caller knows).
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> =
+                    t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .context("literal reshape")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let tuple = lit.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}

@@ -15,11 +15,11 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::circulant::Bcm;
 use crate::quant::Quantizer;
 use crate::tensor::Tensor;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -82,7 +82,7 @@ impl ChipDescription {
     pub fn load(path: &Path) -> Result<ChipDescription> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let j = Json::parse(&text)?;
         ChipDescription::from_json(&j)
     }
 }

@@ -1,0 +1,213 @@
+//! Hand-rolled error type with context chaining (anyhow is not in the
+//! offline vendor set — same from-scratch philosophy as `util/json.rs`
+//! and `util/rng.rs`).
+//!
+//! Mirrors exactly the slice of the `anyhow` API this crate uses: a
+//! crate-wide [`Result`] alias, the [`crate::bail!`] macro, and a
+//! [`Context`] extension trait for `Result` / `Option`.  Formatting
+//! matches anyhow's conventions: `{e}` prints the outermost message,
+//! `{e:#}` prints the whole cause chain separated by `": "` (the serving
+//! logs and CLI fallbacks rely on the alternate form).
+
+use std::fmt;
+
+use crate::util::json::JsonError;
+
+/// Crate-wide error: either a leaf (free-form message, I/O, JSON) or a
+/// context frame wrapping a deeper cause.
+#[derive(Debug)]
+pub enum Error {
+    /// Free-form message (`bail!`, `Error::msg`, `Option` context).
+    Msg(String),
+    /// An I/O failure, with the original error preserved as the source.
+    Io(std::io::Error),
+    /// A JSON parse failure from `util::json`.
+    Json(JsonError),
+    /// A higher-level context frame around a lower-level cause.
+    Context { context: String, source: Box<Error> },
+}
+
+/// Crate-wide result alias (second parameter overridable, like anyhow's).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Leaf error from a message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error::Msg(m.into())
+    }
+
+    /// Wrap `self` in a higher-level context frame.
+    pub fn context(self, context: impl Into<String>) -> Error {
+        Error::Context { context: context.into(), source: Box::new(self) }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = vec![format!("{self}")];
+        let mut cur: &(dyn std::error::Error) = self;
+        while let Some(src) = cur.source() {
+            out.push(format!("{src}"));
+            cur = src;
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Msg(m) => f.write_str(m),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Json(e) => write!(f, "{e}"),
+            Error::Context { context, source } => {
+                f.write_str(context)?;
+                if f.alternate() {
+                    write!(f, ": {source:#}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Msg(_) => None,
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            Error::Context { source, .. } => Some(source.as_ref()),
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+impl From<JsonError> for Error {
+    fn from(e: JsonError) -> Error {
+        Error::Json(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::Msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::Msg(m.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Error {
+        Error::Msg(format!("invalid utf-8: {e}"))
+    }
+}
+
+impl From<std::sync::mpsc::RecvError> for Error {
+    fn from(_: std::sync::mpsc::RecvError) -> Error {
+        Error::Msg("reply channel closed (request failed on the worker)".into())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Msg(format!("xla: {e}"))
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option` (the anyhow idiom the call sites were written
+/// against).
+pub trait Context<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.ok_or_else(|| Error::Msg(msg.into()))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::Msg(f().into()))
+    }
+}
+
+/// Early-return with a formatted [`Error::Msg`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf() -> Result<()> {
+        Err(Error::msg("root cause"))
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let e = leaf().context("loading artifact").unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifact");
+        assert_eq!(format!("{e:#}"), "loading artifact: root cause");
+        assert_eq!(e.chain(), vec!["loading artifact", "root cause"]);
+    }
+
+    #[test]
+    fn with_context_formats_lazily_built_message() {
+        let e = leaf().with_context(|| format!("pass {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "pass 3: root cause");
+    }
+
+    #[test]
+    fn bail_formats_arguments() {
+        fn f(n: usize) -> Result<()> {
+            crate::bail!("bad n {n}");
+        }
+        assert_eq!(format!("{}", f(3).unwrap_err()), "bad n 3");
+    }
+
+    #[test]
+    fn option_context_is_a_leaf() {
+        let v: Option<u32> = None;
+        let e = v.context("tensor 'x' missing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "tensor 'x' missing");
+    }
+
+    #[test]
+    fn io_source_preserved_through_context() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::from(ioe).context("reading chip.json");
+        assert!(format!("{e:#}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn json_error_converts() {
+        let e: Error = crate::util::json::Json::parse("{").unwrap_err().into();
+        assert!(format!("{e}").contains("json error"));
+    }
+}

@@ -1,8 +1,10 @@
 //! Infrastructure substrates built from scratch (the offline vendor set has
-//! no serde / rand / clap / rayon / criterion / proptest — see DESIGN.md §4).
+//! no serde / rand / clap / rayon / criterion / proptest / anyhow — see
+//! DESIGN.md §4).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

@@ -4,12 +4,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
-
+use cirptc::bail;
 use cirptc::coordinator::{
     BackendFactory, BatcherConfig, Coordinator, InferenceBackend,
 };
 use cirptc::tensor::Tensor;
+use cirptc::util::error::Result;
 
 /// Fails every other batch.
 struct FlakyBackend {

@@ -1,0 +1,110 @@
+//! Feature-matrix regression: the default (no-feature) build must stay
+//! free of `xla` references outside `pjrt`-gated regions, so the crate
+//! builds hermetically offline.
+//!
+//! `cargo build` itself enforces linkage (the `xla` dependency is
+//! optional), but an ungated call site would only fail once someone
+//! built without the feature; this test makes the *source* discipline
+//! explicit and fails with a readable message in every configuration.
+//! It also pins the `available()` I/O-error contract (satellite of the
+//! same bugfix PR).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Every `xla::` occurrence in `text` must belong to a top-level item
+/// carrying `#[cfg(feature = "pjrt")]`: the nearest gate before the use
+/// must come *after* the last top-level item closed before it (a `}` at
+/// column 0), i.e. be attached to the item the use sits in.
+fn assert_inline_gated(rel: &str, text: &str) {
+    const GATE: &str = "#[cfg(feature = \"pjrt\")]";
+    let mut search = 0;
+    while let Some(off) = text[search..].find("xla::") {
+        let pos = search + off;
+        let head = &text[..pos];
+        let last_gate = head.rfind(GATE);
+        let last_item_close = head.rfind("\n}").unwrap_or(0);
+        assert!(
+            last_gate.is_some_and(|g| g > last_item_close),
+            "src/{rel}: `xla::` use at byte {pos} is not inside a \
+             #[cfg(feature = \"pjrt\")]-gated item"
+        );
+        search = pos + "xla::".len();
+    }
+}
+
+#[test]
+fn xla_references_are_pjrt_gated() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    rs_files(&src, &mut files);
+    assert!(files.len() > 30, "source walk found too few files");
+    for path in files {
+        let text = fs::read_to_string(&path).unwrap();
+        if !text.contains("xla::") {
+            continue;
+        }
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap()
+            .to_string_lossy()
+            .replace('\\', "/");
+        match rel.as_str() {
+            // the whole submodule is compiled only under the feature
+            "runtime/pjrt.rs" => {
+                let gate = fs::read_to_string(src.join("runtime/mod.rs")).unwrap();
+                assert!(
+                    gate.contains("#[cfg(feature = \"pjrt\")]\nmod pjrt;"),
+                    "runtime/pjrt.rs must stay feature-gated in runtime/mod.rs"
+                );
+            }
+            // inline gates: every xla use must sit in a gated item
+            "coordinator/worker.rs" | "util/error.rs" => {
+                assert_inline_gated(&rel, &text);
+            }
+            other => panic!(
+                "src/{other} references `xla::` but is not a known pjrt-gated \
+                 file; gate it behind `#[cfg(feature = \"pjrt\")]` and extend \
+                 this test"
+            ),
+        }
+    }
+}
+
+#[test]
+fn available_artifacts_errors_on_missing_dir() {
+    // the seed silently flattened read_dir errors into "no artifacts";
+    // a missing/unreadable dir must now be diagnosable
+    let err = cirptc::runtime::available_artifacts(Path::new(
+        "/definitely/not/a/real/artifacts/dir",
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("listing artifacts dir"),
+        "error must carry the directory context, got: {msg}"
+    );
+}
+
+#[test]
+fn available_artifacts_lists_sorted_hlo_names() {
+    let dir = std::env::temp_dir().join("cirptc_feature_matrix_artifacts");
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    for f in ["b.hlo.txt", "a.hlo.txt", "notes.md"] {
+        fs::write(dir.join(f), "x").unwrap();
+    }
+    let names = cirptc::runtime::available_artifacts(&dir).unwrap();
+    assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+}

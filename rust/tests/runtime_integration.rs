@@ -1,6 +1,11 @@
 //! Runtime integration: AOT HLO artifacts load, compile and execute on the
 //! PJRT CPU client, and their numerics match the pure-rust implementations
 //! (the L1 Pallas kernel ≡ rust BCM algebra contract).
+//!
+//! Compiled only with `--features pjrt` (and runnable only with a real
+//! xla binding patched over the vendored stub — see README §PJRT).
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -11,7 +16,11 @@ use cirptc::tensor::Tensor;
 use cirptc::util::rng::Rng;
 
 fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // the crate manifest lives in rust/; artifacts/ sits at the workspace
+    // root next to benches/ and examples/
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("artifacts");
     dir.join("manifest.json").exists().then_some(dir)
 }
 

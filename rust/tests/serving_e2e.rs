@@ -13,7 +13,11 @@ use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
 
 fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // the crate manifest lives in rust/; artifacts/ sits at the workspace
+    // root next to benches/ and examples/
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("artifacts");
     dir.join("models/synth_cxr.json").exists().then_some(dir)
 }
 

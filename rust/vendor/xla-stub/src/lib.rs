@@ -1,0 +1,151 @@
+//! Offline stub of the `xla` (xla-rs) API surface that `cirptc` uses
+//! behind its `pjrt` cargo feature.
+//!
+//! Purpose: `cargo check -p cirptc --features pjrt` must type-check the
+//! XLA execution path hermetically — no network, no `xla_extension`
+//! native libraries.  Every PJRT entry point therefore returns a clear
+//! runtime error instead of dispatching; deployments repoint the `xla`
+//! path dependency in rust/Cargo.toml at the real binding (`[patch]`
+//! cannot override a path dependency — see the repo README, §PJRT).
+//!
+//! Kept deliberately tiny and dependency-free: only the symbols
+//! referenced by `cirptc::runtime` and `cirptc::coordinator::worker`
+//! exist here, with the same shapes (ownership, generics, `Result`
+//! plumbing, and `!Send` thread-locality) as xla-rs.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Stand-in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla stub build — the PJRT native runtime is not linked; \
+         patch in a real `xla` crate (xla-rs + xla_extension) to execute \
+         artifacts"
+    ))
+}
+
+/// PJRT client handle.  The `Rc` marker mirrors the real binding's
+/// `!Send` thread-locality, so the worker-thread factory discipline in
+/// `cirptc::coordinator` stays honest even against the stub.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host-side literal.  Construction and reshape work (pure metadata);
+/// anything touching device buffers errors.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_stub_build() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[2, 2]).is_ok());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+}
