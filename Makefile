@@ -1,0 +1,34 @@
+# Root entry points for the two-phase build: python runs at build time
+# only (compile/aot.py, compile/train.py — both import compile/export.py
+# for the CPT1/manifest interchange), then the rust binary serves from
+# artifacts/ alone.  See DESIGN.md §2–3 and README.md.
+
+PY ?= python3
+OUT ?= artifacts
+
+.PHONY: artifacts train train-quick verify bench-smoke help
+
+## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../$(OUT)
+
+## Hardware-aware training sweep: manifests, CPT1 weight bundles, test
+## sets, golden vectors and metrics.json (compile.train)
+train:
+	cd python && $(PY) -m compile.train --out ../$(OUT)
+
+## CI-sized training run (small data / few epochs)
+train-quick:
+	cd python && $(PY) -m compile.train --out ../$(OUT) --quick
+
+## Tier-1 verification (what CI runs)
+verify:
+	cargo build --release --workspace
+	cargo test -q --workspace
+
+## One-iteration serving bench (works without artifacts — synthetic model)
+bench-smoke:
+	cargo bench --bench serving -- --smoke
+
+help:
+	@grep -B1 -E '^[a-z-]+:' Makefile | grep -E '^(##|[a-z-]+:)' | sed 's/:.*//'

@@ -73,6 +73,63 @@ fn main() {
         )]);
     }
 
+    section("batched Eq.2 (mmm_fft): one weight-spectrum per block, B columns");
+    for l in [16usize, 64] {
+        let blocks = 1024 / l;
+        let b = rand_bcm(blocks.min(16), blocks, l, 5);
+        for cols in [1usize, 8, 32] {
+            let mut xd = vec![0.0f32; b.n() * cols];
+            Rng::new(6).fill_uniform(&mut xd);
+            let x = Tensor::new(&[b.n(), cols], xd);
+            let s_direct = bench(&format!("direct  l={l} B={cols}"), || {
+                black_box(b.matmul(&x));
+            });
+            let s_mmm = bench(&format!("mmm_fft l={l} B={cols}"), || {
+                black_box(b.mmm_fft(&x));
+            });
+            // per-column re-FFT baseline: columns pre-split so the timed
+            // region measures FFT work, not layout conversion
+            let split: Vec<Vec<f32>> = (0..cols)
+                .map(|c| (0..b.n()).map(|i| x.data[i * cols + c]).collect())
+                .collect();
+            let s_percol = bench(&format!("mvm_fft l={l} ×{cols}"), || {
+                for col in &split {
+                    black_box(b.mvm_fft(col));
+                }
+            });
+            row(&format!("l={l} B={cols}"), &[
+                (
+                    "mmm_fft_vs_direct",
+                    format!("{:.2}x", s_direct.mean_ns / s_mmm.mean_ns),
+                ),
+                (
+                    "mmm_fft_vs_per_col",
+                    format!("{:.2}x", s_percol.mean_ns / s_mmm.mean_ns),
+                ),
+            ]);
+        }
+    }
+
+    section("threaded direct mmm (block-rows via scoped parallel-for)");
+    {
+        let b = rand_bcm(32, 32, 16, 7); // 512×512 logical
+        let mut xd = vec![0.0f32; b.n() * 64];
+        Rng::new(8).fill_uniform(&mut xd);
+        let x = Tensor::new(&[b.n(), 64], xd);
+        let s1 = bench("mmm 512x512xB64 threads=1", || {
+            black_box(b.mmm(&x, 1));
+        });
+        for t in [2usize, 4, 8] {
+            let st = bench(&format!("mmm 512x512xB64 threads={t}"), || {
+                black_box(b.mmm(&x, t));
+            });
+            row(&format!("threads={t}"), &[(
+                "speedup",
+                format!("{:.2}x", s1.mean_ns / st.mean_ns),
+            )]);
+        }
+    }
+
     section("photonic-sim overhead vs bare fp32 (48x48, batch 16)");
     let chip = ChipDescription::load(&dir.join("chip.json"))
         .unwrap_or_else(|_| ChipDescription::ideal(4));

@@ -1,9 +1,17 @@
-//! Bench: L3 serving — batching-policy sweep and coordinator overhead.
+//! Bench: L3 serving — batch-major engine throughput and coordinator
+//! overhead (DESIGN.md §4, §9).
 //!
-//! The paper's system contribution is the hardware; the serving layer is
-//! our operationalisation (DESIGN.md §4).  Targets: the coordinator adds
-//! <10 % overhead vs a bare engine loop, and the batch-size sweep shows
-//! the standard throughput/latency trade-off.
+//! Sections:
+//!   1. per-image `forward()` loop — the pre-batching baseline;
+//!   2. batch-major `forward_batch` sweep — one layer-graph walk and one
+//!      multi-column BCM multiply per layer per batch (the acceptance
+//!      check: images/sec at batch ≥ 8 must beat the per-image loop);
+//!   3. coordinator overhead + batching-policy sweep + worker scaling.
+//!
+//! Runs against trained artifacts when present (`make train`), otherwise
+//! falls back to a synthetic in-memory model so the serving path is
+//! always exercised (CI bench smoke: `cargo bench --bench serving --
+//! --smoke`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -12,28 +20,97 @@ use std::time::Instant;
 use cirptc::coordinator::worker::EngineBackend;
 use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
 use cirptc::data::Bundle;
-use cirptc::onn::{Backend, Engine};
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::Tensor;
 use cirptc::util::bench::{row, section};
+use cirptc::util::cli::Args;
+use cirptc::util::rng::Rng;
+
+/// Synthetic circ model (conv→relu→pool→flatten→fc on 32×32 inputs) so
+/// the bench runs without trained artifacts.
+fn synthetic_engine() -> Engine {
+    let manifest = Manifest::parse(
+        r#"{
+          "dataset": "synth_bench", "classes": 4,
+          "layers": [
+            {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "fc", "cin": 2048, "cout": 4, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0}
+          ]}"#,
+    )
+    .unwrap();
+    let mut bundle = Bundle::default();
+    let mut rng = Rng::new(17);
+    // conv: cout 8 -> P=2, n_in 9 -> Q=3
+    let mut w0 = vec![0.0f32; 2 * 3 * 4];
+    rng.fill_uniform(&mut w0);
+    for v in w0.iter_mut() {
+        *v = (*v - 0.5) * 0.5;
+    }
+    bundle.insert_f32("layer0.w", &[2, 3, 4], w0);
+    bundle.insert_f32("layer0.b", &[8], vec![0.0; 8]);
+    // fc: 2048 -> 4: P=1, Q=512
+    let mut w4 = vec![0.0f32; 512 * 4];
+    rng.fill_uniform(&mut w4);
+    for v in w4.iter_mut() {
+        *v = (*v - 0.5) * 0.1;
+    }
+    bundle.insert_f32("layer4.w", &[1, 512, 4], w4);
+    bundle.insert_f32("layer4.b", &[4], vec![0.1, 0.2, 0.3, 0.4]);
+    Engine::from_parts(manifest, &bundle).unwrap()
+}
+
+fn synthetic_images(n: usize) -> Vec<Tensor> {
+    let mut rng = Rng::new(18);
+    (0..n)
+        .map(|_| {
+            let mut d = vec![0.0f32; 32 * 32];
+            rng.fill_uniform(&mut d);
+            Tensor::new(&[1, 32, 32], d)
+        })
+        .collect()
+}
 
 fn main() {
+    let args = Args::parse();
+    let smoke = args.has("smoke");
     let dir = PathBuf::from("artifacts");
     let manifest = dir.join("models/synth_cxr.json");
-    if !manifest.exists() {
-        println!("serving bench skipped — run `make train` first");
-        return;
-    }
-    let engine = Arc::new(
-        Engine::load(&manifest, &dir.join("models/synth_cxr_dpe.cpt")).unwrap(),
-    );
-    let test = Bundle::load(&dir.join("models/synth_cxr_testset.cpt")).unwrap();
-    let xs = test.get("x").unwrap().as_f32().unwrap();
-    let n = 64usize;
-    let images: Vec<Tensor> = (0..n)
-        .map(|i| Tensor::new(&[1, 64, 64], xs[i * 64 * 64..(i + 1) * 64 * 64].to_vec()))
-        .collect();
+    let (engine, images, source) = if manifest.exists() {
+        let engine =
+            Engine::load(&manifest, &dir.join("models/synth_cxr_dpe.cpt"))
+                .unwrap();
+        let test =
+            Bundle::load(&dir.join("models/synth_cxr_testset.cpt")).unwrap();
+        let xs = test.get("x").unwrap().as_f32().unwrap();
+        let n = if smoke { 16usize } else { 64 };
+        let images: Vec<Tensor> = (0..n)
+            .map(|i| {
+                Tensor::new(
+                    &[1, 64, 64],
+                    xs[i * 64 * 64..(i + 1) * 64 * 64].to_vec(),
+                )
+            })
+            .collect();
+        (engine, images, "trained artifacts")
+    } else {
+        println!("artifacts missing — using the synthetic in-memory model");
+        let n = if smoke { 16 } else { 64 };
+        (synthetic_engine(), synthetic_images(n), "synthetic model")
+    };
+    let engine = Arc::new(engine);
+    let n = images.len();
+    println!("serving bench over {n} images ({source}, smoke={smoke})");
 
-    section("bare engine loop (digital, single thread) — baseline");
+    section("bare engine loop (digital, per image) — baseline");
     let t0 = Instant::now();
     let mut be = Backend::Digital;
     for im in &images {
@@ -44,6 +121,47 @@ fn main() {
         ("req_s", format!("{:.1}", n as f64 / bare)),
         ("total_s", format!("{bare:.3}")),
     ]);
+
+    section("batch-major forward_batch sweep (digital) vs per-image loop");
+    for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+        if batch > n {
+            break;
+        }
+        let mut be = Backend::Digital;
+        let t0 = Instant::now();
+        for chunk in images.chunks(batch) {
+            let _ = engine.forward_batch(chunk, &mut be).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        row(&format!("forward_batch b={batch}"), &[
+            ("img_s", format!("{:.1}", n as f64 / wall)),
+            ("speedup_vs_loop", format!("{:.2}x", bare / wall)),
+        ]);
+    }
+
+    section("batch-major forward_batch sweep (deterministic photonic sim)");
+    for batch in [1usize, 8, 32] {
+        if batch > n {
+            break;
+        }
+        let mut be = Backend::PhotonicSim(ChipSim::deterministic(
+            ChipDescription::ideal(4),
+        ));
+        let t0 = Instant::now();
+        for chunk in images.chunks(batch) {
+            let _ = engine.forward_batch(chunk, &mut be).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (passes, tiles) = match &be {
+            Backend::PhotonicSim(sim) => (sim.passes(), sim.tiles_executed),
+            Backend::Digital => unreachable!(),
+        };
+        row(&format!("photonic b={batch}"), &[
+            ("img_s", format!("{:.1}", n as f64 / wall)),
+            ("chip_passes", format!("{passes}")),
+            ("tiles", format!("{tiles}")),
+        ]);
+    }
 
     section("coordinator overhead (1 digital worker, batch 8)");
     let engine2 = Arc::clone(&engine);
@@ -62,7 +180,13 @@ fn main() {
         ("overhead_pct", format!("{:.1}", 100.0 * (coord_s - bare) / bare)),
         ("target", "<10%".into()),
     ]);
+    println!("  metrics: {}", coord.metrics.summary());
     drop(coord);
+
+    if smoke {
+        println!("\nsmoke mode: skipping policy sweep + worker scaling");
+        return;
+    }
 
     section("batch-size sweep (2 digital workers)");
     for batch in [1usize, 2, 4, 8, 16] {
@@ -88,6 +212,10 @@ fn main() {
             ("p50_us", format!("{p50}")),
             ("p99_us", format!("{p99}")),
             ("mean_batch", format!("{:.1}", coord.metrics.mean_batch_size())),
+            (
+                "batch_p99_us",
+                format!("≤{}", coord.metrics.batch_compute_us.percentile(0.99)),
+            ),
         ]);
     }
 

@@ -7,6 +7,114 @@
 //! of the paper's formal story, so both routes ship and cross-validate).
 
 use super::Bcm;
+use crate::tensor::Tensor;
+
+/// Precomputed radix-2 FFT plan: the bit-reversal permutation and the
+/// per-stage twiddle tables (derived in f64, stored f32), shared across
+/// every transform of the same length.  The batched Eq. (2) path
+/// ([`bcm_mmm_fft`]) builds one plan per multiply and streams all weight
+/// blocks and all B input columns through it, instead of re-deriving the
+/// twiddle recurrence once per transform as [`fft_inplace`] does.
+pub struct FftPlan {
+    n: usize,
+    /// permutation target for each index (swap applied when i < rev[i])
+    rev: Vec<u32>,
+    /// forward twiddles concatenated per stage (len = 2, 4, …, n), k in
+    /// 0..len/2 each; the inverse transform conjugates on the fly
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "radix-2 fft needs power-of-two length");
+        let mut rev = vec![0u32; n];
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            rev[i] = j as u32;
+        }
+        let mut tw_re = Vec::new();
+        let mut tw_im = Vec::new();
+        let mut len = 2;
+        while len <= n {
+            for k in 0..len / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                tw_re.push(ang.cos() as f32);
+                tw_im.push(ang.sin() as f32);
+            }
+            len <<= 1;
+        }
+        FftPlan { n, rev, tw_re, tw_im }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    fn run(&self, re: &mut [f32], im: &mut [f32], invert: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        for i in 1..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        let mut tw_off = 0usize;
+        let mut len = 2;
+        while len <= n {
+            for start in (0..n).step_by(len) {
+                for k in 0..len / 2 {
+                    let wr = self.tw_re[tw_off + k];
+                    let wi = if invert {
+                        -self.tw_im[tw_off + k]
+                    } else {
+                        self.tw_im[tw_off + k]
+                    };
+                    let a = start + k;
+                    let b = a + len / 2;
+                    let (tr, ti) =
+                        (re[b] * wr - im[b] * wi, re[b] * wi + im[b] * wr);
+                    re[b] = re[a] - tr;
+                    im[b] = im[a] - ti;
+                    re[a] += tr;
+                    im[a] += ti;
+                }
+            }
+            tw_off += len / 2;
+            len <<= 1;
+        }
+        if invert {
+            let inv = 1.0 / n as f32;
+            for v in re.iter_mut() {
+                *v *= inv;
+            }
+            for v in im.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, false);
+    }
+
+    pub fn inverse(&self, re: &mut [f32], im: &mut [f32]) {
+        self.run(re, im, true);
+    }
+}
 
 /// In-place iterative radix-2 Cooley-Tukey FFT over interleaved (re, im).
 pub fn fft_inplace(re: &mut [f32], im: &mut [f32], invert: bool) {
@@ -115,6 +223,76 @@ pub fn bcm_mvm_fft(b: &Bcm, x: &[f32]) -> Vec<f32> {
     y
 }
 
+/// Batched Eq. (2): `BCM · X` for `X` of shape (N, B).
+///
+/// Weight spectra (one FFT of each block's first column) and the twiddle
+/// tables are computed **once** and reused across all B columns — the
+/// lookup-mode amortisation the paper gets from programming the MRR bank
+/// once and streaming operand columns through it.
+pub fn bcm_mmm_fft(bcm: &Bcm, x: &Tensor) -> Tensor {
+    let l = bcm.l;
+    assert!(l.is_power_of_two(), "fft path requires power-of-two order");
+    assert_eq!(x.shape[0], bcm.n());
+    let b = x.shape[1];
+    let plan = FftPlan::new(l);
+
+    // weight spectra: (P·Q, l) complex — independent of the batch width
+    let n_blocks = bcm.p * bcm.q;
+    let mut w_re = vec![0.0f32; n_blocks * l];
+    let mut w_im = vec![0.0f32; n_blocks * l];
+    for blk_i in 0..n_blocks {
+        let blk = &bcm.w[blk_i * l..(blk_i + 1) * l];
+        let re = &mut w_re[blk_i * l..(blk_i + 1) * l];
+        // first column of the circulant with primary row w:
+        // col[r] = w[(-r) mod l]
+        re[0] = blk[0];
+        for r in 1..l {
+            re[r] = blk[l - r];
+        }
+        plan.forward(re, &mut w_im[blk_i * l..(blk_i + 1) * l]);
+    }
+
+    // input spectra: (Q, B, l) complex — one FFT per (block, column)
+    let mut x_re = vec![0.0f32; bcm.q * b * l];
+    let mut x_im = vec![0.0f32; bcm.q * b * l];
+    for bq in 0..bcm.q {
+        for col in 0..b {
+            let off = (bq * b + col) * l;
+            for i in 0..l {
+                x_re[off + i] = x.data[(bq * l + i) * b + col];
+            }
+            plan.forward(&mut x_re[off..off + l], &mut x_im[off..off + l]);
+        }
+    }
+
+    // per (block-row, column): accumulate ⊙ products in frequency space,
+    // one inverse transform each
+    let mut out = vec![0.0f32; bcm.m() * b];
+    let mut acc_re = vec![0.0f32; l];
+    let mut acc_im = vec![0.0f32; l];
+    for bp in 0..bcm.p {
+        for col in 0..b {
+            acc_re.iter_mut().for_each(|v| *v = 0.0);
+            acc_im.iter_mut().for_each(|v| *v = 0.0);
+            for bq in 0..bcm.q {
+                let wo = (bp * bcm.q + bq) * l;
+                let xo = (bq * b + col) * l;
+                for k in 0..l {
+                    let (wr, wi) = (w_re[wo + k], w_im[wo + k]);
+                    let (xr, xi) = (x_re[xo + k], x_im[xo + k]);
+                    acc_re[k] += wr * xr - wi * xi;
+                    acc_im[k] += wr * xi + wi * xr;
+                }
+            }
+            plan.inverse(&mut acc_re, &mut acc_im);
+            for r in 0..l {
+                out[(bp * l + r) * b + col] = acc_re[r];
+            }
+        }
+    }
+    Tensor::new(&[bcm.m(), b], out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +348,52 @@ mod tests {
             // the larger block orders (was 1e-3 with f32 twiddles)
             assert_close(&b.mvm_fft(&x), &b.mvm(&x), 1e-4)
         });
+    }
+
+    #[test]
+    fn plan_matches_fft_inplace() {
+        let mut r = Rng::new(5);
+        for n in [1usize, 2, 4, 8, 32, 128] {
+            let plan = FftPlan::new(n);
+            assert_eq!(plan.len(), n);
+            let orig: Vec<f32> = (0..n).map(|_| r.f32() - 0.5).collect();
+            let (mut re_a, mut im_a) = (orig.clone(), vec![0.0f32; n]);
+            let (mut re_b, mut im_b) = (orig.clone(), vec![0.0f32; n]);
+            fft_inplace(&mut re_a, &mut im_a, false);
+            plan.forward(&mut re_b, &mut im_b);
+            assert_close(&re_a, &re_b, 1e-5).unwrap();
+            assert_close(&im_a, &im_b, 1e-5).unwrap();
+            plan.inverse(&mut re_b, &mut im_b);
+            assert_close(&re_b, &orig, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn mmm_fft_columns_are_independent() {
+        // column j of the batched transform == the single-column transform
+        // of column j (the property the engine's one-pass-per-layer
+        // batching rests on)
+        let mut r = Rng::new(6);
+        let mut w = vec![0.0f32; 2 * 3 * 8];
+        r.fill_uniform(&mut w);
+        let b = Bcm::new(2, 3, 8, w);
+        let cols = 5;
+        let mut xd = vec![0.0f32; b.n() * cols];
+        r.fill_uniform(&mut xd);
+        let x = Tensor::new(&[b.n(), cols], xd);
+        let y = bcm_mmm_fft(&b, &x);
+        for col in 0..cols {
+            let xcol: Vec<f32> = (0..b.n()).map(|i| x.at2(i, col)).collect();
+            let ycol =
+                bcm_mmm_fft(&b, &Tensor::new(&[b.n(), 1], xcol));
+            for row in 0..b.m() {
+                assert_eq!(
+                    y.at2(row, col),
+                    ycol.data[row],
+                    "row {row} col {col}"
+                );
+            }
+        }
     }
 
     #[test]

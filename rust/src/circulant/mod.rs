@@ -141,27 +141,52 @@ impl Bcm {
     /// dense matmul at 48×48/B16; this form matches dense speed while
     /// keeping the l× weight-traffic saving).
     pub fn matmul(&self, x: &Tensor) -> Tensor {
+        self.mmm(x, 1)
+    }
+
+    /// Multi-column matrix–matrix multiply with block-rows distributed
+    /// across up to `threads` scoped workers
+    /// ([`crate::util::threadpool::scoped_chunks`]).  Each block-row's
+    /// `l×B` output tile is written by exactly one thread with the same
+    /// inner-loop order as the serial path, so results are bit-identical
+    /// for any thread count.  Small tiles stay serial (spawn overhead
+    /// beats the win below ~1M madds).
+    pub fn mmm(&self, x: &Tensor, threads: usize) -> Tensor {
         assert_eq!(x.shape[0], self.n());
         let b = x.shape[1];
         let l = self.l;
+        let madds = self.p * self.q * l * l * b;
+        let threads = if self.p >= 2 && madds >= (1 << 20) {
+            threads.min(self.p)
+        } else {
+            1
+        };
         let mut out = vec![0.0f32; self.m() * b];
-        for bp in 0..self.p {
-            for bq in 0..self.q {
-                let blk = self.block(bp, bq);
-                for r in 0..l {
-                    let yrow = &mut out[(bp * l + r) * b..(bp * l + r + 1) * b];
-                    for c in 0..l {
-                        let coef = blk[(c + l - r) % l];
-                        if coef == 0.0 {
-                            continue;
-                        }
-                        let xrow = &x.data[(bq * l + c) * b..(bq * l + c + 1) * b];
-                        for (y, &xv) in yrow.iter_mut().zip(xrow) {
-                            *y += coef * xv;
+        if b > 0 {
+            crate::util::threadpool::scoped_chunks(
+                threads,
+                &mut out,
+                l * b,
+                |bp, ytile| {
+                    for bq in 0..self.q {
+                        let blk = self.block(bp, bq);
+                        for r in 0..l {
+                            let yrow = &mut ytile[r * b..(r + 1) * b];
+                            for c in 0..l {
+                                let coef = blk[(c + l - r) % l];
+                                if coef == 0.0 {
+                                    continue;
+                                }
+                                let xrow = &x.data
+                                    [(bq * l + c) * b..(bq * l + c + 1) * b];
+                                for (y, &xv) in yrow.iter_mut().zip(xrow) {
+                                    *y += coef * xv;
+                                }
+                            }
                         }
                     }
-                }
-            }
+                },
+            );
         }
         Tensor::new(&[self.m(), b], out)
     }
@@ -170,6 +195,14 @@ impl Bcm {
     /// path, asymptotically faster for large `l`.
     pub fn mvm_fft(&self, x: &[f32]) -> Vec<f32> {
         fft::bcm_mvm_fft(self, x)
+    }
+
+    /// Batched FFT path (paper Eq. 2 over an (N, B) operand block): the
+    /// twiddle tables and per-block weight spectra are computed once and
+    /// reused across all B columns — the software analogue of programming
+    /// the BCM once and streaming the whole batch through it.
+    pub fn mmm_fft(&self, x: &Tensor) -> Tensor {
+        fft::bcm_mmm_fft(self, x)
     }
 
     /// Split a full-range BCM into positive-only halves and a scale, the
@@ -250,6 +283,47 @@ mod tests {
                 assert!((y.at2(r_, col) - v).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn mmm_threaded_matches_serial() {
+        // large enough to clear the parallel threshold: p*q*l*l*b
+        // = 8*8*16*16*64 = 1M madds, p >= 2
+        let b = rand_bcm(8, 8, 16, 11);
+        let mut r = Rng::new(12);
+        let mut x = vec![0.0f32; b.n() * 64];
+        r.fill_uniform(&mut x);
+        let xt = Tensor::new(&[b.n(), 64], x);
+        let serial = b.mmm(&xt, 1);
+        let par = b.mmm(&xt, 4);
+        assert_eq!(serial.data, par.data, "threaded mmm must be bit-identical");
+    }
+
+    #[test]
+    fn mmm_fft_matches_direct() {
+        propcheck::check("mmm_fft == mmm", 60, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8, 16]);
+            let cols = g.usize_in(1, 6);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x = Tensor::new(&[b.n(), cols], g.vec_f32(b.n() * cols, -1.0, 1.0));
+            let direct = b.matmul(&x);
+            let fft = b.mmm_fft(&x);
+            assert_close(&fft.data, &direct.data, 1e-4)
+        });
+    }
+
+    #[test]
+    fn mmm_fft_single_column_matches_mvm_fft() {
+        let b = rand_bcm(2, 3, 8, 13);
+        let mut r = Rng::new(14);
+        let mut x = vec![0.0f32; b.n()];
+        r.fill_uniform(&mut x);
+        let batched = b.mmm_fft(&Tensor::new(&[b.n(), 1], x.clone()));
+        let single = b.mvm_fft(&x);
+        assert_close(&batched.data, &single, 1e-5).unwrap();
     }
 
     #[test]

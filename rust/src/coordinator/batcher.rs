@@ -48,6 +48,16 @@ pub fn run(
         match rx.recv_timeout(timeout) {
             Ok(req) => {
                 pending.push(req);
+                // greedily drain whatever is already queued: under burst
+                // load this forms full batches in one wakeup instead of
+                // one recv per request, feeding the engine's batch-major
+                // forward the widest operand block the policy allows
+                while pending.len() < cfg.max_batch {
+                    match rx.try_recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break,
+                    }
+                }
                 if pending.len() >= cfg.max_batch {
                     dispatch(&mut pending, &out);
                 }
@@ -131,6 +141,22 @@ mod tests {
         drop(tx);
         let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn greedy_drain_fills_batch_from_backlog() {
+        // requests queued before the batcher wakes must come out as one
+        // full batch, not max_batch singleton batches
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        for i in 0..4 {
+            tx.send(req(i).0).unwrap();
+        }
+        thread::spawn(move || {
+            run(rx, btx, BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 })
+        });
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 4, "backlog must batch in one dispatch");
     }
 
     #[test]

@@ -1,9 +1,95 @@
-//! Serving metrics: counters + a lock-striped latency reservoir giving
-//! p50/p99 (the numbers the classification_serving example reports).
+//! Serving metrics: counters, a lock-striped latency reservoir giving
+//! p50/p99 (the numbers the classification_serving example reports),
+//! per-batch latency histograms and a queue-depth gauge for the
+//! batch-major worker loop.
 
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::threadpool::WorkCounter;
+
+/// A current-value gauge (e.g. requests admitted but not yet computed).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free log₂-bucketed histogram of positive integer samples
+/// (microseconds, batch sizes, …).  Bucket `i` holds samples in
+/// `[2^i, 2^(i+1))`; percentiles report the bucket's upper edge, so they
+/// are upper bounds within a factor of two — plenty for serving
+/// dashboards, and recordable from every worker without a lock.
+pub struct Histogram {
+    buckets: [AtomicU64; 40],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket(v: u64) -> usize {
+        (63 - v.max(1).leading_zeros() as usize).min(39)
+    }
+
+    pub fn record(&self, v: u64) {
+        let v = v.max(1);
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile: the upper edge of the bucket holding the
+    /// q-th sample (0 when empty).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total - 1) as f64 * q) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > rank {
+                return (1u64 << (i + 1)) - 1;
+            }
+        }
+        (1u64 << 40) - 1
+    }
+}
 
 /// All coordinator metrics (shared via Arc).
 #[derive(Default)]
@@ -12,6 +98,13 @@ pub struct Metrics {
     pub completed: WorkCounter,
     pub errors: WorkCounter,
     pub batches: WorkCounter,
+    /// requests admitted (submit) minus requests handed to a backend —
+    /// the live queue depth across intake channel + formed batches
+    pub queue_depth: Gauge,
+    /// wall time of each backend `infer_batch` call, µs (whole batch)
+    pub batch_compute_us: Histogram,
+    /// dispatched batch sizes (requests per batch)
+    pub batch_sizes: Histogram,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -59,14 +152,17 @@ impl Metrics {
         let (p50, p99) = self.latency_percentiles_us();
         format!(
             "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
-             p50={}µs p99={}µs",
+             p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
             self.batches.get(),
             self.mean_batch_size(),
             p50,
-            p99
+            p99,
+            self.queue_depth.get(),
+            self.batch_compute_us.percentile(0.5),
+            self.batch_compute_us.percentile(0.99),
         )
     }
 }
@@ -102,6 +198,42 @@ mod tests {
         }
         let v = m.latencies_us.lock().unwrap();
         assert!(v.len() <= 100_000);
+    }
+
+    #[test]
+    fn gauge_tracks_in_flight() {
+        let g = Gauge::default();
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.sub(3);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(0.5), 0);
+        for v in [1u64, 1, 1, 1000, 1000, 1000, 1000, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        // p50 (rank 3) lands in the [512, 1024) bucket → upper edge 1023
+        assert_eq!(h.percentile(0.5), 1023);
+        // p99 (rank 6 of 8) still in the 1000 bucket; max sample's bucket
+        // upper edge covers 2^20-1
+        assert!(h.percentile(0.99) >= 1023);
+        assert_eq!(h.percentile(1.0), (1u64 << 20) - 1);
+        let expect_mean = (1.0 * 3.0 + 1000.0 * 4.0 + 1_000_000.0) / 8.0;
+        assert!((h.mean() - expect_mean).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_clamps_zero_to_one() {
+        let h = Histogram::default();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.5), 1);
     }
 
     #[test]

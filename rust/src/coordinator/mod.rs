@@ -21,7 +21,7 @@ use crate::tensor::Tensor;
 use crate::util::error::Result;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use metrics::Metrics;
+pub use metrics::{Gauge, Histogram, Metrics};
 pub use scheduler::TileScheduler;
 pub use worker::{BackendFactory, InferenceBackend};
 
@@ -111,6 +111,7 @@ impl Coordinator {
             .send(Request { id, image, enqueued: Instant::now(), reply })
             .expect("coordinator alive");
         self.metrics.submitted.add(1);
+        self.metrics.queue_depth.add(1);
         Pending { rx }
     }
 
@@ -198,6 +199,32 @@ mod tests {
             let m: f32 = im.data.iter().sum::<f32>() / im.numel() as f32;
             assert!((r.logits[0] - m).abs() < 1e-6, "response routed wrongly");
         }
+    }
+
+    #[test]
+    fn queue_depth_drains_to_zero_and_batches_instrumented() {
+        let c = Coordinator::start(
+            vec![Box::new(|| Box::new(MeanBackend) as _)],
+            BatcherConfig { max_batch: 4, max_wait_us: 200 },
+        );
+        let images: Vec<Tensor> = (0..30).map(img).collect();
+        c.classify_all(&images).unwrap();
+        // every admitted request has been handed to a backend
+        assert_eq!(c.metrics.queue_depth.get(), 0);
+        // per-batch histograms populated by the worker loop
+        assert_eq!(
+            c.metrics.batch_sizes.count(),
+            c.metrics.batches.get() as u64
+        );
+        assert_eq!(
+            c.metrics.batch_compute_us.count(),
+            c.metrics.batches.get() as u64
+        );
+        // max_batch=4 caps every recorded batch size (upper edge of the
+        // log2 bucket holding 4 is 7)
+        assert!(c.metrics.batch_sizes.percentile(1.0) <= 7);
+        let s = c.metrics.summary();
+        assert!(s.contains("queue_depth=0"), "summary: {s}");
     }
 
     #[test]

@@ -123,26 +123,37 @@ pub fn run(
         if batch.requests.is_empty() {
             continue;
         }
-        let images: Vec<Tensor> =
-            batch.requests.iter().map(|r| r.image.clone()).collect();
+        let Batch { requests, formed } = batch;
+        let n = requests.len();
+        // requests leave the queue the moment a worker owns them
+        metrics.queue_depth.sub(n as i64);
+        // move the images out of the requests — the engine consumes the
+        // whole batch as one batch-major call, no per-image clones
+        let mut images = Vec::with_capacity(n);
+        let mut replies = Vec::with_capacity(n);
+        for req in requests {
+            images.push(req.image);
+            replies.push((req.id, req.enqueued, req.reply));
+        }
         let t0 = Instant::now();
         match backend.infer_batch(&images) {
             Ok(all_logits) => {
+                let batch_us = t0.elapsed().as_micros() as u64;
+                metrics.batch_compute_us.record(batch_us.max(1));
+                metrics.batch_sizes.record(n as u64);
                 // per-request share of the batch compute time; clamp to
                 // ≥1µs *after* dividing so fast batches don't round to 0
-                let compute_us = (t0.elapsed().as_micros() as u64
-                    / images.len() as u64)
-                    .max(1);
-                for (req, logits) in batch.requests.into_iter().zip(all_logits) {
+                let compute_us = (batch_us / n as u64).max(1);
+                for ((id, enqueued, reply), logits) in
+                    replies.into_iter().zip(all_logits)
+                {
                     let queue_us =
-                        batch.formed.duration_since(req.enqueued).as_micros()
-                            as u64;
-                    let total =
-                        req.enqueued.elapsed().as_micros() as u64;
+                        formed.duration_since(enqueued).as_micros() as u64;
+                    let total = enqueued.elapsed().as_micros() as u64;
                     metrics.record_latency_us(total);
                     metrics.completed.add(1);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
+                    let _ = reply.send(Response {
+                        id,
                         logits,
                         queue_us,
                         compute_us,
@@ -154,7 +165,7 @@ pub fn run(
                 // fail the whole batch: drop reply senders (receivers see
                 // a closed channel) and count the errors
                 eprintln!("cirptc worker: backend {} failed: {e:#}", backend.name());
-                metrics.errors.add(batch.requests.len());
+                metrics.errors.add(n);
             }
         }
     }
@@ -247,6 +258,14 @@ mod tests {
         drop(h);
         assert_eq!(metrics.batches.get(), 1, "empty batch must not count");
         assert_eq!(metrics.completed.get(), 1);
+        // per-batch instrumentation: one compute sample, one size sample
+        assert_eq!(metrics.batch_compute_us.count(), 1);
+        assert_eq!(metrics.batch_sizes.count(), 1);
+        assert_eq!(metrics.batch_sizes.percentile(1.0), 1);
+        // the worker decremented the gauge for the one real request it
+        // received (nothing ever incremented it in this direct-channel
+        // test, so it ends at -1)
+        assert_eq!(metrics.queue_depth.get(), -1);
     }
 
     /// Offline stand-in for the XLA artifact contract: fixed batch

@@ -8,6 +8,7 @@ use crate::data::Bundle;
 use crate::simulator::ChipSim;
 use crate::tensor::{self, Tensor};
 use crate::util::error::{Context, Result};
+use crate::util::threadpool::ThreadPool;
 
 use super::manifest::{LayerKind, LayerSpec, Manifest};
 
@@ -50,6 +51,9 @@ enum LayerState {
 /// A loaded StrC-ONN ready to execute.
 pub struct Engine {
     pub manifest: Manifest,
+    /// worker threads for the large batched matmuls (digital path);
+    /// results are bit-identical for any value, see [`Tensor::matmul_par`]
+    pub threads: usize,
     layers: Vec<LayerState>,
 }
 
@@ -129,28 +133,69 @@ impl Engine {
             };
             layers.push(state);
         }
-        Ok(Engine { manifest, layers })
+        Ok(Engine {
+            manifest,
+            threads: ThreadPool::default_size(),
+            layers,
+        })
     }
 
-    /// Forward one image (c, h, w) → logits.
+    /// Forward one image (c, h, w) → logits (a batch of one through the
+    /// batch-major path).
     pub fn forward(&self, img: &Tensor, backend: &mut Backend) -> Result<Vec<f32>> {
-        let mut act = Activation::Image(img.clone());
-        for (i, spec) in self.manifest.layers.iter().enumerate() {
-            act = self.run_layer(i, spec, act, backend)?;
-        }
-        match act {
-            Activation::Vector(v) => Ok(v),
-            Activation::Image(_) => bail!("network did not end in a vector"),
-        }
+        let mut out =
+            self.forward_batch(std::slice::from_ref(img), backend)?;
+        out.pop().context("empty forward output")
     }
 
-    /// Forward a batch; returns (batch, classes) logits row-major.
+    /// Forward a batch; returns per-image logits in input order.
+    ///
+    /// Batch-major end to end: the layer graph is walked **once**, every
+    /// activation carries the whole batch — images as `(b, c, h, w)`,
+    /// flattened features as `(b, n)` — and each linear layer issues a
+    /// single multi-column BCM multiply (one sign-split pass pair on the
+    /// photonic backend, however many images are in flight).  Columns are
+    /// independent operands throughout, so the result is element-wise
+    /// identical to running [`Engine::forward`] per image.
     pub fn forward_batch(
         &self,
         imgs: &[Tensor],
         backend: &mut Backend,
     ) -> Result<Vec<Vec<f32>>> {
-        imgs.iter().map(|im| self.forward(im, backend)).collect()
+        if imgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let shape = &imgs[0].shape;
+        if shape.len() != 3 {
+            bail!("expected (c, h, w) images, got {shape:?}");
+        }
+        for im in imgs {
+            if im.shape != *shape {
+                bail!(
+                    "ragged image shapes in batch: {:?} vs {:?}",
+                    im.shape, shape
+                );
+            }
+        }
+        let b = imgs.len();
+        let mut data = Vec::with_capacity(b * imgs[0].numel());
+        for im in imgs {
+            data.extend_from_slice(&im.data);
+        }
+        let mut act = Activation::Image(Tensor::new(
+            &[b, shape[0], shape[1], shape[2]],
+            data,
+        ));
+        for (i, spec) in self.manifest.layers.iter().enumerate() {
+            act = self.run_layer(i, spec, act, backend)?;
+        }
+        match act {
+            Activation::Matrix(t) => {
+                let n = t.shape[1];
+                Ok(t.data.chunks(n).map(|r| r.to_vec()).collect())
+            }
+            Activation::Image(_) => bail!("network did not end in a vector"),
+        }
     }
 
     fn run_layer(
@@ -162,50 +207,98 @@ impl Engine {
     ) -> Result<Activation> {
         Ok(match (&self.layers[idx], spec.kind) {
             (LayerState::Linear(wts), LayerKind::Conv) => {
-                let img = act.image()?;
+                let imgs = act.image()?;
+                let (b, h, w) =
+                    (imgs.shape[0], imgs.shape[2], imgs.shape[3]);
                 let y = match backend {
                     Backend::Digital => {
-                        tensor::conv2d(&img, &wts.dense, spec.k, true)
+                        // one multi-column matmul for the whole batch
+                        let xm = tensor::im2col_same_batch(&imgs, spec.k);
+                        wts.dense.matmul_par(&xm, self.threads)
                     }
                     Backend::PhotonicSim(sim) => {
-                        photonic_conv(sim, wts, spec, &img)?
+                        photonic_linear_cols(
+                            sim,
+                            wts,
+                            spec,
+                            &tensor::im2col_same_batch(
+                                &imgs.map(|x| {
+                                    (x / spec.act_scale).clamp(0.0, 1.0)
+                                }),
+                                spec.k,
+                            ),
+                        )?
                     }
                 };
-                Activation::Image(add_channel_bias(y, &wts.bias))
+                let out = cols_to_images(&y, b, spec.cout, h, w);
+                Activation::Image(add_channel_bias_batch(out, &wts.bias))
             }
             (LayerState::Linear(wts), LayerKind::Fc) => {
-                let v = act.vector()?;
+                let x = act.matrix()?; // (b, n)
+                let b = x.shape[0];
                 let y = match backend {
                     Backend::Digital => {
-                        let x = Tensor::new(&[v.len(), 1], v);
-                        let out = wts.dense.matmul(&x);
-                        out.data
+                        // (m, b): column j is image j, same per-column
+                        // accumulation order as the per-image multiply
+                        let xt = x.transpose2();
+                        wts.dense.matmul_par(&xt, self.threads)
                     }
                     Backend::PhotonicSim(sim) => {
-                        photonic_fc(sim, wts, spec, &v)?
+                        let n = x.shape[1];
+                        let bcm = wts
+                            .bcm
+                            .as_ref()
+                            .context("photonic path needs circ arch")?;
+                        if n > bcm.n() {
+                            bail!(
+                                "layer {idx}: fc input width {n} exceeds \
+                                 padded BCM width {}",
+                                bcm.n()
+                            );
+                        }
+                        let s = spec.act_scale;
+                        let mut xp = Tensor::zeros(&[bcm.n(), b]);
+                        for bi in 0..b {
+                            for i in 0..n {
+                                xp.data[i * b + bi] =
+                                    (x.at2(bi, i) / s).clamp(0.0, 1.0);
+                            }
+                        }
+                        sim.forward_signed(bcm, &xp).scale(s)
                     }
                 };
-                Activation::Vector(
-                    y.iter().zip(&wts.bias).map(|(a, b)| a + b).collect(),
-                )
+                // keep logical rows, transpose back to (b, cout), add bias
+                let m = spec.cout.min(y.shape[0]);
+                let mut out = Tensor::zeros(&[b, m]);
+                for bi in 0..b {
+                    for r in 0..m {
+                        out.data[bi * m + r] = y.at2(r, bi)
+                            + wts.bias.get(r).copied().unwrap_or(0.0);
+                    }
+                }
+                Activation::Matrix(out)
             }
             (LayerState::Bn(bn), LayerKind::Bn) => {
-                let img = act.image()?;
-                Activation::Image(tensor::batchnorm(
-                    &img, &bn.mean, &bn.var, &bn.gamma, &bn.beta, 1e-5,
+                Activation::Image(tensor::batchnorm_batch(
+                    &act.image()?,
+                    &bn.mean,
+                    &bn.var,
+                    &bn.gamma,
+                    &bn.beta,
+                    1e-5,
                 ))
             }
             (_, LayerKind::Relu) => match act {
                 Activation::Image(t) => Activation::Image(t.relu()),
-                Activation::Vector(v) => Activation::Vector(
-                    v.into_iter().map(|x| x.max(0.0)).collect(),
-                ),
+                Activation::Matrix(t) => Activation::Matrix(t.relu()),
             },
-            (_, LayerKind::Pool) => {
-                Activation::Image(tensor::maxpool(&act.image()?, spec.pool))
-            }
+            (_, LayerKind::Pool) => Activation::Image(
+                tensor::maxpool_batch(&act.image()?, spec.pool),
+            ),
             (_, LayerKind::Flatten) => {
-                Activation::Vector(act.image()?.data)
+                let t = act.image()?;
+                let (b, per) = (t.shape[0], t.numel() / t.shape[0]);
+                Activation::Matrix(t.reshape(&[b, per]))
             }
             (st, k) => bail!(
                 "layer {idx}: state/kind mismatch ({k:?} vs {})",
@@ -219,79 +312,82 @@ impl Engine {
     }
 }
 
+/// Batch-major activation flowing between layers: the whole batch rides in
+/// one tensor so every linear layer sees a single multi-column operand.
 enum Activation {
+    /// image batch, shape (b, c, h, w)
     Image(Tensor),
-    Vector(Vec<f32>),
+    /// flattened feature batch, shape (b, n), one row per image
+    Matrix(Tensor),
 }
 
 impl Activation {
     fn image(self) -> Result<Tensor> {
         match self {
             Activation::Image(t) => Ok(t),
-            Activation::Vector(_) => bail!("expected image activation"),
+            Activation::Matrix(_) => bail!("expected image activation"),
         }
     }
 
-    fn vector(self) -> Result<Vec<f32>> {
+    /// Row-per-image matrix view; images flatten to their row-major data.
+    fn matrix(self) -> Result<Tensor> {
         match self {
-            Activation::Vector(v) => Ok(v),
-            Activation::Image(t) => Ok(t.data),
+            Activation::Matrix(t) => Ok(t),
+            Activation::Image(t) => {
+                let (b, per) = (t.shape[0], t.numel() / t.shape[0]);
+                Ok(t.reshape(&[b, per]))
+            }
         }
     }
 }
 
-fn add_channel_bias(mut img: Tensor, bias: &[f32]) -> Tensor {
-    let (c, h, w) = (img.shape[0], img.shape[1], img.shape[2]);
-    for ci in 0..c.min(bias.len()) {
-        for v in &mut img.data[ci * h * w..(ci + 1) * h * w] {
-            *v += bias[ci];
+/// Scatter a (rows, b·h·w) column-block back into a (b, keep, h, w) image
+/// batch, keeping the first `keep` logical rows (the BCM may be row-padded).
+fn cols_to_images(y: &Tensor, b: usize, keep: usize, h: usize, w: usize) -> Tensor {
+    let hw = h * w;
+    let total = y.shape[1];
+    debug_assert_eq!(total, b * hw);
+    let mut out = Tensor::zeros(&[b, keep, h, w]);
+    for bi in 0..b {
+        for ch in 0..keep {
+            let src = &y.data[ch * total + bi * hw..ch * total + (bi + 1) * hw];
+            let dst = (bi * keep + ch) * hw;
+            out.data[dst..dst + hw].copy_from_slice(src);
         }
     }
-    img
+    out
 }
 
-/// Conv layer on the simulated chip: clip to the device dynamic range,
-/// im2col, zero-pad to the BCM's padded input dim, sign-split BCM matmul
-/// on chip, rescale, keep the logical output rows (paper Fig. 1a flow).
-fn photonic_conv(
+fn add_channel_bias_batch(mut t: Tensor, bias: &[f32]) -> Tensor {
+    let (b, c) = (t.shape[0], t.shape[1]);
+    let hw = t.shape[2] * t.shape[3];
+    for bi in 0..b {
+        for ci in 0..c.min(bias.len()) {
+            let off = (bi * c + ci) * hw;
+            for v in &mut t.data[off..off + hw] {
+                *v += bias[ci];
+            }
+        }
+    }
+    t
+}
+
+/// Linear layer on the simulated chip, operating on pre-clipped im2col
+/// columns for the **whole batch**: zero-pad rows to the BCM's padded
+/// input dim, one sign-split BCM matmul on chip (a single pass pair
+/// covering every column of every image), rescale (paper Fig. 1a flow).
+fn photonic_linear_cols(
     sim: &mut ChipSim,
     wts: &LinearWeights,
     spec: &LayerSpec,
-    img: &Tensor,
+    xm: &Tensor,
 ) -> Result<Tensor> {
     let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
-    let s = spec.act_scale;
-    let clipped = img.map(|x| (x / s).clamp(0.0, 1.0));
-    let xm = tensor::im2col_same(&clipped, spec.k);
     let cols = xm.shape[1];
     let n_pad = bcm.n();
     let mut xp = Tensor::zeros(&[n_pad, cols]);
     xp.data[..xm.shape[0] * cols].copy_from_slice(&xm.data);
-    let y = sim.forward_signed(bcm, &xp).scale(s);
-    // keep logical rows [0, cout)
-    let (h, w) = (img.shape[1], img.shape[2]);
-    let mut out = Tensor::zeros(&[spec.cout, h, w]);
-    out.data
-        .copy_from_slice(&y.data[..spec.cout * cols]);
-    Ok(out)
-}
-
-/// FC layer on the simulated chip (same pipeline, single column).
-fn photonic_fc(
-    sim: &mut ChipSim,
-    wts: &LinearWeights,
-    spec: &LayerSpec,
-    v: &[f32],
-) -> Result<Vec<f32>> {
-    let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
-    let s = spec.act_scale;
-    let n_pad = bcm.n();
-    let mut xp = Tensor::zeros(&[n_pad, 1]);
-    for (i, &x) in v.iter().enumerate() {
-        xp.data[i] = (x / s).clamp(0.0, 1.0);
-    }
-    let y = sim.forward_signed(bcm, &xp).scale(s);
-    Ok(y.data[..spec.cout].to_vec())
+    Ok(sim.forward_signed(bcm, &xp).scale(spec.act_scale))
 }
 
 #[cfg(test)]
@@ -322,7 +418,7 @@ mod tests {
         let mut bundle = Bundle::default();
         let mut rng = Rng::new(42);
         // conv: cout 4 -> P=1, n=9 -> Q=3
-        let mut w0 = vec![0.0f32; 1 * 3 * 4];
+        let mut w0 = vec![0.0f32; 3 * 4];
         rng.fill_uniform(&mut w0);
         for v in w0.iter_mut() {
             *v = (*v - 0.5) * 0.5;
@@ -330,7 +426,7 @@ mod tests {
         bundle.insert_f32("layer0.w", &[1, 3, 4], w0);
         bundle.insert_f32("layer0.b", &[4], vec![0.0; 4]);
         // fc: 64 -> 3: P=1 (pad to 4), Q=16
-        let mut w4 = vec![0.0f32; 1 * 16 * 4];
+        let mut w4 = vec![0.0f32; 16 * 4];
         rng.fill_uniform(&mut w4);
         for v in w4.iter_mut() {
             *v = (*v - 0.5) * 0.2;
@@ -398,6 +494,61 @@ mod tests {
         assert_eq!(ys[0], ys[1]);
     }
 
+    fn distinct_inputs(n: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Rng::new(100 + i as u64);
+                let mut d = vec![0.0f32; 8 * 8];
+                rng.fill_uniform(&mut d);
+                Tensor::new(&[1, 8, 8], d)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_digital_identical_to_per_image() {
+        let e = tiny_engine();
+        let imgs = distinct_inputs(5);
+        let batched = e.forward_batch(&imgs, &mut Backend::Digital).unwrap();
+        for (im, row) in imgs.iter().zip(&batched) {
+            let single = e.forward(im, &mut Backend::Digital).unwrap();
+            assert_eq!(&single, row, "batched digital must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn batched_photonic_identical_to_per_image() {
+        let e = tiny_engine();
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.015;
+        let imgs = distinct_inputs(4);
+        let mut be_batch =
+            Backend::PhotonicSim(ChipSim::deterministic(desc.clone()));
+        let batched = e.forward_batch(&imgs, &mut be_batch).unwrap();
+        for (im, row) in imgs.iter().zip(&batched) {
+            let mut be_one =
+                Backend::PhotonicSim(ChipSim::deterministic(desc.clone()));
+            let single = e.forward(im, &mut be_one).unwrap();
+            assert_eq!(&single, row, "batched photonic must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn forward_batch_empty_is_empty() {
+        let e = tiny_engine();
+        let ys = e.forward_batch(&[], &mut Backend::Digital).unwrap();
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn forward_batch_rejects_ragged_shapes() {
+        let e = tiny_engine();
+        let imgs = vec![input(), Tensor::zeros(&[1, 4, 4])];
+        assert!(e.forward_batch(&imgs, &mut Backend::Digital).is_err());
+    }
+
     #[test]
     fn chip_passes_counted() {
         let e = tiny_engine();
@@ -407,6 +558,25 @@ mod tests {
         if let Backend::PhotonicSim(sim) = &be {
             // two linear layers × 2 sign-split passes
             assert_eq!(sim.passes(), 4);
+        }
+    }
+
+    #[test]
+    fn chip_passes_flat_across_batch_tiles_scale() {
+        // the point of batch-major execution: a batch of any width costs
+        // the same 2 sign-split passes per linear layer, while tile count
+        // grows with the streamed columns
+        let e = tiny_engine();
+        let sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let mut be = Backend::PhotonicSim(sim);
+        let imgs = distinct_inputs(6);
+        e.forward_batch(&imgs, &mut be).unwrap();
+        if let Backend::PhotonicSim(sim) = &be {
+            assert_eq!(sim.passes(), 4, "2 linear layers × 2 passes, b=6");
+            // conv: P=1,Q=3 over 6·64 columns; fc: P=1,Q=16 over 6 columns
+            let conv_tiles = 2 * 3 * (6 * 64);
+            let fc_tiles = 2 * 16 * 6;
+            assert_eq!(sim.tiles_executed, (conv_tiles + fc_tiles) as u64);
         }
     }
 }

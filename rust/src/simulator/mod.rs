@@ -97,8 +97,17 @@ pub struct ChipSim {
     /// stochastic noise enabled (lookup-mode realism) or not (deterministic
     /// cross-validation)
     pub noisy: bool,
-    /// MVM tiles executed (for metrics / utilization accounting)
+    /// block-tile × column MVM operations executed: each crossbar pass over
+    /// a (P, Q, l) BCM with a B-column operand counts P·Q·B tiles, so the
+    /// utilization accounting scales with the batch width streamed through
+    /// one programming pass
     pub tiles_executed: u64,
+    /// worker threads for the crossbar matmul (1 = serial; results are
+    /// bit-identical for any value — see [`Bcm::mmm`])
+    pub threads: usize,
+    /// crossbar passes: one per [`ChipSim::forward`] call regardless of
+    /// batch width (two per signed matmul, `fold` per folded execution)
+    passes_done: u64,
 }
 
 impl ChipSim {
@@ -110,6 +119,8 @@ impl ChipSim {
             noisy: true,
             desc,
             tiles_executed: 0,
+            threads: 1,
+            passes_done: 0,
         }
     }
 
@@ -160,7 +171,7 @@ impl ChipSim {
         let xenc = Tensor::new(&[w.n(), b], xenc);
 
         // crossbar matmul + dark + noise
-        let mut y = wenc.matmul(&xenc);
+        let mut y = wenc.mmm(&xenc, self.threads);
         let (dark, srel, sabs) =
             (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
         for v in y.data.iter_mut() {
@@ -173,7 +184,8 @@ impl ChipSim {
                 *v += n;
             }
         }
-        self.tiles_executed += 1;
+        self.passes_done += 1;
+        self.tiles_executed += (w.p * w.q * b) as u64;
         y
     }
 
@@ -245,9 +257,11 @@ impl ChipSim {
         acc
     }
 
-    /// Chip passes consumed so far (two per signed matmul).
+    /// Chip passes consumed so far: one per `forward` call whatever the
+    /// batch width (two per signed matmul) — batching a layer's whole
+    /// operand block into one call is what keeps this flat per layer.
     pub fn passes(&self) -> u64 {
-        self.tiles_executed
+        self.passes_done
     }
 }
 
@@ -323,6 +337,41 @@ mod tests {
         let want = w.matmul(&x);
         assert_close(&got.data, &want.data, 1e-4).unwrap();
         assert_eq!(sim.passes(), 2);
+    }
+
+    #[test]
+    fn pass_and_tile_accounting_scale_with_columns() {
+        let mut sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let w = rand_bcm(2, 3, 4, 31);
+        let x = rand_x(12, 5, 32);
+        sim.forward(&w, &x);
+        // one programming pass streams all 5 columns; tiles = P·Q·B
+        assert_eq!(sim.passes(), 1);
+        assert_eq!(sim.tiles_executed, 2 * 3 * 5);
+        sim.forward_signed(&w, &x);
+        assert_eq!(sim.passes(), 3);
+        assert_eq!(sim.tiles_executed, 3 * (2 * 3 * 5));
+        // a wider batch costs more tiles but no extra passes per call
+        let x16 = rand_x(12, 16, 33);
+        sim.forward(&w, &x16);
+        assert_eq!(sim.passes(), 4);
+        assert_eq!(sim.tiles_executed, 3 * (2 * 3 * 5) + 2 * 3 * 16);
+    }
+
+    #[test]
+    fn threaded_sim_matches_serial() {
+        let mut d = ChipDescription::ideal(4);
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.dark = 0.01;
+        let w = rand_bcm(4, 4, 4, 34);
+        let x = rand_x(16, 8, 35);
+        let mut s1 = ChipSim::deterministic(d.clone());
+        let mut s8 = ChipSim::deterministic(d);
+        s8.threads = 8;
+        let y1 = s1.forward_signed(&w, &x);
+        let y8 = s8.forward_signed(&w, &x);
+        assert_eq!(y1.data, y8.data, "threaded crossbar must be bit-identical");
     }
 
     #[test]

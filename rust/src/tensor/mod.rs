@@ -72,24 +72,43 @@ impl Tensor {
 
     /// C = A(m,k) @ B(k,n), cache-friendly ikj loop order.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
+        self.matmul_par(other, 1)
+    }
+
+    /// [`Tensor::matmul`] with output rows split across scoped threads.
+    ///
+    /// The per-row accumulation order is unchanged (each output row is
+    /// still filled by one thread with the same ikj inner loop), so the
+    /// result is bit-identical to the serial path — batched and
+    /// per-image engine forwards stay element-wise equal.  Small
+    /// products run serially: the scoped-spawn overhead only pays off
+    /// once the madd count clears a ~512k threshold (sized so per-image
+    /// conv multiplies stay serial but a batch ≥ 8 goes wide).
+    pub fn matmul_par(&self, other: &Tensor, threads: usize) -> Tensor {
         assert_eq!(self.rank(), 2);
         assert_eq!(other.rank(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2, "matmul inner dim {k} vs {k2}");
+        let threads = if m >= 2 && m * k * n >= (1 << 19) {
+            threads.min(m)
+        } else {
+            1
+        };
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        if n > 0 {
+            crate::util::threadpool::scoped_chunks(threads, &mut out, n, |i, orow| {
+                let arow = &self.data[i * k..(i + 1) * k];
+                for (kk, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
                 }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
+            });
         }
         Tensor::new(&[m, n], out)
     }
@@ -226,6 +245,32 @@ pub fn im2col_same(img: &Tensor, k: usize) -> Tensor {
     im2col(&padded, k)
 }
 
+/// Batched same-padding im2col: (B, C, H, W) -> (C·k·k, B·H·W), with each
+/// image's patch columns contiguous (image `bi` owns columns
+/// `[bi·H·W, (bi+1)·H·W)`).  This is the batch-major layout the engine
+/// streams through one BCM tile per layer: every column is an independent
+/// operand, so a single sign-split chip pass covers the whole batch.
+pub fn im2col_same_batch(imgs: &Tensor, k: usize) -> Tensor {
+    assert_eq!(imgs.rank(), 4);
+    let (b, c, h, w) = (imgs.shape[0], imgs.shape[1], imgs.shape[2], imgs.shape[3]);
+    let rows = c * k * k;
+    let hw = h * w;
+    let total = b * hw;
+    let mut out = vec![0.0f32; rows * total];
+    for bi in 0..b {
+        let img = Tensor::new(
+            &[c, h, w],
+            imgs.data[bi * c * hw..(bi + 1) * c * hw].to_vec(),
+        );
+        let xm = im2col_same(&img, k); // (rows, hw), identical per-image math
+        for r in 0..rows {
+            out[r * total + bi * hw..r * total + (bi + 1) * hw]
+                .copy_from_slice(&xm.data[r * hw..(r + 1) * hw]);
+        }
+    }
+    Tensor::new(&[rows, total], out)
+}
+
 /// Convolution via im2col: img (C,H,W), weight (Cout, C*k*k) -> (Cout,OH,OW).
 pub fn conv2d(img: &Tensor, wmat: &Tensor, k: usize, same: bool) -> Tensor {
     let (h, w) = (img.shape[1], img.shape[2]);
@@ -257,6 +302,31 @@ pub fn maxpool(img: &Tensor, p: usize) -> Tensor {
     Tensor::new(&[c, oh, ow], out)
 }
 
+/// Batched max pooling on (B, C, H, W): per-(image, channel) windows are
+/// independent, so this is [`maxpool`] applied to each image slice.
+pub fn maxpool_batch(x: &Tensor, p: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / p, w / p);
+    let mut out = vec![f32::NEG_INFINITY; b * c * oh * ow];
+    for ci in 0..b * c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for di in 0..p {
+                    for dj in 0..p {
+                        m = m.max(
+                            x.data[ci * h * w + (i * p + di) * w + j * p + dj],
+                        );
+                    }
+                }
+                out[ci * oh * ow + i * ow + j] = m;
+            }
+        }
+    }
+    Tensor::new(&[b, c, oh, ow], out)
+}
+
 /// Batch-norm inference transform on (C, H, W) with per-channel stats.
 pub fn batchnorm(
     img: &Tensor,
@@ -276,6 +346,32 @@ pub fn batchnorm(
         }
     }
     Tensor::new(&[c, h, w], out)
+}
+
+/// Batch-norm inference transform on (B, C, H, W): the per-channel affine
+/// of [`batchnorm`] applied image-by-image (identical op order per image).
+pub fn batchnorm_batch(
+    x: &Tensor,
+    mean: &[f32],
+    var: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert!(mean.len() == c && var.len() == c && gamma.len() == c && beta.len() == c);
+    let hw = h * w;
+    let mut out = x.data.clone();
+    for bi in 0..b {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + eps).sqrt();
+            for v in &mut out[(bi * c + ci) * hw..(bi * c + ci + 1) * hw] {
+                *v = (*v - mean[ci]) * inv * gamma[ci] + beta[ci];
+            }
+        }
+    }
+    Tensor::new(&[b, c, h, w], out)
 }
 
 /// Numerically-stable softmax over the last axis of a 1-D tensor.
@@ -360,7 +456,81 @@ mod tests {
         let y = conv2d(&img, &wm, 3, true);
         assert_eq!(y.shape, vec![3, 6, 6]);
         // interior pixels see all 18 ones
-        assert!((y.data[7 * 1 + 6] - 18.0).abs() < 1e-5);
+        assert!((y.data[2 * 6 + 1] - 18.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        // large enough to clear the parallel threshold (m*k*n >= 1<<19)
+        let (m, k, n) = (64, 32, 1024);
+        let a = Tensor::new(
+            &[m, k],
+            (0..m * k).map(|i| (i % 13) as f32 - 6.0).collect(),
+        );
+        let b = Tensor::new(
+            &[k, n],
+            (0..k * n).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect(),
+        );
+        let serial = a.matmul(&b);
+        let par = a.matmul_par(&b, 4);
+        assert_eq!(serial.data, par.data, "parallel split must be bit-identical");
+    }
+
+    #[test]
+    fn im2col_same_batch_matches_per_image() {
+        let mk = |seed: f32| {
+            Tensor::new(
+                &[2, 4, 4],
+                (0..32).map(|i| (i as f32 * 0.37 + seed).sin()).collect(),
+            )
+        };
+        let (a, b) = (mk(0.0), mk(5.0));
+        let mut packed = a.data.clone();
+        packed.extend_from_slice(&b.data);
+        let batch = Tensor::new(&[2, 2, 4, 4], packed);
+        let big = im2col_same_batch(&batch, 3);
+        assert_eq!(big.shape, vec![2 * 9, 32]);
+        for (bi, img) in [&a, &b].iter().enumerate() {
+            let xm = im2col_same(img, 3); // (18, 16)
+            for r in 0..18 {
+                for col in 0..16 {
+                    assert_eq!(
+                        big.at2(r, bi * 16 + col),
+                        xm.at2(r, col),
+                        "row {r} col {col} image {bi}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_batch_matches_per_image() {
+        let img = Tensor::new(&[1, 2, 2], vec![1.0, 5.0, 3.0, 2.0]);
+        let img2 = Tensor::new(&[1, 2, 2], vec![9.0, 0.0, -1.0, 4.0]);
+        let mut d = img.data.clone();
+        d.extend_from_slice(&img2.data);
+        let y = maxpool_batch(&Tensor::new(&[2, 1, 2, 2], d), 2);
+        assert_eq!(y.shape, vec![2, 1, 1, 1]);
+        assert_eq!(y.data, vec![5.0, 9.0]);
+    }
+
+    #[test]
+    fn batchnorm_batch_matches_per_image() {
+        let img = Tensor::new(&[1, 1, 4], vec![2.0, 4.0, 6.0, 8.0]);
+        let single = batchnorm(&img, &[5.0], &[5.0], &[1.5], &[0.25], 0.0);
+        let mut d = img.data.clone();
+        d.extend_from_slice(&img.data);
+        let y = batchnorm_batch(
+            &Tensor::new(&[2, 1, 1, 4], d),
+            &[5.0],
+            &[5.0],
+            &[1.5],
+            &[0.25],
+            0.0,
+        );
+        assert_eq!(&y.data[..4], &single.data[..]);
+        assert_eq!(&y.data[4..], &single.data[..]);
     }
 
     #[test]

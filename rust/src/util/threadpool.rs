@@ -105,6 +105,57 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Scoped parallel-for over fixed-size chunks of a mutable buffer.
+///
+/// Splits `data` into consecutive `chunk_len` chunks and calls
+/// `f(chunk_index, chunk)` once per chunk, distributing contiguous runs of
+/// chunks across up to `threads` scoped worker threads.  Unlike
+/// [`ThreadPool::map`], the closure may borrow non-`'static` state (the
+/// threads are scoped), which is what the batched BCM / engine kernels
+/// need to fill disjoint output tiles in place without `Arc`-wrapping
+/// their weights.  `threads <= 1` (or a single chunk) degrades to the
+/// plain serial loop, so callers can thread a configurable worker count
+/// straight through without branching.
+pub fn scoped_chunks<F>(threads: usize, data: &mut [f32], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    if threads <= 1 || n_chunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let threads = threads.min(n_chunks);
+    let per = n_chunks.div_ceil(threads);
+    let mut groups: Vec<Vec<(usize, &mut [f32])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        groups[i / per].push((i, c));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        // run the first group on the calling thread (it would otherwise
+        // sit parked in scope teardown): threads-1 spawns, full core use
+        let mut iter = groups.into_iter();
+        let first = iter.next();
+        for group in iter {
+            s.spawn(move || {
+                for (i, c) in group {
+                    f(i, c);
+                }
+            });
+        }
+        if let Some(group) = first {
+            for (i, c) in group {
+                f(i, c);
+            }
+        }
+    });
+}
+
 /// Global chunked-work counter useful for progress metrics in benches.
 pub struct WorkCounter(AtomicUsize);
 
@@ -166,6 +217,53 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(17, |i| i + 1);
         assert_eq!(out[16], 17);
+    }
+
+    #[test]
+    fn scoped_chunks_covers_all_chunks_in_order() {
+        // 10 chunks of 3 (last ragged: len 2), 4 threads
+        let mut data = vec![0.0f32; 29];
+        scoped_chunks(4, &mut data, 3, |i, c| {
+            for v in c.iter_mut() {
+                *v = i as f32 + 1.0;
+            }
+        });
+        for (j, v) in data.iter().enumerate() {
+            assert_eq!(*v, (j / 3) as f32 + 1.0, "elem {j}");
+        }
+    }
+
+    #[test]
+    fn scoped_chunks_serial_matches_parallel() {
+        let fill = |threads: usize| {
+            let mut data = vec![0.0f32; 64];
+            scoped_chunks(threads, &mut data, 4, |i, c| {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = (i * 100 + k) as f32;
+                }
+            });
+            data
+        };
+        assert_eq!(fill(1), fill(8));
+    }
+
+    #[test]
+    fn scoped_chunks_borrows_locals() {
+        // the whole point vs ThreadPool::map: non-'static borrows
+        let weights: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 8];
+        scoped_chunks(2, &mut out, 2, |i, c| {
+            for (k, v) in c.iter_mut().enumerate() {
+                *v = weights[i * 2 + k] * 2.0;
+            }
+        });
+        assert_eq!(out[7], 14.0);
+    }
+
+    #[test]
+    fn scoped_chunks_empty() {
+        let mut data: Vec<f32> = Vec::new();
+        scoped_chunks(4, &mut data, 8, |_, _| panic!("no chunks"));
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Property tests for the batch-major engine: for random manifests and
+//! batch sizes, the batched digital and batched deterministic-photonic
+//! forwards must be element-wise identical to the per-image loop,
+//! including the batch=1 and ragged-final-batch edges, and the chip's
+//! pass/tile accounting must stay meaningful under batching (one
+//! sign-split pass pair per linear layer per batch, tiles scaling with
+//! the streamed columns).
+
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::prop_assert;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::util::propcheck::{self, Gen, PropResult};
+
+const L: usize = 4;
+
+fn ceil_to(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// A random small circ model: conv → bn → relu → pool → flatten → fc.
+/// Returns the engine plus the (cin, h) input geometry and the per-layer
+/// (P, Q) block counts of the two linear layers (for tile accounting).
+fn random_engine(g: &mut Gen) -> (Engine, usize, usize, [(usize, usize); 2]) {
+    let cin = g.usize_in(1, 2);
+    let cout = *g.choose(&[4usize, 8]);
+    let h = *g.choose(&[4usize, 6, 8]);
+    let classes = g.usize_in(2, 5);
+    let fc_in = cout * (h / 2) * (h / 2);
+    let layer = |kind: &str, cin: usize, cout: usize| {
+        format!(
+            r#"{{"kind": "{kind}", "cin": {cin}, "cout": {cout}, "k": 3,
+                 "pool": 2, "arch": "circ", "l": {L}, "act_scale": 4.0}}"#
+        )
+    };
+    let manifest = Manifest::parse(&format!(
+        r#"{{"dataset": "synth", "classes": {classes}, "layers": [
+            {}, {}, {}, {}, {}, {}
+        ]}}"#,
+        layer("conv", cin, cout),
+        layer("bn", cout, 0),
+        layer("relu", 0, 0),
+        layer("pool", 0, 0),
+        layer("flatten", 0, 0),
+        layer("fc", fc_in, classes),
+    ))
+    .expect("manifest parses");
+
+    let n_in = cin * 9;
+    let (p0, q0) = (ceil_to(cout, L) / L, ceil_to(n_in, L) / L);
+    let (p5, q5) = (ceil_to(classes, L) / L, ceil_to(fc_in, L) / L);
+
+    let mut bundle = Bundle::default();
+    let centered = |g: &mut Gen, n: usize, scale: f32| -> Vec<f32> {
+        g.vec_f32(n, -scale, scale)
+    };
+    let w0 = centered(g, p0 * q0 * L, 0.4);
+    bundle.insert_f32("layer0.w", &[p0, q0, L], w0);
+    bundle.insert_f32("layer0.b", &[cout], centered(g, cout, 0.1));
+    bundle.insert_f32("layer1.gamma", &[cout], g.vec_f32(cout, 0.5, 1.5));
+    bundle.insert_f32("layer1.beta", &[cout], centered(g, cout, 0.2));
+    bundle.insert_f32("layer1.state.mean", &[cout], centered(g, cout, 0.2));
+    bundle.insert_f32("layer1.state.var", &[cout], g.vec_f32(cout, 0.5, 2.0));
+    let w5 = centered(g, p5 * q5 * L, 0.2);
+    bundle.insert_f32("layer5.w", &[p5, q5, L], w5);
+    bundle.insert_f32("layer5.b", &[classes], centered(g, classes, 0.1));
+
+    let engine = Engine::from_parts(manifest, &bundle).expect("engine builds");
+    (engine, cin, h, [(p0, q0), (p5, q5)])
+}
+
+fn random_images(g: &mut Gen, b: usize, cin: usize, h: usize) -> Vec<Tensor> {
+    (0..b)
+        .map(|_| Tensor::new(&[cin, h, h], g.vec_f32(cin * h * h, 0.0, 1.0)))
+        .collect()
+}
+
+fn chip_desc() -> ChipDescription {
+    let mut d = ChipDescription::ideal(L);
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.015;
+    d
+}
+
+fn rows_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) -> PropResult {
+    prop_assert!(a.len() == b.len(), "{what}: {} vs {} rows", a.len(), b.len());
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        prop_assert!(
+            ra == rb,
+            "{what}: row {i} differs: {ra:?} vs {rb:?}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_forward_identical_to_per_image_loop() {
+    propcheck::check("batched == per-image (digital + photonic)", 25, |g| {
+        let (engine, cin, h, _) = random_engine(g);
+        // batch sizes covering the b=1 edge and odd widths
+        let b = if g.bool() { 1 } else { g.usize_in(2, 7) };
+        let images = random_images(g, b, cin, h);
+
+        // digital
+        let batched = engine
+            .forward_batch(&images, &mut Backend::Digital)
+            .expect("digital batch");
+        let looped: Vec<Vec<f32>> = images
+            .iter()
+            .map(|im| engine.forward(im, &mut Backend::Digital).unwrap())
+            .collect();
+        rows_equal(&batched, &looped, "digital")?;
+
+        // deterministic photonic: fresh chip per run so state can't leak
+        let mut be_batch =
+            Backend::PhotonicSim(ChipSim::deterministic(chip_desc()));
+        let batched = engine
+            .forward_batch(&images, &mut be_batch)
+            .expect("photonic batch");
+        let looped: Vec<Vec<f32>> = images
+            .iter()
+            .map(|im| {
+                let mut be =
+                    Backend::PhotonicSim(ChipSim::deterministic(chip_desc()));
+                engine.forward(im, &mut be).unwrap()
+            })
+            .collect();
+        rows_equal(&batched, &looped, "photonic")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn ragged_final_batch_matches_full_batch() {
+    propcheck::check("chunked serving batches == one batch", 15, |g| {
+        let (engine, cin, h, _) = random_engine(g);
+        let n = g.usize_in(3, 9);
+        let max_batch = g.usize_in(2, n.max(3) - 1);
+        let images = random_images(g, n, cin, h);
+        let full = engine
+            .forward_batch(&images, &mut Backend::Digital)
+            .expect("full batch");
+        // the worker-loop shape: full chunks then a ragged tail
+        let mut chunked = Vec::new();
+        for chunk in images.chunks(max_batch) {
+            chunked.extend(
+                engine
+                    .forward_batch(chunk, &mut Backend::Digital)
+                    .expect("chunk"),
+            );
+        }
+        rows_equal(&chunked, &full, "ragged chunking")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_pass_and_tile_accounting() {
+    propcheck::check("passes flat per layer, tiles scale with cols", 15, |g| {
+        let (engine, cin, h, blocks) = random_engine(g);
+        let b = g.usize_in(1, 6);
+        let images = random_images(g, b, cin, h);
+        let mut be = Backend::PhotonicSim(ChipSim::deterministic(chip_desc()));
+        engine.forward_batch(&images, &mut be).unwrap();
+        let Backend::PhotonicSim(sim) = &be else { unreachable!() };
+        // one sign-split pass pair per linear layer, regardless of b
+        prop_assert!(
+            sim.passes() == 4,
+            "expected 4 passes (2 linear layers × sign split), got {}",
+            sim.passes()
+        );
+        // tiles: conv streams b·h·h columns, fc streams b columns, each
+        // through P·Q block tiles twice (sign split)
+        let (p0, q0) = blocks[0];
+        let (p5, q5) = blocks[1];
+        let want = 2 * p0 * q0 * (b * h * h) + 2 * p5 * q5 * b;
+        prop_assert!(
+            sim.tiles_executed == want as u64,
+            "tiles {} != expected {want}",
+            sim.tiles_executed
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_batch_is_empty() {
+    let mut g = Gen { rng: cirptc::util::rng::Rng::new(7), seed: 7 };
+    let (engine, _, _, _) = random_engine(&mut g);
+    let out = engine.forward_batch(&[], &mut Backend::Digital).unwrap();
+    assert!(out.is_empty());
+}
