@@ -1,24 +1,37 @@
-# Root entry points for the two-phase build: python runs at build time
-# only (compile/aot.py, compile/train.py — both import compile/export.py
-# for the CPT1/manifest interchange), then the rust binary serves from
-# artifacts/ alone.  See DESIGN.md §2–3 and README.md.
+# Root entry points.  Training is pure rust (rust/src/train: the
+# chip-in-the-loop HAT loop writes manifest + CPT1 artifacts the engine
+# loads directly); python runs at build time only for the AOT/XLA path
+# (compile/aot.py) and the legacy jax training sweep (compile/train.py).
+# See DESIGN.md §2–3, §train and README.md.
 
 PY ?= python3
 OUT ?= artifacts
 
-.PHONY: artifacts train train-quick verify bench-smoke help
+.PHONY: artifacts train train-smoke train-py train-py-quick verify \
+	bench-smoke help
 
 ## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
 artifacts:
 	cd python && $(PY) -m compile.aot --out ../$(OUT)
 
-## Hardware-aware training sweep: manifests, CPT1 weight bundles, test
-## sets, golden vectors and metrics.json (compile.train)
+## Pure-rust hardware-aware training: noisy chip-in-the-loop forward,
+## FFT-domain circulant gradients; writes $(OUT)/models/synth_shapes.json
+## + synth_shapes_dpe.cpt for the engine / serving benches
 train:
+	cargo run --release --example hardware_aware_training -- --out $(OUT)
+
+## CI-sized smoke run: few steps on synthetic data, no artifacts needed;
+## asserts the loss decreases and the exported model serves a batch
+train-smoke:
+	cargo run --release --example hardware_aware_training -- --smoke
+
+## Legacy python (jax) training sweep: manifests, CPT1 bundles, test
+## sets, golden vectors and metrics.json (compile.train)
+train-py:
 	cd python && $(PY) -m compile.train --out ../$(OUT)
 
-## CI-sized training run (small data / few epochs)
-train-quick:
+## CI-sized python training run (small data / few epochs)
+train-py-quick:
 	cd python && $(PY) -m compile.train --out ../$(OUT) --quick
 
 ## Tier-1 verification (what CI runs)

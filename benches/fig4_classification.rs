@@ -113,7 +113,7 @@ fn main() {
                 }
             }
         }
-        None => println!("  metrics.json missing — run `make train`"),
+        None => println!("  metrics.json missing — run `make train-py`"),
     }
 
     section("Fig 4 live: DPE model served through the rust L3 stack");
@@ -125,7 +125,7 @@ fn main() {
                 ("rust_digital", format!("{d:.4}")),
                 ("rust_photonic_sim", format!("{p:.4}")),
             ]),
-            _ => println!("  {model}: skipped (run `make train`)"),
+            _ => println!("  {model}: skipped (run `make train-py`)"),
         }
     }
 

@@ -8,7 +8,7 @@
 //!      check: images/sec at batch ≥ 8 must beat the per-image loop);
 //!   3. coordinator overhead + batching-policy sweep + worker scaling.
 //!
-//! Runs against trained artifacts when present (`make train`), otherwise
+//! Runs against trained artifacts when present (`make train-py`), otherwise
 //! falls back to a synthetic in-memory model so the serving path is
 //! always exercised (CI bench smoke: `cargo bench --bench serving --
 //! --smoke`).

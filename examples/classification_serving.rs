@@ -98,7 +98,7 @@ fn main() -> Result<()> {
     for model in &models {
         let manifest = dir.join(format!("models/{model}.json"));
         if !manifest.exists() {
-            println!("[{model}] missing — run `make train` first");
+            println!("[{model}] missing — run `make train-py` first");
             continue;
         }
         // two weight bundles: the DPE (hardware-aware) model serves the

@@ -1,0 +1,165 @@
+//! Hardware-aware training (paper Fig. 1d) entirely in rust — no python
+//! on the compile path either: synthetic data → chip-in-the-loop HAT loop
+//! (`cirptc::train`) → manifest + CPT1 artifacts → reloaded through the
+//! serving engine.
+//!
+//! ```bash
+//! make train          # full run, writes artifacts/models/synth_shapes.*
+//! make train-smoke    # CI-sized run: few steps, temp-dir artifacts,
+//!                     # asserts the loss decreases end-to-end
+//! ```
+//!
+//! Flags: `--out DIR` (default `artifacts`), `--dataset synth_shapes`,
+//! `--epochs N`, `--batch N`, `--lr F`, `--train-n N`, `--seed N`,
+//! `--digital` (disable the chip in the loop), `--smoke`.
+
+use std::path::PathBuf;
+
+use cirptc::data::datasets::{self, Split};
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::train::{
+    evaluate, fit, gather_batch, Optimizer, TrainBackend, TrainConfig,
+    TrainModel,
+};
+use cirptc::util::cli::Args;
+use cirptc::util::error::Result;
+
+/// The StrC stack for the 16×16 synth_shapes set (order-4 circ layers,
+/// the same topology family as `model.net_config`).
+const SHAPES_MANIFEST: &str = r#"{
+  "dataset": "synth_shapes", "classes": 3,
+  "layers": [
+    {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0}
+  ]}"#;
+
+/// Chip description for training: `artifacts/chip.json` when present (the
+/// as-fabricated chip the python side exports), else a representative
+/// non-ideal chip so the example runs with zero artifacts.
+fn chip_desc(out: &std::path::Path) -> ChipDescription {
+    ChipDescription::load(&out.join("chip.json")).unwrap_or_else(|_| {
+        let mut d = ChipDescription::ideal(4);
+        d.gamma = vec![
+            0.94, 0.03, 0.02, 0.01, //
+            0.02, 0.94, 0.03, 0.01, //
+            0.01, 0.03, 0.94, 0.02, //
+            0.02, 0.01, 0.03, 0.94,
+        ];
+        d.resp = vec![1.0, 0.98, 1.02, 0.99];
+        d.dark = 0.01;
+        d.sigma_rel = 0.01;
+        d.sigma_abs = 0.002;
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.seed = 7;
+        d
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let smoke = args.has("smoke");
+    let digital = args.has("digital");
+    let out = if smoke {
+        std::env::temp_dir().join("cirptc_train_smoke")
+    } else {
+        PathBuf::from(args.str_or("out", "artifacts"))
+    };
+    let dataset = args.str_or("dataset", "synth_shapes");
+    let epochs = args.usize_or("epochs", if smoke { 4 } else { 12 });
+    let batch = args.usize_or("batch", 16);
+    let lr = args.f64_or("lr", 5e-3) as f32;
+    let train_n = args.usize_or("train-n", if smoke { 96 } else { 512 });
+    let seed = args.usize_or("seed", 2025) as u64;
+    if dataset != "synth_shapes" {
+        cirptc::bail!("only synth_shapes is wired up (got '{dataset}')");
+    }
+
+    println!(
+        "hardware-aware training: {dataset}, {} backend, {epochs} epochs, \
+         batch {batch}, lr {lr}, n {train_n}",
+        if digital { "digital" } else { "chip-in-the-loop (noisy)" }
+    );
+
+    // -- data + model ------------------------------------------------------
+    let split: Split = datasets::synth_shapes(train_n, seed);
+    let eval_split = datasets::synth_shapes(train_n / 2, seed ^ 0xEE);
+    let manifest = Manifest::parse(SHAPES_MANIFEST)?;
+    let mut model = TrainModel::init(manifest, seed)?;
+
+    // -- the HAT loop ------------------------------------------------------
+    let mut backend = if digital {
+        TrainBackend::Digital
+    } else {
+        // noisy lookup-mode forward, deterministic-surrogate gradients
+        TrainBackend::Chip(ChipSim::new(chip_desc(&out)))
+    };
+    let mut opt = Optimizer::adam(lr);
+    let cfg = TrainConfig {
+        epochs,
+        batch,
+        max_steps: if smoke { 24 } else { 0 },
+        seed: seed ^ 0x5EED,
+    };
+    let hist = fit(&mut model, &mut backend, &mut opt, &split, &cfg)?;
+    for (ep, loss) in hist.iter().enumerate() {
+        println!("  epoch {:>2}  loss {loss:.4}", ep + 1);
+    }
+    let first = hist.first().copied().unwrap_or(f32::NAN);
+    let last = hist.last().copied().unwrap_or(f32::NAN);
+    if last.is_nan() || last >= first {
+        cirptc::bail!("loss did not decrease: {first:.4} -> {last:.4}");
+    }
+
+    // -- BN calibration + eval (paper's one-shot chip calibration) ---------
+    let nb = (split.n / batch).min(6);
+    let calib: Vec<_> = (0..nb)
+        .map(|i| {
+            let idx: Vec<usize> = (i * batch..(i + 1) * batch).collect();
+            gather_batch(&split, &idx).0
+        })
+        .collect();
+    model.recalibrate_bn(&calib, &mut backend)?;
+    let acc = evaluate(&model, &mut backend, &eval_split, batch)?;
+    println!("  eval accuracy ({} images): {acc:.4}", eval_split.n);
+
+    // -- rust-written artifacts → served by the engine ---------------------
+    let (mpath, wpath) = model.save_artifacts(&out, &dataset)?;
+    println!("  wrote {} + {}", mpath.display(), wpath.display());
+    let engine = Engine::load(&mpath, &wpath)?;
+    let imgs: Vec<_> = (0..eval_split.n.min(8))
+        .map(|i| eval_split.image(i))
+        .collect();
+    let served = engine.forward_batch(&imgs, &mut Backend::Digital)?;
+    let mut ok = 0usize;
+    for (row, want) in served.iter().zip(&eval_split.labels) {
+        if cirptc::tensor::argmax(row) == *want as usize {
+            ok += 1;
+        }
+    }
+    if !served
+        .iter()
+        .all(|r| r.len() == 3 && r.iter().all(|v| v.is_finite()))
+    {
+        cirptc::bail!("engine served non-finite logits");
+    }
+    println!(
+        "  engine reload: served a batch of {} ({} / {} top-1 agree with labels)",
+        served.len(),
+        ok,
+        served.len()
+    );
+    println!("hardware-aware training OK");
+    Ok(())
+}

@@ -293,6 +293,119 @@ pub fn bcm_mmm_fft(bcm: &Bcm, x: &Tensor) -> Tensor {
     Tensor::new(&[bcm.m(), b], out)
 }
 
+/// Adjoint of [`bcm_mmm_fft`]: FFT-domain gradients of `Y = BCM · X`.
+///
+/// Given the forward operand `x` (N, B) and upstream gradient `dy` (M, B),
+/// returns (dw, dx) with `dw` in the compressed primary-vector layout of
+/// `bcm.w` and `dx` of shape (N, B).  Both halves stay in the frequency
+/// domain (one [`FftPlan`] shared by every block and column, as in the
+/// forward pass):
+///
+/// * `dX_f[q] = Σ_p conj(W_f[p,q]) ⊙ dY_f[p]` — a real circulant is
+///   `F⁻¹·diag(W_f)·F`, so its transpose is the circulant with the
+///   conjugate spectrum;
+/// * `dW_f[p,q] = Σ_cols conj(dY_f[p]) ⊙ X_f[q]` — the circular
+///   cross-correlation theorem applied to
+///   `dw[s] = Σ_b Σ_r dy[r]·x[(r+s) mod l]`, which lands on the primary
+///   row directly (no first-column remap needed).
+pub fn bcm_mmm_fft_backward(
+    bcm: &Bcm,
+    x: &Tensor,
+    dy: &Tensor,
+) -> (Vec<f32>, Tensor) {
+    let l = bcm.l;
+    assert!(l.is_power_of_two(), "fft path requires power-of-two order");
+    assert_eq!(x.shape[0], bcm.n());
+    assert_eq!(dy.shape[0], bcm.m());
+    assert_eq!(x.shape[1], dy.shape[1], "operand/upstream batch width");
+    let b = x.shape[1];
+    let plan = FftPlan::new(l);
+
+    // weight spectra (first-column FFTs), identical to the forward pass
+    let n_blocks = bcm.p * bcm.q;
+    let mut w_re = vec![0.0f32; n_blocks * l];
+    let mut w_im = vec![0.0f32; n_blocks * l];
+    for blk_i in 0..n_blocks {
+        let blk = &bcm.w[blk_i * l..(blk_i + 1) * l];
+        let re = &mut w_re[blk_i * l..(blk_i + 1) * l];
+        re[0] = blk[0];
+        for r in 1..l {
+            re[r] = blk[l - r];
+        }
+        plan.forward(re, &mut w_im[blk_i * l..(blk_i + 1) * l]);
+    }
+
+    // operand spectra (Q, B, l) and upstream spectra (P, B, l)
+    let spectra = |t: &Tensor, blocks: usize| -> (Vec<f32>, Vec<f32>) {
+        let mut re = vec![0.0f32; blocks * b * l];
+        let mut im = vec![0.0f32; blocks * b * l];
+        for bi in 0..blocks {
+            for col in 0..b {
+                let off = (bi * b + col) * l;
+                for i in 0..l {
+                    re[off + i] = t.data[(bi * l + i) * b + col];
+                }
+                plan.forward(&mut re[off..off + l], &mut im[off..off + l]);
+            }
+        }
+        (re, im)
+    };
+    let (x_re, x_im) = spectra(x, bcm.q);
+    let (dy_re, dy_im) = spectra(dy, bcm.p);
+
+    let mut acc_re = vec![0.0f32; l];
+    let mut acc_im = vec![0.0f32; l];
+
+    // dx: accumulate conj(W_f) ⊙ dY_f over block-rows, one inverse
+    // transform per (block-column, column)
+    let mut dx = vec![0.0f32; bcm.n() * b];
+    for bq in 0..bcm.q {
+        for col in 0..b {
+            acc_re.iter_mut().for_each(|v| *v = 0.0);
+            acc_im.iter_mut().for_each(|v| *v = 0.0);
+            for bp in 0..bcm.p {
+                let wo = (bp * bcm.q + bq) * l;
+                let go = (bp * b + col) * l;
+                for k in 0..l {
+                    let (wr, wi) = (w_re[wo + k], -w_im[wo + k]);
+                    let (gr, gi) = (dy_re[go + k], dy_im[go + k]);
+                    acc_re[k] += wr * gr - wi * gi;
+                    acc_im[k] += wr * gi + wi * gr;
+                }
+            }
+            plan.inverse(&mut acc_re, &mut acc_im);
+            for i in 0..l {
+                dx[(bq * l + i) * b + col] = acc_re[i];
+            }
+        }
+    }
+
+    // dw: accumulate conj(dY_f) ⊙ X_f over columns, one inverse transform
+    // per block — the result is real (x, dy real), acc_im only carries
+    // rounding noise
+    let mut dw = vec![0.0f32; bcm.w.len()];
+    for bp in 0..bcm.p {
+        for bq in 0..bcm.q {
+            acc_re.iter_mut().for_each(|v| *v = 0.0);
+            acc_im.iter_mut().for_each(|v| *v = 0.0);
+            for col in 0..b {
+                let go = (bp * b + col) * l;
+                let xo = (bq * b + col) * l;
+                for k in 0..l {
+                    let (gr, gi) = (dy_re[go + k], -dy_im[go + k]);
+                    let (xr, xi) = (x_re[xo + k], x_im[xo + k]);
+                    acc_re[k] += gr * xr - gi * xi;
+                    acc_im[k] += gr * xi + gi * xr;
+                }
+            }
+            plan.inverse(&mut acc_re, &mut acc_im);
+            let off = (bp * bcm.q + bq) * l;
+            dw[off..off + l].copy_from_slice(&acc_re);
+        }
+    }
+    (dw, Tensor::new(&[bcm.n(), b], dx))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,6 +507,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fft_backward_identity_bcm_passes_gradient_through() {
+        // identity weights: dx == dy and dw == Σ_b dy ⊙ rotated x
+        let mut b = Bcm::zeros(2, 2, 4);
+        for i in 0..2 {
+            b.w[(i * 2 + i) * 4] = 1.0;
+        }
+        let mut r = Rng::new(7);
+        let mut xd = vec![0.0f32; 8 * 3];
+        let mut dyd = vec![0.0f32; 8 * 3];
+        r.fill_uniform(&mut xd);
+        r.fill_uniform(&mut dyd);
+        let x = Tensor::new(&[8, 3], xd);
+        let dy = Tensor::new(&[8, 3], dyd);
+        let (_, dx) = bcm_mmm_fft_backward(&b, &x, &dy);
+        assert_close(&dx.data, &dy.data, 1e-5).unwrap();
     }
 
     #[test]

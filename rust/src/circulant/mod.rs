@@ -205,6 +205,80 @@ impl Bcm {
         fft::bcm_mmm_fft(self, x)
     }
 
+    /// Transpose as a BCM: blocks swap position (p ↔ q) and every primary
+    /// vector is index-reversed — `circ(w)ᵀ = circ(w')` with
+    /// `w'[s] = w[(l − s) mod l]`.  The data-gradient of a BCM multiply is
+    /// a multiply by the transpose, so the backward pass stays in the
+    /// compressed representation.
+    pub fn transpose(&self) -> Bcm {
+        let l = self.l;
+        let mut w = vec![0.0f32; self.w.len()];
+        for bp in 0..self.p {
+            for bq in 0..self.q {
+                let src = self.block(bp, bq);
+                let dst = (bq * self.p + bp) * l;
+                w[dst] = src[0];
+                for s in 1..l {
+                    w[dst + s] = src[l - s];
+                }
+            }
+        }
+        Bcm { w, p: self.q, q: self.p, l }
+    }
+
+    /// Adjoint (backward pass) of [`Bcm::mmm`], direct time-domain form:
+    /// given the forward operand `x` (N, B) and the upstream gradient `dy`
+    /// (M, B), returns the gradient w.r.t. the compressed primary vectors
+    /// (layout of `self.w`) and w.r.t. `x`.  The oracle for the FFT route.
+    ///
+    /// dw[p,q,s] = Σ_b Σ_r dy[p·l+r, b] · x[q·l+(r+s) mod l, b]
+    /// dx        = Bᵀ · dy
+    pub fn mmm_backward(&self, x: &Tensor, dy: &Tensor) -> (Vec<f32>, Tensor) {
+        assert_eq!(x.shape[0], self.n());
+        assert_eq!(dy.shape[0], self.m());
+        assert_eq!(x.shape[1], dy.shape[1], "operand/upstream batch width");
+        let (l, b) = (self.l, x.shape[1]);
+        let mut dw = vec![0.0f32; self.w.len()];
+        for bp in 0..self.p {
+            for bq in 0..self.q {
+                let off = (bp * self.q + bq) * l;
+                for s in 0..l {
+                    let mut acc = 0.0f32;
+                    for r in 0..l {
+                        let c = (r + s) % l;
+                        let dyrow =
+                            &dy.data[(bp * l + r) * b..(bp * l + r + 1) * b];
+                        let xrow =
+                            &x.data[(bq * l + c) * b..(bq * l + c + 1) * b];
+                        for (dv, xv) in dyrow.iter().zip(xrow) {
+                            acc += dv * xv;
+                        }
+                    }
+                    dw[off + s] = acc;
+                }
+            }
+        }
+        let dx = self.transpose().mmm(dy, 1);
+        (dw, dx)
+    }
+
+    /// Adjoint of [`Bcm::mmm_fft`] — the Eq. (2) gradients computed in the
+    /// frequency domain with one [`fft::FftPlan`] shared across every
+    /// block and column (see [`fft::bcm_mmm_fft_backward`]).
+    pub fn mmm_fft_backward(&self, x: &Tensor, dy: &Tensor) -> (Vec<f32>, Tensor) {
+        fft::bcm_mmm_fft_backward(self, x, dy)
+    }
+
+    /// Backward dispatch: FFT route when the block order allows it,
+    /// direct time-domain adjoint otherwise.
+    pub fn backward(&self, x: &Tensor, dy: &Tensor) -> (Vec<f32>, Tensor) {
+        if self.l.is_power_of_two() {
+            self.mmm_fft_backward(x, dy)
+        } else {
+            self.mmm_backward(x, dy)
+        }
+    }
+
     /// Split a full-range BCM into positive-only halves and a scale, the
     /// paper's time-domain-multiplexed sign handling.
     pub fn split_signed(&self) -> (Bcm, Bcm, f32) {
@@ -370,6 +444,109 @@ mod tests {
                 prop_assert!((0.0..=1.0).contains(&bn.w[i]));
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        propcheck::check("bcm transpose == dense transpose", 60, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 3, 4, 8]);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let bt = b.transpose();
+            assert_close(&bt.expand().data, &b.expand().transpose2().data, 0.0)
+        });
+    }
+
+    #[test]
+    fn backward_satisfies_adjoint_identity() {
+        // <B x, dy> == <x, Bᵀ dy> for the dx half of the backward pass
+        propcheck::check("mmm_backward adjoint identity", 60, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8]);
+            let cols = g.usize_in(1, 5);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x = Tensor::new(&[b.n(), cols], g.vec_f32(b.n() * cols, -1.0, 1.0));
+            let dy = Tensor::new(&[b.m(), cols], g.vec_f32(b.m() * cols, -1.0, 1.0));
+            let y = b.mmm(&x, 1);
+            let (_, dx) = b.mmm_backward(&x, &dy);
+            let lhs: f64 = y
+                .data
+                .iter()
+                .zip(&dy.data)
+                .map(|(a, c)| (*a as f64) * (*c as f64))
+                .sum();
+            let rhs: f64 = x
+                .data
+                .iter()
+                .zip(&dx.data)
+                .map(|(a, c)| (*a as f64) * (*c as f64))
+                .sum();
+            prop_assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "<Bx,dy>={lhs} vs <x,Btdy>={rhs}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backward_dw_matches_loss_perturbation() {
+        // y is linear in w, so a central difference of L = Σ y⊙dy along
+        // each stored parameter recovers dw exactly (up to f32 rounding)
+        let b = rand_bcm(2, 2, 4, 17);
+        let mut r = Rng::new(18);
+        let mut xd = vec![0.0f32; b.n() * 3];
+        r.fill_uniform(&mut xd);
+        let x = Tensor::new(&[b.n(), 3], xd);
+        let mut dyd = vec![0.0f32; b.m() * 3];
+        r.fill_uniform(&mut dyd);
+        let dy = Tensor::new(&[b.m(), 3], dyd);
+        let loss = |bcm: &Bcm| -> f64 {
+            bcm.mmm(&x, 1)
+                .data
+                .iter()
+                .zip(&dy.data)
+                .map(|(a, c)| (*a as f64) * (*c as f64))
+                .sum()
+        };
+        let (dw, _) = b.mmm_backward(&x, &dy);
+        // y is exactly linear in w, so a large step loses no accuracy and
+        // keeps the f32 forward's rounding noise well below the tolerance
+        let h = 0.1f32;
+        for i in 0..b.w.len() {
+            let mut bp = b.clone();
+            bp.w[i] += h;
+            let mut bm = b.clone();
+            bm.w[i] -= h;
+            let fd = ((loss(&bp) - loss(&bm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (dw[i] - fd).abs() <= 1e-3 * dw[i].abs().max(1.0),
+                "param {i}: analytic {} vs fd {fd}",
+                dw[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fft_backward_matches_direct_backward() {
+        propcheck::check("mmm_fft_backward == mmm_backward", 60, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8, 16]);
+            let cols = g.usize_in(1, 5);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x = Tensor::new(&[b.n(), cols], g.vec_f32(b.n() * cols, -1.0, 1.0));
+            let dy = Tensor::new(&[b.m(), cols], g.vec_f32(b.m() * cols, -1.0, 1.0));
+            let (dw_d, dx_d) = b.mmm_backward(&x, &dy);
+            let (dw_f, dx_f) = b.mmm_fft_backward(&x, &dy);
+            assert_close(&dw_f, &dw_d, 1e-3)?;
+            assert_close(&dx_f.data, &dx_d.data, 1e-3)
         });
     }
 

@@ -175,6 +175,40 @@ pub fn synth_cxr(n: usize, seed: u64) -> Split {
     Split { images, labels, n, c: 1, h: sz, w: sz, classes: 3 }
 }
 
+/// Rust-native quick-training set for the `make train-smoke` workload:
+/// 1×16×16 images, 3 classes of oriented sinusoid stripes (0 horizontal /
+/// 1 vertical / 2 diagonal) with frequency, phase and amplitude jitter
+/// plus additive noise.  Small enough that the chip-in-the-loop HAT loop
+/// ([`crate::train`]) separates the classes in a few dozen minibatches.
+pub fn synth_shapes(n: usize, seed: u64) -> Split {
+    let sz = 16usize;
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * sz * sz];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let class = rng.below(3);
+        labels[i] = class as u8;
+        let freq = rng.range(1.6, 2.4);
+        let phase = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let amp = rng.range(0.35, 0.48);
+        let img = &mut images[i * sz * sz..(i + 1) * sz * sz];
+        for y in 0..sz {
+            for x in 0..sz {
+                let u = match class {
+                    0 => y as f64,
+                    1 => x as f64,
+                    _ => (x + y) as f64 * std::f64::consts::FRAC_1_SQRT_2,
+                } / sz as f64;
+                let v = 0.5
+                    + amp * (2.0 * std::f64::consts::PI * freq * u + phase).sin();
+                img[y * sz + x] =
+                    (v + rng.normal() * 0.03).clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    Split { images, labels, n, c: 1, h: sz, w: sz, classes: 3 }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +264,20 @@ mod tests {
         let s = synth_cxr(4, 9);
         let img = s.image(2);
         assert_eq!(img.shape, vec![1, 64, 64]);
+    }
+
+    #[test]
+    fn shapes_well_formed_and_deterministic() {
+        let s = synth_shapes(64, 11);
+        assert_eq!(s.images.len(), 64 * 16 * 16);
+        assert_eq!((s.c, s.h, s.w, s.classes), (1, 16, 16, 3));
+        assert!(s.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mut seen = [false; 3];
+        for &l in &s.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "all 3 classes generated");
+        let s2 = synth_shapes(64, 11);
+        assert_eq!(s.images, s2.images);
     }
 }

@@ -12,8 +12,12 @@
 //! * **L1** (`python/compile/kernels/`) — Pallas block-circulant kernels.
 //!
 //! Python never runs on the request path: `make artifacts` once, then the
-//! `cirptc` binary serves from `artifacts/` alone.  See DESIGN.md for the
-//! full system inventory and the per-experiment index.
+//! `cirptc` binary serves from `artifacts/` alone.  Since the [`train`]
+//! subsystem landed, the compile side has a pure-rust path too: `make
+//! train` runs the hardware-aware training loop (chip-in-the-loop forward,
+//! FFT-domain circulant gradients) and writes the same manifest + CPT1
+//! artifacts.  See DESIGN.md for the full system inventory and the
+//! per-experiment index.
 //!
 //! ## Features
 //!
@@ -42,4 +46,5 @@ pub mod quant;
 pub mod runtime;
 pub mod simulator;
 pub mod tensor;
+pub mod train;
 pub mod util;

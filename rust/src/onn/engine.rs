@@ -22,10 +22,6 @@ pub enum Backend {
     PhotonicSim(ChipSim),
 }
 
-fn ceil_to(x: usize, m: usize) -> usize {
-    (x + m - 1) / m * m
-}
-
 /// Weights of one linear layer in both representations.
 struct LinearWeights {
     /// compressed BCM (circ arch) — padded dims (P·l ≥ cout, Q·l ≥ n)
@@ -71,19 +67,12 @@ impl Engine {
             let name = format!("layer{i}");
             let state = match spec.kind {
                 LayerKind::Conv | LayerKind::Fc => {
-                    let n_in = if spec.kind == LayerKind::Conv {
-                        spec.cin * spec.k * spec.k
-                    } else {
-                        spec.cin
-                    };
+                    let n_in = spec.n_in();
                     let w = bundle.get(&format!("{name}.w"))?;
                     let bias =
                         bundle.get(&format!("{name}.b"))?.as_f32()?.to_vec();
                     if spec.arch == "circ" {
-                        let (p, q) = (
-                            ceil_to(spec.cout, spec.l) / spec.l,
-                            ceil_to(n_in, spec.l) / spec.l,
-                        );
+                        let (p, q) = spec.bcm_dims();
                         let data = w.as_f32()?;
                         if w.shape() != [p, q, spec.l] {
                             bail!(
@@ -155,8 +144,12 @@ impl Engine {
     /// flattened features as `(b, n)` — and each linear layer issues a
     /// single multi-column BCM multiply (one sign-split pass pair on the
     /// photonic backend, however many images are in flight).  Columns are
-    /// independent operands throughout, so the result is element-wise
-    /// identical to running [`Engine::forward`] per image.
+    /// independent operands throughout, so on deterministic backends the
+    /// result is element-wise identical to running [`Engine::forward`]
+    /// per image.  (A *noisy* `ChipSim` consumes its RNG stream
+    /// layer-by-layer across the whole batch, so individual noise draws
+    /// land on different elements than in a per-image loop — same
+    /// statistics, different samples.)
     pub fn forward_batch(
         &self,
         imgs: &[Tensor],
@@ -164,6 +157,11 @@ impl Engine {
     ) -> Result<Vec<Vec<f32>>> {
         if imgs.is_empty() {
             return Ok(Vec::new());
+        }
+        // propagate the engine's worker count into the sim's crossbar /
+        // Γ-encode kernels (results are bit-identical for any value)
+        if let Backend::PhotonicSim(sim) = backend {
+            sim.threads = self.threads;
         }
         let shape = &imgs[0].shape;
         if shape.len() != 3 {
@@ -343,7 +341,14 @@ impl Activation {
 
 /// Scatter a (rows, b·h·w) column-block back into a (b, keep, h, w) image
 /// batch, keeping the first `keep` logical rows (the BCM may be row-padded).
-fn cols_to_images(y: &Tensor, b: usize, keep: usize, h: usize, w: usize) -> Tensor {
+/// Shared with the training forward pass ([`crate::train`]).
+pub(crate) fn cols_to_images(
+    y: &Tensor,
+    b: usize,
+    keep: usize,
+    h: usize,
+    w: usize,
+) -> Tensor {
     let hw = h * w;
     let total = y.shape[1];
     debug_assert_eq!(total, b * hw);
@@ -358,7 +363,21 @@ fn cols_to_images(y: &Tensor, b: usize, keep: usize, h: usize, w: usize) -> Tens
     out
 }
 
-fn add_channel_bias_batch(mut t: Tensor, bias: &[f32]) -> Tensor {
+/// Zero-pad the rows of an (n, cols) operand block up to the BCM's padded
+/// input width `n_pad`: padded rows meet zero weight columns, so the
+/// product is unchanged.  Shared by the photonic serving path and the
+/// training forward pass ([`crate::train`]).
+pub(crate) fn pad_rows(x: &Tensor, n_pad: usize) -> Tensor {
+    let cols = x.shape[1];
+    if x.shape[0] == n_pad {
+        return x.clone();
+    }
+    let mut xp = Tensor::zeros(&[n_pad, cols]);
+    xp.data[..x.shape[0] * cols].copy_from_slice(&x.data);
+    xp
+}
+
+pub(crate) fn add_channel_bias_batch(mut t: Tensor, bias: &[f32]) -> Tensor {
     let (b, c) = (t.shape[0], t.shape[1]);
     let hw = t.shape[2] * t.shape[3];
     for bi in 0..b {
@@ -383,10 +402,7 @@ fn photonic_linear_cols(
     xm: &Tensor,
 ) -> Result<Tensor> {
     let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
-    let cols = xm.shape[1];
-    let n_pad = bcm.n();
-    let mut xp = Tensor::zeros(&[n_pad, cols]);
-    xp.data[..xm.shape[0] * cols].copy_from_slice(&xm.data);
+    let xp = pad_rows(xm, bcm.n());
     Ok(sim.forward_signed(bcm, &xp).scale(spec.act_scale))
 }
 

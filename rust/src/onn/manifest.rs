@@ -1,5 +1,7 @@
 //! Model manifest: the JSON layer-stack description exported by
-//! `python/compile/export.py::write_manifest`.
+//! `python/compile/export.py::write_manifest` — and, since the rust-native
+//! training subsystem ([`crate::train`]) landed, written symmetrically by
+//! [`Manifest::save`] so `make train` never leaves cargo.
 
 use std::path::Path;
 
@@ -29,10 +31,22 @@ impl LayerKind {
             other => bail!("unknown layer kind '{other}'"),
         })
     }
+
+    /// The JSON tag [`LayerKind::parse`] accepts (writer ↔ parser symmetry).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Fc => "fc",
+            LayerKind::Bn => "bn",
+            LayerKind::Relu => "relu",
+            LayerKind::Pool => "pool",
+            LayerKind::Flatten => "flatten",
+        }
+    }
 }
 
 /// One layer of the stack (mirror of python `LayerCfg`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerSpec {
     pub kind: LayerKind,
     pub cin: usize,
@@ -45,8 +59,29 @@ pub struct LayerSpec {
     pub act_scale: f32,
 }
 
+impl LayerSpec {
+    /// Flattened input width of a linear layer (conv: cin·k², fc: cin).
+    pub fn n_in(&self) -> usize {
+        if self.kind == LayerKind::Conv {
+            self.cin * self.k * self.k
+        } else {
+            self.cin
+        }
+    }
+
+    /// Block-circulant grid (P, Q): `cout` and [`LayerSpec::n_in`] rounded
+    /// up to multiples of the block order.  The single source of the
+    /// padding rule — the engine loader, the parameter accounting and the
+    /// trainer's init/export must all agree on it for rust-trained
+    /// weights to load.
+    pub fn bcm_dims(&self) -> (usize, usize) {
+        let blocks = |x: usize| (x + self.l - 1) / self.l;
+        (blocks(self.cout), blocks(self.n_in()))
+    }
+}
+
 /// Parsed model manifest.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
     pub dataset: String,
     pub classes: usize,
@@ -103,40 +138,70 @@ impl Manifest {
         Manifest::parse(&text)
     }
 
+    /// Serialize back to the JSON layout of `export.py::write_manifest`
+    /// ([`Manifest::parse`] round-trips it; key order is stable because
+    /// [`Json`] objects are BTreeMap-backed).
+    pub fn to_json(&self) -> String {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("kind", Json::Str(l.kind.as_str().to_string())),
+                    ("cin", Json::Num(l.cin as f64)),
+                    ("cout", Json::Num(l.cout as f64)),
+                    ("k", Json::Num(l.k as f64)),
+                    ("pool", Json::Num(l.pool as f64)),
+                    ("arch", Json::Str(l.arch.clone())),
+                    ("l", Json::Num(l.l as f64)),
+                    ("act_scale", Json::Num(l.act_scale as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("classes", Json::Num(self.classes as f64)),
+            ("layers", Json::Arr(layers)),
+        ])
+        .dump()
+    }
+
+    /// Write the manifest to disk (creating parent directories), the rust
+    /// half of the python↔rust interchange.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
     /// (channels, height) of the expected input.
     pub fn input_shape(&self) -> (usize, usize) {
         match self.dataset.as_str() {
             "synth_cxr" => (1, 64),
+            "synth_shapes" => (1, 16),
             _ => (3, 32),
         }
     }
 
     /// Trainable-parameter counts: (dense-equivalent, stored-compressed).
     pub fn param_counts(&self) -> (usize, usize) {
-        let ceil_to = |x: usize, m: usize| (x + m - 1) / m * m;
         let mut dense = 0;
         let mut stored = 0;
         for l in &self.layers {
-            match l.kind {
-                LayerKind::Conv => {
-                    let n = l.cin * l.k * l.k;
-                    dense += l.cout * n;
-                    stored += if l.arch == "circ" {
-                        ceil_to(l.cout, l.l) / l.l * ceil_to(n, l.l)
-                    } else {
-                        l.cout * n
-                    };
-                }
-                LayerKind::Fc => {
-                    dense += l.cout * l.cin;
-                    stored += if l.arch == "circ" {
-                        ceil_to(l.cout, l.l) / l.l * ceil_to(l.cin, l.l)
-                    } else {
-                        l.cout * l.cin
-                    };
-                }
-                _ => {}
+            if !matches!(l.kind, LayerKind::Conv | LayerKind::Fc) {
+                continue;
             }
+            let n = l.n_in();
+            dense += l.cout * n;
+            stored += if l.arch == "circ" {
+                let (p, q) = l.bcm_dims();
+                p * q * l.l
+            } else {
+                l.cout * n
+            };
         }
         (dense, stored)
     }
@@ -184,6 +249,16 @@ mod tests {
         assert_eq!(dense, 72 + 3 * 8192);
         assert_eq!(stored, 24 + 8192);
         assert!((stored as f64) < 0.35 * dense as f64);
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let back = Manifest::parse(&m.to_json()).unwrap();
+        assert_eq!(m, back, "to_json must round-trip every field");
+        // act_scale survives as a float, kind tags match the parser's set
+        assert!(m.to_json().contains("\"act_scale\":4"));
+        assert!(m.to_json().contains("\"kind\":\"conv\""));
     }
 
     #[test]

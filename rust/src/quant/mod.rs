@@ -54,6 +54,25 @@ impl Quantizer {
         (code.min(self.levels()) as f32) / lv * (self.hi - self.lo) + self.lo
     }
 
+    /// Straight-through-estimator gradient of [`Quantizer::q`]: identity
+    /// (1.0) inside the clamp range, **zero outside [lo, hi]** — the
+    /// saturated branch of the clamp has no slope, so gradients must not
+    /// leak through values the DAC cannot represent.  A 0-bit quantizer
+    /// is the identity and passes gradient everywhere.
+    #[inline]
+    pub fn ste_grad(&self, x: f32) -> f32 {
+        if self.bits == 0 || (self.lo..=self.hi).contains(&x) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Forward quantize + STE gradient factor in one call.
+    pub fn q_ste(&self, x: f32) -> (f32, f32) {
+        (self.q(x), self.ste_grad(x))
+    }
+
     pub fn q_slice(&self, xs: &mut [f32]) {
         for x in xs.iter_mut() {
             *x = self.q(*x);
@@ -140,5 +159,48 @@ mod tests {
     fn zero_bits_is_identity() {
         let q = Quantizer::new(0);
         assert_eq!(q.q(0.123456), 0.123456);
+        assert_eq!(q.ste_grad(-100.0), 1.0, "0-bit quantizer passes gradient");
+    }
+
+    #[test]
+    fn saturation_pins_exact_boundary_levels() {
+        // the clamp runs *before* rounding: values far outside the range
+        // must land exactly on the boundary codes, not on an extrapolated
+        // rounded level
+        let q = Quantizer::with_range(4, -1.0, 1.0);
+        assert_eq!(q.q(-37.5), -1.0);
+        assert_eq!(q.q(512.0), 1.0);
+        assert_eq!(q.code(-37.5), 0);
+        assert_eq!(q.code(512.0), q.levels());
+        // one ulp past the boundary still saturates to the exact endpoint
+        assert_eq!(q.q(1.0 + f32::EPSILON), 1.0);
+        assert_eq!(q.q(-1.0 - f32::EPSILON), -1.0);
+        let q01 = Quantizer::new(6);
+        assert_eq!(q01.q(1.0000001), 1.0);
+        assert_eq!(q01.q(-0.0000001), 0.0);
+    }
+
+    #[test]
+    fn ste_gradient_zero_outside_range() {
+        propcheck::check("ste grad mask", 200, |g| {
+            let bits = *g.choose(&[2u32, 4, 6]);
+            let q = Quantizer::with_range(bits, -0.5, 0.75);
+            let x = g.f32_in(-2.0, 2.0);
+            let (fwd, grad) = q.q_ste(x);
+            if x < q.lo || x > q.hi {
+                prop_assert!(grad == 0.0, "grad must be 0 outside at x={x}");
+                prop_assert!(
+                    fwd == q.lo || fwd == q.hi,
+                    "saturated forward at x={x} gave {fwd}"
+                );
+            } else {
+                prop_assert!(grad == 1.0, "grad must be 1 inside at x={x}");
+            }
+            Ok(())
+        });
+        // boundary values are *inside* (jnp.clip convention)
+        let q = Quantizer::new(4);
+        assert_eq!(q.ste_grad(0.0), 1.0);
+        assert_eq!(q.ste_grad(1.0), 1.0);
     }
 }

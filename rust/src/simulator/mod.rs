@@ -148,25 +148,43 @@ impl ChipSim {
         // Row-contiguous SAXPY form (EXPERIMENTS.md §Perf): quantize each
         // input row once, then accumulate Γ-weighted rows — batch-stride-1
         // throughout instead of the naive per-(col, channel) gather.
+        // For very wide batches the destination rows are distributed
+        // across scoped workers ([`crate::util::threadpool::scoped_chunks`],
+        // like the crossbar matmul): each row (qb·l + i) is filled by
+        // exactly one thread in the same j-order as the serial loop, so
+        // any thread count is bit-identical; below the madd threshold the
+        // single-thread fallback runs the identical serial path.
         let mut xq = x.data.clone();
         self.xq.q_slice(&mut xq);
         let mut xenc = vec![0.0f32; x.data.len()];
         let q_blocks = w.n() / l;
-        for qb in 0..q_blocks {
-            for i in 0..l {
-                let (dst_lo, dst_hi) = ((qb * l + i) * b, (qb * l + i + 1) * b);
-                for j in 0..l {
-                    let g = self.desc.gamma[i * l + j];
-                    if g == 0.0 {
-                        continue;
+        if b > 0 {
+            let enc_madds = q_blocks * l * l * b;
+            let enc_threads = if q_blocks >= 2 && enc_madds >= (1 << 19) {
+                self.threads.min(q_blocks * l)
+            } else {
+                1
+            };
+            let gamma = &self.desc.gamma;
+            crate::util::threadpool::scoped_chunks(
+                enc_threads,
+                &mut xenc,
+                b,
+                |row, dst| {
+                    let i = row % l;
+                    let base = row - i;
+                    for j in 0..l {
+                        let g = gamma[i * l + j];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        let src = &xq[(base + j) * b..(base + j + 1) * b];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += g * s;
+                        }
                     }
-                    let src = &xq[(qb * l + j) * b..(qb * l + j + 1) * b];
-                    let dst = &mut xenc[dst_lo..dst_hi];
-                    for (d, &s) in dst.iter_mut().zip(src) {
-                        *d += g * s;
-                    }
-                }
-            }
+                },
+            );
         }
         let xenc = Tensor::new(&[w.n(), b], xenc);
 
@@ -372,6 +390,29 @@ mod tests {
         let y1 = s1.forward_signed(&w, &x);
         let y8 = s8.forward_signed(&w, &x);
         assert_eq!(y1.data, y8.data, "threaded crossbar must be bit-identical");
+    }
+
+    #[test]
+    fn threaded_gamma_encode_matches_serial_above_threshold() {
+        // q_blocks·l·l·b = 16·16·2048 = 512k madds clears the 1<<19
+        // threading threshold of the Γ-mixing encode loop; a non-trivial
+        // Γ exercises the accumulation order
+        let mut d = ChipDescription::ideal(4);
+        d.gamma = vec![
+            0.90, 0.05, 0.03, 0.02, //
+            0.04, 0.91, 0.03, 0.02, //
+            0.02, 0.04, 0.92, 0.02, //
+            0.01, 0.03, 0.04, 0.92,
+        ];
+        d.x_bits = 4;
+        let w = rand_bcm(2, 16, 4, 41);
+        let x = rand_x(64, 2048, 42);
+        let mut s1 = ChipSim::deterministic(d.clone());
+        let mut s8 = ChipSim::deterministic(d);
+        s8.threads = 8;
+        let y1 = s1.forward(&w, &x);
+        let y8 = s8.forward(&w, &x);
+        assert_eq!(y1.data, y8.data, "threaded Γ encode must be bit-identical");
     }
 
     #[test]

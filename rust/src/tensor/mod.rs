@@ -374,6 +374,212 @@ pub fn batchnorm_batch(
     Tensor::new(&[b, c, h, w], out)
 }
 
+// ---------------------------------------------------------------------------
+// backward kernels (train path; see DESIGN.md §train)
+// ---------------------------------------------------------------------------
+
+/// Adjoint of [`im2col_same_batch`]: scatter-add a (C·k·k, B·H·W) column
+/// gradient back into the (B, C, H, W) image batch it was gathered from.
+/// Patch positions that read the zero padding simply drop their gradient
+/// (the padding has no parameters).
+pub fn col2im_same_batch(
+    cols: &Tensor,
+    bsz: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+) -> Tensor {
+    assert_eq!(cols.rank(), 2);
+    let rows = c * k * k;
+    let hw = h * w;
+    let total = bsz * hw;
+    assert_eq!(cols.shape[0], rows, "col2im row count");
+    assert_eq!(cols.shape[1], total, "col2im column count");
+    let pad = (k / 2) as isize;
+    let mut out = Tensor::zeros(&[bsz, c, h, w]);
+    for ci in 0..c {
+        for di in 0..k {
+            for dj in 0..k {
+                let r = ci * k * k + di * k + dj;
+                for bi in 0..bsz {
+                    for i in 0..h {
+                        let y = i as isize + di as isize - pad;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        for j in 0..w {
+                            let x = j as isize + dj as isize - pad;
+                            if x < 0 || x >= w as isize {
+                                continue;
+                            }
+                            out.data[((bi * c + ci) * h + y as usize) * w
+                                + x as usize] +=
+                                cols.data[r * total + bi * hw + i * w + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`maxpool_batch`] that also records the flat input index of every
+/// window's maximum (first occurrence wins on ties), so the backward pass
+/// can scatter gradients to exactly the winning elements.
+pub fn maxpool_batch_argmax(x: &Tensor, p: usize) -> (Tensor, Vec<u32>) {
+    assert_eq!(x.rank(), 4);
+    assert!(x.numel() < u32::MAX as usize, "argmax indices overflow u32");
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / p, w / p);
+    let mut out = vec![f32::NEG_INFINITY; b * c * oh * ow];
+    let mut arg = vec![0u32; b * c * oh * ow];
+    for ci in 0..b * c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                let mut mi = 0usize;
+                for di in 0..p {
+                    for dj in 0..p {
+                        let idx = ci * h * w + (i * p + di) * w + j * p + dj;
+                        let v = x.data[idx];
+                        if v > m {
+                            m = v;
+                            mi = idx;
+                        }
+                    }
+                }
+                out[ci * oh * ow + i * ow + j] = m;
+                arg[ci * oh * ow + i * ow + j] = mi as u32;
+            }
+        }
+    }
+    (Tensor::new(&[b, c, oh, ow], out), arg)
+}
+
+/// Backward of max pooling: route each output gradient to the input
+/// element that won its window (`argmax` from [`maxpool_batch_argmax`]).
+pub fn maxpool_batch_backward(
+    dy: &Tensor,
+    argmax: &[u32],
+    in_shape: &[usize],
+) -> Tensor {
+    assert_eq!(dy.numel(), argmax.len());
+    let mut dx = Tensor::zeros(in_shape);
+    for (g, &idx) in dy.data.iter().zip(argmax) {
+        dx.data[idx as usize] += g;
+    }
+    dx
+}
+
+/// Per-channel batch statistics captured by the training-mode batch-norm
+/// forward, reused by [`batchnorm_backward`].
+#[derive(Clone, Debug)]
+pub struct BnBatchStats {
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+/// Training-mode batch-norm on (B, C, H, W): normalize with the *batch*
+/// statistics (biased variance over the B·H·W elements of each channel,
+/// matching `jnp.var` in `model.apply`).  Returns the output, the
+/// normalized activations x̂ (cached for the backward pass) and the batch
+/// statistics.
+pub fn batchnorm_train(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) -> (Tensor, Tensor, BnBatchStats) {
+    assert_eq!(x.rank(), 4);
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert!(gamma.len() == c && beta.len() == c);
+    let hw = h * w;
+    let n = (b * hw) as f64;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    let mut inv_std = vec![0.0f32; c];
+    for ci in 0..c {
+        let mut s = 0.0f64;
+        for bi in 0..b {
+            for v in &x.data[(bi * c + ci) * hw..(bi * c + ci + 1) * hw] {
+                s += *v as f64;
+            }
+        }
+        let m = s / n;
+        let mut s2 = 0.0f64;
+        for bi in 0..b {
+            for v in &x.data[(bi * c + ci) * hw..(bi * c + ci + 1) * hw] {
+                let d = *v as f64 - m;
+                s2 += d * d;
+            }
+        }
+        mean[ci] = m as f32;
+        var[ci] = (s2 / n) as f32;
+        inv_std[ci] = 1.0 / (var[ci] + eps).sqrt();
+    }
+    let mut xhat = Tensor::zeros(&x.shape);
+    let mut y = Tensor::zeros(&x.shape);
+    for bi in 0..b {
+        for ci in 0..c {
+            let off = (bi * c + ci) * hw;
+            for i in 0..hw {
+                let xh = (x.data[off + i] - mean[ci]) * inv_std[ci];
+                xhat.data[off + i] = xh;
+                y.data[off + i] = xh * gamma[ci] + beta[ci];
+            }
+        }
+    }
+    (y, xhat, BnBatchStats { mean, var, inv_std })
+}
+
+/// Backward of [`batchnorm_train`]: returns (dx, dgamma, dbeta).
+///
+/// Standard batch-norm gradient with the batch statistics in the graph:
+/// `dx = γ·inv_std/N · (N·dy − Σdy − x̂·Σ(dy·x̂))` per channel.
+pub fn batchnorm_backward(
+    dy: &Tensor,
+    xhat: &Tensor,
+    gamma: &[f32],
+    stats: &BnBatchStats,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
+    assert_eq!(dy.shape, xhat.shape);
+    let (b, c, h, w) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let hw = h * w;
+    let n = (b * hw) as f32;
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    for ci in 0..c {
+        let mut sg = 0.0f64;
+        let mut sb = 0.0f64;
+        for bi in 0..b {
+            let off = (bi * c + ci) * hw;
+            for i in 0..hw {
+                sg += (dy.data[off + i] * xhat.data[off + i]) as f64;
+                sb += dy.data[off + i] as f64;
+            }
+        }
+        dgamma[ci] = sg as f32;
+        dbeta[ci] = sb as f32;
+    }
+    let mut dx = Tensor::zeros(&dy.shape);
+    for bi in 0..b {
+        for ci in 0..c {
+            let off = (bi * c + ci) * hw;
+            let coef = gamma[ci] * stats.inv_std[ci] / n;
+            for i in 0..hw {
+                dx.data[off + i] = coef
+                    * (n * dy.data[off + i]
+                        - dbeta[ci]
+                        - xhat.data[off + i] * dgamma[ci]);
+            }
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
 /// Numerically-stable softmax over the last axis of a 1-D tensor.
 pub fn softmax(x: &[f32]) -> Vec<f32> {
     let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -531,6 +737,127 @@ mod tests {
         );
         assert_eq!(&y.data[..4], &single.data[..]);
         assert_eq!(&y.data[4..], &single.data[..]);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), C> == <x, col2im(C)> — the defining adjoint identity
+        let mut x = Tensor::zeros(&[2, 2, 5, 5]);
+        let mut cmat = Tensor::zeros(&[2 * 9, 2 * 25]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 31) % 17) as f32 * 0.1 - 0.8;
+        }
+        for (i, v) in cmat.data.iter_mut().enumerate() {
+            *v = ((i * 13) % 23) as f32 * 0.05 - 0.5;
+        }
+        let cols = im2col_same_batch(&x, 3);
+        let lhs: f64 = cols
+            .data
+            .iter()
+            .zip(&cmat.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let back = col2im_same_batch(&cmat, 2, 2, 5, 5, 3);
+        let rhs: f64 = x
+            .data
+            .iter()
+            .zip(&back.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!(
+            (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+            "{lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn maxpool_argmax_matches_plain_and_scatters_back() {
+        // well-separated values so the argmax is unambiguous
+        let mut x = Tensor::zeros(&[1, 2, 4, 4]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 7) % 32) as f32 * 0.25;
+        }
+        let (y, arg) = maxpool_batch_argmax(&x, 2);
+        assert_eq!(y.data, maxpool_batch(&x, 2).data);
+        // backward of a ones-gradient: each window's winner gets 1
+        let dy = Tensor::full(&y.shape, 1.0);
+        let dx = maxpool_batch_backward(&dy, &arg, &x.shape);
+        assert_eq!(dx.data.iter().sum::<f32>(), y.numel() as f32);
+        for (i, v) in dx.data.iter().enumerate() {
+            if *v != 0.0 {
+                assert!(arg.contains(&(i as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn batchnorm_train_normalizes_batch() {
+        let mut x = Tensor::zeros(&[2, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let (y, xhat, stats) = batchnorm_train(&x, &[1.0], &[0.0], 0.0);
+        assert!((stats.mean[0] - 3.5).abs() < 1e-5);
+        let s: f32 = y.data.iter().sum();
+        assert!(s.abs() < 1e-4, "normalized batch sums to 0, got {s}");
+        let v: f32 = xhat.data.iter().map(|a| a * a).sum::<f32>() / 8.0;
+        assert!((v - 1.0).abs() < 1e-4, "unit variance, got {v}");
+    }
+
+    #[test]
+    fn batchnorm_backward_matches_finite_differences() {
+        // per-element central differences of L = Σ y ⊙ R against the
+        // analytic dx / dgamma / dbeta
+        let (b, c, h, w) = (2usize, 2usize, 3usize, 3usize);
+        let mut x = Tensor::zeros(&[b, c, h, w]);
+        let mut r = Tensor::zeros(&[b, c, h, w]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 29) % 19) as f32 * 0.11 - 1.0;
+        }
+        for (i, v) in r.data.iter_mut().enumerate() {
+            *v = ((i * 17) % 13) as f32 * 0.13 - 0.8;
+        }
+        let gamma = vec![1.2, 0.7];
+        let beta = vec![0.1, -0.2];
+        let eps = 1e-5;
+        let loss = |xt: &Tensor, g: &[f32], bt: &[f32]| -> f64 {
+            let (y, _, _) = batchnorm_train(xt, g, bt, eps);
+            y.data
+                .iter()
+                .zip(&r.data)
+                .map(|(a, c)| (*a as f64) * (*c as f64))
+                .sum()
+        };
+        let (y, xhat, stats) = batchnorm_train(&x, &gamma, &beta, eps);
+        assert_eq!(y.shape, x.shape);
+        let (dx, dgamma, dbeta) = batchnorm_backward(&r, &xhat, &gamma, &stats);
+        let h_ = 1e-2f32;
+        let tol = |a: f32, n: f32| (a - n).abs() <= 1e-3 * a.abs().max(n.abs()).max(1.0);
+        for i in 0..x.numel() {
+            let mut xp = x.clone();
+            xp.data[i] += h_;
+            let mut xm = x.clone();
+            xm.data[i] -= h_;
+            let fd = ((loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta))
+                / (2.0 * h_ as f64)) as f32;
+            assert!(tol(dx.data[i], fd), "dx[{i}]: {} vs {fd}", dx.data[i]);
+        }
+        for ci in 0..c {
+            let mut gp = gamma.clone();
+            gp[ci] += h_;
+            let mut gm = gamma.clone();
+            gm[ci] -= h_;
+            let fd = ((loss(&x, &gp, &beta) - loss(&x, &gm, &beta))
+                / (2.0 * h_ as f64)) as f32;
+            assert!(tol(dgamma[ci], fd), "dgamma[{ci}]: {} vs {fd}", dgamma[ci]);
+            let mut bp = beta.clone();
+            bp[ci] += h_;
+            let mut bm = beta.clone();
+            bm[ci] -= h_;
+            let fd = ((loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm))
+                / (2.0 * h_ as f64)) as f32;
+            assert!(tol(dbeta[ci], fd), "dbeta[{ci}]: {} vs {fd}", dbeta[ci]);
+        }
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Hardware-aware training (HAT) subsystem — the paper's Fig. 1d loop,
+//! natively in rust (DESIGN.md §train).
+//!
+//! The compile side of the repo used to live exclusively in python
+//! (`compile/train.py`); this module closes the loop inside cargo:
+//!
+//! * [`TrainModel`] — the engine's StrC layer stack with trainable
+//!   compressed block-circulant weights, manual backprop, and FFT-domain
+//!   circulant gradients ([`crate::circulant::Bcm::backward`]);
+//! * [`TrainBackend::Chip`] — chip-in-the-loop training: the noisy
+//!   [`crate::simulator::ChipSim`] lookup path runs the forward while
+//!   gradients flow through the deterministic surrogate with
+//!   straight-through-estimator quantizer gradients;
+//! * [`Optimizer`] — SGD+momentum and Adam over the flat parameter slots;
+//! * [`fit`] / [`evaluate`] — minibatch loop over [`crate::data::datasets`]
+//!   splits with per-epoch shuffling;
+//! * [`TrainModel::save_artifacts`] — rust-written manifest + CPT1
+//!   weights that [`crate::onn::Engine`] and the serving benches load
+//!   directly (`make train` / `make train-smoke`).
+
+pub mod model;
+pub mod optim;
+
+pub use model::{ForwardPass, Grads, LayerGrad, TrainBackend, TrainModel};
+pub use optim::Optimizer;
+
+use crate::data::datasets::Split;
+use crate::tensor::{self, Tensor};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Mean softmax cross-entropy over (b, k) logits with integer labels;
+/// returns the loss and `dL/dlogits = (softmax − onehot)/b`.
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[u8]) -> (f32, Tensor) {
+    assert_eq!(logits.rank(), 2);
+    let (b, k) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let mut dl = Tensor::zeros(&[b, k]);
+    let mut loss = 0.0f64;
+    for bi in 0..b {
+        let row = &logits.data[bi * k..(bi + 1) * k];
+        let p = tensor::softmax(row);
+        let y = labels[bi] as usize;
+        loss -= (p[y].max(1e-12) as f64).ln();
+        for c in 0..k {
+            let onehot = if c == y { 1.0 } else { 0.0 };
+            dl.data[bi * k + c] = (p[c] - onehot) / b as f32;
+        }
+    }
+    ((loss / b as f64) as f32, dl)
+}
+
+/// Minibatch-loop knobs (learning rate lives in the [`Optimizer`]).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    /// stop after this many optimizer steps regardless of epochs
+    /// (0 = no cap) — the `make train-smoke` lever
+    pub max_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig { epochs: 8, batch: 16, max_steps: 0, seed: 0x51AC }
+    }
+}
+
+/// Gather `idx` rows of a split into a (b, c, h, w) batch + labels.
+pub fn gather_batch(split: &Split, idx: &[usize]) -> (Tensor, Vec<u8>) {
+    let per = split.c * split.h * split.w;
+    let mut data = Vec::with_capacity(idx.len() * per);
+    let mut labels = Vec::with_capacity(idx.len());
+    for &i in idx {
+        data.extend_from_slice(&split.images[i * per..(i + 1) * per]);
+        labels.push(split.labels[i]);
+    }
+    (
+        Tensor::new(&[idx.len(), split.c, split.h, split.w], data),
+        labels,
+    )
+}
+
+/// Run the minibatch training loop: shuffle each epoch
+/// ([`Rng::permutation`]), training-mode forward → cross-entropy →
+/// manual backward → optimizer step.  Returns the mean loss per epoch
+/// (the last entry may cover a partial epoch when `max_steps` hits).
+pub fn fit(
+    model: &mut TrainModel,
+    backend: &mut TrainBackend,
+    opt: &mut Optimizer,
+    split: &Split,
+    cfg: &TrainConfig,
+) -> Result<Vec<f32>> {
+    if cfg.batch == 0 || split.n < cfg.batch {
+        crate::bail!(
+            "batch size {} invalid for a {}-sample split",
+            cfg.batch,
+            split.n
+        );
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0x7A17_0001);
+    let steps_per_epoch = split.n / cfg.batch;
+    let mut remaining =
+        if cfg.max_steps == 0 { usize::MAX } else { cfg.max_steps };
+    let mut history = Vec::new();
+    for _ep in 0..cfg.epochs {
+        if remaining == 0 {
+            break;
+        }
+        let perm = rng.permutation(split.n);
+        let mut sum = 0.0f64;
+        let mut cnt = 0usize;
+        for s in 0..steps_per_epoch {
+            if remaining == 0 {
+                break;
+            }
+            let idx = &perm[s * cfg.batch..(s + 1) * cfg.batch];
+            let (xb, yb) = gather_batch(split, idx);
+            let pass = model.forward_train(&xb, backend)?;
+            let (loss, dlogits) = softmax_cross_entropy(&pass.logits, &yb);
+            let grads = model.backward(&pass, &dlogits)?;
+            model.apply_grads(&grads, opt);
+            sum += loss as f64;
+            cnt += 1;
+            remaining -= 1;
+        }
+        if cnt > 0 {
+            history.push((sum / cnt as f64) as f32);
+        }
+    }
+    Ok(history)
+}
+
+/// Top-1 accuracy of the model over a split (inference-mode forward).
+pub fn evaluate(
+    model: &TrainModel,
+    backend: &mut TrainBackend,
+    split: &Split,
+    batch: usize,
+) -> Result<f32> {
+    let batch = batch.max(1);
+    let mut correct = 0usize;
+    let mut s = 0usize;
+    while s < split.n {
+        let e = (s + batch).min(split.n);
+        let idx: Vec<usize> = (s..e).collect();
+        let (xb, yb) = gather_batch(split, &idx);
+        let logits = model.forward_eval(&xb, backend)?;
+        let k = logits.shape[1];
+        for (bi, &y) in yb.iter().enumerate() {
+            if tensor::argmax(&logits.data[bi * k..(bi + 1) * k]) == y as usize
+            {
+                correct += 1;
+            }
+        }
+        s = e;
+    }
+    Ok(correct as f32 / split.n.max(1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_entropy_uniform_logits_is_ln_k() {
+        let logits = Tensor::zeros(&[4, 3]);
+        let (loss, dl) = softmax_cross_entropy(&logits, &[0, 1, 2, 0]);
+        assert!((loss - 3.0f32.ln()).abs() < 1e-5, "got {loss}");
+        // gradient rows sum to zero and the label entry is negative
+        for bi in 0..4 {
+            let row = &dl.data[bi * 3..(bi + 1) * 3];
+            assert!(row.iter().sum::<f32>().abs() < 1e-6);
+        }
+        assert!(dl.data[0] < 0.0);
+    }
+
+    #[test]
+    fn cross_entropy_gradient_matches_finite_differences() {
+        let logits = Tensor::new(
+            &[2, 3],
+            vec![0.5, -1.0, 0.25, 2.0, 0.1, -0.6],
+        );
+        let labels = [2u8, 0];
+        let (_, dl) = softmax_cross_entropy(&logits, &labels);
+        let h = 1e-3f32;
+        for i in 0..logits.numel() {
+            let mut lp = logits.clone();
+            lp.data[i] += h;
+            let mut lm = logits.clone();
+            lm.data[i] -= h;
+            let (fp, _) = softmax_cross_entropy(&lp, &labels);
+            let (fm, _) = softmax_cross_entropy(&lm, &labels);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (dl.data[i] - fd).abs() < 1e-3,
+                "dlogits[{i}]: {} vs {fd}",
+                dl.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gather_batch_picks_rows() {
+        let split = crate::data::datasets::synth_shapes(8, 3);
+        let (xb, yb) = gather_batch(&split, &[5, 0, 2]);
+        assert_eq!(xb.shape, vec![3, 1, 16, 16]);
+        assert_eq!(yb, vec![split.labels[5], split.labels[0], split.labels[2]]);
+        let per = 16 * 16;
+        assert_eq!(&xb.data[..per], &split.images[5 * per..6 * per]);
+    }
+}

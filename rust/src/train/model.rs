@@ -1,0 +1,919 @@
+//! Trainable StrC-ONN: the inference engine's layer stack with explicit
+//! parameter storage, per-layer forward caches and manual backprop.
+//!
+//! Two execution backends mirror the python DPE modes (DESIGN.md §train):
+//!
+//! * [`TrainBackend::Digital`] — deterministic fp32 circulant math, i.e.
+//!   plain digital circulant training (paper Fig. 4e config 2);
+//! * [`TrainBackend::Chip`] — **chip-in-the-loop**: the forward pass of
+//!   every conv/FC layer runs the (noisy) [`ChipSim`] lookup path —
+//!   sign-split positive-only passes, DAC/ADC quantization, Γ crosstalk,
+//!   responsivity tilt, dark current, shot/thermal noise — while the
+//!   backward pass flows through the deterministic surrogate
+//!   `y = s·B(clamp(x/s, 0, 1))` with straight-through-estimator
+//!   gradients across the quantizers ([`Quantizer::ste_grad`]) and the
+//!   clamp.  Noise and quantization residue perturb the forward values
+//!   only, exactly like `jax.lax.stop_gradient` in `python/compile/dpe.py`.
+//!
+//! Block-circulant gradients never leave the compressed domain: the
+//! weight and data adjoints are [`Bcm::backward`] — the FFT-domain
+//! adjoint of `Bcm::mmm_fft` whenever the block order is a power of two.
+
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::circulant::Bcm;
+use crate::data::Bundle;
+use crate::onn::engine::{add_channel_bias_batch, cols_to_images, pad_rows};
+use crate::onn::manifest::{LayerKind, LayerSpec, Manifest};
+use crate::quant::Quantizer;
+use crate::simulator::ChipSim;
+use crate::tensor::{self, BnBatchStats, Tensor};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// Trainable conv/FC layer: full-range compressed BCM + bias.  The BCM is
+/// padded to multiples of the block order; `cout`/`n_in` are the logical
+/// (unpadded) dimensions.
+#[derive(Clone, Debug)]
+pub struct CirLinear {
+    pub bcm: Bcm,
+    pub bias: Vec<f32>,
+    pub cout: usize,
+    pub n_in: usize,
+}
+
+/// Batch-norm affine parameters + running statistics.
+#[derive(Clone, Debug)]
+pub struct BnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub enum TrainLayer {
+    Linear(CirLinear),
+    Bn(BnParams),
+    Stateless,
+}
+
+/// Execution backend for the training forward pass.
+pub enum TrainBackend {
+    /// deterministic fp32 circulant math
+    Digital,
+    /// chip-in-the-loop: the [`ChipSim`] (noisy, if `sim.noisy`) runs
+    /// every linear layer's forward; gradients use the deterministic
+    /// surrogate with STE through clamp + quantizer
+    Chip(ChipSim),
+}
+
+/// Batch-major activation (same convention as the engine).
+enum Act {
+    /// (b, c, h, w)
+    Image(Tensor),
+    /// (b, n)
+    Matrix(Tensor),
+}
+
+impl Act {
+    fn image(self) -> Result<Tensor> {
+        match self {
+            Act::Image(t) => Ok(t),
+            Act::Matrix(_) => bail!("expected image activation"),
+        }
+    }
+
+    fn matrix(self) -> Result<Tensor> {
+        match self {
+            Act::Matrix(t) => Ok(t),
+            Act::Image(t) => {
+                let (b, per) = (t.shape[0], t.numel() / t.shape[0]);
+                Ok(t.reshape(&[b, per]))
+            }
+        }
+    }
+}
+
+/// Per-layer forward cache consumed by [`TrainModel::backward`].
+enum Cache {
+    Linear {
+        /// the operand actually streamed through the BCM (padded rows;
+        /// device-domain clamped+quantized in chip mode), for the weight
+        /// adjoint
+        x_fed: Tensor,
+        /// clamp/STE gradient mask in the *input activation* layout
+        /// (None on the digital path: gradient passes everywhere)
+        mask: Option<Vec<f32>>,
+        /// act_scale applied in chip mode (1.0 digital)
+        scale: f32,
+        /// conv geometry (b, h, w); None for fc
+        conv: Option<(usize, usize, usize)>,
+        /// shape of the layer's input activation
+        in_shape: Vec<usize>,
+    },
+    Bn {
+        xhat: Tensor,
+        stats: BnBatchStats,
+    },
+    Relu {
+        mask: Vec<f32>,
+    },
+    Pool {
+        argmax: Vec<u32>,
+        in_shape: Vec<usize>,
+    },
+    Flatten {
+        in_shape: Vec<usize>,
+    },
+    None,
+}
+
+/// Everything the backward pass needs from one training forward.
+pub struct ForwardPass {
+    /// (b, classes) logits
+    pub logits: Tensor,
+    caches: Vec<Cache>,
+}
+
+/// Parameter gradients, aligned with the layer stack.
+pub enum LayerGrad {
+    Linear { dw: Vec<f32>, db: Vec<f32> },
+    Bn { dgamma: Vec<f32>, dbeta: Vec<f32> },
+    None,
+}
+
+pub struct Grads {
+    pub per_layer: Vec<LayerGrad>,
+}
+
+/// A trainable StrC-ONN built from (and exported back to) the same
+/// manifest + CPT1 contract the serving engine consumes.
+#[derive(Clone)]
+pub struct TrainModel {
+    pub manifest: Manifest,
+    pub layers: Vec<TrainLayer>,
+    /// worker threads for the direct BCM multiplies (digital path)
+    pub threads: usize,
+}
+
+impl TrainModel {
+    /// Kaiming-init a trainable model from a manifest (mirror of python
+    /// `model.init_params`): compressed weights ~ N(0, 2/n_in), zero
+    /// biases, identity batch-norm.  Only the circ arch is trainable.
+    pub fn init(manifest: Manifest, seed: u64) -> Result<TrainModel> {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for spec in &manifest.layers {
+            layers.push(match spec.kind {
+                LayerKind::Conv | LayerKind::Fc => {
+                    if spec.arch != "circ" {
+                        bail!(
+                            "trainer supports the circ arch only (got '{}')",
+                            spec.arch
+                        );
+                    }
+                    // padding rule shared with the engine loader
+                    // ([`LayerSpec::bcm_dims`]), so exported weight
+                    // shapes always match what `Engine::from_parts`
+                    // expects
+                    let n_in = spec.n_in();
+                    let (p, q) = spec.bcm_dims();
+                    let std = (2.0 / n_in as f32).sqrt();
+                    let mut w = vec![0.0f32; p * q * spec.l];
+                    rng.fill_normal(&mut w, std);
+                    TrainLayer::Linear(CirLinear {
+                        bcm: Bcm::new(p, q, spec.l, w),
+                        bias: vec![0.0; spec.cout],
+                        cout: spec.cout,
+                        n_in,
+                    })
+                }
+                LayerKind::Bn => TrainLayer::Bn(BnParams {
+                    gamma: vec![1.0; spec.cin],
+                    beta: vec![0.0; spec.cin],
+                    mean: vec![0.0; spec.cin],
+                    var: vec![1.0; spec.cin],
+                }),
+                _ => TrainLayer::Stateless,
+            });
+        }
+        Ok(TrainModel {
+            manifest,
+            layers,
+            threads: ThreadPool::default_size(),
+        })
+    }
+
+    /// Training-mode forward over an image batch (b, c, h, w): BN uses
+    /// batch statistics (running stats EMA-updated in place with momentum
+    /// 0.9, as python `model.apply`), every nonlinearity caches what the
+    /// manual backward needs.
+    pub fn forward_train(
+        &mut self,
+        imgs: &Tensor,
+        backend: &mut TrainBackend,
+    ) -> Result<ForwardPass> {
+        let (logits, caches, bn_stats) =
+            self.forward_inner(imgs, backend, true, true)?;
+        for (layer, st) in self.layers.iter_mut().zip(bn_stats) {
+            if let (TrainLayer::Bn(bn), Some((mean, var))) = (layer, st) {
+                for c in 0..bn.mean.len() {
+                    bn.mean[c] = 0.9 * bn.mean[c] + 0.1 * mean[c];
+                    bn.var[c] = 0.9 * bn.var[c] + 0.1 * var[c];
+                }
+            }
+        }
+        Ok(ForwardPass { logits, caches })
+    }
+
+    /// Inference-mode forward: running BN statistics, no caches, no state
+    /// mutation.  Returns (b, classes) logits.
+    pub fn forward_eval(
+        &self,
+        imgs: &Tensor,
+        backend: &mut TrainBackend,
+    ) -> Result<Tensor> {
+        let (logits, _, _) = self.forward_inner(imgs, backend, false, false)?;
+        Ok(logits)
+    }
+
+    /// Recompute the BN running stats exactly with the current weights by
+    /// averaging per-batch statistics over `batches` (python
+    /// `train.recalibrate_bn`): after few optimizer steps the momentum-0.9
+    /// EMA is still dominated by its 0/1 init, wrecking eval accuracy.
+    /// Re-run whenever the execution path changes (e.g. evaluating
+    /// digitally-trained weights on the chip) — the paper's one-shot
+    /// calibration.
+    pub fn recalibrate_bn(
+        &mut self,
+        batches: &[Tensor],
+        backend: &mut TrainBackend,
+    ) -> Result<()> {
+        let mut acc: Vec<Option<(Vec<f32>, Vec<f32>)>> =
+            (0..self.layers.len()).map(|_| None).collect();
+        for xb in batches {
+            // batch-stats mode without backward caches: calibration only
+            // consumes the per-layer BN statistics
+            let (_, _, stats) = self.forward_inner(xb, backend, true, false)?;
+            for (slot, st) in acc.iter_mut().zip(stats) {
+                let (m, v) = match st {
+                    Some(mv) => mv,
+                    None => continue,
+                };
+                match slot.take() {
+                    None => *slot = Some((m, v)),
+                    Some((mut am, mut av)) => {
+                        for (a, b) in am.iter_mut().zip(&m) {
+                            *a += *b;
+                        }
+                        for (a, b) in av.iter_mut().zip(&v) {
+                            *a += *b;
+                        }
+                        *slot = Some((am, av));
+                    }
+                }
+            }
+        }
+        let nb = batches.len().max(1) as f32;
+        for (layer, st) in self.layers.iter_mut().zip(acc) {
+            if let (TrainLayer::Bn(bn), Some((m, v))) = (layer, st) {
+                for c in 0..bn.mean.len() {
+                    bn.mean[c] = m[c] / nb;
+                    bn.var[c] = v[c] / nb;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `train` selects BN batch-statistics mode; `want_caches` controls
+    /// whether the per-layer backward caches are retained (recalibration
+    /// runs train-mode statistics without them).
+    #[allow(clippy::type_complexity)]
+    fn forward_inner(
+        &self,
+        imgs: &Tensor,
+        backend: &mut TrainBackend,
+        train: bool,
+        want_caches: bool,
+    ) -> Result<(Tensor, Vec<Cache>, Vec<Option<(Vec<f32>, Vec<f32>)>>)> {
+        if imgs.rank() != 4 {
+            bail!("expected a (b, c, h, w) image batch, got {:?}", imgs.shape);
+        }
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut bn_stats = Vec::with_capacity(self.layers.len());
+        let mut act = Act::Image(imgs.clone());
+        for (i, spec) in self.manifest.layers.iter().enumerate() {
+            let (next, cache, stats) =
+                self.run_layer(i, spec, act, backend, train, want_caches)?;
+            act = next;
+            caches.push(cache);
+            bn_stats.push(stats);
+        }
+        match act {
+            Act::Matrix(t) => Ok((t, caches, bn_stats)),
+            Act::Image(_) => bail!("network did not end in a vector"),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn run_layer(
+        &self,
+        idx: usize,
+        spec: &LayerSpec,
+        act: Act,
+        backend: &mut TrainBackend,
+        train: bool,
+        want_caches: bool,
+    ) -> Result<(Act, Cache, Option<(Vec<f32>, Vec<f32>)>)> {
+        let out = match (&self.layers[idx], spec.kind) {
+            (TrainLayer::Linear(lin), LayerKind::Conv) => {
+                let imgs = act.image()?;
+                let in_shape = imgs.shape.clone();
+                let (b, h, w) = (in_shape[0], in_shape[2], in_shape[3]);
+                let (y, x_fed, mask, scale) =
+                    linear_multiply(lin, spec, &imgs, true, backend, self.threads);
+                let out = cols_to_images(&y, b, lin.cout, h, w);
+                let out = add_channel_bias_batch(out, &lin.bias);
+                let cache = if want_caches {
+                    Cache::Linear {
+                        x_fed,
+                        mask,
+                        scale,
+                        conv: Some((b, h, w)),
+                        in_shape,
+                    }
+                } else {
+                    Cache::None
+                };
+                (Act::Image(out), cache, None)
+            }
+            (TrainLayer::Linear(lin), LayerKind::Fc) => {
+                let x = act.matrix()?;
+                let in_shape = x.shape.clone();
+                let b = in_shape[0];
+                if in_shape[1] != lin.n_in {
+                    bail!(
+                        "layer {idx}: fc input width {} != manifest cin {}",
+                        in_shape[1],
+                        lin.n_in
+                    );
+                }
+                let (y, x_fed, mask, scale) =
+                    linear_multiply(lin, spec, &x, false, backend, self.threads);
+                let mut out = Tensor::zeros(&[b, lin.cout]);
+                for bi in 0..b {
+                    for r in 0..lin.cout {
+                        out.data[bi * lin.cout + r] =
+                            y.at2(r, bi) + lin.bias[r];
+                    }
+                }
+                let cache = if want_caches {
+                    Cache::Linear { x_fed, mask, scale, conv: None, in_shape }
+                } else {
+                    Cache::None
+                };
+                (Act::Matrix(out), cache, None)
+            }
+            (TrainLayer::Bn(bn), LayerKind::Bn) => {
+                let x = act.image()?;
+                if train {
+                    let (y, xhat, stats) =
+                        tensor::batchnorm_train(&x, &bn.gamma, &bn.beta, 1e-5);
+                    let mv = (stats.mean.clone(), stats.var.clone());
+                    let cache = if want_caches {
+                        Cache::Bn { xhat, stats }
+                    } else {
+                        Cache::None
+                    };
+                    (Act::Image(y), cache, Some(mv))
+                } else {
+                    let y = tensor::batchnorm_batch(
+                        &x, &bn.mean, &bn.var, &bn.gamma, &bn.beta, 1e-5,
+                    );
+                    (Act::Image(y), Cache::None, None)
+                }
+            }
+            (_, LayerKind::Relu) => {
+                let (t, is_img) = match act {
+                    Act::Image(t) => (t, true),
+                    Act::Matrix(t) => (t, false),
+                };
+                let y = t.relu();
+                let cache = if want_caches {
+                    Cache::Relu {
+                        mask: t
+                            .data
+                            .iter()
+                            .map(|&v| if v > 0.0 { 1.0 } else { 0.0 })
+                            .collect(),
+                    }
+                } else {
+                    Cache::None
+                };
+                let next = if is_img { Act::Image(y) } else { Act::Matrix(y) };
+                (next, cache, None)
+            }
+            (_, LayerKind::Pool) => {
+                let x = act.image()?;
+                if want_caches {
+                    let (y, argmax) =
+                        tensor::maxpool_batch_argmax(&x, spec.pool);
+                    let cache =
+                        Cache::Pool { argmax, in_shape: x.shape.clone() };
+                    (Act::Image(y), cache, None)
+                } else {
+                    let y = tensor::maxpool_batch(&x, spec.pool);
+                    (Act::Image(y), Cache::None, None)
+                }
+            }
+            (_, LayerKind::Flatten) => {
+                let t = act.image()?;
+                let in_shape = t.shape.clone();
+                let (b, per) = (t.shape[0], t.numel() / t.shape[0]);
+                let cache = if want_caches {
+                    Cache::Flatten { in_shape }
+                } else {
+                    Cache::None
+                };
+                (Act::Matrix(t.reshape(&[b, per])), cache, None)
+            }
+            (st, k) => bail!(
+                "layer {idx}: state/kind mismatch ({k:?} vs {})",
+                match st {
+                    TrainLayer::Linear(_) => "linear",
+                    TrainLayer::Bn(_) => "bn",
+                    TrainLayer::Stateless => "stateless",
+                }
+            ),
+        };
+        Ok(out)
+    }
+
+    /// Manual backprop through the cached forward pass.  `dlogits` is the
+    /// (b, classes) loss gradient; returns per-layer parameter gradients.
+    pub fn backward(
+        &self,
+        pass: &ForwardPass,
+        dlogits: &Tensor,
+    ) -> Result<Grads> {
+        let n = self.layers.len();
+        let mut per_layer: Vec<LayerGrad> =
+            (0..n).map(|_| LayerGrad::None).collect();
+        let mut grad = Act::Matrix(dlogits.clone());
+        for i in (0..n).rev() {
+            let spec = &self.manifest.layers[i];
+            grad = match (&self.layers[i], &pass.caches[i]) {
+                (
+                    TrainLayer::Linear(lin),
+                    Cache::Linear { x_fed, mask, scale, conv, in_shape },
+                ) => {
+                    let (dy, db, fc_batch) = match *conv {
+                        Some((b, h, w)) => {
+                            let dimg = grad.image()?;
+                            let hw = h * w;
+                            let cols = b * hw;
+                            // gather (b, cout, h, w) upstream grads into the
+                            // padded (m_pad, b·h·w) column layout
+                            let mut dy =
+                                Tensor::zeros(&[lin.bcm.m(), cols]);
+                            for bi in 0..b {
+                                for ch in 0..lin.cout {
+                                    let src = &dimg.data[(bi * lin.cout + ch)
+                                        * hw
+                                        ..(bi * lin.cout + ch + 1) * hw];
+                                    dy.data[ch * cols + bi * hw
+                                        ..ch * cols + (bi + 1) * hw]
+                                        .copy_from_slice(src);
+                                }
+                            }
+                            let mut db = vec![0.0f32; lin.cout];
+                            for (ch, dv) in db.iter_mut().enumerate() {
+                                *dv = dy.data[ch * cols..(ch + 1) * cols]
+                                    .iter()
+                                    .sum();
+                            }
+                            (dy, db, 0usize)
+                        }
+                        None => {
+                            let dmat = grad.matrix()?;
+                            let b = dmat.shape[0];
+                            let mut dy = Tensor::zeros(&[lin.bcm.m(), b]);
+                            let mut db = vec![0.0f32; lin.cout];
+                            for bi in 0..b {
+                                for r in 0..lin.cout {
+                                    let g = dmat.at2(bi, r);
+                                    dy.data[r * b + bi] = g;
+                                    db[r] += g;
+                                }
+                            }
+                            (dy, db, b)
+                        }
+                    };
+                    // FFT-domain (or direct) adjoint of the BCM multiply;
+                    // in chip mode dw picks up the act-scale factor, dx
+                    // does not (the s and 1/s of the device encode cancel)
+                    let (mut dw, dxp) = lin.bcm.backward(x_fed, &dy);
+                    if *scale != 1.0 {
+                        for v in dw.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
+                    per_layer[i] = LayerGrad::Linear { dw, db };
+                    if i == 0 {
+                        // the first layer's input gradient has no
+                        // consumer: skip the col2im / transpose-gather
+                        // and mask application
+                        Act::Matrix(Tensor::zeros(&[0, 0]))
+                    } else {
+                        let mut dx = match *conv {
+                            Some((b, h, w)) => {
+                                let cols = b * h * w;
+                                let dxcols = Tensor::new(
+                                    &[lin.n_in, cols],
+                                    dxp.data[..lin.n_in * cols].to_vec(),
+                                );
+                                tensor::col2im_same_batch(
+                                    &dxcols, b, in_shape[1], h, w, spec.k,
+                                )
+                            }
+                            None => {
+                                let b = fc_batch;
+                                let mut dx = Tensor::zeros(&[b, lin.n_in]);
+                                for bi in 0..b {
+                                    for c in 0..lin.n_in {
+                                        dx.data[bi * lin.n_in + c] =
+                                            dxp.at2(c, bi);
+                                    }
+                                }
+                                dx
+                            }
+                        };
+                        if let Some(m) = mask {
+                            for (v, mv) in dx.data.iter_mut().zip(m) {
+                                *v *= mv;
+                            }
+                        }
+                        if conv.is_some() {
+                            Act::Image(dx)
+                        } else {
+                            Act::Matrix(dx)
+                        }
+                    }
+                }
+                (TrainLayer::Bn(bn), Cache::Bn { xhat, stats }) => {
+                    let dy = grad.image()?;
+                    let (dx, dgamma, dbeta) =
+                        tensor::batchnorm_backward(&dy, xhat, &bn.gamma, stats);
+                    per_layer[i] = LayerGrad::Bn { dgamma, dbeta };
+                    Act::Image(dx)
+                }
+                (_, Cache::Relu { mask }) => match grad {
+                    Act::Image(mut t) => {
+                        for (v, m) in t.data.iter_mut().zip(mask) {
+                            *v *= m;
+                        }
+                        Act::Image(t)
+                    }
+                    Act::Matrix(mut t) => {
+                        for (v, m) in t.data.iter_mut().zip(mask) {
+                            *v *= m;
+                        }
+                        Act::Matrix(t)
+                    }
+                },
+                (_, Cache::Pool { argmax, in_shape }) => {
+                    let dy = grad.image()?;
+                    Act::Image(tensor::maxpool_batch_backward(
+                        &dy, argmax, in_shape,
+                    ))
+                }
+                (_, Cache::Flatten { in_shape }) => {
+                    let dy = grad.matrix()?;
+                    Act::Image(dy.reshape(in_shape))
+                }
+                (_, Cache::None) => bail!(
+                    "layer {i}: no cache — backward() needs a \
+                     forward_train() pass"
+                ),
+                _ => bail!("layer {i}: cache/state mismatch in backward"),
+            };
+        }
+        Ok(Grads { per_layer })
+    }
+
+    /// Apply one optimizer step to every trainable tensor; the slot order
+    /// (layer order, weight-then-bias / gamma-then-beta) is stable across
+    /// steps, which is what keys the optimizer's per-slot state.
+    pub fn apply_grads(
+        &mut self,
+        grads: &Grads,
+        opt: &mut super::optim::Optimizer,
+    ) {
+        opt.begin_step();
+        let mut slot = 0usize;
+        for (layer, g) in self.layers.iter_mut().zip(&grads.per_layer) {
+            match (layer, g) {
+                (TrainLayer::Linear(lin), LayerGrad::Linear { dw, db }) => {
+                    opt.step(slot, &mut lin.bcm.w, dw);
+                    opt.step(slot + 1, &mut lin.bias, db);
+                    slot += 2;
+                }
+                (TrainLayer::Bn(bn), LayerGrad::Bn { dgamma, dbeta }) => {
+                    opt.step(slot, &mut bn.gamma, dgamma);
+                    opt.step(slot + 1, &mut bn.beta, dbeta);
+                    slot += 2;
+                }
+                (TrainLayer::Linear(_), _) | (TrainLayer::Bn(_), _) => {
+                    // parameterized layer without a gradient this step
+                    // (shouldn't happen from backward()); keep slots stable
+                    slot += 2;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Flatten params/state into the CPT1 names [`crate::onn::Engine`]
+    /// loads (mirror of python `export.model_tensors`).
+    pub fn export_bundle(&self) -> Bundle {
+        let mut bundle = Bundle::default();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let name = format!("layer{i}");
+            match layer {
+                TrainLayer::Linear(lin) => {
+                    bundle.insert_f32(
+                        &format!("{name}.w"),
+                        &[lin.bcm.p, lin.bcm.q, lin.bcm.l],
+                        lin.bcm.w.clone(),
+                    );
+                    bundle.insert_f32(
+                        &format!("{name}.b"),
+                        &[lin.bias.len()],
+                        lin.bias.clone(),
+                    );
+                }
+                TrainLayer::Bn(bn) => {
+                    bundle.insert_f32(
+                        &format!("{name}.gamma"),
+                        &[bn.gamma.len()],
+                        bn.gamma.clone(),
+                    );
+                    bundle.insert_f32(
+                        &format!("{name}.beta"),
+                        &[bn.beta.len()],
+                        bn.beta.clone(),
+                    );
+                    bundle.insert_f32(
+                        &format!("{name}.state.mean"),
+                        &[bn.mean.len()],
+                        bn.mean.clone(),
+                    );
+                    bundle.insert_f32(
+                        &format!("{name}.state.var"),
+                        &[bn.var.len()],
+                        bn.var.clone(),
+                    );
+                }
+                TrainLayer::Stateless => {}
+            }
+        }
+        bundle
+    }
+
+    /// Write the serving artifacts — `<dir>/models/<name>.json` manifest +
+    /// `<dir>/models/<name>_dpe.cpt` CPT1 weights — exactly where
+    /// `compile.train` puts them, so the engine, serving benches and
+    /// examples load rust-trained models unchanged.  Returns the two paths.
+    pub fn save_artifacts(
+        &self,
+        dir: &Path,
+        name: &str,
+    ) -> Result<(PathBuf, PathBuf)> {
+        let mdir = dir.join("models");
+        let mpath = mdir.join(format!("{name}.json"));
+        let wpath = mdir.join(format!("{name}_dpe.cpt"));
+        self.manifest.save(&mpath)?;
+        self.export_bundle().save(&wpath)?;
+        Ok((mpath, wpath))
+    }
+}
+
+/// One BCM multiply on the chosen backend over the layer's (padded)
+/// column-major operand block.  Returns `(y, x_fed, mask, scale)`:
+///
+/// * digital — `y = B·x` via the threaded direct kernel, no clamp;
+/// * chip — device-domain encode `xd = clamp(x/s, 0, 1)`, noisy
+///   sign-split lookup-mode forward, rescale by `s`; `x_fed` caches the
+///   *quantized* device operand (what the chip actually multiplied, up to
+///   noise) and `mask` the inclusive clamp/STE gradient gate in the input
+///   activation's layout.
+fn linear_multiply(
+    lin: &CirLinear,
+    spec: &LayerSpec,
+    x: &Tensor,
+    is_conv: bool,
+    backend: &mut TrainBackend,
+    threads: usize,
+) -> (Tensor, Tensor, Option<Vec<f32>>, f32) {
+    let to_cols = |t: &Tensor| -> Tensor {
+        if is_conv {
+            tensor::im2col_same_batch(t, spec.k)
+        } else {
+            t.transpose2()
+        }
+    };
+    match backend {
+        TrainBackend::Digital => {
+            let xp = pad_rows(&to_cols(x), lin.bcm.n());
+            let y = lin.bcm.mmm(&xp, threads);
+            (y, xp, None, 1.0)
+        }
+        TrainBackend::Chip(sim) => {
+            let s = spec.act_scale;
+            let xq = Quantizer::new(sim.desc.x_bits);
+            let mask: Vec<f32> = x
+                .data
+                .iter()
+                .map(|&v| {
+                    // STE gate of the device encode clamp(x/s, 0, 1):
+                    // inclusive inside (jnp.clip convention), zero
+                    // outside.  [`Quantizer::ste_grad`] is the same rule
+                    // for the DAC's own [0, 1] range; pre-clamping the
+                    // operand into that range subsumes it here, including
+                    // for 0-bit (identity) quantizers.
+                    let t = v / s;
+                    if (0.0..=1.0).contains(&t) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let xd = x.map(|v| (v / s).clamp(0.0, 1.0));
+            let xp = pad_rows(&to_cols(&xd), lin.bcm.n());
+            // propagate the trainer's worker count into the sim's
+            // crossbar/encode kernels (bit-identical for any value)
+            sim.threads = threads;
+            let y = sim.forward_signed(&lin.bcm, &xp).scale(s);
+            (y, xp.map(|v| xq.q(v)), Some(mask), s)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::ChipDescription;
+
+    const TINY: &str = r#"{
+      "dataset": "synth_shapes", "classes": 3,
+      "layers": [
+        {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0},
+        {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
+         "arch": "circ", "l": 4, "act_scale": 4.0}
+      ]}"#;
+
+    fn tiny_model(seed: u64) -> TrainModel {
+        TrainModel::init(Manifest::parse(TINY).unwrap(), seed).unwrap()
+    }
+
+    fn batch(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut d = vec![0.0f32; n * 16 * 16];
+        rng.fill_uniform(&mut d);
+        Tensor::new(&[n, 1, 16, 16], d)
+    }
+
+    #[test]
+    fn init_pads_bcm_dims_to_block_order() {
+        let m = tiny_model(1);
+        match &m.layers[0] {
+            TrainLayer::Linear(lin) => {
+                // conv: cout 8 -> P=2; n_in 9 -> Q=3 (padded to 12)
+                assert_eq!((lin.bcm.p, lin.bcm.q, lin.bcm.l), (2, 3, 4));
+                assert_eq!((lin.cout, lin.n_in), (8, 9));
+            }
+            other => panic!("layer0 should be linear, got {other:?}"),
+        }
+        match &m.layers[5] {
+            TrainLayer::Linear(lin) => {
+                // fc: cout 3 -> P=1 (padded to 4); n_in 512 -> Q=128
+                assert_eq!((lin.bcm.p, lin.bcm.q, lin.bcm.l), (1, 128, 4));
+            }
+            other => panic!("layer5 should be linear, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forward_backward_shapes_and_grads() {
+        let mut m = tiny_model(2);
+        let xb = batch(3, 3);
+        let pass = m
+            .forward_train(&xb, &mut TrainBackend::Digital)
+            .unwrap();
+        assert_eq!(pass.logits.shape, vec![3, 3]);
+        assert!(pass.logits.data.iter().all(|v| v.is_finite()));
+        let (_, dl) = crate::train::softmax_cross_entropy(
+            &pass.logits,
+            &[0, 1, 2],
+        );
+        let grads = m.backward(&pass, &dl).unwrap();
+        // every parameterized layer produced finite gradients
+        for (layer, g) in m.layers.iter().zip(&grads.per_layer) {
+            match (layer, g) {
+                (TrainLayer::Linear(lin), LayerGrad::Linear { dw, db }) => {
+                    assert_eq!(dw.len(), lin.bcm.w.len());
+                    assert_eq!(db.len(), lin.bias.len());
+                    assert!(dw.iter().all(|v| v.is_finite()));
+                    assert!(dw.iter().any(|v| *v != 0.0), "dw all-zero");
+                }
+                (TrainLayer::Bn(bn), LayerGrad::Bn { dgamma, dbeta }) => {
+                    assert_eq!(dgamma.len(), bn.gamma.len());
+                    assert_eq!(dbeta.len(), bn.beta.len());
+                }
+                (TrainLayer::Stateless, LayerGrad::None) => {}
+                _ => panic!("layer/grad mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn chip_ideal_forward_matches_digital() {
+        // 0-bit quantizers + identity Γ + no noise: the chip path reduces
+        // to the clamp/rescale identity on in-range activations.  A large
+        // act_scale keeps every activation of the untrained net strictly
+        // inside the clamp window.
+        let txt = TINY.replace("4.0", "16.0");
+        let m = TrainModel::init(Manifest::parse(&txt).unwrap(), 4).unwrap();
+        let xb = batch(2, 5);
+        let y_dig = m
+            .forward_eval(&xb, &mut TrainBackend::Digital)
+            .unwrap();
+        let sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        let y_chip = m
+            .forward_eval(&xb, &mut TrainBackend::Chip(sim))
+            .unwrap();
+        // post-relu activations are in [0, act_scale) for this init, so
+        // only fp rounding of the encode/decode differs
+        for (a, b) in y_dig.data.iter().zip(&y_chip.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bn_running_stats_move_during_training() {
+        let mut m = tiny_model(6);
+        let before = match &m.layers[1] {
+            TrainLayer::Bn(bn) => bn.mean.clone(),
+            _ => unreachable!(),
+        };
+        let xb = batch(4, 7);
+        let _ = m.forward_train(&xb, &mut TrainBackend::Digital).unwrap();
+        let after = match &m.layers[1] {
+            TrainLayer::Bn(bn) => bn.mean.clone(),
+            _ => unreachable!(),
+        };
+        assert_ne!(before, after, "EMA must move");
+        // eval must not mutate
+        let _ = m.forward_eval(&xb, &mut TrainBackend::Digital).unwrap();
+        let after2 = match &m.layers[1] {
+            TrainLayer::Bn(bn) => bn.mean.clone(),
+            _ => unreachable!(),
+        };
+        assert_eq!(after, after2);
+    }
+
+    #[test]
+    fn export_bundle_carries_engine_names() {
+        let m = tiny_model(8);
+        let b = m.export_bundle();
+        for name in [
+            "layer0.w", "layer0.b", "layer1.gamma", "layer1.beta",
+            "layer1.state.mean", "layer1.state.var", "layer5.w", "layer5.b",
+        ] {
+            assert!(b.get(name).is_ok(), "missing {name}");
+        }
+        assert_eq!(b.get("layer0.w").unwrap().shape(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn gemm_arch_is_rejected() {
+        let txt = TINY.replace("\"circ\"", "\"gemm\"");
+        let res = TrainModel::init(Manifest::parse(&txt).unwrap(), 1);
+        assert!(res.is_err());
+    }
+}
+

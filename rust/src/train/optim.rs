@@ -1,0 +1,161 @@
+//! Optimizers over flat f32 parameter slices.
+//!
+//! The trainer walks its layers in a fixed order and hands each trainable
+//! tensor to the optimizer under a stable *slot* index
+//! ([`crate::train::TrainModel::apply_grads`]); per-slot state (momentum /
+//! Adam moments) is allocated lazily on first touch, so the optimizer
+//! needs no up-front registration pass.
+
+/// SGD + momentum or Adam (the hand-rolled Adam of `compile/train.py`).
+pub enum Optimizer {
+    Sgd {
+        lr: f32,
+        momentum: f32,
+        vel: Vec<Vec<f32>>,
+    },
+    Adam {
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        t: u32,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+}
+
+fn ensure(store: &mut Vec<Vec<f32>>, slot: usize, len: usize) {
+    while store.len() <= slot {
+        store.push(Vec::new());
+    }
+    if store[slot].len() != len {
+        store[slot] = vec![0.0; len];
+    }
+}
+
+impl Optimizer {
+    /// Plain SGD with heavy-ball momentum (`momentum = 0.0` is vanilla).
+    pub fn sgd(lr: f32, momentum: f32) -> Optimizer {
+        Optimizer::Sgd { lr, momentum, vel: Vec::new() }
+    }
+
+    /// Adam with the standard (β₁, β₂, ε) = (0.9, 0.999, 1e-8).
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Advance the shared step counter (Adam bias correction); call once
+    /// per optimizer step, before the per-slot updates.
+    pub fn begin_step(&mut self) {
+        if let Optimizer::Adam { t, .. } = self {
+            *t += 1;
+        }
+    }
+
+    /// Apply one update to the parameters of `slot` in place.
+    pub fn step(&mut self, slot: usize, p: &mut [f32], g: &[f32]) {
+        assert_eq!(p.len(), g.len(), "param/grad length at slot {slot}");
+        match self {
+            Optimizer::Sgd { lr, momentum, vel } => {
+                ensure(vel, slot, p.len());
+                let vs = &mut vel[slot];
+                for i in 0..p.len() {
+                    vs[i] = *momentum * vs[i] + g[i];
+                    p[i] -= *lr * vs[i];
+                }
+            }
+            Optimizer::Adam { lr, b1, b2, eps, t, m, v } => {
+                ensure(m, slot, p.len());
+                ensure(v, slot, p.len());
+                // robust to a missing begin_step(): never divide by 1-β⁰=0
+                let tt = (*t).max(1) as i32;
+                let bc1 = 1.0 - b1.powi(tt);
+                let bc2 = 1.0 - b2.powi(tt);
+                let ms = &mut m[slot];
+                let vs = &mut v[slot];
+                for i in 0..p.len() {
+                    ms[i] = *b1 * ms[i] + (1.0 - *b1) * g[i];
+                    vs[i] = *b2 * vs[i] + (1.0 - *b2) * g[i] * g[i];
+                    let mh = ms[i] / bc1;
+                    let vh = vs[i] / bc2;
+                    p[i] -= *lr * mh / (vh.sqrt() + *eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_matches_hand_rolled_update() {
+        let mut opt = Optimizer::sgd(0.1, 0.9);
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.5f32, -1.0];
+        opt.begin_step();
+        opt.step(0, &mut p, &g);
+        // v = g, p -= lr*v
+        assert!((p[0] - 0.95).abs() < 1e-6);
+        assert!((p[1] + 1.9).abs() < 1e-6);
+        opt.begin_step();
+        opt.step(0, &mut p, &g);
+        // v = 0.9*g + g = 0.95 / -1.9
+        assert!((p[0] - (0.95 - 0.1 * 0.95)).abs() < 1e-6);
+        assert!((p[1] - (-1.9 + 0.1 * 1.9)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized_sign_step() {
+        // with bias correction, |Δp| of step 1 ≈ lr regardless of |g|
+        let mut opt = Optimizer::adam(0.01);
+        let mut p = vec![0.0f32, 0.0];
+        let g = vec![123.0f32, -0.004];
+        opt.begin_step();
+        opt.step(0, &mut p, &g);
+        assert!((p[0] + 0.01).abs() < 1e-4, "step ≈ -lr, got {}", p[0]);
+        assert!((p[1] - 0.01).abs() < 1e-4, "step ≈ +lr, got {}", p[1]);
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(p) = Σ (p - c)², gradient 2(p - c)
+        let c = [3.0f32, -1.5, 0.25];
+        let mut p = vec![0.0f32; 3];
+        let mut opt = Optimizer::adam(0.05);
+        for _ in 0..500 {
+            let g: Vec<f32> =
+                p.iter().zip(&c).map(|(a, b)| 2.0 * (a - b)).collect();
+            opt.begin_step();
+            opt.step(0, &mut p, &g);
+        }
+        for (a, b) in p.iter().zip(&c) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let mut opt = Optimizer::sgd(1.0, 0.9);
+        let mut p0 = vec![0.0f32];
+        let mut p1 = vec![0.0f32];
+        opt.begin_step();
+        opt.step(0, &mut p0, &[1.0]);
+        opt.step(1, &mut p1, &[0.0]);
+        opt.begin_step();
+        opt.step(0, &mut p0, &[0.0]);
+        opt.step(1, &mut p1, &[0.0]);
+        // slot 0 carries momentum from its own history only
+        assert!((p0[0] + 1.9).abs() < 1e-6);
+        assert_eq!(p1[0], 0.0);
+    }
+}

@@ -113,6 +113,13 @@ impl Rng {
         }
     }
 
+    /// Fill a slice with N(0, std²) f32 samples (Kaiming-style init).
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(0.0, std);
+        }
+    }
+
     /// Random permutation of 0..n (Fisher-Yates).
     pub fn permutation(&mut self, n: usize) -> Vec<usize> {
         let mut p: Vec<usize> = (0..n).collect();

@@ -1,0 +1,350 @@
+//! Finite-difference gradient checks for every backward kernel of the
+//! training subsystem (ISSUE 3 acceptance: rel. err ≤ 1e-3 on random
+//! small shapes, driven through `util::propcheck`).
+//!
+//! Strategy: project each kernel's output onto a fixed random direction
+//! `R` so the scalar loss `L = Σ y ⊙ R` has the kernel's adjoint as its
+//! exact gradient, then compare against central differences.  Linear
+//! kernels (BCM multiply, im2col/col2im) admit large steps — the
+//! difference quotient is exact up to f32 rounding; the nonlinear ones
+//! (batch-norm, max-pool, the full model) use small steps and
+//! well-separated inputs.
+
+use cirptc::circulant::Bcm;
+use cirptc::onn::Manifest;
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{self, Tensor};
+use cirptc::train::{softmax_cross_entropy, TrainBackend, TrainModel};
+use cirptc::util::propcheck::{self, assert_close};
+use cirptc::util::rng::Rng;
+
+/// |analytic − numeric| ≤ 1e-3 · max(1, |analytic|, |numeric|).
+fn grad_close(analytic: f32, numeric: f32) -> bool {
+    (analytic - numeric).abs()
+        <= 1e-3 * analytic.abs().max(numeric.abs()).max(1.0)
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+}
+
+#[test]
+fn bcm_backward_dw_and_dx_match_central_differences() {
+    propcheck::check("bcm backward vs fd", 25, |g| {
+        let (p, q) = (g.usize_in(1, 3), g.usize_in(1, 3));
+        let l = *g.choose(&[2usize, 4, 8]);
+        let cols = g.usize_in(1, 4);
+        let bcm = Bcm::new(p, q, l, g.vec_f32(p * q * l, -1.0, 1.0));
+        let x = Tensor::new(&[bcm.n(), cols], g.vec_f32(bcm.n() * cols, -1.0, 1.0));
+        let r = Tensor::new(&[bcm.m(), cols], g.vec_f32(bcm.m() * cols, -1.0, 1.0));
+        let (dw, dx) = bcm.backward(&x, &r);
+        // exactly linear in both w and x: big step, rounding-limited fd
+        let h = 0.1f32;
+        let loss_w = |b: &Bcm| dot(&b.mmm(&x, 1).data, &r.data);
+        for i in 0..bcm.w.len() {
+            let mut bp = bcm.clone();
+            bp.w[i] += h;
+            let mut bm = bcm.clone();
+            bm.w[i] -= h;
+            let fd = ((loss_w(&bp) - loss_w(&bm)) / (2.0 * h as f64)) as f32;
+            if !grad_close(dw[i], fd) {
+                return Err(format!("dw[{i}]: {} vs fd {fd}", dw[i]));
+            }
+        }
+        let loss_x = |xt: &Tensor| dot(&bcm.mmm(xt, 1).data, &r.data);
+        for i in 0..x.numel() {
+            let mut xp = x.clone();
+            xp.data[i] += h;
+            let mut xm = x.clone();
+            xm.data[i] -= h;
+            let fd = ((loss_x(&xp) - loss_x(&xm)) / (2.0 * h as f64)) as f32;
+            if !grad_close(dx.data[i], fd) {
+                return Err(format!("dx[{i}]: {} vs fd {fd}", dx.data[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fft_backward_equals_direct_backward() {
+    propcheck::check("fft adjoint == direct adjoint", 40, |g| {
+        let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+        let l = *g.choose(&[2usize, 4, 8, 16]);
+        let cols = g.usize_in(1, 5);
+        let bcm = Bcm::new(p, q, l, g.vec_f32(p * q * l, -1.0, 1.0));
+        let x = Tensor::new(&[bcm.n(), cols], g.vec_f32(bcm.n() * cols, -1.0, 1.0));
+        let dy = Tensor::new(&[bcm.m(), cols], g.vec_f32(bcm.m() * cols, -1.0, 1.0));
+        let (dw_d, dx_d) = bcm.mmm_backward(&x, &dy);
+        let (dw_f, dx_f) = bcm.mmm_fft_backward(&x, &dy);
+        assert_close(&dw_f, &dw_d, 1e-3)?;
+        assert_close(&dx_f.data, &dx_d.data, 1e-3)
+    });
+}
+
+#[test]
+fn col2im_matches_central_differences_of_im2col() {
+    propcheck::check("col2im vs fd", 20, |g| {
+        let (b, c) = (g.usize_in(1, 2), g.usize_in(1, 2));
+        let (h, w) = (g.usize_in(3, 5), g.usize_in(3, 5));
+        let k = 3usize;
+        let x = Tensor::new(&[b, c, h, w], g.vec_f32(b * c * h * w, -1.0, 1.0));
+        let r = {
+            let rows = c * k * k;
+            let cols = b * h * w;
+            Tensor::new(&[rows, cols], g.vec_f32(rows * cols, -1.0, 1.0))
+        };
+        // analytic: dL/dx = col2im(R) for L = <im2col(x), R>
+        let dx = tensor::col2im_same_batch(&r, b, c, h, w, k);
+        let loss =
+            |xt: &Tensor| dot(&tensor::im2col_same_batch(xt, k).data, &r.data);
+        let hstep = 0.1f32; // linear in x: exact at any step
+        for i in 0..x.numel() {
+            let mut xp = x.clone();
+            xp.data[i] += hstep;
+            let mut xm = x.clone();
+            xm.data[i] -= hstep;
+            let fd =
+                ((loss(&xp) - loss(&xm)) / (2.0 * hstep as f64)) as f32;
+            if !grad_close(dx.data[i], fd) {
+                return Err(format!("dx[{i}]: {} vs fd {fd}", dx.data[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn maxpool_backward_matches_central_differences() {
+    // well-separated inputs (multiples of 0.05, shuffled) so a small step
+    // can't flip any window's argmax; within the region the op is linear
+    let (b, c, h, w, p) = (2usize, 2usize, 4usize, 4usize, 2usize);
+    let n = b * c * h * w;
+    let mut rng = Rng::new(99);
+    let perm = rng.permutation(n);
+    let mut xd = vec![0.0f32; n];
+    for (i, &pi) in perm.iter().enumerate() {
+        xd[i] = pi as f32 * 0.05;
+    }
+    let x = Tensor::new(&[b, c, h, w], xd);
+    let (y, argmax) = tensor::maxpool_batch_argmax(&x, p);
+    let mut r = vec![0.0f32; y.numel()];
+    rng.fill_uniform(&mut r);
+    let rt = Tensor::new(&y.shape, r);
+    let dx = tensor::maxpool_batch_backward(&rt, &argmax, &x.shape);
+    let hstep = 1e-3f32;
+    for i in 0..x.numel() {
+        let mut xp = x.clone();
+        xp.data[i] += hstep;
+        let mut xm = x.clone();
+        xm.data[i] -= hstep;
+        let lp = dot(&tensor::maxpool_batch(&xp, p).data, &rt.data);
+        let lm = dot(&tensor::maxpool_batch(&xm, p).data, &rt.data);
+        let fd = ((lp - lm) / (2.0 * hstep as f64)) as f32;
+        assert!(
+            grad_close(dx.data[i], fd),
+            "dx[{i}]: {} vs fd {fd}",
+            dx.data[i]
+        );
+    }
+}
+
+#[test]
+fn batchnorm_backward_matches_central_differences() {
+    propcheck::check("bn backward vs fd", 10, |g| {
+        let (b, c) = (2usize, g.usize_in(1, 2));
+        let (h, w) = (3usize, 3usize);
+        let x = Tensor::new(&[b, c, h, w], g.vec_f32(b * c * h * w, -1.5, 1.5));
+        let r = Tensor::new(&[b, c, h, w], g.vec_f32(b * c * h * w, -1.0, 1.0));
+        let gamma = g.vec_f32(c, 0.5, 1.5);
+        let beta = g.vec_f32(c, -0.5, 0.5);
+        let eps = 1e-5f32;
+        let loss = |xt: &Tensor| {
+            let (y, _, _) = tensor::batchnorm_train(xt, &gamma, &beta, eps);
+            dot(&y.data, &r.data)
+        };
+        let (_, xhat, stats) = tensor::batchnorm_train(&x, &gamma, &beta, eps);
+        let (dx, _, _) = tensor::batchnorm_backward(&r, &xhat, &gamma, &stats);
+        let hstep = 1e-2f32;
+        for i in 0..x.numel() {
+            let mut xp = x.clone();
+            xp.data[i] += hstep;
+            let mut xm = x.clone();
+            xm.data[i] -= hstep;
+            let fd =
+                ((loss(&xp) - loss(&xm)) / (2.0 * hstep as f64)) as f32;
+            if !grad_close(dx.data[i], fd) {
+                return Err(format!("dx[{i}]: {} vs fd {fd}", dx.data[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+const TINY: &str = r#"{
+  "dataset": "synth_shapes", "classes": 3,
+  "layers": [
+    {"kind": "conv", "cin": 1, "cout": 4, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0},
+    {"kind": "bn", "cin": 4, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0},
+    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0},
+    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0},
+    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0},
+    {"kind": "fc", "cin": 64, "cout": 3, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 8.0}
+  ]}"#;
+
+fn tiny_batch(n: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut d = vec![0.0f32; n * 8 * 8];
+    rng.fill_uniform(&mut d);
+    Tensor::new(&[n, 1, 8, 8], d)
+}
+
+/// Directional derivative of the full-model cross-entropy against the
+/// analytic backward pass, per parameter tensor.  The composition stacks
+/// every kernel (conv im2col/BCM, bn, relu, pool, fc), so a looser 1e-2
+/// tolerance absorbs the f32 forward's rounding in the quotient.
+#[test]
+fn full_model_directional_gradcheck_digital() {
+    let model =
+        TrainModel::init(Manifest::parse(TINY).unwrap(), 31).unwrap();
+    let xb = tiny_batch(3, 32);
+    let labels = [0u8, 1, 2];
+    let mut dir_rng = Rng::new(33);
+
+    // analytic gradients
+    let mut m0 = model.clone();
+    let pass = m0.forward_train(&xb, &mut TrainBackend::Digital).unwrap();
+    let (_, dl) = softmax_cross_entropy(&pass.logits, &labels);
+    let grads = m0.backward(&pass, &dl).unwrap();
+
+    // loss as a function of a perturbed clone (BN batch-stats mode, which
+    // is what the analytic gradients differentiate)
+    let eval = |m: &TrainModel| -> f64 {
+        let mut mc = m.clone();
+        let pass = mc
+            .forward_train(&xb, &mut TrainBackend::Digital)
+            .unwrap();
+        let (loss, _) = softmax_cross_entropy(&pass.logits, &labels);
+        loss as f64
+    };
+
+    let h = 1e-2f32;
+    for (li, g) in grads.per_layer.iter().enumerate() {
+        let tensors: Vec<Vec<f32>> = match g {
+            cirptc::train::LayerGrad::Linear { dw, db } => {
+                vec![dw.clone(), db.clone()]
+            }
+            cirptc::train::LayerGrad::Bn { dgamma, dbeta } => {
+                vec![dgamma.clone(), dbeta.clone()]
+            }
+            cirptc::train::LayerGrad::None => continue,
+        };
+        for (pi, gvec) in tensors.iter().enumerate() {
+            // unit random direction
+            let mut v = vec![0.0f32; gvec.len()];
+            dir_rng.fill_normal(&mut v, 1.0);
+            let norm =
+                (v.iter().map(|a| (a * a) as f64).sum::<f64>()).sqrt() as f32;
+            for a in v.iter_mut() {
+                *a /= norm.max(1e-9);
+            }
+            let proj: f64 = gvec
+                .iter()
+                .zip(&v)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let perturb = |sign: f32| -> TrainModel {
+                let mut m = model.clone();
+                apply_direction(&mut m, li, pi, &v, sign * h);
+                m
+            };
+            let fd = (eval(&perturb(1.0)) - eval(&perturb(-1.0)))
+                / (2.0 * h as f64);
+            assert!(
+                (proj - fd).abs() <= 2e-2 * proj.abs().max(fd.abs()).max(0.1),
+                "layer {li} param {pi}: directional {proj} vs fd {fd}"
+            );
+        }
+    }
+}
+
+/// Add `scale * v` to parameter tensor `pi` (0 = weights/gamma,
+/// 1 = bias/beta) of layer `li`.
+fn apply_direction(
+    m: &mut TrainModel,
+    li: usize,
+    pi: usize,
+    v: &[f32],
+    scale: f32,
+) {
+    use cirptc::train::model::TrainLayer;
+    match &mut m.layers[li] {
+        TrainLayer::Linear(lin) => {
+            let p = if pi == 0 { &mut lin.bcm.w } else { &mut lin.bias };
+            for (a, b) in p.iter_mut().zip(v) {
+                *a += scale * b;
+            }
+        }
+        TrainLayer::Bn(bn) => {
+            let p = if pi == 0 { &mut bn.gamma } else { &mut bn.beta };
+            for (a, b) in p.iter_mut().zip(v) {
+                *a += scale * b;
+            }
+        }
+        TrainLayer::Stateless => {}
+    }
+}
+
+/// With an ideal chip (identity Γ, 0-bit DACs, no noise) the
+/// chip-in-the-loop surrogate gradients must coincide with the digital
+/// ones — the STE/clamp machinery reduces to the identity on in-range
+/// activations.
+#[test]
+fn chip_ideal_gradients_match_digital() {
+    let model =
+        TrainModel::init(Manifest::parse(TINY).unwrap(), 41).unwrap();
+    let xb = tiny_batch(2, 42);
+    let labels = [1u8, 2];
+
+    let mut md = model.clone();
+    let pass_d = md.forward_train(&xb, &mut TrainBackend::Digital).unwrap();
+    let (_, dl_d) = softmax_cross_entropy(&pass_d.logits, &labels);
+    let g_d = md.backward(&pass_d, &dl_d).unwrap();
+
+    let mut mc = model.clone();
+    let mut chip =
+        TrainBackend::Chip(ChipSim::deterministic(ChipDescription::ideal(4)));
+    let pass_c = mc.forward_train(&xb, &mut chip).unwrap();
+    let (_, dl_c) = softmax_cross_entropy(&pass_c.logits, &labels);
+    let g_c = mc.backward(&pass_c, &dl_c).unwrap();
+
+    for (a, b) in g_d.per_layer.iter().zip(&g_c.per_layer) {
+        match (a, b) {
+            (
+                cirptc::train::LayerGrad::Linear { dw: dwa, db: dba },
+                cirptc::train::LayerGrad::Linear { dw: dwb, db: dbb },
+            ) => {
+                assert_close(dwa, dwb, 1e-3).unwrap();
+                assert_close(dba, dbb, 1e-3).unwrap();
+            }
+            (
+                cirptc::train::LayerGrad::Bn { dgamma: ga, dbeta: ba },
+                cirptc::train::LayerGrad::Bn { dgamma: gb, dbeta: bb },
+            ) => {
+                assert_close(ga, gb, 1e-3).unwrap();
+                assert_close(ba, bb, 1e-3).unwrap();
+            }
+            (
+                cirptc::train::LayerGrad::None,
+                cirptc::train::LayerGrad::None,
+            ) => {}
+            _ => panic!("grad structure diverged between backends"),
+        }
+    }
+}

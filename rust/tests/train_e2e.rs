@@ -1,0 +1,198 @@
+//! End-to-end hardware-aware training (ISSUE 3 acceptance path, the same
+//! flow `make train-smoke` drives): pure-rust HAT loop on synthetic data
+//! with the **noisy** chip-in-the-loop forward → loss decreases →
+//! manifest + CPT1 weights written by rust → reloaded through
+//! `onn::Manifest` / `Engine` → a forward batch served.
+
+use cirptc::data::datasets;
+use cirptc::data::Bundle;
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::train::{
+    evaluate, fit, gather_batch, Optimizer, TrainBackend, TrainConfig,
+    TrainModel,
+};
+
+const SHAPES: &str = r#"{
+  "dataset": "synth_shapes", "classes": 3,
+  "layers": [
+    {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0}
+  ]}"#;
+
+/// A mildly non-ideal chip: 6/4-bit DACs, Γ crosstalk, responsivity tilt,
+/// dark current and dynamic noise — the regime hardware-aware training is
+/// for.
+fn test_chip() -> ChipDescription {
+    let mut d = ChipDescription::ideal(4);
+    d.gamma = vec![
+        0.94, 0.03, 0.02, 0.01, //
+        0.02, 0.94, 0.03, 0.01, //
+        0.01, 0.03, 0.94, 0.02, //
+        0.02, 0.01, 0.03, 0.94,
+    ];
+    d.resp = vec![1.0, 0.98, 1.02, 0.99];
+    d.dark = 0.01;
+    d.sigma_rel = 0.01;
+    d.sigma_abs = 0.002;
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.seed = 7;
+    d
+}
+
+#[test]
+fn digital_training_reduces_loss() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let mut model = TrainModel::init(manifest, 100).unwrap();
+    let split = datasets::synth_shapes(96, 101);
+    let mut backend = TrainBackend::Digital;
+    let mut opt = Optimizer::adam(5e-3);
+    let cfg = TrainConfig { epochs: 3, batch: 16, max_steps: 0, seed: 102 };
+    let hist = fit(&mut model, &mut backend, &mut opt, &split, &cfg).unwrap();
+    assert_eq!(hist.len(), 3);
+    assert!(
+        hist.last().unwrap() < hist.first().unwrap(),
+        "loss must decrease: {hist:?}"
+    );
+    assert!(*hist.last().unwrap() < 1.0986, "below ln(3): {hist:?}");
+}
+
+#[test]
+fn sgd_momentum_also_learns() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let mut model = TrainModel::init(manifest, 110).unwrap();
+    let split = datasets::synth_shapes(96, 111);
+    let mut backend = TrainBackend::Digital;
+    let mut opt = Optimizer::sgd(0.05, 0.9);
+    let cfg = TrainConfig { epochs: 3, batch: 16, max_steps: 0, seed: 112 };
+    let hist = fit(&mut model, &mut backend, &mut opt, &split, &cfg).unwrap();
+    assert!(
+        hist.last().unwrap() < hist.first().unwrap(),
+        "sgd loss must decrease: {hist:?}"
+    );
+}
+
+#[test]
+fn max_steps_caps_the_run() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let mut model = TrainModel::init(manifest, 120).unwrap();
+    let split = datasets::synth_shapes(64, 121);
+    let mut backend = TrainBackend::Digital;
+    let mut opt = Optimizer::adam(1e-3);
+    let cfg = TrainConfig { epochs: 50, batch: 16, max_steps: 3, seed: 122 };
+    let hist = fit(&mut model, &mut backend, &mut opt, &split, &cfg).unwrap();
+    // 4 steps/epoch: the cap lands inside epoch 1 → one (partial) entry
+    assert_eq!(hist.len(), 1);
+}
+
+#[test]
+fn chip_in_the_loop_trains_exports_and_serves() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let mut model = TrainModel::init(manifest.clone(), 200).unwrap();
+    let split = datasets::synth_shapes(128, 201);
+    let eval_split = datasets::synth_shapes(48, 202);
+
+    // noisy lookup-mode forward (ChipSim::new => noisy = true)
+    let mut backend = TrainBackend::Chip(ChipSim::new(test_chip()));
+    let mut opt = Optimizer::adam(5e-3);
+    let cfg = TrainConfig { epochs: 6, batch: 16, max_steps: 0, seed: 203 };
+    let hist = fit(&mut model, &mut backend, &mut opt, &split, &cfg).unwrap();
+    assert!(
+        hist.last().unwrap() < hist.first().unwrap(),
+        "HAT loss must decrease under chip noise: {hist:?}"
+    );
+
+    // BN calibration pass (the paper's one-shot chip calibration), then
+    // eval through the same chip-in-the-loop path
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let idx: Vec<usize> = (i * 16..(i + 1) * 16).collect();
+            gather_batch(&split, &idx).0
+        })
+        .collect();
+    model.recalibrate_bn(&calib, &mut backend).unwrap();
+    let acc = evaluate(&model, &mut backend, &eval_split, 16).unwrap();
+    assert!(
+        acc > 0.40,
+        "chip-in-the-loop training should beat chance (got {acc})"
+    );
+
+    // rust-written artifacts …
+    let dir = std::env::temp_dir().join("cirptc_train_e2e");
+    let (mpath, wpath) = model.save_artifacts(&dir, "synth_shapes").unwrap();
+
+    // … reload through the serving stack …
+    let engine = Engine::load(&mpath, &wpath).unwrap();
+    assert_eq!(engine.manifest.classes, 3);
+    assert_eq!(engine.manifest.input_shape(), (1, 16));
+
+    // … and serve a forward batch on both engine backends
+    let imgs: Vec<_> = (0..6).map(|i| eval_split.image(i)).collect();
+    let logits_dig = engine
+        .forward_batch(&imgs, &mut Backend::Digital)
+        .unwrap();
+    assert_eq!(logits_dig.len(), 6);
+    assert!(logits_dig
+        .iter()
+        .all(|row| row.len() == 3 && row.iter().all(|v| v.is_finite())));
+    let sim = ChipSim::deterministic(test_chip());
+    let logits_pho = engine
+        .forward_batch(&imgs, &mut Backend::PhotonicSim(sim))
+        .unwrap();
+    assert!(logits_pho
+        .iter()
+        .all(|row| row.len() == 3 && row.iter().all(|v| v.is_finite())));
+
+    // engine digital forward ≈ trainer eval forward (same math, different
+    // accumulation order)
+    let (xb, _) = gather_batch(&eval_split, &[0, 1, 2, 3, 4, 5]);
+    let trainer_logits = model
+        .forward_eval(&xb, &mut TrainBackend::Digital)
+        .unwrap();
+    for (bi, row) in logits_dig.iter().enumerate() {
+        for (c, v) in row.iter().enumerate() {
+            let t = trainer_logits.data[bi * 3 + c];
+            assert!(
+                (t - v).abs() < 1e-2,
+                "engine/trainer logit mismatch at ({bi},{c}): {t} vs {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_file_roundtrip() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let dir = std::env::temp_dir().join("cirptc_manifest_rt");
+    let path = dir.join("m.json");
+    manifest.save(&path).unwrap();
+    let back = Manifest::load(&path).unwrap();
+    assert_eq!(manifest, back);
+}
+
+#[test]
+fn exported_bundle_roundtrips_bytes() {
+    let manifest = Manifest::parse(SHAPES).unwrap();
+    let model = TrainModel::init(manifest, 300).unwrap();
+    let bundle = model.export_bundle();
+    let dir = std::env::temp_dir().join("cirptc_bundle_rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w.cpt");
+    bundle.save(&path).unwrap();
+    let back = Bundle::load(&path).unwrap();
+    assert_eq!(bundle.tensors.len(), back.tensors.len());
+    for (name, entry) in &bundle.tensors {
+        assert_eq!(back.get(name).unwrap(), entry, "tensor {name}");
+    }
+}
