@@ -8,7 +8,7 @@ PY ?= python3
 OUT ?= artifacts
 
 .PHONY: artifacts train train-smoke train-py train-py-quick verify \
-	bench-smoke help
+	bench-smoke drift-smoke help
 
 ## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
 artifacts:
@@ -42,6 +42,12 @@ verify:
 ## One-iteration serving bench (works without artifacts — synthetic model)
 bench-smoke:
 	cargo bench --bench serving -- --smoke
+
+## Drift-subsystem smoke (what CI runs): tiny in-process model, drift
+## clock accelerated to one tick per chip pass, a forced recalibration +
+## zero-downtime engine hot swap through the live coordinator
+drift-smoke:
+	cargo bench --bench serving -- --drift-smoke
 
 help:
 	@grep -B1 -E '^[a-z-]+:' Makefile | grep -E '^(##|[a-z-]+:)' | sed 's/:.*//'

@@ -6,7 +6,11 @@
 //!   2. batch-major `forward_batch` sweep — one layer-graph walk and one
 //!      multi-column BCM multiply per layer per batch (the acceptance
 //!      check: images/sec at batch ≥ 8 must beat the per-image loop);
-//!   3. coordinator overhead + batching-policy sweep + worker scaling.
+//!   3. coordinator overhead + batching-policy sweep + worker scaling;
+//!   4. drifting-chip scenario sweep (`-- --drift` full, `-- --drift-smoke`
+//!      CI-sized with a forced recalibration): accuracy-over-time and tail
+//!      latency with the drift monitor + background recalibrator on vs.
+//!      off (DESIGN.md §drift).
 //!
 //! Runs against trained artifacts when present (`make train-py`), otherwise
 //! falls back to a synthetic in-memory model so the serving path is
@@ -14,15 +18,26 @@
 //! --smoke`).
 
 use std::path::PathBuf;
+use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use cirptc::coordinator::worker::EngineBackend;
-use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
+use cirptc::coordinator::{
+    BackendFactory, BatcherConfig, Coordinator, InferenceBackend, Metrics,
+};
+use cirptc::data::datasets::{self, Split};
 use cirptc::data::Bundle;
+use cirptc::drift::{
+    DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
+    MonitorConfig, RecalConfig, Recalibrator,
+};
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::simulator::{ChipDescription, ChipSim};
-use cirptc::tensor::Tensor;
+use cirptc::tensor::{argmax, Tensor};
+use cirptc::train::{
+    fit, gather_batch, Optimizer, TrainBackend, TrainConfig, TrainModel,
+};
 use cirptc::util::bench::{row, section};
 use cirptc::util::cli::Args;
 use cirptc::util::rng::Rng;
@@ -79,9 +94,180 @@ fn synthetic_images(n: usize) -> Vec<Tensor> {
         .collect()
 }
 
+/// The as-calibrated chip the drift scenario deploys on.
+fn drift_chip() -> ChipDescription {
+    let mut d = ChipDescription::ideal(4);
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d.seed = 11;
+    d
+}
+
+fn serve_eval_round(coord: &Coordinator, eval: &Split) -> f64 {
+    let mut correct = 0usize;
+    let mut s = 0usize;
+    while s < eval.n {
+        let e = (s + 8).min(eval.n);
+        let imgs: Vec<Tensor> = (s..e).map(|i| eval.image(i)).collect();
+        let responses = coord.classify_all(&imgs).unwrap();
+        for (r, i) in responses.iter().zip(s..e) {
+            if argmax(&r.logits) == eval.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        s = e;
+    }
+    correct as f64 / eval.n as f64
+}
+
+/// Drifting-chip scenario sweep: the same seeded drift episode served
+/// with recalibration off, then on — accuracy over time plus tail
+/// latency.  In smoke mode the trigger is set so low that the first
+/// post-cooldown probe *forces* a recalibration + hot swap, and the run
+/// fails loudly if none lands (the CI contract of `make drift-smoke`).
+fn drift_scenario(smoke: bool) {
+    section("drifting-chip serving: accuracy over time, recal off vs on");
+    // tiny in-process model (release-mode training takes well under a
+    // second, so the scenario needs no artifacts)
+    let manifest = Manifest::parse(datasets::SHAPES_MANIFEST_JSON).unwrap();
+    let train_split = datasets::synth_shapes(192, 0xB1);
+    let calib_split = datasets::synth_shapes(128, 0xB2);
+    let eval_split = datasets::synth_shapes(if smoke { 64 } else { 128 }, 0xB3);
+    let mut model = TrainModel::init(manifest.clone(), 0xB4).unwrap();
+    let mut opt = Optimizer::adam(5e-3);
+    let tcfg = TrainConfig {
+        epochs: if smoke { 4 } else { 8 },
+        batch: 16,
+        max_steps: 0,
+        seed: 0xB5,
+    };
+    fit(&mut model, &mut TrainBackend::Digital, &mut opt, &train_split, &tcfg)
+        .unwrap();
+    let calib_batches: Vec<Tensor> = (0..6)
+        .map(|i| {
+            let idx: Vec<usize> = (i * 16..(i + 1) * 16).collect();
+            gather_batch(&train_split, &idx).0
+        })
+        .collect();
+    model
+        .recalibrate_bn(
+            &calib_batches,
+            &mut TrainBackend::Chip(ChipSim::deterministic(drift_chip())),
+        )
+        .unwrap();
+    let bundle = model.export_bundle();
+
+    let dcfg = DriftConfig {
+        seed: 0xB6,
+        passes_per_tick: 1,
+        gamma_walk: 2e-3,
+        resp_tilt: 4e-3,
+        dark_creep: 2e-4,
+        max_ticks: 120,
+    };
+    let rounds = if smoke { 6 } else { 10 };
+    for recal_on in [false, true] {
+        let metrics = Arc::new(Metrics::default());
+        let engine = Engine::from_parts(manifest.clone(), &bundle).unwrap();
+        let shared = DriftShared::new(engine, Arc::clone(&metrics));
+        let (tx, rx) = mpsc::channel();
+        let _recal = if recal_on {
+            let rcfg = RecalConfig {
+                fine_tune_steps: if smoke { 16 } else { 32 },
+                lr: 2e-3,
+                batch: 16,
+                bn_batches: 6,
+                seed: 0xB7,
+                noisy: false,
+                snapshot_dir: None,
+            };
+            Some(
+                Recalibrator::new(
+                    model.clone(),
+                    calib_split.clone(),
+                    rcfg,
+                    Arc::clone(&shared),
+                )
+                .spawn(rx),
+            )
+        } else {
+            drop(rx);
+            None
+        };
+        let mcfg = MonitorConfig {
+            probe_every: 1,
+            residual_trigger: if !recal_on {
+                f32::INFINITY
+            } else if smoke {
+                1e-6 // force a recalibration on the first cooled-down probe
+            } else {
+                0.04
+            },
+            cooldown_passes: if smoke { 24 } else { 40 },
+            ..MonitorConfig::default()
+        };
+        let factory: BackendFactory = {
+            let shared = Arc::clone(&shared);
+            let dcfg = dcfg.clone();
+            Box::new(move || {
+                let desc = drift_chip();
+                let mut sim = ChipSim::deterministic(desc.clone());
+                sim.set_drift(DriftModel::new(dcfg));
+                let monitor = DriftMonitor::new(mcfg, &desc);
+                Box::new(DriftBackend::new(shared, sim, monitor, tx))
+                    as Box<dyn InferenceBackend>
+            })
+        };
+        let coord = Coordinator::start_with_metrics(
+            vec![factory],
+            BatcherConfig { max_batch: 8, max_wait_us: 20_000 },
+            Arc::clone(&metrics),
+        );
+        for round in 0..rounds {
+            let acc = serve_eval_round(&coord, &eval_split);
+            let (_, p99) = metrics.latency_percentiles_us();
+            row(
+                &format!("recal={} round={round}", if recal_on { "on " } else { "off" }),
+                &[
+                    ("acc", format!("{acc:.3}")),
+                    ("p99_us", format!("{p99}")),
+                    ("recals", format!("{}", metrics.recalibrations.get())),
+                    ("ticks", format!("{}", metrics.drift_ticks.get())),
+                    (
+                        "probe_res_ppm",
+                        format!("{}", metrics.last_probe_residual_ppm.get()),
+                    ),
+                ],
+            );
+        }
+        if recal_on {
+            // a recalibration may still be in flight; give it time to land
+            let deadline = Instant::now() + Duration::from_secs(120);
+            while metrics.recalibrations.get() == 0 {
+                assert!(
+                    Instant::now() < deadline,
+                    "drift scenario: no recalibration landed: {}",
+                    metrics.summary()
+                );
+                serve_eval_round(&coord, &eval_split);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            assert_eq!(metrics.errors.get(), 0, "requests failed during swap");
+        }
+        println!("  metrics: {}", metrics.summary());
+        drop(coord);
+    }
+    println!("drift scenario OK");
+}
+
 fn main() {
     let args = Args::parse();
     let smoke = args.has("smoke");
+    if args.has("drift-smoke") {
+        drift_scenario(true);
+        return;
+    }
     let dir = PathBuf::from("artifacts");
     let manifest = dir.join("models/synth_cxr.json");
     let (engine, images, source) = if manifest.exists() {
@@ -241,5 +427,11 @@ fn main() {
             "req_s",
             format!("{:.1}", n as f64 / wall),
         )]);
+    }
+
+    if args.has("drift") {
+        drift_scenario(false);
+    } else {
+        println!("\n(drifting-chip scenario sweep: re-run with -- --drift)");
     }
 }

@@ -15,7 +15,9 @@
 
 use std::path::PathBuf;
 
-use cirptc::data::datasets::{self, Split};
+use cirptc::data::datasets::{
+    self, SHAPES_MANIFEST_JSON as SHAPES_MANIFEST, Split,
+};
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::train::{
@@ -24,25 +26,6 @@ use cirptc::train::{
 };
 use cirptc::util::cli::Args;
 use cirptc::util::error::Result;
-
-/// The StrC stack for the 16×16 synth_shapes set (order-4 circ layers,
-/// the same topology family as `model.net_config`).
-const SHAPES_MANIFEST: &str = r#"{
-  "dataset": "synth_shapes", "classes": 3,
-  "layers": [
-    {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0}
-  ]}"#;
 
 /// Chip description for training: `artifacts/chip.json` when present (the
 /// as-fabricated chip the python side exports), else a representative

@@ -21,6 +21,11 @@ impl Gauge {
         self.0.fetch_sub(n, Ordering::Relaxed);
     }
 
+    /// Overwrite the current value (level gauges like drift-clock age).
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -105,6 +110,20 @@ pub struct Metrics {
     pub batch_compute_us: Histogram,
     /// dispatched batch sizes (requests per batch)
     pub batch_sizes: Histogram,
+    /// calibration probes executed by drift-aware workers
+    /// ([`crate::drift::DriftMonitor`])
+    pub probes: WorkCounter,
+    /// completed recalibration + engine hot-swap cycles
+    /// ([`crate::drift::Recalibrator`])
+    pub recalibrations: WorkCounter,
+    /// normalized probe residuals in parts-per-million (log₂ buckets)
+    pub probe_residual_ppm: Histogram,
+    /// most recent probe residual, ppm — the live drift signal
+    pub last_probe_residual_ppm: Gauge,
+    /// chip passes since the last recalibration (drift-clock age)
+    pub passes_since_recal: Gauge,
+    /// drift ticks applied to the worker's chip so far
+    pub drift_ticks: Gauge,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -152,7 +171,8 @@ impl Metrics {
         let (p50, p99) = self.latency_percentiles_us();
         format!(
             "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
-             p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs",
+             p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs \
+             probes={} recals={} probe_res≤{}ppm",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
@@ -163,6 +183,9 @@ impl Metrics {
             self.queue_depth.get(),
             self.batch_compute_us.percentile(0.5),
             self.batch_compute_us.percentile(0.99),
+            self.probes.get(),
+            self.recalibrations.get(),
+            self.probe_residual_ppm.percentile(0.99),
         )
     }
 }
@@ -246,5 +269,87 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("submitted=3"));
         assert!(s.contains("mean_batch=3.00"));
+        assert!(s.contains("probes=0"), "drift metrics in summary: {s}");
+    }
+
+    #[test]
+    fn histogram_log2_bucket_edges_at_extremes() {
+        // the degenerate inputs of the log₂ bucketing: 0 (clamped to 1),
+        // 1 (bucket 0, upper edge 1) and u64::MAX (capped final bucket)
+        let h = Histogram::default();
+        h.record(0);
+        h.record(1);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 3);
+        // ranks 0 and 1 land in bucket 0 → upper edge (1<<1)-1 = 1
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(0.5), 1);
+        // the max sample saturates the final bucket's upper edge
+        assert_eq!(h.percentile(1.0), (1u64 << 40) - 1);
+        // boundary values of interior buckets: 2^k sits in bucket k,
+        // 2^k - 1 in bucket k-1
+        let h2 = Histogram::default();
+        h2.record(1024);
+        assert_eq!(h2.percentile(1.0), 2047);
+        let h3 = Histogram::default();
+        h3.record(1023);
+        assert_eq!(h3.percentile(1.0), 1023);
+    }
+
+    #[test]
+    fn gauge_set_overwrites() {
+        let g = Gauge::default();
+        g.add(41);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn gauge_consistent_under_concurrent_worker_updates() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        m.queue_depth.add(3);
+                        m.queue_depth.sub(3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            m.queue_depth.get(),
+            0,
+            "matched add/sub from 8 workers must cancel exactly"
+        );
+    }
+
+    #[test]
+    fn histogram_consistent_under_concurrent_records() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        m.probe_residual_ppm.record(1 + (t * 5_000 + i) % 64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.probe_residual_ppm.count(), 20_000);
+        // every sample is ≤ 64 → everything below the bucket-6 upper edge
+        assert!(m.probe_residual_ppm.percentile(1.0) <= 127);
     }
 }

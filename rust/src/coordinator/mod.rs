@@ -70,7 +70,18 @@ impl Coordinator {
     /// and desirable because the photonic sim is stateful: each worker
     /// owns its own "chip").
     pub fn start(backends: Vec<BackendFactory>, cfg: BatcherConfig) -> Coordinator {
-        let metrics = Arc::new(Metrics::default());
+        Coordinator::start_with_metrics(backends, cfg, Arc::new(Metrics::default()))
+    }
+
+    /// [`Coordinator::start`] with a caller-supplied metrics sink.  The
+    /// drift subsystem ([`crate::drift`]) shares one [`Metrics`] between
+    /// the worker loop, the drift monitor and the recalibrator, so probe
+    /// residuals and hot-swap counts land next to the serving latencies.
+    pub fn start_with_metrics(
+        backends: Vec<BackendFactory>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Coordinator {
         let (tx, rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));

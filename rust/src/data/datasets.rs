@@ -28,6 +28,27 @@ impl Split {
     }
 }
 
+/// The order-4 StrC stack for the 16×16 [`synth_shapes`] set (the same
+/// topology family as python `model.net_config`).  One shared source so
+/// the HAT example, the serving bench's drift scenario and the
+/// train/drift e2e tests all train and serve the *same* model.
+pub const SHAPES_MANIFEST_JSON: &str = r#"{
+  "dataset": "synth_shapes", "classes": 3,
+  "layers": [
+    {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0},
+    {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
+     "arch": "circ", "l": 4, "act_scale": 4.0}
+  ]}"#;
+
 const GLYPHS: [[u8; 7]; 10] = [
     // 5-bit rows, MSB = left column (mirrors python _DIGIT_GLYPHS)
     [0b11111, 0b10001, 0b10001, 0b10001, 0b10001, 0b10001, 0b11111],

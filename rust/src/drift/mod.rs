@@ -1,0 +1,263 @@
+//! Drift subsystem: on-line chip monitoring and zero-downtime
+//! recalibration in the serving coordinator (DESIGN.md §drift).
+//!
+//! Hardware-aware training ([`crate::train`]) compensates the chip's
+//! nonidealities *as calibrated* — but a deployed photonic tensor core
+//! drifts afterwards: thermal crosstalk, PD responsivity and dark current
+//! all walk away from the calibration point.  This module makes the
+//! serving stack survive a chip that changes underneath it:
+//!
+//! * [`DriftModel`] ([`model`]) — seeded, deterministic evolution of
+//!   [`crate::simulator::ChipDescription`] on the chip's pass-count
+//!   clock, attached to a [`crate::simulator::ChipSim`] via `set_drift`
+//!   (disabled ⇒ bit-identical simulator);
+//! * [`DriftMonitor`] ([`monitor`]) — cheap calibration-probe passes
+//!   interleaved with traffic, residual-vs-calibration-point metrics,
+//!   and the recalibration trigger policy;
+//! * [`Recalibrator`] ([`recal`]) — background chip-in-the-loop
+//!   fine-tune + BN recalibration against the drifted operating point,
+//!   ending in an engine **hot swap**;
+//! * [`EngineSlot`] / [`DriftShared`] / [`DriftBackend`] (here) — the
+//!   serving plumbing: a swappable engine handle, the state shared
+//!   between workers and the recalibrator, and the
+//!   [`InferenceBackend`] that wires monitoring into the worker loop.
+//!
+//! Requests keep flowing through the whole cycle: workers read the
+//! current engine once per drained batch, the recalibrator publishes a
+//! new one atomically, and nothing on the request path ever blocks on
+//! training (`rust/tests/drift_e2e.rs` pins the zero-drop guarantee).
+
+pub mod model;
+pub mod monitor;
+pub mod recal;
+
+pub use model::{DriftConfig, DriftModel};
+pub use monitor::{DriftMonitor, MonitorConfig};
+pub use recal::{RecalConfig, Recalibrator};
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::{InferenceBackend, Metrics};
+use crate::onn::{Backend, Engine};
+use crate::simulator::{ChipDescription, ChipSim};
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::threadpool::WorkCounter;
+
+/// A hot-swappable engine handle: readers grab the current `Arc<Engine>`
+/// (one `RwLock` read + one `Arc` clone — cheap enough per batch), the
+/// recalibrator publishes a replacement atomically.
+pub struct EngineSlot {
+    inner: RwLock<Arc<Engine>>,
+}
+
+impl EngineSlot {
+    pub fn new(engine: Engine) -> EngineSlot {
+        EngineSlot { inner: RwLock::new(Arc::new(engine)) }
+    }
+
+    /// The engine to use for the next batch.
+    pub fn current(&self) -> Arc<Engine> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Publish a new engine; in-flight batches finish on the old one.
+    pub fn swap(&self, engine: Engine) {
+        *self.inner.write().unwrap() = Arc::new(engine);
+    }
+}
+
+/// A recalibration request: the monitor's snapshot of the drifted chip.
+pub struct RecalRequest {
+    pub desc: ChipDescription,
+    /// the probe residual that fired the trigger
+    pub residual: f32,
+    /// chip pass count at the snapshot
+    pub passes: u64,
+}
+
+/// State shared between the serving workers and the recalibrator.
+pub struct DriftShared {
+    pub slot: EngineSlot,
+    /// the coordinator's metrics sink (create the [`Metrics`] first and
+    /// start the coordinator with
+    /// [`crate::coordinator::Coordinator::start_with_metrics`] so drift
+    /// and serving metrics land in one place)
+    pub metrics: Arc<Metrics>,
+    /// a recalibration is queued or running (single-flight gate)
+    pub recal_in_flight: AtomicBool,
+    /// completed recalibration cycles *of this stack* — the control-plane
+    /// generation monitors key their rebase on.  Deliberately separate
+    /// from `metrics.recalibrations`: the metrics sink may be shared
+    /// across stacks ([`crate::coordinator::Coordinator::start_with_metrics`]),
+    /// the generation must not be.
+    pub recal_generation: WorkCounter,
+    /// the operating point the last completed recalibration was trained
+    /// against.  Monitors rebase their probe reference *here* (not to the
+    /// live chip), so the residual keeps measuring drift the served
+    /// weights have never seen — including drift that accumulated while
+    /// the recalibration was running.
+    pub recal_point: Mutex<Option<ChipDescription>>,
+}
+
+impl DriftShared {
+    pub fn new(engine: Engine, metrics: Arc<Metrics>) -> Arc<DriftShared> {
+        Arc::new(DriftShared {
+            slot: EngineSlot::new(engine),
+            metrics,
+            recal_in_flight: AtomicBool::new(false),
+            recal_generation: WorkCounter::new(),
+            recal_point: Mutex::new(None),
+        })
+    }
+}
+
+/// Drift-aware serving backend: the photonic engine backend plus the
+/// monitor hook.  Each worker owns its own chip (sim + drift process) and
+/// its own monitor; the engine and recalibration machinery are shared.
+pub struct DriftBackend {
+    shared: Arc<DriftShared>,
+    /// `Backend::PhotonicSim` over the (drifting) chip
+    mode: Backend,
+    monitor: DriftMonitor,
+    recal_tx: mpsc::Sender<RecalRequest>,
+    batches: u64,
+}
+
+impl DriftBackend {
+    /// `sim` should carry the drift process (`sim.set_drift(..)`) and sit
+    /// at the calibration point the monitor was built from.
+    pub fn new(
+        shared: Arc<DriftShared>,
+        sim: ChipSim,
+        monitor: DriftMonitor,
+        recal_tx: mpsc::Sender<RecalRequest>,
+    ) -> DriftBackend {
+        DriftBackend {
+            shared,
+            mode: Backend::PhotonicSim(sim),
+            monitor,
+            recal_tx,
+            batches: 0,
+        }
+    }
+}
+
+impl InferenceBackend for DriftBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        // read the slot once per batch: hot swaps land *between* drained
+        // batches, never mid-batch
+        let engine = self.shared.slot.current();
+        let out = engine.forward_batch(imgs, &mut self.mode)?;
+        self.batches += 1;
+        if let Backend::PhotonicSim(sim) = &mut self.mode {
+            self.monitor.after_batch(
+                sim,
+                self.batches,
+                &self.shared,
+                &self.recal_tx,
+            );
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> String {
+        "engine/drift-monitored".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Bundle;
+    use crate::onn::Manifest;
+    use crate::util::rng::Rng;
+
+    /// Tiny in-memory circ engine (same shape as the engine unit tests).
+    fn tiny_engine(bias0: f32) -> Engine {
+        let manifest = Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 3,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 4, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 256, "cout": 3, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap();
+        let mut bundle = Bundle::default();
+        let mut rng = Rng::new(5);
+        let mut w0 = vec![0.0f32; 3 * 4];
+        rng.fill_uniform(&mut w0);
+        bundle.insert_f32("layer0.w", &[1, 3, 4], w0);
+        bundle.insert_f32("layer0.b", &[4], vec![bias0; 4]);
+        let mut w3 = vec![0.0f32; 64 * 4];
+        rng.fill_uniform(&mut w3);
+        bundle.insert_f32("layer3.w", &[1, 64, 4], w3);
+        bundle.insert_f32("layer3.b", &[3], vec![0.0; 3]);
+        Engine::from_parts(manifest, &bundle).unwrap()
+    }
+
+    #[test]
+    fn engine_slot_swap_is_visible_to_readers() {
+        let slot = EngineSlot::new(tiny_engine(0.0));
+        let before = slot.current();
+        slot.swap(tiny_engine(1.0));
+        let after = slot.current();
+        assert!(!Arc::ptr_eq(&before, &after), "swap must replace the arc");
+        // the old engine stays valid for in-flight batches
+        let img = Tensor::zeros(&[1, 8, 8]);
+        let y_old = before.forward(&img, &mut Backend::Digital).unwrap();
+        let y_new = after.forward(&img, &mut Backend::Digital).unwrap();
+        assert!(y_old.iter().all(|v| v.is_finite()));
+        assert_ne!(y_old, y_new, "distinct weights must serve distinctly");
+    }
+
+    #[test]
+    fn drift_backend_serves_probes_and_reports_metrics() {
+        let metrics = Arc::new(Metrics::default());
+        let shared = DriftShared::new(tiny_engine(0.0), Arc::clone(&metrics));
+        let desc = ChipDescription::ideal(4);
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_drift(DriftModel::new(DriftConfig {
+            seed: 1,
+            passes_per_tick: 1,
+            gamma_walk: 1e-3,
+            resp_tilt: 2e-3,
+            dark_creep: 1e-4,
+            max_ticks: 0,
+        }));
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                cooldown_passes: 0,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // monitor-only: no recalibrator attached
+        let mut be = DriftBackend::new(shared, sim, monitor, tx);
+        let imgs: Vec<Tensor> =
+            (0..4).map(|_| Tensor::full(&[1, 8, 8], 0.5)).collect();
+        for _ in 0..6 {
+            let out = be.infer_batch(&imgs).unwrap();
+            assert_eq!(out.len(), 4);
+        }
+        assert_eq!(metrics.probes.get(), 6, "one probe per batch");
+        assert_eq!(metrics.probe_residual_ppm.count(), 6);
+        assert!(metrics.drift_ticks.get() > 0, "drift clock must advance");
+        assert!(metrics.passes_since_recal.get() > 0);
+        assert_eq!(metrics.recalibrations.get(), 0);
+        // residual grows as the chip walks away from the probe reference
+        assert!(metrics.last_probe_residual_ppm.get() > 0);
+    }
+}

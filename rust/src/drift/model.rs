@@ -1,0 +1,269 @@
+//! Post-deployment drift models: a seeded, deterministic evolution of the
+//! chip's hidden parameters on a **pass-count clock**.
+//!
+//! Real photonic tensor cores walk away from their calibration point after
+//! deployment — thermal crosstalk shifts the coupling operator Γ, PD
+//! responsivity tilts per wavelength, and dark current creeps (the
+//! butterfly-chip line of work flags post-calibration drift as *the*
+//! operational blocker for ONNs).  [`DriftModel`] reproduces the three
+//! dominant modes:
+//!
+//! * **Γ off-diagonal random walk** — every off-diagonal crosstalk entry
+//!   takes a small Gaussian step per tick, reflected at zero and capped,
+//!   so coupling only ever *grows* in magnitude the way thermal gradients
+//!   do;
+//! * **per-wavelength responsivity tilt** — each wavelength drifts along a
+//!   fixed direction drawn once at model creation (a tilt, not a jitter),
+//!   clamped to a physical range;
+//! * **dark-current creep** — a monotone additive offset per tick.
+//!
+//! The clock is the chip pass counter: [`DriftModel::on_pass`] is invoked
+//! by [`crate::simulator::ChipSim::forward`] once per crossbar pass and
+//! applies one [`DriftModel::tick`] every `passes_per_tick` passes.  With
+//! no model attached the simulator is bit-identical to the pre-drift code
+//! path; with a model attached the evolution is fully deterministic under
+//! a fixed seed (the model owns its own [`Rng`] stream).
+
+use crate::simulator::ChipDescription;
+use crate::util::rng::Rng;
+
+/// Drift-rate knobs.  The defaults are "slow": visible over tens of
+/// thousands of passes.  Tests and the drift bench accelerate the clock
+/// (`passes_per_tick = 1`) and raise the per-tick magnitudes instead of
+/// waiting.
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// seed of the model's private RNG stream
+    pub seed: u64,
+    /// chip passes per drift tick (the clock granularity; 0 disables
+    /// ticking entirely)
+    pub passes_per_tick: u64,
+    /// σ of the per-tick Gaussian step on each off-diagonal Γ entry
+    pub gamma_walk: f32,
+    /// per-tick step along each wavelength's fixed tilt direction
+    pub resp_tilt: f32,
+    /// per-tick additive dark-current creep
+    pub dark_creep: f32,
+    /// stop drifting after this many ticks (0 = unbounded) — models a
+    /// bounded thermal episode and gives tests a deterministic plateau
+    pub max_ticks: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            seed: 0xD21F_7001,
+            passes_per_tick: 256,
+            gamma_walk: 2e-4,
+            resp_tilt: 1e-4,
+            dark_creep: 1e-5,
+            max_ticks: 0,
+        }
+    }
+}
+
+/// Off-diagonal Γ entries never exceed this coupling fraction.
+const GAMMA_CAP: f32 = 0.25;
+
+/// A deterministic drift process over a [`ChipDescription`].
+#[derive(Clone, Debug)]
+pub struct DriftModel {
+    cfg: DriftConfig,
+    rng: Rng,
+    /// per-wavelength responsivity drift direction in (-1, 1), drawn once
+    /// (lazily, when the block order is first seen)
+    tilt_dir: Vec<f32>,
+    passes: u64,
+    ticks: u64,
+}
+
+impl DriftModel {
+    pub fn new(cfg: DriftConfig) -> DriftModel {
+        let rng = Rng::new(cfg.seed ^ 0x0D21_F7);
+        DriftModel { cfg, rng, tilt_dir: Vec::new(), passes: 0, ticks: 0 }
+    }
+
+    /// Drift ticks applied so far (stops growing at `max_ticks`).
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Chip passes observed on the drift clock.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Advance the pass-count clock by one chip pass; applies one
+    /// [`DriftModel::tick`] every `passes_per_tick` passes.
+    pub fn on_pass(&mut self, desc: &mut ChipDescription) {
+        self.passes += 1;
+        if self.cfg.passes_per_tick == 0
+            || self.passes % self.cfg.passes_per_tick != 0
+        {
+            return;
+        }
+        self.tick(desc);
+    }
+
+    /// One drift step on the chip's hidden parameters (no-op once
+    /// `max_ticks` is reached).
+    pub fn tick(&mut self, desc: &mut ChipDescription) {
+        if self.cfg.max_ticks > 0 && self.ticks >= self.cfg.max_ticks {
+            return;
+        }
+        self.ticks += 1;
+        let l = desc.l;
+        if self.tilt_dir.len() != l {
+            self.tilt_dir =
+                (0..l).map(|_| self.rng.range(-1.0, 1.0) as f32).collect();
+        }
+        // thermal-crosstalk walk: off-diagonals step, reflect at zero,
+        // cap; the diagonal (direct coupling) is left alone
+        if self.cfg.gamma_walk > 0.0 {
+            for i in 0..l {
+                for j in 0..l {
+                    if i == j {
+                        continue;
+                    }
+                    let g = &mut desc.gamma[i * l + j];
+                    let step =
+                        self.cfg.gamma_walk * self.rng.normal() as f32;
+                    *g = (*g + step).abs().min(GAMMA_CAP);
+                }
+            }
+        }
+        // responsivity tilt: monotone walk along each wavelength's fixed
+        // direction, clamped to a physical gain range
+        if self.cfg.resp_tilt > 0.0 {
+            for (r, t) in desc.resp.iter_mut().zip(&self.tilt_dir) {
+                *r = (*r + self.cfg.resp_tilt * t).clamp(0.05, 2.0);
+            }
+        }
+        // PD dark-current creep (cancels in sign-split pairs, but shows
+        // up in single-pass calibration probes)
+        desc.dark = (desc.dark + self.cfg.dark_creep).min(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accel(seed: u64) -> DriftConfig {
+        DriftConfig {
+            seed,
+            passes_per_tick: 1,
+            gamma_walk: 1e-3,
+            resp_tilt: 2e-3,
+            dark_creep: 1e-4,
+            max_ticks: 0,
+        }
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let mut a = DriftModel::new(accel(7));
+        let mut b = DriftModel::new(accel(7));
+        let mut da = ChipDescription::ideal(4);
+        let mut db = ChipDescription::ideal(4);
+        for _ in 0..200 {
+            a.on_pass(&mut da);
+            b.on_pass(&mut db);
+        }
+        assert_eq!(da.gamma, db.gamma);
+        assert_eq!(da.resp, db.resp);
+        assert_eq!(da.dark, db.dark);
+        assert_eq!(a.ticks(), 200);
+    }
+
+    #[test]
+    fn seeds_give_different_walks() {
+        let mut a = DriftModel::new(accel(1));
+        let mut b = DriftModel::new(accel(2));
+        let mut da = ChipDescription::ideal(4);
+        let mut db = ChipDescription::ideal(4);
+        for _ in 0..50 {
+            a.tick(&mut da);
+            b.tick(&mut db);
+        }
+        assert_ne!(da.gamma, db.gamma);
+    }
+
+    #[test]
+    fn gamma_off_diagonals_walk_within_bounds_diagonal_fixed() {
+        let mut m = DriftModel::new(accel(3));
+        let mut d = ChipDescription::ideal(4);
+        for _ in 0..500 {
+            m.tick(&mut d);
+        }
+        let mut moved = 0usize;
+        for i in 0..4 {
+            for j in 0..4 {
+                let g = d.gamma[i * 4 + j];
+                if i == j {
+                    assert_eq!(g, 1.0, "diagonal must not drift");
+                } else {
+                    assert!((0.0..=GAMMA_CAP).contains(&g), "Γ[{i}{j}]={g}");
+                    if g > 0.0 {
+                        moved += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(moved, 12, "every off-diagonal entry must walk");
+    }
+
+    #[test]
+    fn resp_tilts_monotonically_and_dark_creeps() {
+        let mut m = DriftModel::new(accel(4));
+        let mut d = ChipDescription::ideal(4);
+        m.tick(&mut d);
+        let after_one = d.resp.clone();
+        for _ in 0..99 {
+            m.tick(&mut d);
+        }
+        // tilt, not jitter: each wavelength keeps moving away from its
+        // starting point along a fixed direction
+        for (r1, r100) in after_one.iter().zip(&d.resp) {
+            assert!(
+                (r100 - 1.0).abs() >= (r1 - 1.0).abs() - 1e-7,
+                "tilt must be monotone: step1 {r1}, step100 {r100}"
+            );
+        }
+        assert!((0.05..=2.0).contains(&d.resp[0]));
+        assert!((d.dark - 100.0 * 1e-4).abs() < 1e-6, "dark {}", d.dark);
+    }
+
+    #[test]
+    fn pass_clock_ticks_at_configured_granularity() {
+        let mut cfg = accel(5);
+        cfg.passes_per_tick = 8;
+        let mut m = DriftModel::new(cfg);
+        let mut d = ChipDescription::ideal(4);
+        for _ in 0..7 {
+            m.on_pass(&mut d);
+        }
+        assert_eq!(m.ticks(), 0);
+        assert_eq!(d.resp, vec![1.0; 4], "no tick before the boundary");
+        m.on_pass(&mut d);
+        assert_eq!(m.ticks(), 1);
+        assert_ne!(d.resp, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn max_ticks_plateaus_the_walk() {
+        let mut cfg = accel(6);
+        cfg.max_ticks = 10;
+        let mut m = DriftModel::new(cfg);
+        let mut d = ChipDescription::ideal(4);
+        for _ in 0..10 {
+            m.tick(&mut d);
+        }
+        let frozen = (d.gamma.clone(), d.resp.clone(), d.dark);
+        for _ in 0..100 {
+            m.tick(&mut d);
+        }
+        assert_eq!(m.ticks(), 10);
+        assert_eq!((d.gamma, d.resp, d.dark), frozen);
+    }
+}

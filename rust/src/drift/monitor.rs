@@ -1,0 +1,232 @@
+//! On-line drift monitoring: cheap calibration-probe passes interleaved
+//! with serving traffic.
+//!
+//! A probe streams a small, fixed, positive operand block through a fixed
+//! positive probe BCM — one extra chip pass — and compares the
+//! photocurrents against the *calibration-point prediction* (the same
+//! tile executed on a deterministic twin of the chip as it looked when
+//! last calibrated).  The normalized residual is the drift signal:
+//! exactly zero on a deterministic un-drifted chip, the noise floor on a
+//! noisy one, and growing as Γ / responsivity / dark walk away from the
+//! calibration point.  A single unsigned pass is used deliberately — the
+//! sign-split serving path cancels dark current, a probe must not.
+//!
+//! The monitor owns the trigger policy (residual threshold + pass-count
+//! cooldown) and, when it fires, hands a [`super::RecalRequest`] carrying
+//! the drifted [`ChipDescription`] snapshot to the background
+//! [`super::Recalibrator`].  When a recalibration lands (observed through
+//! the shared [`crate::coordinator::Metrics`] counter) the monitor
+//! **rebases** its reference to the operating point that recalibration
+//! was trained against, so residuals always measure drift the served
+//! weights have never seen.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+
+use crate::circulant::Bcm;
+use crate::simulator::{ChipDescription, ChipSim};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::{DriftShared, RecalRequest};
+
+/// Probe cadence + trigger policy.
+#[derive(Clone, Debug)]
+pub struct MonitorConfig {
+    /// run one probe every this many drained batches (0 = never probe)
+    pub probe_every: u64,
+    /// normalized probe residual (RMSE / reference range) that fires the
+    /// recalibration trigger; `f32::INFINITY` = monitor-only deployment
+    pub residual_trigger: f32,
+    /// minimum chip passes between recalibrations
+    pub cooldown_passes: u64,
+    /// operand columns per probe pass
+    pub probe_cols: usize,
+    /// seed of the fixed probe tile + operand
+    pub seed: u64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> MonitorConfig {
+        MonitorConfig {
+            probe_every: 8,
+            residual_trigger: 0.05,
+            cooldown_passes: 512,
+            probe_cols: 4,
+            seed: 0x0D11_F70B,
+        }
+    }
+}
+
+/// Per-worker drift monitor (each worker owns its chip, so each owns its
+/// monitor).
+pub struct DriftMonitor {
+    cfg: MonitorConfig,
+    probe_w: Bcm,
+    probe_x: Tensor,
+    /// calibration-point prediction for the probe tile
+    want: Tensor,
+    /// recalibration generation observed through
+    /// [`super::DriftShared::recal_generation`]
+    recals_seen: u64,
+    /// chip pass count at the last (re)calibration point
+    last_recal_pass: u64,
+}
+
+impl DriftMonitor {
+    /// Build a monitor whose reference is `calibration` — the chip as it
+    /// looked when the served weights were calibrated.
+    pub fn new(cfg: MonitorConfig, calibration: &ChipDescription) -> DriftMonitor {
+        let mut rng = Rng::new(cfg.seed ^ 0x90BE_5);
+        let l = calibration.l;
+        let (p, q) = (1usize, 2usize);
+        let mut w = vec![0.0f32; p * q * l];
+        rng.fill_uniform(&mut w);
+        let mut xd = vec![0.0f32; q * l * cfg.probe_cols];
+        rng.fill_uniform(&mut xd);
+        let probe_x = Tensor::new(&[q * l, cfg.probe_cols], xd);
+        let mut m = DriftMonitor {
+            cfg,
+            probe_w: Bcm::new(p, q, l, w),
+            probe_x,
+            want: Tensor::zeros(&[p * l, 0]),
+            recals_seen: 0,
+            last_recal_pass: 0,
+        };
+        m.rebase(calibration);
+        m
+    }
+
+    /// Recompute the probe reference at a new calibration point: the
+    /// probe tile executed on a deterministic twin of `desc` (noise off,
+    /// quantizers on — the clean expectation of the programmed tile).
+    pub fn rebase(&mut self, desc: &ChipDescription) {
+        let mut reference = ChipSim::deterministic(desc.clone());
+        self.want = reference.forward(&self.probe_w, &self.probe_x);
+    }
+
+    /// One calibration-probe pass on the live chip; returns the
+    /// normalized residual against the calibration-point prediction.
+    pub fn probe(&mut self, sim: &mut ChipSim) -> f32 {
+        let got = sim.forward(&self.probe_w, &self.probe_x);
+        got.normalized_rmse(&self.want)
+    }
+
+    /// Worker-loop hook, called after every drained batch: refresh the
+    /// drift gauges, run a probe on cadence, and fire the recalibration
+    /// trigger when the policy says so.  `batches` is the worker's
+    /// drained-batch count.
+    pub fn after_batch(
+        &mut self,
+        sim: &mut ChipSim,
+        batches: u64,
+        shared: &DriftShared,
+        recal_tx: &mpsc::Sender<RecalRequest>,
+    ) {
+        // a recalibration of *this stack* landed since we last looked:
+        // rebase the probe reference to the point it was trained against,
+        // so the residual keeps measuring drift the new weights have
+        // never seen (the chip kept drifting while the recalibration
+        // ran).  Keyed on the stack-local generation, not the metrics
+        // counter — the metrics sink may be shared across stacks.
+        let recals = shared.recal_generation.get() as u64;
+        if recals != self.recals_seen {
+            self.recals_seen = recals;
+            self.last_recal_pass = sim.passes();
+            let point = shared
+                .recal_point
+                .lock()
+                .unwrap()
+                .clone()
+                .unwrap_or_else(|| sim.desc.clone());
+            self.rebase(&point);
+        }
+        let age = sim.passes().saturating_sub(self.last_recal_pass);
+        shared.metrics.passes_since_recal.set(age as i64);
+        if let Some(d) = sim.drift() {
+            shared.metrics.drift_ticks.set(d.ticks() as i64);
+        }
+        if self.cfg.probe_every == 0 || batches % self.cfg.probe_every != 0 {
+            return;
+        }
+        let res = self.probe(sim);
+        let ppm = (res as f64 * 1e6) as u64;
+        shared.metrics.probes.add(1);
+        shared.metrics.probe_residual_ppm.record(ppm.max(1));
+        shared.metrics.last_probe_residual_ppm.set(ppm as i64);
+        if res >= self.cfg.residual_trigger
+            && sim.passes().saturating_sub(self.last_recal_pass)
+                >= self.cfg.cooldown_passes
+            && !shared.recal_in_flight.swap(true, Ordering::SeqCst)
+        {
+            let req = RecalRequest {
+                desc: sim.desc.clone(),
+                residual: res,
+                passes: sim.passes(),
+            };
+            if recal_tx.send(req).is_err() {
+                // monitor-only deployment: nobody is listening
+                shared.recal_in_flight.store(false, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Convenience for benches / logs: ppm back to a fraction.
+pub fn ppm_to_residual(ppm: i64) -> f32 {
+    (ppm as f64 / 1e6) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drift::{DriftConfig, DriftModel};
+
+    fn chip() -> ChipDescription {
+        let mut d = ChipDescription::ideal(4);
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.dark = 0.01;
+        d
+    }
+
+    #[test]
+    fn residual_zero_at_calibration_point_grows_under_drift() {
+        let d = chip();
+        let mut monitor = DriftMonitor::new(MonitorConfig::default(), &d);
+        let mut sim = ChipSim::deterministic(d.clone());
+        assert_eq!(monitor.probe(&mut sim), 0.0, "calibration point");
+        sim.set_drift(DriftModel::new(DriftConfig {
+            seed: 3,
+            passes_per_tick: 1,
+            gamma_walk: 2e-3,
+            resp_tilt: 5e-3,
+            dark_creep: 2e-4,
+            max_ticks: 0,
+        }));
+        for _ in 0..100 {
+            let w = Bcm::new(1, 2, 4, vec![0.5; 8]);
+            let x = Tensor::new(&[8, 2], vec![0.5; 16]);
+            sim.forward(&w, &x); // traffic advances the drift clock
+        }
+        let res = monitor.probe(&mut sim);
+        assert!(res > 0.01, "drift must show in the probe residual: {res}");
+        // rebasing to the drifted point nulls the residual again
+        let point = sim.desc.clone();
+        monitor.rebase(&point);
+        let res2 = monitor.probe(&mut sim);
+        assert!(res2 < res * 0.2, "rebase must null the residual: {res2}");
+    }
+
+    #[test]
+    fn probe_is_one_unsigned_pass_and_sees_dark() {
+        let mut d = chip();
+        let mut monitor = DriftMonitor::new(MonitorConfig::default(), &d);
+        d.dark += 0.1; // a drift the sign-split serving path would cancel
+        let mut sim = ChipSim::deterministic(d);
+        let before = sim.passes();
+        let res = monitor.probe(&mut sim);
+        assert_eq!(sim.passes(), before + 1, "a probe costs one pass");
+        assert!(res > 0.0, "dark creep must be visible to the probe");
+    }
+}

@@ -1,0 +1,181 @@
+//! Zero-downtime recalibration: the background half of the drift
+//! subsystem (rust twin of `python/compile/recalib.py`, but *on-line* —
+//! it runs while the coordinator keeps serving).
+//!
+//! When the [`super::DriftMonitor`] trigger fires, the [`Recalibrator`]
+//! receives the drifted [`crate::simulator::ChipDescription`] snapshot
+//! and, on its own thread:
+//!
+//! 1. optionally writes the snapshot to disk for attribution
+//!    (`ChipDescription::save`; loaded back through the path-attributed
+//!    `ChipDescription::load`);
+//! 2. runs a **bounded** number of chip-in-the-loop fine-tune steps
+//!    against a simulator pinned to the drifted operating point
+//!    ([`crate::train::TrainBackend::Chip`] — noisy forward,
+//!    deterministic-surrogate gradients);
+//! 3. recomputes exact BN statistics at that operating point
+//!    ([`crate::train::TrainModel::recalibrate_bn`], the paper's one-shot
+//!    calibration);
+//! 4. builds a fresh [`Engine`] from the fine-tuned weights and **hot
+//!    swaps** it into the shared [`super::EngineSlot`] — workers pick it
+//!    up between drained batches, so no request is ever dropped or
+//!    stalled.
+//!
+//! The recalibrator owns the canonical [`TrainModel`]: serving weights
+//! only ever change through it, so the trainable copy never goes stale.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::coordinator::worker::{spawn_named, JoinOnDrop};
+use crate::data::datasets::Split;
+use crate::onn::Engine;
+use crate::simulator::{ChipDescription, ChipSim};
+use crate::tensor::Tensor;
+use crate::train::{
+    fit, gather_batch, Optimizer, TrainBackend, TrainConfig, TrainModel,
+};
+use crate::util::error::Result;
+
+use super::{DriftShared, RecalRequest};
+
+/// Recalibration policy knobs.
+#[derive(Clone, Debug)]
+pub struct RecalConfig {
+    /// chip-in-the-loop fine-tune steps per recalibration (0 = BN-only)
+    pub fine_tune_steps: usize,
+    /// Adam learning rate for the fine-tune steps
+    pub lr: f32,
+    /// minibatch size for fine-tune and BN recalibration
+    pub batch: usize,
+    /// BN-recalibration batches drawn from the calibration set
+    pub bn_batches: usize,
+    /// seed of the fine-tune shuffling stream
+    pub seed: u64,
+    /// run the recalibration sim with stochastic noise (realistic) or
+    /// deterministically (reproducible tests)
+    pub noisy: bool,
+    /// write each drifted-chip snapshot to `<dir>/drift_snapshot_<n>.json`
+    pub snapshot_dir: Option<PathBuf>,
+}
+
+impl Default for RecalConfig {
+    fn default() -> RecalConfig {
+        RecalConfig {
+            fine_tune_steps: 32,
+            lr: 2e-3,
+            batch: 16,
+            bn_batches: 4,
+            seed: 0x2ECA_1,
+            noisy: false,
+            snapshot_dir: None,
+        }
+    }
+}
+
+/// Background recalibration worker.
+pub struct Recalibrator {
+    model: TrainModel,
+    calib: Split,
+    cfg: RecalConfig,
+    shared: Arc<DriftShared>,
+    /// completed cycles of *this* recalibrator (snapshot numbering)
+    cycles: usize,
+}
+
+impl Recalibrator {
+    /// `model` is the trainable twin of the engine currently in the slot
+    /// (build it with [`TrainModel::from_parts`] when serving from disk
+    /// artifacts); `calib` is the labelled calibration set fine-tune and
+    /// BN recalibration draw from.
+    pub fn new(
+        model: TrainModel,
+        calib: Split,
+        cfg: RecalConfig,
+        shared: Arc<DriftShared>,
+    ) -> Recalibrator {
+        Recalibrator { model, calib, cfg, shared, cycles: 0 }
+    }
+
+    /// One full recalibration cycle against the drifted operating point
+    /// `desc`: bounded fine-tune → exact BN recalibration → engine hot
+    /// swap.  Synchronous — callers that must not block use
+    /// [`Recalibrator::spawn`].
+    pub fn recalibrate(&mut self, desc: ChipDescription) -> Result<()> {
+        let point = desc.clone();
+        if let Some(dir) = &self.cfg.snapshot_dir {
+            let n = self.cycles;
+            let path = dir.join(format!("drift_snapshot_{n}.json"));
+            if let Err(e) = desc.save(&path) {
+                eprintln!("cirptc recalibrator: snapshot failed: {e:#}");
+            }
+        }
+        let sim = if self.cfg.noisy {
+            ChipSim::new(desc)
+        } else {
+            ChipSim::deterministic(desc)
+        };
+        let mut backend = TrainBackend::Chip(sim);
+        if self.cfg.fine_tune_steps > 0 && self.calib.n >= self.cfg.batch {
+            let mut opt = Optimizer::adam(self.cfg.lr);
+            let tcfg = TrainConfig {
+                // max_steps is the binding cap; epochs just has to cover it
+                epochs: self.cfg.fine_tune_steps,
+                batch: self.cfg.batch,
+                max_steps: self.cfg.fine_tune_steps,
+                seed: self.cfg.seed,
+            };
+            fit(&mut self.model, &mut backend, &mut opt, &self.calib, &tcfg)?;
+        }
+        // exact BN statistics at the new operating point — fine-tuning
+        // moved the weights, and the EMA stats predate the drift anyway
+        let bs = self.cfg.batch.min(self.calib.n).max(1);
+        let nb = (self.calib.n / bs).min(self.cfg.bn_batches.max(1)).max(1);
+        let batches: Vec<Tensor> = (0..nb)
+            .map(|i| {
+                let idx: Vec<usize> = (i * bs..(i + 1) * bs).collect();
+                gather_batch(&self.calib, &idx).0
+            })
+            .collect();
+        self.model.recalibrate_bn(&batches, &mut backend)?;
+        // hot swap: workers pick the new engine up on their next batch,
+        // and their monitors rebase to the point this cycle trained for
+        let bundle = self.model.export_bundle();
+        let engine = Engine::from_parts(self.model.manifest.clone(), &bundle)?;
+        *self.shared.recal_point.lock().unwrap() = Some(point);
+        self.shared.slot.swap(engine);
+        self.cycles += 1;
+        // generation first (the monitors' rebase key), then the shared
+        // observability counter
+        self.shared.recal_generation.add(1);
+        self.shared.metrics.recalibrations.add(1);
+        Ok(())
+    }
+
+    /// Thread body: serve recalibration requests until every sender
+    /// (i.e. every [`super::DriftBackend`]) is gone.
+    pub fn run(mut self, rx: mpsc::Receiver<RecalRequest>) {
+        while let Ok(req) = rx.recv() {
+            let outcome = self.recalibrate(req.desc);
+            // clear the in-flight gate *after* the swap so the monitor
+            // can't double-fire on the pre-swap residual
+            self.shared.recal_in_flight.store(false, Ordering::SeqCst);
+            if let Err(e) = outcome {
+                eprintln!(
+                    "cirptc recalibrator: recalibration failed \
+                     (residual {:.4} at pass {}): {e:#}",
+                    req.residual, req.passes
+                );
+            }
+        }
+    }
+
+    /// Spawn the recalibrator on its own thread.  The handle joins on
+    /// drop; drop it *after* the coordinator so the workers' request
+    /// senders are gone by the time the join runs.
+    pub fn spawn(self, rx: mpsc::Receiver<RecalRequest>) -> JoinOnDrop {
+        spawn_named("cirptc-recalibrator", move || self.run(rx))
+    }
+}

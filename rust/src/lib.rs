@@ -16,8 +16,10 @@
 //! subsystem landed, the compile side has a pure-rust path too: `make
 //! train` runs the hardware-aware training loop (chip-in-the-loop forward,
 //! FFT-domain circulant gradients) and writes the same manifest + CPT1
-//! artifacts.  See DESIGN.md for the full system inventory and the
-//! per-experiment index.
+//! artifacts.  The [`drift`] subsystem keeps the serving stack calibrated
+//! after deployment: on-line probe monitoring of a drifting chip and
+//! zero-downtime background recalibration with engine hot swaps.  See
+//! DESIGN.md for the full system inventory and the per-experiment index.
 //!
 //! ## Features
 //!
@@ -40,6 +42,7 @@ pub mod arch;
 pub mod circulant;
 pub mod coordinator;
 pub mod data;
+pub mod drift;
 pub mod onn;
 pub mod photonic;
 pub mod quant;

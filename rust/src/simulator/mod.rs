@@ -17,6 +17,7 @@ use std::path::Path;
 
 use crate::bail;
 use crate::circulant::Bcm;
+use crate::drift::DriftModel;
 use crate::quant::Quantizer;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
@@ -79,11 +80,57 @@ impl ChipDescription {
         })
     }
 
+    /// Load a chip description, attributing every failure (I/O, JSON,
+    /// shape mismatch) to the file it came from — drift snapshots are
+    /// loaded back through this path, so an unattributed "shape mismatch"
+    /// would be undebuggable.
     pub fn load(path: &Path) -> Result<ChipDescription> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text)?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
         ChipDescription::from_json(&j)
+            .with_context(|| format!("loading chip description {}", path.display()))
+    }
+
+    /// Serialize to the `chip.json` layout [`ChipDescription::from_json`]
+    /// parses (writer ↔ parser symmetry, like [`crate::onn::Manifest`]).
+    /// Used to snapshot drifted operating points for attribution.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<Json> = self
+            .gamma
+            .chunks(self.l)
+            .map(|r| {
+                Json::arr_f64(&r.iter().map(|&v| v as f64).collect::<Vec<_>>())
+            })
+            .collect();
+        Json::obj(vec![
+            ("l", Json::Num(self.l as f64)),
+            ("gamma_true", Json::Arr(rows)),
+            (
+                "resp",
+                Json::arr_f64(
+                    &self.resp.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+                ),
+            ),
+            ("dark", Json::Num(self.dark as f64)),
+            ("sigma_rel", Json::Num(self.sigma_rel as f64)),
+            ("sigma_abs", Json::Num(self.sigma_abs as f64)),
+            ("w_bits", Json::Num(self.w_bits as f64)),
+            ("x_bits", Json::Num(self.x_bits as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+        .dump()
+    }
+
+    /// Write the description to disk (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
     }
 }
 
@@ -108,6 +155,10 @@ pub struct ChipSim {
     /// crossbar passes: one per [`ChipSim::forward`] call regardless of
     /// batch width (two per signed matmul, `fold` per folded execution)
     passes_done: u64,
+    /// post-deployment drift process over `desc`, advanced one step per
+    /// pass ([`DriftModel::on_pass`]).  `None` (the default) leaves every
+    /// code path bit-identical to the drift-free simulator.
+    drift: Option<DriftModel>,
 }
 
 impl ChipSim {
@@ -121,6 +172,7 @@ impl ChipSim {
             tiles_executed: 0,
             threads: 1,
             passes_done: 0,
+            drift: None,
         }
     }
 
@@ -204,6 +256,12 @@ impl ChipSim {
         }
         self.passes_done += 1;
         self.tiles_executed += (w.p * w.q * b) as u64;
+        // the pass that just ran saw the pre-tick parameters; an attached
+        // drift model advances the pass-count clock afterwards, so drift
+        // takes effect from the *next* pass on
+        if let Some(drift) = self.drift.as_mut() {
+            drift.on_pass(&mut self.desc);
+        }
         y
     }
 
@@ -233,9 +291,14 @@ impl ChipSim {
         let n_phys = q_phys * w.l;
         let b = x.shape[1];
         let mut acc = Tensor::zeros(&[w.m(), b]);
-        // accumulate the folds optically (no per-fold dark/noise)
+        // accumulate the folds optically (no per-fold dark/noise).  The
+        // dark level is tracked explicitly so that drift creep applied by
+        // an attached model *during* the fold group (it ticks on the
+        // temporarily-zeroed field) is carried into the single detection
+        // event instead of being lost by the snapshot restore.
         let (dark, srel, sabs) =
             (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
+        let mut dark_level = dark;
         for r in 0..fold {
             // sub-BCM of this fold: block-columns [r*q_phys, (r+1)*q_phys)
             let mut wsub = Bcm::zeros(w.p, q_phys, w.l);
@@ -254,7 +317,10 @@ impl ChipSim {
             self.desc.sigma_rel = 0.0;
             self.desc.sigma_abs = 0.0;
             let y = self.forward(&wsub, &xsub);
-            self.desc.dark = dark;
+            // whatever now sits in the zeroed field is drift creep from
+            // this pass's tick — fold it into the running dark level
+            dark_level += self.desc.dark;
+            self.desc.dark = dark_level;
             self.desc.sigma_rel = srel;
             self.desc.sigma_abs = sabs;
             let gain = 1.0 + fold_resp_slope * r as f32;
@@ -264,7 +330,7 @@ impl ChipSim {
         }
         // single PD detection: dark + one noise draw
         for v in acc.data.iter_mut() {
-            *v += dark;
+            *v += dark_level;
         }
         if self.noisy && (srel > 0.0 || sabs > 0.0) {
             for v in acc.data.iter_mut() {
@@ -280,6 +346,20 @@ impl ChipSim {
     /// operand block into one call is what keeps this flat per layer.
     pub fn passes(&self) -> u64 {
         self.passes_done
+    }
+
+    /// Attach a post-deployment drift process: from now on `desc` evolves
+    /// on the pass-count clock (one [`DriftModel::on_pass`] per crossbar
+    /// pass).  [`ChipSim::forward_folded`] counts one pass per fold; dark
+    /// creep ticked inside a fold group is accumulated into that group's
+    /// single detection event.
+    pub fn set_drift(&mut self, model: DriftModel) {
+        self.drift = Some(model);
+    }
+
+    /// The attached drift process, if any.
+    pub fn drift(&self) -> Option<&DriftModel> {
+        self.drift.as_ref()
     }
 }
 
@@ -481,6 +561,112 @@ mod tests {
         let y = sim.forward_folded(&w, &x, 4, 0.0);
         // one detection event => exactly one dark, not r darks
         assert!((y.data[0] - 0.5).abs() < 1e-6, "got {}", y.data[0]);
+    }
+
+    fn accel_drift(seed: u64) -> crate::drift::DriftConfig {
+        crate::drift::DriftConfig {
+            seed,
+            passes_per_tick: 1,
+            gamma_walk: 2e-3,
+            resp_tilt: 4e-3,
+            dark_creep: 1e-4,
+            max_ticks: 0,
+        }
+    }
+
+    #[test]
+    fn drift_disabled_is_the_default_and_desc_is_static() {
+        let mut sim = ChipSim::deterministic(ChipDescription::ideal(4));
+        assert!(sim.drift().is_none());
+        let w = rand_bcm(2, 2, 4, 51);
+        let x = rand_x(8, 4, 52);
+        for _ in 0..10 {
+            sim.forward(&w, &x);
+        }
+        assert_eq!(sim.desc.resp, vec![1.0; 4]);
+        assert_eq!(sim.desc.dark, 0.0);
+    }
+
+    #[test]
+    fn drift_enabled_is_deterministic_and_diverges_from_static_chip() {
+        let d = ChipDescription::ideal(4);
+        let w = rand_bcm(2, 2, 4, 53);
+        let x = rand_x(8, 4, 54);
+        let run = || {
+            let mut sim = ChipSim::deterministic(d.clone());
+            sim.set_drift(crate::drift::DriftModel::new(accel_drift(9)));
+            (0..20).map(|_| sim.forward(&w, &x).data).collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "drifting sim must be seed-deterministic");
+        // a static sim agrees on the first pass (drift applies after it)
+        // and disagrees once the walk has accumulated
+        let mut sim = ChipSim::deterministic(d);
+        let y0 = sim.forward(&w, &x);
+        assert_eq!(a[0], y0.data, "first pass sees the calibration point");
+        let y19 = {
+            let mut s = ChipSim::deterministic(ChipDescription::ideal(4));
+            for _ in 0..19 {
+                s.forward(&w, &x);
+            }
+            s.forward(&w, &x)
+        };
+        assert_ne!(a[19], y19.data, "drift must perturb later passes");
+    }
+
+    #[test]
+    fn folded_carries_drift_dark_creep_into_detection_event() {
+        let mut d = ChipDescription::ideal(4);
+        d.dark = 0.1;
+        let w = Bcm::zeros(1, 4, 4); // zero weights: output = dark level
+        let x = rand_x(16, 1, 26);
+        let mut sim = ChipSim::deterministic(d);
+        sim.set_drift(crate::drift::DriftModel::new(
+            crate::drift::DriftConfig {
+                seed: 13,
+                passes_per_tick: 1,
+                gamma_walk: 0.0,
+                resp_tilt: 0.0,
+                dark_creep: 0.01,
+                max_ticks: 0,
+            },
+        ));
+        let y = sim.forward_folded(&w, &x, 4, 0.0);
+        // 4 fold passes tick 0.01 creep each; the snapshot restore must
+        // carry the creep into the single detection event, not erase it
+        assert!(
+            (y.data[0] - 0.14).abs() < 1e-6,
+            "dark level must accumulate fold-group creep: {}",
+            y.data[0]
+        );
+        assert!((sim.desc.dark - 0.14).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chip_description_json_roundtrip_and_load_attribution() {
+        let mut d = ChipDescription::ideal(4);
+        d.gamma[1] = 0.031_25; // exactly representable: survives f32↔f64
+        d.resp = vec![1.0, 0.5, 1.25, 0.75];
+        d.dark = 0.25;
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.seed = 7;
+        let dir = std::env::temp_dir().join("cirptc_chipdesc_rt");
+        let path = dir.join("drift_snapshot.json");
+        d.save(&path).unwrap();
+        let back = ChipDescription::load(&path).unwrap();
+        assert_eq!(back.l, 4);
+        assert_eq!(back.gamma, d.gamma);
+        assert_eq!(back.resp, d.resp);
+        assert_eq!(back.dark, d.dark);
+        assert_eq!((back.w_bits, back.x_bits, back.seed), (6, 4, 7));
+        // a corrupt snapshot names the file in the error chain
+        std::fs::write(&path, "{\"l\": 4}").unwrap();
+        let err = ChipDescription::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("drift_snapshot.json"),
+            "error must carry the path: {err:#}"
+        );
     }
 
     #[test]

@@ -207,6 +207,70 @@ impl TrainModel {
         })
     }
 
+    /// Build a trainable model from an existing manifest + CPT1 bundle —
+    /// the loader twin of [`crate::onn::Engine::from_parts`] and the
+    /// inverse of [`TrainModel::export_bundle`].  This is how the drift
+    /// subsystem obtains the trainable copy of whatever the serving
+    /// engine is currently running, so recalibration fine-tunes the
+    /// *live* weights rather than a re-initialized stack.
+    pub fn from_parts(manifest: Manifest, bundle: &Bundle) -> Result<TrainModel> {
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for (i, spec) in manifest.layers.iter().enumerate() {
+            let name = format!("layer{i}");
+            layers.push(match spec.kind {
+                LayerKind::Conv | LayerKind::Fc => {
+                    if spec.arch != "circ" {
+                        bail!(
+                            "trainer supports the circ arch only (got '{}')",
+                            spec.arch
+                        );
+                    }
+                    let (p, q) = spec.bcm_dims();
+                    let w = bundle.get(&format!("{name}.w"))?;
+                    if w.shape() != [p, q, spec.l] {
+                        bail!(
+                            "{name}.w shape {:?}, expected [{p},{q},{}]",
+                            w.shape(),
+                            spec.l
+                        );
+                    }
+                    let bias =
+                        bundle.get(&format!("{name}.b"))?.as_f32()?.to_vec();
+                    TrainLayer::Linear(CirLinear {
+                        bcm: Bcm::new(p, q, spec.l, w.as_f32()?.to_vec()),
+                        bias,
+                        cout: spec.cout,
+                        n_in: spec.n_in(),
+                    })
+                }
+                LayerKind::Bn => TrainLayer::Bn(BnParams {
+                    gamma: bundle
+                        .get(&format!("{name}.gamma"))?
+                        .as_f32()?
+                        .to_vec(),
+                    beta: bundle
+                        .get(&format!("{name}.beta"))?
+                        .as_f32()?
+                        .to_vec(),
+                    mean: bundle
+                        .get(&format!("{name}.state.mean"))?
+                        .as_f32()?
+                        .to_vec(),
+                    var: bundle
+                        .get(&format!("{name}.state.var"))?
+                        .as_f32()?
+                        .to_vec(),
+                }),
+                _ => TrainLayer::Stateless,
+            });
+        }
+        Ok(TrainModel {
+            manifest,
+            layers,
+            threads: ThreadPool::default_size(),
+        })
+    }
+
     /// Training-mode forward over an image batch (b, c, h, w): BN uses
     /// batch statistics (running stats EMA-updated in place with momentum
     /// 0.9, as python `model.apply`), every nonlinearity caches what the
@@ -907,6 +971,31 @@ mod tests {
             assert!(b.get(name).is_ok(), "missing {name}");
         }
         assert_eq!(b.get("layer0.w").unwrap().shape(), &[2, 3, 4]);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_export_bundle() {
+        let m = tiny_model(9);
+        let bundle = m.export_bundle();
+        let back = TrainModel::from_parts(m.manifest.clone(), &bundle).unwrap();
+        assert_eq!(m.layers.len(), back.layers.len());
+        for (a, b) in m.layers.iter().zip(&back.layers) {
+            match (a, b) {
+                (TrainLayer::Linear(x), TrainLayer::Linear(y)) => {
+                    assert_eq!(x.bcm.w, y.bcm.w);
+                    assert_eq!(x.bias, y.bias);
+                    assert_eq!((x.cout, x.n_in), (y.cout, y.n_in));
+                }
+                (TrainLayer::Bn(x), TrainLayer::Bn(y)) => {
+                    assert_eq!(x.gamma, y.gamma);
+                    assert_eq!(x.beta, y.beta);
+                    assert_eq!(x.mean, y.mean);
+                    assert_eq!(x.var, y.var);
+                }
+                (TrainLayer::Stateless, TrainLayer::Stateless) => {}
+                _ => panic!("layer kind mismatch after from_parts"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! End-to-end drift subsystem (ISSUE 4 acceptance path): a served model
+//! on a chip under a seeded Γ/responsivity/dark walk.
+//!
+//! * **unmitigated** — the drifting chip measurably degrades serving
+//!   accuracy once the walk plateaus;
+//! * **mitigated** — the same walk with the drift monitor + background
+//!   recalibrator recovers to within 2 pp of the pre-drift baseline,
+//!   with zero dropped or failed requests while engines hot-swap under
+//!   live traffic.
+//!
+//! Everything is seeded: the drift walk, the probe tile, the fine-tune
+//! shuffles and the synthetic data.  The only nondeterminism is *when*
+//! (in wall time) a background recalibration lands — the test
+//! synchronizes on the shared metrics, never on sleeps alone.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cirptc::coordinator::{
+    BackendFactory, BatcherConfig, Coordinator, InferenceBackend, Metrics,
+};
+use cirptc::data::datasets::{self, SHAPES_MANIFEST_JSON, Split};
+use cirptc::drift::{
+    DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
+    MonitorConfig, RecalConfig, Recalibrator, RecalRequest,
+};
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::{argmax, Tensor};
+use cirptc::train::{
+    fit, gather_batch, Optimizer, TrainBackend, TrainConfig, TrainModel,
+};
+
+/// The as-calibrated deployment chip: quantizers on, deterministic.
+fn chip0() -> ChipDescription {
+    let mut d = ChipDescription::ideal(4);
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d.seed = 11;
+    d
+}
+
+/// Accelerated drift episode: tick every pass, plateau after 120 ticks.
+fn drift_cfg() -> DriftConfig {
+    DriftConfig {
+        seed: 0xD5,
+        passes_per_tick: 1,
+        gamma_walk: 1.5e-3,
+        resp_tilt: 3e-3,
+        dark_creep: 2e-4,
+        max_ticks: 120,
+    }
+}
+
+const PLATEAU_TICKS: i64 = 120;
+/// chunk size = max_batch: each chunk drains as (usually) one batch
+const CHUNK: usize = 8;
+
+/// Train the model digitally, then BN-calibrate it on the deployment
+/// chip (the paper's one-shot calibration at the calibration point).
+fn trained_model(manifest: &Manifest, train_split: &Split) -> TrainModel {
+    let mut model = TrainModel::init(manifest.clone(), 0xA4).unwrap();
+    let mut backend = TrainBackend::Digital;
+    let mut opt = Optimizer::adam(5e-3);
+    let cfg = TrainConfig { epochs: 8, batch: 16, max_steps: 0, seed: 0xA5 };
+    let hist = fit(&mut model, &mut backend, &mut opt, train_split, &cfg)
+        .unwrap();
+    assert!(
+        hist.last().unwrap() < hist.first().unwrap(),
+        "training must converge: {hist:?}"
+    );
+    let batches: Vec<Tensor> = (0..6)
+        .map(|i| {
+            let idx: Vec<usize> = (i * 16..(i + 1) * 16).collect();
+            gather_batch(train_split, &idx).0
+        })
+        .collect();
+    let mut chip_backend = TrainBackend::Chip(ChipSim::deterministic(chip0()));
+    model.recalibrate_bn(&batches, &mut chip_backend).unwrap();
+    model
+}
+
+/// Accuracy of `engine` over `eval` through a (static) chip at `desc`,
+/// in the same chunks-of-8 the coordinator phases use.
+fn chip_eval_accuracy(engine: &Engine, eval: &Split, desc: ChipDescription) -> f64 {
+    let mut be = Backend::PhotonicSim(ChipSim::deterministic(desc));
+    let mut correct = 0usize;
+    let mut s = 0usize;
+    while s < eval.n {
+        let e = (s + CHUNK).min(eval.n);
+        let imgs: Vec<Tensor> = (s..e).map(|i| eval.image(i)).collect();
+        let logits = engine.forward_batch(&imgs, &mut be).unwrap();
+        for (row, i) in logits.iter().zip(s..e) {
+            if argmax(row) == eval.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        s = e;
+    }
+    correct as f64 / eval.n as f64
+}
+
+/// One pass of the eval set through the live coordinator; panics on any
+/// dropped request (a dropped reply channel fails the `wait`).
+fn serve_round(coord: &Coordinator, eval: &Split) -> f64 {
+    let mut correct = 0usize;
+    let mut s = 0usize;
+    while s < eval.n {
+        let e = (s + CHUNK).min(eval.n);
+        let imgs: Vec<Tensor> = (s..e).map(|i| eval.image(i)).collect();
+        let responses = coord.classify_all(&imgs).unwrap();
+        assert_eq!(responses.len(), imgs.len(), "request dropped");
+        for (r, i) in responses.iter().zip(s..e) {
+            if argmax(&r.logits) == eval.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        s = e;
+    }
+    correct as f64 / eval.n as f64
+}
+
+/// One drift-monitored photonic worker over a fresh chip at the
+/// calibration point, with the episode's drift process attached.
+fn drift_factory(
+    shared: &Arc<DriftShared>,
+    tx: mpsc::Sender<RecalRequest>,
+    mcfg: MonitorConfig,
+) -> BackendFactory {
+    let shared = Arc::clone(shared);
+    Box::new(move || {
+        let desc = chip0();
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_drift(DriftModel::new(drift_cfg()));
+        let monitor = DriftMonitor::new(mcfg, &desc);
+        Box::new(DriftBackend::new(shared, sim, monitor, tx))
+            as Box<dyn InferenceBackend>
+    })
+}
+
+fn batcher() -> BatcherConfig {
+    BatcherConfig { max_batch: CHUNK, max_wait_us: 20_000 }
+}
+
+#[test]
+fn drift_degrades_and_recalibration_recovers_without_drops() {
+    let manifest = Manifest::parse(SHAPES_MANIFEST_JSON).unwrap();
+    let train_split = datasets::synth_shapes(192, 0xA1);
+    let calib_split = datasets::synth_shapes(128, 0xA2);
+    let eval_split = datasets::synth_shapes(128, 0xA3);
+    let model = trained_model(&manifest, &train_split);
+    let bundle = model.export_bundle();
+
+    // -- pre-drift baseline (engine + chip at the calibration point) ---
+    let engine = Engine::from_parts(manifest.clone(), &bundle).unwrap();
+    let acc_base = chip_eval_accuracy(&engine, &eval_split, chip0());
+    println!("baseline accuracy at the calibration point: {acc_base:.4}");
+    assert!(acc_base > 0.5, "model must serve well pre-drift: {acc_base}");
+
+    // -- phase B: unmitigated drift ------------------------------------
+    let acc_drifted = {
+        let metrics = Arc::new(Metrics::default());
+        let engine = Engine::from_parts(manifest.clone(), &bundle).unwrap();
+        let shared = DriftShared::new(engine, Arc::clone(&metrics));
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // monitor-only: probes + metrics, no recalibrator
+        let mcfg = MonitorConfig {
+            probe_every: 1,
+            residual_trigger: f32::INFINITY,
+            cooldown_passes: 0,
+            ..MonitorConfig::default()
+        };
+        let coord = Coordinator::start_with_metrics(
+            vec![drift_factory(&shared, tx, mcfg)],
+            batcher(),
+            Arc::clone(&metrics),
+        );
+        // drive the pass clock until the walk plateaus, then measure
+        let mut rounds = 0;
+        while metrics.drift_ticks.get() < PLATEAU_TICKS {
+            serve_round(&coord, &eval_split);
+            rounds += 1;
+            assert!(rounds <= 12, "drift clock must reach the plateau");
+        }
+        let acc = serve_round(&coord, &eval_split);
+        assert_eq!(metrics.errors.get(), 0);
+        assert!(metrics.probes.get() > 0, "probes must run");
+        assert!(
+            metrics.last_probe_residual_ppm.get() > 10_000,
+            "plateaued drift must show a large probe residual: {}",
+            metrics.summary()
+        );
+        println!("unmitigated accuracy at the plateau: {acc:.4}");
+        acc
+    };
+    assert!(
+        acc_base - acc_drifted >= 0.04,
+        "drift must degrade serving measurably: base {acc_base:.4} vs \
+         drifted {acc_drifted:.4}"
+    );
+
+    // -- phase C: monitored + recalibrating coordinator ----------------
+    let snapdir = std::env::temp_dir().join("cirptc_drift_e2e_snapshots");
+    let _ = std::fs::remove_dir_all(&snapdir);
+    let metrics = Arc::new(Metrics::default());
+    let engine = Engine::from_parts(manifest.clone(), &bundle).unwrap();
+    let shared = DriftShared::new(engine, Arc::clone(&metrics));
+    let (tx, rx) = mpsc::channel();
+    let rcfg = RecalConfig {
+        fine_tune_steps: 48,
+        lr: 2e-3,
+        batch: 16,
+        bn_batches: 6,
+        seed: 0xC1,
+        noisy: false,
+        snapshot_dir: Some(snapdir.clone()),
+    };
+    let _recal = Recalibrator::new(
+        model.clone(),
+        calib_split,
+        rcfg,
+        Arc::clone(&shared),
+    )
+    .spawn(rx);
+    let mcfg = MonitorConfig {
+        probe_every: 1,
+        residual_trigger: 0.04,
+        cooldown_passes: 40,
+        ..MonitorConfig::default()
+    };
+    let coord = Coordinator::start_with_metrics(
+        vec![drift_factory(&shared, tx, mcfg)],
+        batcher(),
+        Arc::clone(&metrics),
+    );
+
+    // drive to the plateau under live traffic (recalibrations may already
+    // be landing in the background — requests keep flowing throughout)
+    let mut rounds = 0;
+    while metrics.drift_ticks.get() < PLATEAU_TICKS {
+        serve_round(&coord, &eval_split);
+        rounds += 1;
+        assert!(rounds <= 12, "drift clock must reach the plateau");
+    }
+    // settle: keep serving until a recalibration has landed *and* the
+    // probe residual (drift since that recalibration's operating point)
+    // is back under the trigger — i.e. the served weights match the
+    // plateaued chip
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        serve_round(&coord, &eval_split);
+        let settled = metrics.recalibrations.get() >= 1
+            && metrics.last_probe_residual_ppm.get() < 40_000;
+        if settled {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "recalibration never settled: {}",
+            metrics.summary()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let acc_recal = serve_round(&coord, &eval_split);
+    println!(
+        "recalibrated accuracy at the plateau: {acc_recal:.4} \
+         ({} recalibrations)",
+        metrics.recalibrations.get()
+    );
+    println!("metrics: {}", metrics.summary());
+
+    // recovery: within 2 pp of the pre-drift baseline
+    assert!(
+        acc_recal >= acc_base - 0.02,
+        "recalibration must recover to within 2 pp: base {acc_base:.4} \
+         vs recalibrated {acc_recal:.4}"
+    );
+    // zero-downtime: every submitted request completed, none failed
+    assert_eq!(metrics.errors.get(), 0, "no request may fail");
+    assert_eq!(
+        metrics.completed.get(),
+        metrics.submitted.get(),
+        "every request must complete"
+    );
+    assert!(metrics.recalibrations.get() >= 1, "a hot swap must land");
+    assert!(metrics.probes.get() > 0);
+
+    // the drifted-chip snapshot is attributable: it reloads through the
+    // path-carrying ChipDescription::load
+    let snap0 = snapdir.join("drift_snapshot_0.json");
+    assert!(snap0.exists(), "recalibration must snapshot the chip");
+    let snap = ChipDescription::load(&snap0).unwrap();
+    assert_eq!(snap.l, 4);
+    assert_ne!(snap.resp, vec![1.0; 4], "snapshot must capture the drift");
+
+    drop(coord);
+}

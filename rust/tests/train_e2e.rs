@@ -4,7 +4,7 @@
 //! manifest + CPT1 weights written by rust → reloaded through
 //! `onn::Manifest` / `Engine` → a forward batch served.
 
-use cirptc::data::datasets;
+use cirptc::data::datasets::{self, SHAPES_MANIFEST_JSON as SHAPES};
 use cirptc::data::Bundle;
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::simulator::{ChipDescription, ChipSim};
@@ -12,23 +12,6 @@ use cirptc::train::{
     evaluate, fit, gather_batch, Optimizer, TrainBackend, TrainConfig,
     TrainModel,
 };
-
-const SHAPES: &str = r#"{
-  "dataset": "synth_shapes", "classes": 3,
-  "layers": [
-    {"kind": "conv", "cin": 1, "cout": 8, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "bn", "cin": 8, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0},
-    {"kind": "fc", "cin": 512, "cout": 3, "k": 3, "pool": 2,
-     "arch": "circ", "l": 4, "act_scale": 4.0}
-  ]}"#;
 
 /// A mildly non-ideal chip: 6/4-bit DACs, Γ crosstalk, responsivity tilt,
 /// dark current and dynamic noise — the regime hardware-aware training is
