@@ -39,9 +39,15 @@ verify:
 	cargo build --release --workspace
 	cargo test -q --workspace
 
-## One-iteration serving bench (works without artifacts — synthetic model)
+## One-iteration serving + mvm bench smoke (works without artifacts —
+## synthetic model); writes BENCH_serving.json / BENCH_mvm.json and diffs
+## them against benches/baselines (fails only on >2x slowdowns or a
+## planned-path speedup below its committed floor)
 bench-smoke:
 	cargo bench --bench serving -- --smoke
+	cargo bench --bench mvm_paths -- --smoke
+	cargo run --release --bin bench_diff -- --tolerance 2.0 \
+		BENCH_serving.json BENCH_mvm.json
 
 ## Drift-subsystem smoke (what CI runs): tiny in-process model, drift
 ## clock accelerated to one tick per chip pass, a forced recalibration +

@@ -1,21 +1,37 @@
 //! Bench: MVM execution-path ablation (DESIGN.md §7 design choices).
 //!
+//! * **planned vs unplanned** batched Eq. (2) at serving shapes — the
+//!   headline of the planned execution path (cached plan + weight
+//!   spectra + scratch arena + scoped threads vs the per-call-rebuild
+//!   reference); also the measured crossover behind
+//!   `circulant::fft::use_fft_path`.
 //! * direct compressed BCM multiply vs FFT path (Eq. 2) vs dense expansion
 //!   — at the paper's order-4 the direct path should win; FFT crosses over
 //!   at large block order (this is the ablation behind choosing the direct
 //!   form for the L1 kernel's MXU mapping).
 //! * the AOT Pallas artifact via PJRT (per-call overhead included).
 //! * photonic-simulator overhead vs bare fp32.
+//!
+//! Writes `BENCH_mvm.json` (throughput + p50/p99 per kernel, planned
+//! speedups, scratch-arena alloc proxy) so the perf trajectory is
+//! tracked across PRs; `-- --smoke` runs the planned section only with a
+//! reduced budget (the CI bench-smoke step).
 
 use std::path::PathBuf;
+use std::time::Duration;
 
-use cirptc::circulant::Bcm;
+use cirptc::circulant::{fft, Bcm};
 #[cfg(feature = "pjrt")]
 use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::Tensor;
-use cirptc::util::bench::{bench, black_box, row, section};
+use cirptc::util::bench::{
+    bench, bench_cfg, black_box, row, section, workspace_path, JsonReport,
+};
+use cirptc::util::cli::Args;
 use cirptc::util::rng::Rng;
+use cirptc::util::scratch;
+use cirptc::util::threadpool::ThreadPool;
 
 fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
     let mut r = Rng::new(seed);
@@ -24,7 +40,85 @@ fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
     Bcm::new(p, q, l, w)
 }
 
+/// Planned vs unplanned batched Eq. (2) at the serving shapes the
+/// acceptance tracks (l=64, B ∈ {8, 32}): the unplanned reference is the
+/// PR-4 kernel (plan + weight spectra rebuilt per call, serial), the
+/// planned path is what `Engine::forward_batch` now runs.
+fn planned_vs_unplanned(rep: &mut JsonReport, smoke: bool) {
+    section("planned vs unplanned batched Eq.2 at serving shapes");
+    let threads = ThreadPool::default_size();
+    let (warmup, iters, budget) = if smoke {
+        (2, 20, Duration::from_millis(800))
+    } else {
+        (3, 40, Duration::from_secs(2))
+    };
+    let l = 64usize;
+    let blocks = 1024 / l; // logical 1024×1024, P = Q = 16
+    let bcm = rand_bcm(blocks, blocks, l, 9);
+    let plan = fft::plan_for(l);
+    let spec = fft::WeightSpectra::new(&bcm, &plan);
+    for cols in [8usize, 32] {
+        let mut xd = vec![0.0f32; bcm.n() * cols];
+        Rng::new(10 + cols as u64).fill_uniform(&mut xd);
+        let x = Tensor::new(&[bcm.n(), cols], xd);
+        // the two paths must agree bit for bit before we time them
+        assert_eq!(
+            fft::bcm_mmm_fft_planned(&bcm, &x, &plan, &spec, threads).data,
+            bcm.mmm_fft(&x).data,
+            "planned path must be bit-identical to the reference"
+        );
+        let s_unplanned = bench_cfg(
+            &format!("unplanned mmm_fft l={l} B={cols}"),
+            warmup,
+            iters,
+            budget,
+            &mut || {
+                black_box(bcm.mmm_fft(&x));
+            },
+        );
+        let s_planned = bench_cfg(
+            &format!("planned   mmm_fft l={l} B={cols} t={threads}"),
+            warmup,
+            iters,
+            budget,
+            &mut || {
+                black_box(fft::bcm_mmm_fft_planned(
+                    &bcm, &x, &plan, &spec, threads,
+                ));
+            },
+        );
+        let speedup = s_unplanned.mean_ns / s_planned.mean_ns;
+        row(&format!("l={l} B={cols}"), &[
+            ("planned_speedup", format!("{speedup:.2}x")),
+            ("target", "≥1.5x".into()),
+        ]);
+        rep.stat(
+            &format!("mmm_fft_unplanned_l{l}_b{cols}"),
+            &s_unplanned,
+            cols as f64,
+        );
+        rep.stat(
+            &format!("mmm_fft_planned_l{l}_b{cols}"),
+            &s_planned,
+            cols as f64,
+        );
+        rep.metric(&format!("planned_speedup_l{l}_b{cols}"), speedup);
+    }
+    let st = scratch::stats();
+    rep.metric("scratch_takes", st.takes as f64);
+    rep.metric("scratch_misses", st.misses as f64);
+}
+
 fn main() {
+    let args = Args::parse();
+    let mut rep = JsonReport::new("mvm_paths");
+    if args.has("smoke") {
+        planned_vs_unplanned(&mut rep, true);
+        rep.save(&workspace_path("BENCH_mvm.json"))
+            .expect("write BENCH_mvm.json");
+        return;
+    }
+    planned_vs_unplanned(&mut rep, false);
     let dir = PathBuf::from("artifacts");
 
     section("order-4 48x48: direct vs FFT vs dense expansion (batch 16)");
@@ -54,6 +148,8 @@ fn main() {
         ("direct_vs_dense", format!("{:.2}x", s_dense.mean_ns / s_direct.mean_ns)),
         ("direct_vs_fft", format!("{:.2}x", s_fft.mean_ns / s_direct.mean_ns)),
     ]);
+    rep.stat("direct_48x48_b16", &s_direct, 16.0);
+    rep.metric("order4_direct_vs_fft", s_fft.mean_ns / s_direct.mean_ns);
 
     section("FFT crossover with block order (fixed 1024-dim, 1 column)");
     for l in [4usize, 16, 64, 256] {
@@ -71,6 +167,8 @@ fn main() {
             "fft_speedup",
             format!("{:.2}x", sd.mean_ns / sf.mean_ns),
         )]);
+        // the measured crossover behind `fft::use_fft_path`
+        rep.metric(&format!("fft_speedup_l{l}"), sd.mean_ns / sf.mean_ns);
     }
 
     section("batched Eq.2 (mmm_fft): one weight-spectrum per block, B columns");
@@ -167,4 +265,7 @@ fn main() {
     }
     #[cfg(not(feature = "pjrt"))]
     println!("  skipped: pjrt feature disabled (cargo bench --features pjrt)");
+
+    rep.save(&workspace_path("BENCH_mvm.json"))
+        .expect("write BENCH_mvm.json");
 }

@@ -38,9 +38,10 @@ use cirptc::tensor::{argmax, Tensor};
 use cirptc::train::{
     fit, gather_batch, Optimizer, TrainBackend, TrainConfig, TrainModel,
 };
-use cirptc::util::bench::{row, section};
+use cirptc::util::bench::{row, section, workspace_path, JsonReport};
 use cirptc::util::cli::Args;
 use cirptc::util::rng::Rng;
+use cirptc::util::scratch;
 
 /// Synthetic circ model (conv→relu→pool→flatten→fc on 32×32 inputs) so
 /// the bench runs without trained artifacts.
@@ -264,6 +265,7 @@ fn drift_scenario(smoke: bool) {
 fn main() {
     let args = Args::parse();
     let smoke = args.has("smoke");
+    let mut rep = JsonReport::new("serving");
     if args.has("drift-smoke") {
         drift_scenario(true);
         return;
@@ -307,6 +309,7 @@ fn main() {
         ("req_s", format!("{:.1}", n as f64 / bare)),
         ("total_s", format!("{bare:.3}")),
     ]);
+    rep.metric("bare_loop_req_s", n as f64 / bare);
 
     section("batch-major forward_batch sweep (digital) vs per-image loop");
     for batch in [1usize, 2, 4, 8, 16, 32, 64] {
@@ -323,6 +326,7 @@ fn main() {
             ("img_s", format!("{:.1}", n as f64 / wall)),
             ("speedup_vs_loop", format!("{:.2}x", bare / wall)),
         ]);
+        rep.metric(&format!("digital_b{batch}_img_s"), n as f64 / wall);
     }
 
     section("batch-major forward_batch sweep (deterministic photonic sim)");
@@ -347,7 +351,14 @@ fn main() {
             ("chip_passes", format!("{passes}")),
             ("tiles", format!("{tiles}")),
         ]);
+        rep.metric(&format!("photonic_b{batch}_img_s"), n as f64 / wall);
+        rep.metric(&format!("photonic_b{batch}_chip_passes"), passes as f64);
     }
+    // allocs-per-batch proxy: this driver thread's scratch counters after
+    // the photonic sweep (planned path; warm pools stop missing)
+    let st = scratch::stats();
+    rep.metric("scratch_takes", st.takes as f64);
+    rep.metric("scratch_misses", st.misses as f64);
 
     section("coordinator overhead (1 digital worker, batch 8)");
     let engine2 = Arc::clone(&engine);
@@ -367,10 +378,24 @@ fn main() {
         ("target", "<10%".into()),
     ]);
     println!("  metrics: {}", coord.metrics.summary());
+    let (p50, p99) = coord.metrics.latency_percentiles_us();
+    rep.metric("coordinator_req_s", n as f64 / coord_s);
+    rep.metric("coordinator_p50_us", p50 as f64);
+    rep.metric("coordinator_p99_us", p99 as f64);
+    rep.metric(
+        "worker_scratch_misses",
+        coord.metrics.scratch_misses.get() as f64,
+    );
+    rep.metric(
+        "worker_scratch_takes",
+        coord.metrics.scratch_takes.get() as f64,
+    );
     drop(coord);
 
     if smoke {
         println!("\nsmoke mode: skipping policy sweep + worker scaling");
+        rep.save(&workspace_path("BENCH_serving.json"))
+            .expect("write BENCH_serving.json");
         return;
     }
 
@@ -434,4 +459,7 @@ fn main() {
     } else {
         println!("\n(drifting-chip scenario sweep: re-run with -- --drift)");
     }
+
+    rep.save(&workspace_path("BENCH_serving.json"))
+        .expect("write BENCH_serving.json");
 }

@@ -1,0 +1,197 @@
+//! Compare `BENCH_*.json` files against committed baselines with a
+//! generous regression tolerance (DESIGN.md §perf).
+//!
+//! ```text
+//! bench_diff [--baseline <dir>] [--tolerance <x>] <current.json> ...
+//! ```
+//!
+//! For every current file, the baseline of the same basename is read from
+//! `--baseline` (default `benches/baselines`).  Two checks run:
+//!
+//! * **timing regressions** — every `results.<name>.mean_ns` present in
+//!   both files with a positive baseline must not exceed
+//!   `tolerance × baseline` (default 2.0: only gross slowdowns fail —
+//!   shared CI runners are noisy, and the point is catching a planned
+//!   path that quietly fell back to per-call rebuilds, not a 10% wobble);
+//! * **metric floors** — a baseline may declare `"floors": {"metric":
+//!   min}`; the current file's `metrics.<metric>` must reach the floor
+//!   (this is how the planned-vs-unplanned speedup acceptance is pinned
+//!   without pinning machine-dependent absolute timings).
+//!
+//! Baselines with empty `results` skip the timing check (the committed
+//! seeds carry only floors until a CI artifact refreshes them).  Exit
+//! code 1 on any violation.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use cirptc::util::cli::Args;
+use cirptc::util::json::Json;
+
+/// Violations found comparing one current report against its baseline.
+fn compare(base: &Json, cur: &Json, tolerance: f64) -> Vec<String> {
+    let mut bad = Vec::new();
+    if let (Some(Json::Obj(b)), Some(Json::Obj(c))) =
+        (base.get("results"), cur.get("results"))
+    {
+        for (name, bentry) in b {
+            let (Some(bm), Some(cm)) = (
+                bentry.get("mean_ns").and_then(Json::as_f64),
+                c.get(name)
+                    .and_then(|e| e.get("mean_ns"))
+                    .and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if bm > 0.0 && cm > tolerance * bm {
+                bad.push(format!(
+                    "{name}: mean {cm:.0} ns vs baseline {bm:.0} ns \
+                     (> {tolerance:.1}x slowdown)"
+                ));
+            }
+        }
+    }
+    if let Some(Json::Obj(floors)) = base.get("floors") {
+        for (name, floor) in floors {
+            let Some(floor) = floor.as_f64() else { continue };
+            match cur
+                .get("metrics")
+                .and_then(|m| m.get(name))
+                .and_then(Json::as_f64)
+            {
+                Some(v) if v >= floor => {}
+                Some(v) => bad.push(format!(
+                    "{name}: {v:.3} below the baseline floor {floor:.3}"
+                )),
+                None => bad.push(format!(
+                    "{name}: floor {floor:.3} declared but metric missing"
+                )),
+            }
+        }
+    }
+    bad
+}
+
+fn main() -> ExitCode {
+    let args = Args::parse();
+    let dir = args.str_or("baseline", "benches/baselines");
+    let tolerance = args.f64_or("tolerance", 2.0);
+    let mut failed = false;
+    if args.positional().is_empty() {
+        eprintln!("bench_diff: no bench files given");
+        return ExitCode::FAILURE;
+    }
+    for file in args.positional() {
+        let cur_path = Path::new(file);
+        let name = match cur_path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => {
+                eprintln!("bench_diff: bad path {file}");
+                failed = true;
+                continue;
+            }
+        };
+        let base_path = Path::new(&dir).join(name);
+        let cur = match std::fs::read_to_string(cur_path) {
+            Ok(text) => text,
+            Err(e) => {
+                eprintln!("bench_diff: {file}: {e} (did the bench run?)");
+                failed = true;
+                continue;
+            }
+        };
+        let base = match std::fs::read_to_string(&base_path) {
+            Ok(text) => text,
+            Err(_) => {
+                println!("bench_diff: {name}: no committed baseline, skipping");
+                continue;
+            }
+        };
+        let (cur, base) = match (Json::parse(&cur), Json::parse(&base)) {
+            (Ok(c), Ok(b)) => (c, b),
+            (c, b) => {
+                eprintln!(
+                    "bench_diff: {name}: parse failure (current ok: {}, \
+                     baseline ok: {})",
+                    c.is_ok(),
+                    b.is_ok()
+                );
+                failed = true;
+                continue;
+            }
+        };
+        let bad = compare(&base, &cur, tolerance);
+        if bad.is_empty() {
+            println!("bench_diff: {name}: OK (tolerance {tolerance:.1}x)");
+        } else {
+            failed = true;
+            eprintln!("bench_diff: {name}: REGRESSION");
+            for line in bad {
+                eprintln!("  {line}");
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(entries: &[(&str, f64)], metrics: &[(&str, f64)]) -> Json {
+        let results = entries
+            .iter()
+            .map(|(k, v)| (*k, Json::obj(vec![("mean_ns", Json::Num(*v))])))
+            .collect::<Vec<_>>();
+        let metrics = metrics
+            .iter()
+            .map(|(k, v)| (*k, Json::Num(*v)))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("results", Json::obj(results)),
+            ("metrics", Json::obj(metrics)),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = report(&[("k", 100.0)], &[]);
+        let cur = report(&[("k", 180.0)], &[]);
+        assert!(compare(&base, &cur, 2.0).is_empty());
+    }
+
+    #[test]
+    fn gross_slowdown_fails() {
+        let base = report(&[("k", 100.0)], &[]);
+        let cur = report(&[("k", 250.0)], &[]);
+        assert_eq!(compare(&base, &cur, 2.0).len(), 1);
+    }
+
+    #[test]
+    fn missing_and_zero_baseline_entries_are_skipped() {
+        let base = report(&[("gone", 100.0), ("unseeded", 0.0)], &[]);
+        let cur = report(&[("new", 1e9), ("unseeded", 5e9)], &[]);
+        assert!(compare(&base, &cur, 2.0).is_empty());
+    }
+
+    #[test]
+    fn floors_enforced() {
+        let mut base = report(&[], &[]);
+        if let Json::Obj(m) = &mut base {
+            m.insert(
+                "floors".into(),
+                Json::obj(vec![("speedup", Json::Num(1.5))]),
+            );
+        }
+        let ok = report(&[], &[("speedup", 1.7)]);
+        assert!(compare(&base, &ok, 2.0).is_empty());
+        let low = report(&[], &[("speedup", 1.2)]);
+        assert_eq!(compare(&base, &low, 2.0).len(), 1);
+        let missing = report(&[], &[]);
+        assert_eq!(compare(&base, &missing, 2.0).len(), 1);
+    }
+}

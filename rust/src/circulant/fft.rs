@@ -5,9 +5,30 @@
 //! transform; the paper's order-4 qualifies (the direct path is still
 //! faster at such tiny orders — see benches/ablation — but Eq. (2) is part
 //! of the paper's formal story, so both routes ship and cross-validate).
+//!
+//! Two tiers of the batched Eq. (2) kernel ship (DESIGN.md §perf):
+//!
+//! * the **unplanned reference** ([`bcm_mmm_fft`] /
+//!   [`bcm_mmm_fft_backward`]) rebuilds the [`FftPlan`] and every weight
+//!   block's first-column spectrum on each call and runs serially — the
+//!   obviously-correct oracle, and the perf baseline the planned path is
+//!   benchmarked against;
+//! * the **planned path** ([`bcm_mmm_fft_planned`] /
+//!   [`bcm_mmm_fft_backward_planned`]) takes a cached plan ([`plan_for`])
+//!   and precomputed [`WeightSpectra`], draws its operand-spectrum
+//!   buffers from the thread-local scratch arena
+//!   ([`crate::util::scratch`]) and spreads block-rows across scoped
+//!   threads.  It is **bit-identical** to the reference for any thread
+//!   count (per-(block, column) op order is unchanged; the propcheck
+//!   suite in `rust/tests/planned_path.rs` pins this).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::Bcm;
 use crate::tensor::Tensor;
+use crate::util::scratch;
+use crate::util::threadpool::scoped_chunks;
 
 /// Precomputed radix-2 FFT plan: the bit-reversal permutation and the
 /// per-stage twiddle tables (derived in f64, stored f32), shared across
@@ -116,6 +137,129 @@ impl FftPlan {
     }
 }
 
+/// Process-wide [`FftPlan`] cache, keyed by transform length.  Plans are
+/// immutable once built, so one `Arc` per length serves every layer,
+/// every worker and every probe pass — nothing on the hot path re-derives
+/// a bit-reversal table or twiddle stage again.
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+
+/// The shared plan for power-of-two length `n` (building it on first use).
+pub fn plan_for(n: usize) -> Arc<FftPlan> {
+    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap();
+    Arc::clone(map.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))))
+}
+
+/// Block order at which the Eq. (2) route overtakes the direct compressed
+/// kernel.  Calibrated by `benches/mvm_paths.rs` (direct wins clearly at
+/// the paper's order 4, the FFT route wins from order ~16 up on serving
+/// batch widths); override with `CIRPTC_FFT_CROSSOVER_L` (`0` forces the
+/// direct route everywhere, `1` forces FFT for every power-of-two order).
+pub fn fft_crossover_l() -> usize {
+    static CROSSOVER: OnceLock<usize> = OnceLock::new();
+    *CROSSOVER.get_or_init(|| {
+        std::env::var("CIRPTC_FFT_CROSSOVER_L")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(16)
+    })
+}
+
+/// Auto-select: should a BCM of block order `l` take the Eq. (2) route?
+pub fn use_fft_path(l: usize) -> bool {
+    let crossover = fft_crossover_l();
+    crossover != 0 && l.is_power_of_two() && l >= crossover
+}
+
+/// Precomputed first-column spectra of every block of a [`Bcm`] — the
+/// `(P·Q, l)` complex array [`bcm_mmm_fft`] and [`bcm_mmm_fft_backward`]
+/// otherwise recompute per call.  Stored interleaved (`[re; l][im; l]`
+/// per block) so one slice feeds both halves of the accumulate kernel.
+/// Valid for exactly the weight values it was built from; the engine
+/// rebuilds it wherever the weights change (training steps, hot swaps).
+pub struct WeightSpectra {
+    l: usize,
+    n_blocks: usize,
+    data: Vec<f32>,
+}
+
+impl WeightSpectra {
+    /// FFT every block's first column once (identical op order to the
+    /// in-call loop of [`bcm_mmm_fft`], so planned results stay
+    /// bit-identical to the reference).
+    pub fn new(bcm: &Bcm, plan: &FftPlan) -> WeightSpectra {
+        let l = bcm.l;
+        assert_eq!(plan.len(), l, "plan length must match block order");
+        let n_blocks = bcm.p * bcm.q;
+        let l2 = 2 * l;
+        let mut data = vec![0.0f32; n_blocks * l2];
+        for blk_i in 0..n_blocks {
+            let blk = &bcm.w[blk_i * l..(blk_i + 1) * l];
+            let (re, im) = data[blk_i * l2..(blk_i + 1) * l2].split_at_mut(l);
+            // first column of the circulant with primary row w:
+            // col[r] = w[(-r) mod l]
+            re[0] = blk[0];
+            for r in 1..l {
+                re[r] = blk[l - r];
+            }
+            plan.forward(re, im);
+        }
+        WeightSpectra { l, n_blocks, data }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// (re, im) spectrum of block `i` (row-major over `[p][q]`).
+    #[inline]
+    fn block(&self, i: usize) -> (&[f32], &[f32]) {
+        let l2 = 2 * self.l;
+        self.data[i * l2..(i + 1) * l2].split_at(self.l)
+    }
+}
+
+/// Accumulate volume (`P·Q·l·B` complex madds) below which the planned
+/// kernels stay serial — scoped-spawn overhead beats the win on tiny
+/// tiles, and the paper's order-4 layers at small batch stay under it.
+const FFT_PAR_MIN_MADDS: usize = 1 << 16;
+
+fn fft_threads(bcm: &Bcm, b: usize, threads: usize) -> usize {
+    if threads > 1 && bcm.p >= 2 && bcm.p * bcm.q * bcm.l * b >= FFT_PAR_MIN_MADDS {
+        threads
+    } else {
+        1
+    }
+}
+
+/// Forward-transform the columns of `t` (shape `(blocks·l, b)`) into an
+/// interleaved spectrum buffer from the scratch arena: entry
+/// `(blk·b + col)` holds `[re; l][im; l]` at offset `(blk·b + col)·2l`.
+/// Per-(block, column) op order matches the reference loops exactly.
+fn column_spectra(
+    t: &Tensor,
+    blocks: usize,
+    l: usize,
+    plan: &FftPlan,
+    threads: usize,
+) -> Vec<f32> {
+    let b = t.shape[1];
+    let l2 = 2 * l;
+    let mut spec = scratch::take(blocks * b * l2);
+    if b > 0 {
+        scoped_chunks(threads, &mut spec, l2, |idx, chunk| {
+            let (re, im) = chunk.split_at_mut(l);
+            let (blk, col) = (idx / b, idx % b);
+            for i in 0..l {
+                re[i] = t.data[(blk * l + i) * b + col];
+            }
+            // `im` is zeroed by the arena
+            plan.forward(re, im);
+        });
+    }
+    spec
+}
+
 /// In-place iterative radix-2 Cooley-Tukey FFT over interleaved (re, im).
 pub fn fft_inplace(re: &mut [f32], im: &mut [f32], invert: bool) {
     let n = re.len();
@@ -176,50 +320,57 @@ pub fn fft_inplace(re: &mut [f32], im: &mut [f32], invert: bool) {
 }
 
 /// BCM · x via per-block FFTs (paper Eq. 2 generalised to blocks).
+///
+/// Single-vector path used by calibration probes and examples.  Runs off
+/// the shared plan cache ([`plan_for`]) and the thread-local scratch
+/// arena, so a probe pass no longer pays FFT setup or allocation — and
+/// its transforms are bit-identical to the batched [`bcm_mmm_fft`] at
+/// `B = 1` (both use the same plan tables).
 pub fn bcm_mvm_fft(b: &Bcm, x: &[f32]) -> Vec<f32> {
     let l = b.l;
     assert!(l.is_power_of_two(), "fft path requires power-of-two order");
     assert_eq!(x.len(), b.n());
+    let plan = plan_for(l);
+    let l2 = 2 * l;
 
-    // FFT of every input block once: (Q, l) spectra
-    let mut fx_re = vec![0.0f32; b.q * l];
-    let mut fx_im = vec![0.0f32; b.q * l];
+    // FFT of every input block once: interleaved (Q, [re l][im l]) spectra
+    let mut fx = scratch::take(b.q * l2);
     for bq in 0..b.q {
-        fx_re[bq * l..(bq + 1) * l].copy_from_slice(&x[bq * l..(bq + 1) * l]);
-        let (re, im) = (
-            &mut fx_re[bq * l..(bq + 1) * l],
-            &mut fx_im[bq * l..(bq + 1) * l],
-        );
-        fft_inplace(re, im, false);
+        let (re, im) = fx[bq * l2..(bq + 1) * l2].split_at_mut(l);
+        re.copy_from_slice(&x[bq * l..(bq + 1) * l]);
+        plan.forward(re, im);
     }
 
     let mut y = vec![0.0f32; b.m()];
-    let mut col_re = vec![0.0f32; l];
-    let mut col_im = vec![0.0f32; l];
-    let mut acc_re = vec![0.0f32; l];
-    let mut acc_im = vec![0.0f32; l];
+    let mut col = scratch::take(l2);
+    let mut acc = scratch::take(l2);
     for bp in 0..b.p {
-        acc_re.iter_mut().for_each(|v| *v = 0.0);
-        acc_im.iter_mut().for_each(|v| *v = 0.0);
+        let (acc_re, acc_im) = acc.split_at_mut(l);
+        acc_re.fill(0.0);
+        acc_im.fill(0.0);
         for bq in 0..b.q {
             // first column of circulant with primary row w: col[r] = w[(-r) mod l]
             let blk = &b.w[(bp * b.q + bq) * l..(bp * b.q + bq + 1) * l];
+            let (col_re, col_im) = col.split_at_mut(l);
             col_re[0] = blk[0];
             for r in 1..l {
                 col_re[r] = blk[l - r];
             }
-            col_im.iter_mut().for_each(|v| *v = 0.0);
-            fft_inplace(&mut col_re, &mut col_im, false);
+            col_im.fill(0.0);
+            plan.forward(col_re, col_im);
             // accumulate FFT(col) ⊙ FFT(x_block)
-            let (xr, xi) = (&fx_re[bq * l..(bq + 1) * l], &fx_im[bq * l..(bq + 1) * l]);
+            let (xr, xi) = fx[bq * l2..(bq + 1) * l2].split_at(l);
             for k in 0..l {
                 acc_re[k] += col_re[k] * xr[k] - col_im[k] * xi[k];
                 acc_im[k] += col_re[k] * xi[k] + col_im[k] * xr[k];
             }
         }
-        fft_inplace(&mut acc_re, &mut acc_im, true);
-        y[bp * l..(bp + 1) * l].copy_from_slice(&acc_re);
+        plan.inverse(acc_re, acc_im);
+        y[bp * l..(bp + 1) * l].copy_from_slice(acc_re);
     }
+    scratch::put(acc);
+    scratch::put(col);
+    scratch::put(fx);
     y
 }
 
@@ -290,6 +441,64 @@ pub fn bcm_mmm_fft(bcm: &Bcm, x: &Tensor) -> Tensor {
             }
         }
     }
+    Tensor::new(&[bcm.m(), b], out)
+}
+
+/// Planned batched Eq. (2): [`bcm_mmm_fft`] with the per-call invariants
+/// hoisted out — `plan` from the shared cache, `wspec` precomputed when
+/// the weights last changed — operand-spectrum buffers from the scratch
+/// arena, and block-rows spread over up to `threads` scoped workers.
+///
+/// **Bit-identical** to [`bcm_mmm_fft`] for any `threads`: every
+/// (block, column) tile runs the same op sequence on the same spectra,
+/// and each output tile is written by exactly one thread.
+pub fn bcm_mmm_fft_planned(
+    bcm: &Bcm,
+    x: &Tensor,
+    plan: &FftPlan,
+    wspec: &WeightSpectra,
+    threads: usize,
+) -> Tensor {
+    let l = bcm.l;
+    assert!(l.is_power_of_two(), "fft path requires power-of-two order");
+    assert_eq!(plan.len(), l, "plan length must match block order");
+    assert_eq!(wspec.n_blocks(), bcm.p * bcm.q, "stale weight spectra");
+    assert_eq!(x.shape[0], bcm.n());
+    let b = x.shape[1];
+    let l2 = 2 * l;
+    let workers = fft_threads(bcm, b, threads);
+
+    // input spectra: (Q, B, [re l][im l]) — one FFT per (block, column)
+    let xs = column_spectra(x, bcm.q, l, plan, workers);
+
+    // per (block-row, column): accumulate ⊙ products in frequency space,
+    // one inverse transform each; chunk bp owns output rows
+    // [bp·l, (bp+1)·l), so any thread split is bit-identical
+    let mut out = scratch::take(bcm.m() * b);
+    if b > 0 {
+        scoped_chunks(workers, &mut out, l * b, |bp, ytile| {
+            let mut acc_re = vec![0.0f32; l];
+            let mut acc_im = vec![0.0f32; l];
+            for col in 0..b {
+                acc_re.fill(0.0);
+                acc_im.fill(0.0);
+                for bq in 0..bcm.q {
+                    let (wr, wi) = wspec.block(bp * bcm.q + bq);
+                    let (xr, xi) =
+                        xs[(bq * b + col) * l2..(bq * b + col + 1) * l2].split_at(l);
+                    for k in 0..l {
+                        acc_re[k] += wr[k] * xr[k] - wi[k] * xi[k];
+                        acc_im[k] += wr[k] * xi[k] + wi[k] * xr[k];
+                    }
+                }
+                plan.inverse(&mut acc_re, &mut acc_im);
+                for r in 0..l {
+                    ytile[r * b + col] = acc_re[r];
+                }
+            }
+        });
+    }
+    scratch::put(xs);
     Tensor::new(&[bcm.m(), b], out)
 }
 
@@ -403,6 +612,93 @@ pub fn bcm_mmm_fft_backward(
             dw[off..off + l].copy_from_slice(&acc_re);
         }
     }
+    (dw, Tensor::new(&[bcm.n(), b], dx))
+}
+
+/// Planned adjoint: [`bcm_mmm_fft_backward`] reusing the cached `plan` +
+/// forward [`WeightSpectra`] (the weight spectra are identical in the
+/// forward and backward passes, so training's backward no longer re-FFTs
+/// every block column), scratch-arena operand spectra, and scoped-thread
+/// block distribution.  Bit-identical to the reference for any `threads`.
+pub fn bcm_mmm_fft_backward_planned(
+    bcm: &Bcm,
+    x: &Tensor,
+    dy: &Tensor,
+    plan: &FftPlan,
+    wspec: &WeightSpectra,
+    threads: usize,
+) -> (Vec<f32>, Tensor) {
+    let l = bcm.l;
+    assert!(l.is_power_of_two(), "fft path requires power-of-two order");
+    assert_eq!(plan.len(), l, "plan length must match block order");
+    assert_eq!(wspec.n_blocks(), bcm.p * bcm.q, "stale weight spectra");
+    assert_eq!(x.shape[0], bcm.n());
+    assert_eq!(dy.shape[0], bcm.m());
+    assert_eq!(x.shape[1], dy.shape[1], "operand/upstream batch width");
+    let b = x.shape[1];
+    let l2 = 2 * l;
+    let workers = fft_threads(bcm, b, threads);
+
+    let xs = column_spectra(x, bcm.q, l, plan, workers);
+    let gs = column_spectra(dy, bcm.p, l, plan, workers);
+
+    // dx: accumulate conj(W_f) ⊙ dY_f over block-rows; chunk bq owns
+    // rows [bq·l, (bq+1)·l) of dx
+    let mut dx = vec![0.0f32; bcm.n() * b];
+    if b > 0 {
+        scoped_chunks(workers, &mut dx, l * b, |bq, dxtile| {
+            let mut acc_re = vec![0.0f32; l];
+            let mut acc_im = vec![0.0f32; l];
+            for col in 0..b {
+                acc_re.fill(0.0);
+                acc_im.fill(0.0);
+                for bp in 0..bcm.p {
+                    let (wre, wim) = wspec.block(bp * bcm.q + bq);
+                    let (gre, gim) =
+                        gs[(bp * b + col) * l2..(bp * b + col + 1) * l2].split_at(l);
+                    for k in 0..l {
+                        let (wr, wi) = (wre[k], -wim[k]);
+                        let (gr, gi) = (gre[k], gim[k]);
+                        acc_re[k] += wr * gr - wi * gi;
+                        acc_im[k] += wr * gi + wi * gr;
+                    }
+                }
+                plan.inverse(&mut acc_re, &mut acc_im);
+                for i in 0..l {
+                    dxtile[i * b + col] = acc_re[i];
+                }
+            }
+        });
+    }
+
+    // dw: accumulate conj(dY_f) ⊙ X_f over columns; chunk bp owns the
+    // contiguous (Q, l) slab of dw belonging to block-row bp
+    let mut dw = vec![0.0f32; bcm.w.len()];
+    if b > 0 {
+        scoped_chunks(workers, &mut dw, bcm.q * l, |bp, dwtile| {
+            let mut acc_re = vec![0.0f32; l];
+            let mut acc_im = vec![0.0f32; l];
+            for bq in 0..bcm.q {
+                acc_re.fill(0.0);
+                acc_im.fill(0.0);
+                for col in 0..b {
+                    let (gre, gim) =
+                        gs[(bp * b + col) * l2..(bp * b + col + 1) * l2].split_at(l);
+                    let (xr, xi) =
+                        xs[(bq * b + col) * l2..(bq * b + col + 1) * l2].split_at(l);
+                    for k in 0..l {
+                        let (gr, gi) = (gre[k], -gim[k]);
+                        acc_re[k] += gr * xr[k] - gi * xi[k];
+                        acc_im[k] += gr * xi[k] + gi * xr[k];
+                    }
+                }
+                plan.inverse(&mut acc_re, &mut acc_im);
+                dwtile[bq * l..(bq + 1) * l].copy_from_slice(&acc_re);
+            }
+        });
+    }
+    scratch::put(gs);
+    scratch::put(xs);
     (dw, Tensor::new(&[bcm.n(), b], dx))
 }
 
@@ -532,5 +828,91 @@ mod tests {
     fn fft_rejects_non_power_of_two_order() {
         let b = Bcm::zeros(1, 1, 3);
         b.mvm_fft(&[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn plan_cache_shares_one_plan_per_length() {
+        let a = plan_for(16);
+        let b = plan_for(16);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same length, same plan");
+        assert_eq!(plan_for(8).len(), 8);
+    }
+
+    #[test]
+    fn crossover_dispatch_defaults() {
+        // default crossover 16: the paper's order 4 stays on the direct
+        // kernel, serving orders 16+ take Eq. (2)
+        assert!(!use_fft_path(4));
+        assert!(use_fft_path(16));
+        assert!(use_fft_path(64));
+        assert!(!use_fft_path(24), "non-power-of-two cannot take the fft");
+    }
+
+    #[test]
+    fn mvm_fft_is_exactly_the_single_column_of_mmm_fft() {
+        // both run off the same plan tables now, so agreement is exact
+        let mut r = Rng::new(21);
+        let mut w = vec![0.0f32; 2 * 3 * 8];
+        r.fill_uniform(&mut w);
+        let b = Bcm::new(2, 3, 8, w);
+        let mut x = vec![0.0f32; b.n()];
+        r.fill_uniform(&mut x);
+        let batched = bcm_mmm_fft(&b, &Tensor::new(&[b.n(), 1], x.clone()));
+        assert_eq!(batched.data, bcm_mvm_fft(&b, &x));
+    }
+
+    #[test]
+    fn planned_forward_is_bit_identical_to_reference() {
+        propcheck::check("planned mmm_fft == unplanned", 40, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8, 16]);
+            let cols = g.usize_in(1, 6);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x =
+                Tensor::new(&[b.n(), cols], g.vec_f32(b.n() * cols, -1.0, 1.0));
+            let plan = plan_for(l);
+            let spec = WeightSpectra::new(&b, &plan);
+            let reference = bcm_mmm_fft(&b, &x);
+            for threads in [1usize, 4] {
+                let planned =
+                    bcm_mmm_fft_planned(&b, &x, &plan, &spec, threads);
+                crate::prop_assert!(
+                    planned.data == reference.data,
+                    "planned path diverged at threads={threads}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planned_backward_is_bit_identical_to_reference() {
+        propcheck::check("planned fft backward == unplanned", 40, |g| {
+            let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+            let l = *g.choose(&[2usize, 4, 8, 16]);
+            let cols = g.usize_in(1, 5);
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            let b = Bcm::new(p, q, l, w);
+            let x =
+                Tensor::new(&[b.n(), cols], g.vec_f32(b.n() * cols, -1.0, 1.0));
+            let dy =
+                Tensor::new(&[b.m(), cols], g.vec_f32(b.m() * cols, -1.0, 1.0));
+            let (dw_r, dx_r) = bcm_mmm_fft_backward(&b, &x, &dy);
+            let plan = plan_for(l);
+            let spec = WeightSpectra::new(&b, &plan);
+            for threads in [1usize, 4] {
+                let (dw_p, dx_p) = bcm_mmm_fft_backward_planned(
+                    &b, &x, &dy, &plan, &spec, threads,
+                );
+                crate::prop_assert!(
+                    dw_p == dw_r && dx_p.data == dx_r.data,
+                    "planned backward diverged at threads={threads}"
+                );
+            }
+            Ok(())
+        });
     }
 }

@@ -152,20 +152,30 @@ impl Bcm {
     /// for any thread count.  Small tiles stay serial (spawn overhead
     /// beats the win below ~1M madds).
     pub fn mmm(&self, x: &Tensor, threads: usize) -> Tensor {
+        let mut out = vec![0.0f32; self.m() * x.shape[1]];
+        self.mmm_into(x, threads, &mut out);
+        Tensor::new(&[self.m(), x.shape[1]], out)
+    }
+
+    /// [`Bcm::mmm`] writing into a caller-provided **zeroed** output
+    /// buffer of `M·B` elements — the zero-alloc form the planned
+    /// execution path feeds from its scratch arena.  Identical op order,
+    /// so results match `mmm` bit for bit.
+    pub fn mmm_into(&self, x: &Tensor, threads: usize, out: &mut [f32]) {
         assert_eq!(x.shape[0], self.n());
         let b = x.shape[1];
         let l = self.l;
+        assert_eq!(out.len(), self.m() * b, "output buffer size");
         let madds = self.p * self.q * l * l * b;
         let threads = if self.p >= 2 && madds >= (1 << 20) {
             threads.min(self.p)
         } else {
             1
         };
-        let mut out = vec![0.0f32; self.m() * b];
         if b > 0 {
             crate::util::threadpool::scoped_chunks(
                 threads,
-                &mut out,
+                out,
                 l * b,
                 |bp, ytile| {
                     for bq in 0..self.q {
@@ -188,7 +198,6 @@ impl Bcm {
                 },
             );
         }
-        Tensor::new(&[self.m(), b], out)
     }
 
     /// FFT multiply path (paper Eq. 2); numerically ~1e-4 of the direct
@@ -269,18 +278,28 @@ impl Bcm {
         fft::bcm_mmm_fft_backward(self, x, dy)
     }
 
-    /// Backward dispatch: FFT route when the block order allows it,
-    /// direct time-domain adjoint otherwise.
+    /// Backward dispatch through the bench-calibrated crossover
+    /// ([`fft::use_fft_path`]): the Eq. (2) adjoint past the crossover
+    /// order (shared cached [`fft::FftPlan`], weight spectra computed
+    /// once per call and reused by both gradient halves), the direct
+    /// time-domain adjoint below it — `benches/mvm_paths.rs` shows direct
+    /// winning ~3× at the paper's order 4, where the old hard-coded
+    /// power-of-two rule still paid for FFTs.  Override with
+    /// `CIRPTC_FFT_CROSSOVER_L`.
     pub fn backward(&self, x: &Tensor, dy: &Tensor) -> (Vec<f32>, Tensor) {
-        if self.l.is_power_of_two() {
-            self.mmm_fft_backward(x, dy)
+        if fft::use_fft_path(self.l) {
+            let plan = fft::plan_for(self.l);
+            let spec = fft::WeightSpectra::new(self, &plan);
+            fft::bcm_mmm_fft_backward_planned(self, x, dy, &plan, &spec, 1)
         } else {
             self.mmm_backward(x, dy)
         }
     }
 
     /// Split a full-range BCM into positive-only halves and a scale, the
-    /// paper's time-domain-multiplexed sign handling.
+    /// paper's time-domain-multiplexed sign handling.  The split depends
+    /// only on the weights, so the planned execution path computes it
+    /// once per layer ([`SignSplit`]) instead of per chip pass.
     pub fn split_signed(&self) -> (Bcm, Bcm, f32) {
         let scale = self.w.iter().fold(1e-6f32, |m, &v| m.max(v.abs()));
         let pos = self.w.iter().map(|&v| v.max(0.0) / scale).collect();
@@ -290,6 +309,23 @@ impl Bcm {
             Bcm::new(self.p, self.q, self.l, neg),
             scale,
         )
+    }
+}
+
+/// A [`Bcm::split_signed`] result held as a value: the positive-only
+/// halves the chip actually programs plus the rescale factor.  Built once
+/// per layer by the planned execution path (`onn::plan`) so serving
+/// batches stop re-splitting static weights on every pass pair.
+pub struct SignSplit {
+    pub pos: Bcm,
+    pub neg: Bcm,
+    pub scale: f32,
+}
+
+impl SignSplit {
+    pub fn of(b: &Bcm) -> SignSplit {
+        let (pos, neg, scale) = b.split_signed();
+        SignSplit { pos, neg, scale }
     }
 }
 
@@ -391,13 +427,38 @@ mod tests {
 
     #[test]
     fn mmm_fft_single_column_matches_mvm_fft() {
+        // both paths share the cached plan tables now, so the agreement
+        // is exact, not approximate
         let b = rand_bcm(2, 3, 8, 13);
         let mut r = Rng::new(14);
         let mut x = vec![0.0f32; b.n()];
         r.fill_uniform(&mut x);
         let batched = b.mmm_fft(&Tensor::new(&[b.n(), 1], x.clone()));
         let single = b.mvm_fft(&x);
-        assert_close(&batched.data, &single, 1e-5).unwrap();
+        assert_eq!(batched.data, single);
+    }
+
+    #[test]
+    fn mmm_into_matches_mmm() {
+        let b = rand_bcm(2, 3, 4, 19);
+        let mut r = Rng::new(20);
+        let mut xd = vec![0.0f32; b.n() * 5];
+        r.fill_uniform(&mut xd);
+        let x = Tensor::new(&[b.n(), 5], xd);
+        let y = b.mmm(&x, 1);
+        let mut out = vec![0.0f32; b.m() * 5];
+        b.mmm_into(&x, 4, &mut out);
+        assert_eq!(y.data, out);
+    }
+
+    #[test]
+    fn sign_split_struct_matches_split_signed() {
+        let b = rand_bcm(2, 2, 4, 23);
+        let (pos, neg, scale) = b.split_signed();
+        let s = SignSplit::of(&b);
+        assert_eq!(s.pos.w, pos.w);
+        assert_eq!(s.neg.w, neg.w);
+        assert_eq!(s.scale, scale);
     }
 
     #[test]

@@ -124,6 +124,13 @@ pub struct Metrics {
     pub passes_since_recal: Gauge,
     /// drift ticks applied to the worker's chip so far
     pub drift_ticks: Gauge,
+    /// cumulative scratch-arena checkouts of the last reporting worker
+    /// ([`crate::util::scratch`]); with `scratch_misses`, the
+    /// allocs-per-batch proxy the serving benches track across PRs
+    pub scratch_takes: Gauge,
+    /// cumulative scratch-arena misses (checkouts that had to allocate)
+    /// of the last reporting worker — flat once the arena is warm
+    pub scratch_misses: Gauge,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -172,7 +179,7 @@ impl Metrics {
         format!(
             "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
              p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs \
-             probes={} recals={} probe_res≤{}ppm",
+             probes={} recals={} probe_res≤{}ppm scratch_miss={}/{}",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
@@ -186,6 +193,8 @@ impl Metrics {
             self.probes.get(),
             self.recalibrations.get(),
             self.probe_residual_ppm.percentile(0.99),
+            self.scratch_misses.get(),
+            self.scratch_takes.get(),
         )
     }
 }

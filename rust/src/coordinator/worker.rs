@@ -9,6 +9,7 @@ use std::time::Instant;
 use crate::onn::{Backend, Engine};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
+use crate::util::scratch;
 
 use super::metrics::Metrics;
 use super::{Batch, Response};
@@ -160,6 +161,11 @@ pub fn run(
                     });
                 }
                 metrics.batches.add(1);
+                // allocs-per-batch proxy: this worker's scratch-arena
+                // counters (the planned path stops missing once warm)
+                let st = scratch::stats();
+                metrics.scratch_takes.set(st.takes as i64);
+                metrics.scratch_misses.set(st.misses as i64);
             }
             Err(e) => {
                 // fail the whole batch: drop reply senders (receivers see

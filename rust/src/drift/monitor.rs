@@ -71,6 +71,11 @@ pub struct DriftMonitor {
     recals_seen: u64,
     /// chip pass count at the last (re)calibration point
     last_recal_pass: u64,
+    /// this monitor's key space in the sim's pre-encoded tile cache: the
+    /// probe tile is static, so its device encode is cached between
+    /// probes (and re-encoded automatically after every drift tick) —
+    /// probe passes stop paying per-probe encode + FFT/alloc setup
+    owner: u64,
 }
 
 impl DriftMonitor {
@@ -92,6 +97,7 @@ impl DriftMonitor {
             want: Tensor::zeros(&[p * l, 0]),
             recals_seen: 0,
             last_recal_pass: 0,
+            owner: crate::onn::plan::next_tile_owner(),
         };
         m.rebase(calibration);
         m
@@ -107,9 +113,17 @@ impl DriftMonitor {
 
     /// One calibration-probe pass on the live chip; returns the
     /// normalized residual against the calibration-point prediction.
+    /// Runs through the planned path so the static probe tile's device
+    /// encode is cached between probes (bit-identical to an unplanned
+    /// `sim.forward` pass — `rust/tests/planned_path.rs`).
     pub fn probe(&mut self, sim: &mut ChipSim) -> f32 {
-        let got = sim.forward(&self.probe_w, &self.probe_x);
-        got.normalized_rmse(&self.want)
+        let got =
+            sim.forward_planned(self.owner, 0, false, &self.probe_w, &self.probe_x);
+        let res = got.normalized_rmse(&self.want);
+        // the photocurrent buffer came from the scratch arena — park it
+        // again so probes stay alloc-free instead of draining the pool
+        crate::util::scratch::put(got.data);
+        res
     }
 
     /// Worker-loop hook, called after every drained batch: refresh the

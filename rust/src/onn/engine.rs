@@ -8,26 +8,31 @@ use crate::data::Bundle;
 use crate::simulator::ChipSim;
 use crate::tensor::{self, Tensor};
 use crate::util::error::{Context, Result};
+use crate::util::scratch;
 use crate::util::threadpool::ThreadPool;
 
 use super::manifest::{LayerKind, LayerSpec, Manifest};
+use super::plan::{next_tile_owner, LayerPlan, LinearPlan};
 
 /// Execution backend for conv/FC layers.
 #[derive(Debug)]
 pub enum Backend {
-    /// fp32 dense math (expansion of compressed weights)
+    /// fp32 math — circ layers run the compressed BCM kernels directly
+    /// (direct or planned Eq. (2) by the crossover), gemm layers a dense
+    /// matmul; no l× dense expansion is ever materialized
     Digital,
     /// every linear layer streamed through the CirPTC simulator as
     /// sign-split positive-only BCM tiles (paper lookup-mode inference)
     PhotonicSim(ChipSim),
 }
 
-/// Weights of one linear layer in both representations.
+/// Weights of one linear layer.
 struct LinearWeights {
     /// compressed BCM (circ arch) — padded dims (P·l ≥ cout, Q·l ≥ n)
     bcm: Option<Bcm>,
-    /// dense (m, n) weight (gemm arch, or the expansion cache for circ)
-    dense: Tensor,
+    /// dense (m, n) weight — gemm arch only; circ layers serve every
+    /// backend from the compressed form (no l× dense expansion in memory)
+    dense: Option<Tensor>,
     bias: Vec<f32>,
 }
 
@@ -50,7 +55,19 @@ pub struct Engine {
     /// worker threads for the large batched matmuls (digital path);
     /// results are bit-identical for any value, see [`Tensor::matmul_par`]
     pub threads: usize,
+    /// serve through the planned path (cached sign splits, FFT plans,
+    /// weight spectra, pre-encoded chip tiles, scratch arenas).  `false`
+    /// re-routes every linear layer through the unplanned reference calls
+    /// — bit-identical by contract (`rust/tests/planned_path.rs`), kept
+    /// as the oracle and the perf baseline.
+    pub use_plans: bool,
     layers: Vec<LayerState>,
+    /// per-layer planned state, aligned with `layers`
+    plans: Vec<LayerPlan>,
+    /// this engine's key space in the sims' pre-encoded tile caches; a
+    /// hot-swapped replacement engine gets a fresh owner, invalidating
+    /// every tile the old engine encoded
+    tile_owner: u64,
 }
 
 impl Engine {
@@ -82,26 +99,16 @@ impl Engine {
                         }
                         let bcm =
                             Bcm::new(p, q, spec.l, data.to_vec());
-                        // dense expansion sliced to logical dims, cached
-                        // for the digital path
-                        let full = bcm.expand();
-                        let mut dense =
-                            Tensor::zeros(&[spec.cout, n_in]);
-                        for r in 0..spec.cout {
-                            for c in 0..n_in {
-                                dense.set2(r, c, full.at2(r, c));
-                            }
-                        }
                         LayerState::Linear(LinearWeights {
                             bcm: Some(bcm),
-                            dense,
+                            dense: None,
                             bias,
                         })
                     } else {
                         let data = w.as_f32()?.to_vec();
                         LayerState::Linear(LinearWeights {
                             bcm: None,
-                            dense: Tensor::new(&[spec.cout, n_in], data),
+                            dense: Some(Tensor::new(&[spec.cout, n_in], data)),
                             bias,
                         })
                     }
@@ -122,10 +129,29 @@ impl Engine {
             };
             layers.push(state);
         }
+        // planned execution state: everything invariant between weight
+        // changes is built once here, not per batch (DESIGN.md §perf)
+        let plans = manifest
+            .layers
+            .iter()
+            .zip(&layers)
+            .map(|(spec, state)| match state {
+                LayerState::Linear(lw) => match &lw.bcm {
+                    Some(bcm) => {
+                        LayerPlan::Linear(LinearPlan::new(bcm, spec.n_in()))
+                    }
+                    None => LayerPlan::Other,
+                },
+                _ => LayerPlan::Other,
+            })
+            .collect();
         Ok(Engine {
             manifest,
             threads: ThreadPool::default_size(),
+            use_plans: true,
             layers,
+            plans,
+            tile_owner: next_tile_owner(),
         })
     }
 
@@ -209,60 +235,157 @@ impl Engine {
                 let (b, h, w) =
                     (imgs.shape[0], imgs.shape[2], imgs.shape[3]);
                 let y = match backend {
-                    Backend::Digital => {
-                        // one multi-column matmul for the whole batch
-                        let xm = tensor::im2col_same_batch(&imgs, spec.k);
-                        wts.dense.matmul_par(&xm, self.threads)
-                    }
+                    Backend::Digital => match (&wts.bcm, &self.plans[idx]) {
+                        (Some(bcm), LayerPlan::Linear(lp)) => {
+                            // one multi-column compressed multiply for the
+                            // whole batch (direct or planned Eq. (2) by the
+                            // crossover); rows padded to the BCM width
+                            let xm =
+                                tensor::im2col_same_batch(&imgs, spec.k);
+                            if xm.shape[0] != lp.rows {
+                                bail!(
+                                    "layer {idx}: conv operand rows {} != \
+                                     c·k·k = {} (input channel mismatch)",
+                                    xm.shape[0],
+                                    lp.rows
+                                );
+                            }
+                            let xp = pad_rows_pooled(xm, lp.n_pad);
+                            let y = if self.use_plans {
+                                lp.multiply(bcm, &xp, self.threads)
+                            } else {
+                                lp.multiply_reference(bcm, &xp)
+                            };
+                            scratch::put(xp.data);
+                            y
+                        }
+                        _ => {
+                            // gemm arch: dense multiply, logical dims
+                            let xm =
+                                tensor::im2col_same_batch(&imgs, spec.k);
+                            let dense = wts
+                                .dense
+                                .as_ref()
+                                .context("gemm layer without dense weights")?;
+                            let y = dense.matmul_par(&xm, self.threads);
+                            scratch::put(xm.data);
+                            y
+                        }
+                    },
                     Backend::PhotonicSim(sim) => {
-                        photonic_linear_cols(
-                            sim,
-                            wts,
-                            spec,
-                            &tensor::im2col_same_batch(
-                                &imgs.map(|x| {
-                                    (x / spec.act_scale).clamp(0.0, 1.0)
-                                }),
-                                spec.k,
-                            ),
-                        )?
+                        let (bcm, lp) = self.linear_plan(idx)?;
+                        let xm = tensor::im2col_same_batch(
+                            &imgs.map(|x| {
+                                (x / spec.act_scale).clamp(0.0, 1.0)
+                            }),
+                            spec.k,
+                        );
+                        if xm.shape[0] != lp.rows {
+                            bail!(
+                                "layer {idx}: conv operand rows {} != \
+                                 c·k·k = {} (input channel mismatch)",
+                                xm.shape[0],
+                                lp.rows
+                            );
+                        }
+                        let xp = pad_rows_pooled(xm, lp.n_pad);
+                        let y = if self.use_plans {
+                            // in-place rescale keeps the pooled buffer (same
+                            // op order as the reference's .scale: one extra
+                            // multiply per element after the sign fuse)
+                            let mut y = sim.forward_signed_planned(
+                                self.tile_owner,
+                                idx,
+                                &lp.sign,
+                                &xp,
+                            );
+                            for v in y.data.iter_mut() {
+                                *v *= spec.act_scale;
+                            }
+                            y
+                        } else {
+                            sim.forward_signed(bcm, &xp)
+                                .scale(spec.act_scale)
+                        };
+                        scratch::put(xp.data);
+                        y
                     }
                 };
                 let out = cols_to_images(&y, b, spec.cout, h, w);
+                scratch::put(y.data);
                 Activation::Image(add_channel_bias_batch(out, &wts.bias))
             }
             (LayerState::Linear(wts), LayerKind::Fc) => {
                 let x = act.matrix()?; // (b, n)
                 let b = x.shape[0];
                 let y = match backend {
-                    Backend::Digital => {
-                        // (m, b): column j is image j, same per-column
-                        // accumulation order as the per-image multiply
-                        let xt = x.transpose2();
-                        wts.dense.matmul_par(&xt, self.threads)
-                    }
+                    Backend::Digital => match (&wts.bcm, &self.plans[idx]) {
+                        (Some(bcm), LayerPlan::Linear(lp)) => {
+                            let n = x.shape[1];
+                            // the digital path keeps the dense-matmul-era
+                            // strictness: exact logical width, no silent
+                            // zero-padding of a malformed operand
+                            if n != lp.rows {
+                                bail!(
+                                    "layer {idx}: fc input width {n} != \
+                                     manifest cin {}",
+                                    lp.rows
+                                );
+                            }
+                            // (m, b): column j is image j, same per-column
+                            // accumulation order as the per-image multiply
+                            let xp = pad_rows_pooled(x.transpose2(), lp.n_pad);
+                            let y = if self.use_plans {
+                                lp.multiply(bcm, &xp, self.threads)
+                            } else {
+                                lp.multiply_reference(bcm, &xp)
+                            };
+                            scratch::put(xp.data);
+                            y
+                        }
+                        _ => {
+                            let xt = x.transpose2();
+                            wts.dense
+                                .as_ref()
+                                .context("gemm layer without dense weights")?
+                                .matmul_par(&xt, self.threads)
+                        }
+                    },
                     Backend::PhotonicSim(sim) => {
                         let n = x.shape[1];
-                        let bcm = wts
-                            .bcm
-                            .as_ref()
-                            .context("photonic path needs circ arch")?;
-                        if n > bcm.n() {
+                        let (bcm, lp) = self.linear_plan(idx)?;
+                        if n > lp.n_pad {
                             bail!(
                                 "layer {idx}: fc input width {n} exceeds \
                                  padded BCM width {}",
-                                bcm.n()
+                                lp.n_pad
                             );
                         }
                         let s = spec.act_scale;
-                        let mut xp = Tensor::zeros(&[bcm.n(), b]);
+                        let mut xp =
+                            Tensor::new(&[lp.n_pad, b], scratch::take(lp.n_pad * b));
                         for bi in 0..b {
                             for i in 0..n {
                                 xp.data[i * b + bi] =
                                     (x.at2(bi, i) / s).clamp(0.0, 1.0);
                             }
                         }
-                        sim.forward_signed(bcm, &xp).scale(s)
+                        let y = if self.use_plans {
+                            let mut y = sim.forward_signed_planned(
+                                self.tile_owner,
+                                idx,
+                                &lp.sign,
+                                &xp,
+                            );
+                            for v in y.data.iter_mut() {
+                                *v *= s;
+                            }
+                            y
+                        } else {
+                            sim.forward_signed(bcm, &xp).scale(s)
+                        };
+                        scratch::put(xp.data);
+                        y
                     }
                 };
                 // keep logical rows, transpose back to (b, cout), add bias
@@ -274,6 +397,7 @@ impl Engine {
                             + wts.bias.get(r).copied().unwrap_or(0.0);
                     }
                 }
+                scratch::put(y.data);
                 Activation::Matrix(out)
             }
             (LayerState::Bn(bn), LayerKind::Bn) => {
@@ -307,6 +431,19 @@ impl Engine {
                 }
             ),
         })
+    }
+
+    /// The compressed weights + planned state of linear layer `idx`
+    /// (photonic execution requires the circ arch).
+    fn linear_plan(&self, idx: usize) -> Result<(&Bcm, &LinearPlan)> {
+        let bcm = match &self.layers[idx] {
+            LayerState::Linear(lw) => lw.bcm.as_ref(),
+            _ => None,
+        };
+        match (bcm, &self.plans[idx]) {
+            (Some(bcm), LayerPlan::Linear(lp)) => Ok((bcm, lp)),
+            _ => bail!("photonic path needs circ arch"),
+        }
     }
 }
 
@@ -363,20 +500,6 @@ pub(crate) fn cols_to_images(
     out
 }
 
-/// Zero-pad the rows of an (n, cols) operand block up to the BCM's padded
-/// input width `n_pad`: padded rows meet zero weight columns, so the
-/// product is unchanged.  Shared by the photonic serving path and the
-/// training forward pass ([`crate::train`]).
-pub(crate) fn pad_rows(x: &Tensor, n_pad: usize) -> Tensor {
-    let cols = x.shape[1];
-    if x.shape[0] == n_pad {
-        return x.clone();
-    }
-    let mut xp = Tensor::zeros(&[n_pad, cols]);
-    xp.data[..x.shape[0] * cols].copy_from_slice(&x.data);
-    xp
-}
-
 pub(crate) fn add_channel_bias_batch(mut t: Tensor, bias: &[f32]) -> Tensor {
     let (b, c) = (t.shape[0], t.shape[1]);
     let hw = t.shape[2] * t.shape[3];
@@ -391,19 +514,23 @@ pub(crate) fn add_channel_bias_batch(mut t: Tensor, bias: &[f32]) -> Tensor {
     t
 }
 
-/// Linear layer on the simulated chip, operating on pre-clipped im2col
-/// columns for the **whole batch**: zero-pad rows to the BCM's padded
-/// input dim, one sign-split BCM matmul on chip (a single pass pair
-/// covering every column of every image), rescale (paper Fig. 1a flow).
-fn photonic_linear_cols(
-    sim: &mut ChipSim,
-    wts: &LinearWeights,
-    spec: &LayerSpec,
-    xm: &Tensor,
-) -> Result<Tensor> {
-    let bcm = wts.bcm.as_ref().context("photonic path needs circ arch")?;
-    let xp = pad_rows(xm, bcm.n());
-    Ok(sim.forward_signed(bcm, &xp).scale(spec.act_scale))
+/// Zero-pad the rows of an (n, cols) operand block up to the BCM's padded
+/// input width `n_pad` — padded rows meet zero weight columns, so the
+/// product is unchanged.  Hot-path form: consumes the operand, draws the
+/// padded block from the thread-local scratch arena (recycling the
+/// input's buffer), and forwards the operand untouched when no padding is
+/// needed instead of cloning it.  Shared by the photonic serving path and
+/// the training forward pass ([`crate::train`]).
+pub(crate) fn pad_rows_pooled(x: Tensor, n_pad: usize) -> Tensor {
+    if x.shape[0] == n_pad {
+        return x;
+    }
+    assert!(x.shape[0] < n_pad, "operand taller than padded BCM width");
+    let cols = x.shape[1];
+    let mut buf = scratch::take(n_pad * cols);
+    buf[..x.shape[0] * cols].copy_from_slice(&x.data);
+    scratch::put(x.data);
+    Tensor::new(&[n_pad, cols], buf)
 }
 
 #[cfg(test)]
@@ -574,6 +701,48 @@ mod tests {
         if let Backend::PhotonicSim(sim) = &be {
             // two linear layers × 2 sign-split passes
             assert_eq!(sim.passes(), 4);
+        }
+    }
+
+    #[test]
+    fn planned_engine_is_bit_identical_to_reference_paths() {
+        let planned = tiny_engine();
+        let mut reference = tiny_engine();
+        reference.use_plans = false;
+        let imgs = distinct_inputs(4);
+        let a = planned
+            .forward_batch(&imgs, &mut Backend::Digital)
+            .unwrap();
+        let b = reference
+            .forward_batch(&imgs, &mut Backend::Digital)
+            .unwrap();
+        assert_eq!(a, b, "digital planned path must match the reference");
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.015;
+        let mut be_p =
+            Backend::PhotonicSim(ChipSim::deterministic(desc.clone()));
+        let mut be_r = Backend::PhotonicSim(ChipSim::deterministic(desc));
+        let yp = planned.forward_batch(&imgs, &mut be_p).unwrap();
+        let yr = reference.forward_batch(&imgs, &mut be_r).unwrap();
+        assert_eq!(yp, yr, "photonic planned path must match the reference");
+    }
+
+    #[test]
+    fn planned_engine_encodes_each_tile_once_per_chip() {
+        let e = tiny_engine();
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        let mut be = Backend::PhotonicSim(ChipSim::deterministic(desc));
+        let imgs = distinct_inputs(3);
+        for _ in 0..5 {
+            e.forward_batch(&imgs, &mut be).unwrap();
+        }
+        if let Backend::PhotonicSim(sim) = &be {
+            // 2 linear layers × 2 sign halves, encoded once — not per batch
+            assert_eq!(sim.encodes_done, 4);
+            assert_eq!(sim.cached_tiles(), 4);
         }
     }
 

@@ -13,6 +13,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod plan;
 
 pub use engine::{Backend, Engine};
 pub use manifest::{LayerKind, LayerSpec, Manifest};

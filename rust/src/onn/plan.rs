@@ -1,0 +1,145 @@
+//! Planned execution state built once at [`crate::onn::Engine::from_parts`]
+//! time (DESIGN.md §perf).
+//!
+//! Everything here is invariant between weight changes, so it is hoisted
+//! out of the per-batch loop:
+//!
+//! * the layer's **sign split** ([`crate::circulant::SignSplit`]) — the
+//!   positive-only halves the chip programs, previously recomputed on
+//!   every pass pair;
+//! * the shared **FFT plan** + **weight spectra**
+//!   ([`fft::plan_for`] / [`fft::WeightSpectra`]) for layers past the
+//!   direct-vs-Eq.(2) crossover;
+//! * the **operand geometry** (im2col row count, padded BCM width) so
+//!   shapes are asserted rather than re-derived per batch;
+//! * the **tile-owner id** ([`next_tile_owner`]) keying this engine's
+//!   pre-encoded tiles in each worker's [`crate::simulator::ChipSim`]
+//!   cache — an [`crate::drift::EngineSlot`] hot swap builds a new
+//!   engine, hence a new owner, hence every old tile misses.
+//!
+//! The planned path is bit-identical to the unplanned reference (the
+//! free functions in [`crate::circulant::fft`] and
+//! [`crate::simulator::ChipSim::forward_signed`]); `Engine::use_plans =
+//! false` re-routes the whole engine through the reference calls so the
+//! propcheck suite can pin the equivalence end to end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::circulant::{fft, Bcm, SignSplit};
+use crate::tensor::Tensor;
+
+static NEXT_OWNER: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh id for an encode-cache owner (an engine instance, or a drift
+/// monitor's probe tile).  Monotonic per process; never reused, so a
+/// retired owner's cached tiles can never be served again.
+pub fn next_tile_owner() -> u64 {
+    NEXT_OWNER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Per-layer plan, aligned with the engine's layer stack.
+pub(crate) enum LayerPlan {
+    /// circ-arch linear layer (conv / fc)
+    Linear(LinearPlan),
+    /// anything else (stateless layers, bn, gemm-arch linear)
+    Other,
+}
+
+/// Cached FFT route state: one shared plan per block length, spectra
+/// computed from the layer's weights at engine-build time.
+pub(crate) struct FftPlanned {
+    pub plan: Arc<fft::FftPlan>,
+    pub spec: fft::WeightSpectra,
+}
+
+pub(crate) struct LinearPlan {
+    /// positive/negative halves + rescale, split once
+    pub sign: SignSplit,
+    /// padded BCM input width (`Q·l`)
+    pub n_pad: usize,
+    /// logical operand rows: `c·k·k` im2col rows (conv) or `n_in` (fc)
+    pub rows: usize,
+    /// `Some` when the crossover picks the Eq. (2) route for this order
+    pub fft: Option<FftPlanned>,
+}
+
+impl LinearPlan {
+    pub fn new(bcm: &Bcm, rows: usize) -> LinearPlan {
+        let fft_state = if fft::use_fft_path(bcm.l) {
+            let plan = fft::plan_for(bcm.l);
+            let spec = fft::WeightSpectra::new(bcm, &plan);
+            Some(FftPlanned { plan, spec })
+        } else {
+            None
+        };
+        LinearPlan { sign: SignSplit::of(bcm), n_pad: bcm.n(), rows, fft: fft_state }
+    }
+
+    /// Planned multiply for the digital path: cached-spectra Eq. (2)
+    /// (threaded) past the crossover, the threaded direct kernel below
+    /// it.  Bit-identical to [`LinearPlan::multiply_reference`].
+    pub fn multiply(&self, bcm: &Bcm, x: &Tensor, threads: usize) -> Tensor {
+        match &self.fft {
+            Some(f) => fft::bcm_mmm_fft_planned(bcm, x, &f.plan, &f.spec, threads),
+            None => bcm.mmm(x, threads),
+        }
+    }
+
+    /// Unplanned reference twin of [`LinearPlan::multiply`]: same route
+    /// choice, per-call plan/spectra rebuild, serial kernels — the PR-4
+    /// baseline the benches compare against.
+    pub fn multiply_reference(&self, bcm: &Bcm, x: &Tensor) -> Tensor {
+        match &self.fft {
+            Some(_) => bcm.mmm_fft(x),
+            None => bcm.matmul(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_bcm(p: usize, q: usize, l: usize, seed: u64) -> Bcm {
+        let mut r = Rng::new(seed);
+        let mut w = vec![0.0f32; p * q * l];
+        r.fill_uniform(&mut w);
+        Bcm::new(p, q, l, w)
+    }
+
+    #[test]
+    fn owners_are_unique_and_monotonic() {
+        let a = next_tile_owner();
+        let b = next_tile_owner();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn plan_routes_by_crossover() {
+        // order 4: direct; order 16: Eq. (2) with cached spectra
+        assert!(LinearPlan::new(&rand_bcm(2, 2, 4, 1), 8).fft.is_none());
+        assert!(LinearPlan::new(&rand_bcm(2, 2, 16, 2), 32).fft.is_some());
+    }
+
+    #[test]
+    fn planned_multiply_matches_reference_bitwise() {
+        for (l, seed) in [(4usize, 3u64), (16, 4)] {
+            let bcm = rand_bcm(3, 2, l, seed);
+            let plan = LinearPlan::new(&bcm, bcm.n());
+            let mut r = Rng::new(seed + 10);
+            let mut xd = vec![0.0f32; bcm.n() * 6];
+            r.fill_uniform(&mut xd);
+            let x = Tensor::new(&[bcm.n(), 6], xd);
+            let want = plan.multiply_reference(&bcm, &x);
+            for threads in [1usize, 4] {
+                assert_eq!(
+                    plan.multiply(&bcm, &x, threads).data,
+                    want.data,
+                    "l={l} threads={threads}"
+                );
+            }
+        }
+    }
+}

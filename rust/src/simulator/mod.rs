@@ -13,16 +13,19 @@
 //! The deterministic part is cross-validated against golden vectors from
 //! the python side (`artifacts/goldens.cpt`) in `rust/tests/`.
 
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::bail;
-use crate::circulant::Bcm;
+use crate::circulant::{Bcm, SignSplit};
 use crate::drift::DriftModel;
 use crate::quant::Quantizer;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::scratch;
 
 /// As-fabricated chip description (see `PhotonicChip.export_dict`).
 #[derive(Clone, Debug)]
@@ -159,7 +162,31 @@ pub struct ChipSim {
     /// pass ([`DriftModel::on_pass`]).  `None` (the default) leaves every
     /// code path bit-identical to the drift-free simulator.
     drift: Option<DriftModel>,
+    /// device-domain weight encodes performed (quantize ∘ responsivity):
+    /// the planned path's cache-hit observable — flat per layer while the
+    /// chip holds still, re-encoding only after a drift tick or hot swap
+    pub encodes_done: u64,
+    /// encode-cache generation: bumped whenever `desc` mutates under the
+    /// planned path's feet (a drift tick, [`ChipSim::set_drift`], or an
+    /// explicit [`ChipSim::invalidate_encodings`])
+    enc_generation: u64,
+    enc_cache: EncodeCache,
 }
+
+/// Pre-encoded weight tiles keyed by `(owner, layer slot, sign half)`.
+/// `owner` is a [`crate::onn::plan::next_tile_owner`] id — every engine
+/// instance gets a fresh one, so an [`crate::drift::EngineSlot`] hot swap
+/// makes every old key miss and the new weights re-encode.
+#[derive(Debug, Default)]
+struct EncodeCache {
+    /// the [`ChipSim::enc_generation`] these tiles were encoded under
+    generation: u64,
+    tiles: HashMap<(u64, usize, bool), Arc<Bcm>>,
+}
+
+/// Hard cap on parked tiles: swaps retire owners faster than drift
+/// retires generations, so bound the map instead of tracking liveness.
+const ENC_CACHE_CAP: usize = 256;
 
 impl ChipSim {
     pub fn new(desc: ChipDescription) -> ChipSim {
@@ -173,6 +200,9 @@ impl ChipSim {
             threads: 1,
             passes_done: 0,
             drift: None,
+            encodes_done: 0,
+            enc_generation: 0,
+            enc_cache: EncodeCache::default(),
         }
     }
 
@@ -184,17 +214,39 @@ impl ChipSim {
 
     /// Program + run one BCM tile: w (P,Q,l) in [0,1], x (N,B) in [0,1].
     /// Returns the (M,B) photocurrent tensor.
+    ///
+    /// Reference path: the weight tile is re-encoded on every call.  The
+    /// serving engine's planned path goes through
+    /// [`ChipSim::forward_planned`], which caches the encoded tile — the
+    /// two are bit-identical (`rust/tests/planned_path.rs`).
     pub fn forward(&mut self, w: &Bcm, x: &Tensor) -> Tensor {
         assert_eq!(w.l, self.desc.l, "block order mismatch with chip");
-        assert_eq!(x.shape[0], w.n());
-        let l = self.desc.l;
-        let b = x.shape[1];
+        let wenc = self.encode_weights(w);
+        self.forward_encoded(&wenc, x, false)
+    }
 
-        // device-domain weight encoding: quantize then responsivity tilt
+    /// Device-domain weight encoding: quantize then responsivity tilt.
+    /// Depends only on (`w`, `desc.resp`, `w_bits`) — static between
+    /// drift ticks, which is what makes the encoded tiles cacheable.
+    fn encode_weights(&mut self, w: &Bcm) -> Bcm {
+        self.encodes_done += 1;
+        let l = self.desc.l;
         let mut wenc = w.clone();
         for (i, v) in wenc.w.iter_mut().enumerate() {
             *v = self.wq.q(*v) * self.desc.resp[i % l];
         }
+        wenc
+    }
+
+    /// One crossbar pass over an already-encoded tile.  `pooled` draws
+    /// the operand-encode and photocurrent buffers from the thread-local
+    /// scratch arena (the planned path); `false` allocates fresh (the
+    /// reference path).  Identical arithmetic either way.
+    fn forward_encoded(&mut self, wenc: &Bcm, x: &Tensor, pooled: bool) -> Tensor {
+        assert_eq!(wenc.l, self.desc.l, "block order mismatch with chip");
+        assert_eq!(x.shape[0], wenc.n());
+        let l = self.desc.l;
+        let b = x.shape[1];
 
         // input encoding: quantize then Γ mixing within each l-block.
         // Row-contiguous SAXPY form (EXPERIMENTS.md §Perf): quantize each
@@ -206,10 +258,20 @@ impl ChipSim {
         // exactly one thread in the same j-order as the serial loop, so
         // any thread count is bit-identical; below the madd threshold the
         // single-thread fallback runs the identical serial path.
-        let mut xq = x.data.clone();
+        let mut xq = if pooled {
+            let mut buf = scratch::take(x.data.len());
+            buf.copy_from_slice(&x.data);
+            buf
+        } else {
+            x.data.clone()
+        };
         self.xq.q_slice(&mut xq);
-        let mut xenc = vec![0.0f32; x.data.len()];
-        let q_blocks = w.n() / l;
+        let mut xenc = if pooled {
+            scratch::take(x.data.len())
+        } else {
+            vec![0.0f32; x.data.len()]
+        };
+        let q_blocks = wenc.n() / l;
         if b > 0 {
             let enc_madds = q_blocks * l * l * b;
             let enc_threads = if q_blocks >= 2 && enc_madds >= (1 << 19) {
@@ -238,31 +300,47 @@ impl ChipSim {
                 },
             );
         }
-        let xenc = Tensor::new(&[w.n(), b], xenc);
+        let xenc = Tensor::new(&[wenc.n(), b], xenc);
 
         // crossbar matmul + dark + noise
-        let mut y = wenc.mmm(&xenc, self.threads);
+        let mut ybuf = if pooled {
+            scratch::take(wenc.m() * b)
+        } else {
+            vec![0.0f32; wenc.m() * b]
+        };
+        wenc.mmm_into(&xenc, self.threads, &mut ybuf);
+        if pooled {
+            let Tensor { data: xenc_buf, .. } = xenc;
+            scratch::put(xenc_buf);
+            scratch::put(xq);
+        }
         let (dark, srel, sabs) =
             (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
-        for v in y.data.iter_mut() {
+        for v in ybuf.iter_mut() {
             *v += dark;
         }
         if self.noisy && (srel > 0.0 || sabs > 0.0) {
-            for v in y.data.iter_mut() {
+            for v in ybuf.iter_mut() {
                 let n = v.abs() * srel * self.rng.normal() as f32
                     + sabs * self.rng.normal() as f32;
                 *v += n;
             }
         }
         self.passes_done += 1;
-        self.tiles_executed += (w.p * w.q * b) as u64;
+        self.tiles_executed += (wenc.p * wenc.q * b) as u64;
         // the pass that just ran saw the pre-tick parameters; an attached
         // drift model advances the pass-count clock afterwards, so drift
-        // takes effect from the *next* pass on
+        // takes effect from the *next* pass on.  A tick mutates Γ /
+        // responsivity / dark under the encode cache's feet, so it also
+        // retires the current encode generation.
         if let Some(drift) = self.drift.as_mut() {
+            let ticks_before = drift.ticks();
             drift.on_pass(&mut self.desc);
+            if drift.ticks() != ticks_before {
+                self.enc_generation = self.enc_generation.wrapping_add(1);
+            }
         }
-        y
+        Tensor::new(&[wenc.m(), b], ybuf)
     }
 
     /// Full-range matmul via the paper's sign-split time multiplexing:
@@ -273,6 +351,75 @@ impl ChipSim {
         let yp = self.forward(&wp, x);
         let yn = self.forward(&wn, x);
         yp.sub(&yn).scale(scale)
+    }
+
+    /// Planned pass: like [`ChipSim::forward`], but the device-domain
+    /// weight encode of `(owner, slot, negative)` is served from the
+    /// pre-encoded tile cache while the chip's encode generation holds
+    /// (i.e. until drift mutates `desc`, or a new owner — a hot-swapped
+    /// engine — retires the old keys).  Bit-identical to `forward`:
+    /// a cached tile holds exactly the values `encode_weights` would
+    /// recompute, and the invalidation rules re-encode precisely when
+    /// those values would change.
+    pub fn forward_planned(
+        &mut self,
+        owner: u64,
+        slot: usize,
+        negative: bool,
+        w: &Bcm,
+        x: &Tensor,
+    ) -> Tensor {
+        assert_eq!(w.l, self.desc.l, "block order mismatch with chip");
+        if self.enc_cache.generation != self.enc_generation {
+            self.enc_cache.tiles.clear();
+            self.enc_cache.generation = self.enc_generation;
+        }
+        if self.enc_cache.tiles.len() >= ENC_CACHE_CAP {
+            self.enc_cache.tiles.clear();
+        }
+        let key = (owner, slot, negative);
+        let cached = self.enc_cache.tiles.get(&key).cloned();
+        let wenc = match cached {
+            Some(tile) => tile,
+            None => {
+                let tile = Arc::new(self.encode_weights(w));
+                self.enc_cache.tiles.insert(key, Arc::clone(&tile));
+                tile
+            }
+        };
+        self.forward_encoded(&wenc, x, true)
+    }
+
+    /// Planned sign-split matmul over a pre-split layer
+    /// ([`SignSplit`], computed once per layer by `onn::plan`): two
+    /// cached-tile passes, fused subtract + rescale.  Bit-identical to
+    /// [`ChipSim::forward_signed`] on the same weights.
+    pub fn forward_signed_planned(
+        &mut self,
+        owner: u64,
+        slot: usize,
+        sign: &SignSplit,
+        x: &Tensor,
+    ) -> Tensor {
+        let mut y = self.forward_planned(owner, slot, false, &sign.pos, x);
+        let yn = self.forward_planned(owner, slot, true, &sign.neg, x);
+        for (a, b) in y.data.iter_mut().zip(&yn.data) {
+            *a = (*a - *b) * sign.scale;
+        }
+        scratch::put(yn.data);
+        y
+    }
+
+    /// Retire every cached pre-encoded tile.  Call after mutating
+    /// [`ChipSim::desc`] directly (the drift clock and hot swaps handle
+    /// their own invalidation).
+    pub fn invalidate_encodings(&mut self) {
+        self.enc_generation = self.enc_generation.wrapping_add(1);
+    }
+
+    /// Pre-encoded tiles currently parked (test/observability hook).
+    pub fn cached_tiles(&self) -> usize {
+        self.enc_cache.tiles.len()
     }
 
     /// Spectral-folded execution (paper Fig. S18): an M×(r·N_phys) BCM run
@@ -355,6 +502,8 @@ impl ChipSim {
     /// single detection event.
     pub fn set_drift(&mut self, model: DriftModel) {
         self.drift = Some(model);
+        // the chip is about to walk: don't trust tiles encoded before
+        self.invalidate_encodings();
     }
 
     /// The attached drift process, if any.
@@ -676,5 +825,144 @@ mod tests {
         let w = rand_bcm(1, 1, 8, 11);
         let x = rand_x(8, 1, 12);
         sim.forward(&w, &x);
+    }
+
+    fn nonideal_chip() -> ChipDescription {
+        let mut d = ChipDescription::ideal(4);
+        d.gamma = vec![
+            0.90, 0.05, 0.03, 0.02, //
+            0.04, 0.91, 0.03, 0.02, //
+            0.02, 0.04, 0.92, 0.02, //
+            0.01, 0.03, 0.04, 0.92,
+        ];
+        d.resp = vec![1.0, 0.9, 1.1, 0.95];
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.dark = 0.02;
+        d
+    }
+
+    #[test]
+    fn planned_signed_is_bit_identical_and_caches_encodes() {
+        let d = nonideal_chip();
+        let w = rand_bcm(2, 3, 4, 61);
+        let sign = SignSplit::of(&w);
+        let mut plain = ChipSim::deterministic(d.clone());
+        let mut planned = ChipSim::deterministic(d);
+        for seed in 0..6u64 {
+            let x = rand_x(12, 5, 100 + seed);
+            let y0 = plain.forward_signed(&w, &x);
+            let y1 = planned.forward_signed_planned(7, 0, &sign, &x);
+            assert_eq!(y0.data, y1.data, "planned pass must be bit-identical");
+        }
+        // reference re-encodes both halves every call, planned only once
+        assert_eq!(plain.encodes_done, 12);
+        assert_eq!(planned.encodes_done, 2, "static chip: encode once per half");
+        assert_eq!(planned.cached_tiles(), 2);
+        assert_eq!(plain.passes(), planned.passes());
+        assert_eq!(plain.tiles_executed, planned.tiles_executed);
+    }
+
+    #[test]
+    fn planned_noisy_consumes_the_same_rng_stream() {
+        let mut d = nonideal_chip();
+        d.sigma_rel = 0.01;
+        d.sigma_abs = 0.005;
+        d.seed = 99;
+        let w = rand_bcm(2, 2, 4, 62);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 3, 63);
+        let mut plain = ChipSim::new(d.clone());
+        let mut planned = ChipSim::new(d);
+        for _ in 0..4 {
+            let y0 = plain.forward_signed(&w, &x);
+            let y1 = planned.forward_signed_planned(8, 0, &sign, &x);
+            assert_eq!(y0.data, y1.data, "same seed, same noise draws");
+        }
+    }
+
+    #[test]
+    fn planned_stays_bit_identical_across_drift_ticks() {
+        // the stale-cache accuracy bug would be silent: a cached tile
+        // encoded under the old responsivity keeps "working", just wrong.
+        // Drive identical drift episodes through the planned and
+        // reference sims — any missed invalidation diverges the outputs.
+        let d = nonideal_chip();
+        let w = rand_bcm(2, 3, 4, 64);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(12, 4, 65);
+        let run_drift = |planned: bool| -> Vec<Vec<f32>> {
+            let mut sim = ChipSim::deterministic(d.clone());
+            sim.set_drift(DriftModel::new(accel_drift(17)));
+            (0..10)
+                .map(|_| {
+                    if planned {
+                        sim.forward_signed_planned(9, 0, &sign, &x).data
+                    } else {
+                        sim.forward_signed(&w, &x).data
+                    }
+                })
+                .collect()
+        };
+        assert_eq!(run_drift(false), run_drift(true));
+    }
+
+    #[test]
+    fn first_drift_tick_invalidates_the_encoded_tiles() {
+        let d = nonideal_chip();
+        let w = rand_bcm(1, 2, 4, 66);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 2, 67);
+        let mut sim = ChipSim::deterministic(d);
+        sim.set_drift(DriftModel::new(accel_drift(18)));
+        sim.forward_signed_planned(10, 0, &sign, &x);
+        assert_eq!(sim.encodes_done, 2);
+        // the two passes above ticked drift twice (resp walked) — the
+        // next pass pair must re-encode, not serve the stale tiles
+        sim.forward_signed_planned(10, 0, &sign, &x);
+        assert_eq!(
+            sim.encodes_done, 4,
+            "drift tick must retire the encode generation"
+        );
+    }
+
+    #[test]
+    fn new_owner_retires_old_tiles_without_desc_change() {
+        // hot swap: a fresh engine gets a fresh owner id; the cache must
+        // miss for its keys even though the chip never moved
+        let d = nonideal_chip();
+        let w = rand_bcm(1, 2, 4, 68);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 2, 69);
+        let mut sim = ChipSim::deterministic(d);
+        sim.forward_signed_planned(11, 0, &sign, &x);
+        sim.forward_signed_planned(11, 0, &sign, &x);
+        assert_eq!(sim.encodes_done, 2);
+        sim.forward_signed_planned(12, 0, &sign, &x);
+        assert_eq!(sim.encodes_done, 4, "new owner must re-encode");
+        assert_eq!(sim.cached_tiles(), 4, "old + new owner tiles parked");
+    }
+
+    #[test]
+    fn invalidate_encodings_forces_reencode() {
+        let d = nonideal_chip();
+        let w = rand_bcm(1, 2, 4, 70);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 2, 71);
+        let mut sim = ChipSim::deterministic(d);
+        sim.forward_signed_planned(13, 0, &sign, &x);
+        assert_eq!(sim.encodes_done, 2);
+        sim.desc.resp[1] = 0.5; // external mutation: caller's contract
+        sim.invalidate_encodings();
+        let y = sim.forward_signed_planned(13, 0, &sign, &x);
+        assert_eq!(sim.encodes_done, 4);
+        // and the re-encoded tiles actually see the new responsivity
+        let mut twin = ChipSim::deterministic({
+            let mut d2 = nonideal_chip();
+            d2.resp[1] = 0.5;
+            d2
+        });
+        let want = twin.forward_signed(&w, &x);
+        assert_eq!(y.data, want.data);
     }
 }

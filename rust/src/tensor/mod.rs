@@ -250,24 +250,49 @@ pub fn im2col_same(img: &Tensor, k: usize) -> Tensor {
 /// `[bi·H·W, (bi+1)·H·W)`).  This is the batch-major layout the engine
 /// streams through one BCM tile per layer: every column is an independent
 /// operand, so a single sign-split chip pass covers the whole batch.
+///
+/// Hot-path form (DESIGN.md §perf): the output and the one reused padded
+/// image come from the thread-local scratch arena
+/// ([`crate::util::scratch`]) instead of a fresh padded copy + im2col
+/// tensor per image per batch.  The gather order per image is unchanged
+/// (pure copies), so values are bit-identical to the per-image
+/// [`im2col_same`] for odd `k` (every model uses k=3).
 pub fn im2col_same_batch(imgs: &Tensor, k: usize) -> Tensor {
     assert_eq!(imgs.rank(), 4);
     let (b, c, h, w) = (imgs.shape[0], imgs.shape[1], imgs.shape[2], imgs.shape[3]);
     let rows = c * k * k;
     let hw = h * w;
     let total = b * hw;
-    let mut out = vec![0.0f32; rows * total];
+    let pad = k / 2;
+    let (ph, pw) = (h + 2 * pad, w + 2 * pad);
+    let mut out = crate::util::scratch::take(rows * total);
+    // one zeroed padded image, reused across the batch: the interior is
+    // fully overwritten per image, the zero margins are written once
+    let mut padded = crate::util::scratch::take(c * ph * pw);
     for bi in 0..b {
-        let img = Tensor::new(
-            &[c, h, w],
-            imgs.data[bi * c * hw..(bi + 1) * c * hw].to_vec(),
-        );
-        let xm = im2col_same(&img, k); // (rows, hw), identical per-image math
-        for r in 0..rows {
-            out[r * total + bi * hw..r * total + (bi + 1) * hw]
-                .copy_from_slice(&xm.data[r * hw..(r + 1) * hw]);
+        let img = &imgs.data[bi * c * hw..(bi + 1) * c * hw];
+        for ci in 0..c {
+            for i in 0..h {
+                let src = &img[ci * hw + i * w..ci * hw + (i + 1) * w];
+                let off = ci * ph * pw + (i + pad) * pw + pad;
+                padded[off..off + w].copy_from_slice(src);
+            }
+        }
+        for ci in 0..c {
+            for di in 0..k {
+                for dj in 0..k {
+                    let r = ci * k * k + di * k + dj;
+                    for i in 0..h {
+                        let src = &padded
+                            [ci * ph * pw + (i + di) * pw + dj..];
+                        let dst = r * total + bi * hw + i * w;
+                        out[dst..dst + w].copy_from_slice(&src[..w]);
+                    }
+                }
+            }
         }
     }
+    crate::util::scratch::put(padded);
     Tensor::new(&[rows, total], out)
 }
 

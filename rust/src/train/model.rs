@@ -17,14 +17,19 @@
 //!
 //! Block-circulant gradients never leave the compressed domain: the
 //! weight and data adjoints are [`Bcm::backward`] — the FFT-domain
-//! adjoint of `Bcm::mmm_fft` whenever the block order is a power of two.
+//! adjoint of `Bcm::mmm_fft` past the bench-calibrated crossover order
+//! (cached `FftPlan`, one weight-spectra computation shared by both
+//! gradient halves), the direct time-domain adjoint below it (the
+//! paper's order 4 trains ~3× faster direct — see `benches/mvm_paths`).
 
 use std::path::{Path, PathBuf};
 
 use crate::bail;
 use crate::circulant::Bcm;
 use crate::data::Bundle;
-use crate::onn::engine::{add_channel_bias_batch, cols_to_images, pad_rows};
+use crate::onn::engine::{
+    add_channel_bias_batch, cols_to_images, pad_rows_pooled,
+};
 use crate::onn::manifest::{LayerKind, LayerSpec, Manifest};
 use crate::quant::Quantizer;
 use crate::simulator::ChipSim;
@@ -792,7 +797,8 @@ fn linear_multiply(
     };
     match backend {
         TrainBackend::Digital => {
-            let xp = pad_rows(&to_cols(x), lin.bcm.n());
+            // consume the column block instead of clone-if-unpadded
+            let xp = pad_rows_pooled(to_cols(x), lin.bcm.n());
             let y = lin.bcm.mmm(&xp, threads);
             (y, xp, None, 1.0)
         }
@@ -818,7 +824,7 @@ fn linear_multiply(
                 })
                 .collect();
             let xd = x.map(|v| (v / s).clamp(0.0, 1.0));
-            let xp = pad_rows(&to_cols(&xd), lin.bcm.n());
+            let xp = pad_rows_pooled(to_cols(&xd), lin.bcm.n());
             // propagate the trainer's worker count into the sim's
             // crossbar/encode kernels (bit-identical for any value)
             sim.threads = threads;

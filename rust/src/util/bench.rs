@@ -2,9 +2,16 @@
 //!
 //! Provides warmup + timed iterations with mean / p50 / p99 statistics and
 //! a uniform one-line report format shared by all `benches/` binaries so
-//! `cargo bench` output reads like the paper's tables.
+//! `cargo bench` output reads like the paper's tables.  [`JsonReport`]
+//! additionally writes the numbers as machine-readable `BENCH_*.json`
+//! files so the perf trajectory is tracked across PRs (`bench_diff`
+//! compares them against the committed baselines in CI).
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Statistics over a set of per-iteration wall times.
 #[derive(Clone, Debug)]
@@ -108,6 +115,74 @@ pub fn row(label: &str, cols: &[(&str, String)]) {
     println!("  {label:<36} {}", cells.join("  "));
 }
 
+/// Machine-readable bench results: named timing entries (`results`, one
+/// object of `mean_ns`/`p50_ns`/`p99_ns`/`per_s` each) plus free-form
+/// scalar `metrics` (speedups, throughput, alloc proxies).  `bench_diff`
+/// compares the `results` timings of two files with a generous tolerance
+/// and checks `metrics` floors declared in the baseline.
+pub struct JsonReport {
+    bench: String,
+    results: BTreeMap<String, Json>,
+    metrics: BTreeMap<String, Json>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport {
+            bench: bench.to_string(),
+            results: BTreeMap::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// Record a timed entry.  `units_per_iter` > 0 adds a `per_s`
+    /// throughput field (images, columns, requests — the caller's unit).
+    pub fn stat(&mut self, name: &str, s: &Stats, units_per_iter: f64) {
+        let mut obj = vec![
+            ("mean_ns", Json::Num(s.mean_ns)),
+            ("p50_ns", Json::Num(s.p50_ns)),
+            ("p99_ns", Json::Num(s.p99_ns)),
+            ("iters", Json::Num(s.iters as f64)),
+        ];
+        if units_per_iter > 0.0 {
+            obj.push(("per_s", Json::Num(s.per_second(units_per_iter))));
+        }
+        self.results.insert(name.to_string(), Json::obj(obj));
+    }
+
+    /// Record a free-form scalar metric (speedup ratio, req/s, …).
+    pub fn metric(&mut self, name: &str, v: f64) {
+        self.metrics.insert(name.to_string(), Json::Num(v));
+    }
+
+    /// Serialize to the `BENCH_*.json` layout.
+    pub fn dump(&self) -> String {
+        Json::obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("results", Json::Obj(self.results.clone())),
+            ("metrics", Json::Obj(self.metrics.clone())),
+        ])
+        .dump()
+    }
+
+    /// Write the report; prints the destination so bench logs say where
+    /// the machine-readable numbers went.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.dump())?;
+        println!("\nwrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Workspace-root path for a bench artifact: cargo runs bench binaries
+/// with the *package* dir (`rust/`) as cwd, but the machine-readable
+/// results belong at the workspace root, where CI's artifact upload and
+/// `bench_diff` (run via `cargo run`, which keeps the invocation cwd)
+/// expect them.
+pub fn workspace_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +218,21 @@ mod tests {
         assert!(fmt_ns(5e3).contains("µs"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new("unit");
+        rep.stat("kernel_a", &Stats::from_samples(vec![1e6, 3e6]), 16.0);
+        rep.metric("speedup", 1.75);
+        let j = Json::parse(&rep.dump()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        let a = j.get("results").unwrap().get("kernel_a").unwrap();
+        assert_eq!(a.get("mean_ns").unwrap().as_f64(), Some(2e6));
+        assert_eq!(a.get("per_s").unwrap().as_f64(), Some(16.0 / (2e6 * 1e-9)));
+        assert_eq!(
+            j.get("metrics").unwrap().get("speedup").unwrap().as_f64(),
+            Some(1.75)
+        );
     }
 }

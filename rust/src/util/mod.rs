@@ -8,4 +8,5 @@ pub mod error;
 pub mod json;
 pub mod propcheck;
 pub mod rng;
+pub mod scratch;
 pub mod threadpool;

@@ -1,0 +1,202 @@
+//! Zero-alloc scratch arenas for the serving hot path (DESIGN.md §perf).
+//!
+//! Every batch used to pay a stack of `vec![0.0; …]` allocations on its
+//! way through `Engine::forward_batch` → `im2col` → `Bcm::{mmm, mmm_fft}`
+//! → `ChipSim::forward_signed`.  The sizes recur exactly (they are
+//! functions of the layer shapes and the batch width), so a per-worker
+//! arena of checked-out buffers keyed by power-of-two size class turns
+//! that churn into pointer swaps after the first batch warms the pools.
+//!
+//! The arena is **thread-local**: each serving worker (and the trainer,
+//! and a bench's driver thread) owns its own pools, so checkout needs no
+//! locking and buffers never migrate between threads.  Scoped kernel
+//! threads ([`crate::util::threadpool::scoped_chunks`]) deliberately do
+//! *not* use the arena — they are fresh threads each call, so their
+//! thread-locals would never warm; their small per-chunk accumulators
+//! stay plain `Vec`s.
+//!
+//! Contract: [`take`] returns a **zeroed** buffer of exactly the
+//! requested length; [`put`] parks a buffer for reuse (any `Vec<f32>` is
+//! accepted — returning a buffer that was not checked out is fine).  The
+//! [`stats`] counters are the allocs-per-batch proxy the serving benches
+//! report: once the pools are warm, `misses` stops moving.
+
+use std::cell::RefCell;
+
+/// Buffers parked per size class; beyond this, returns are dropped (keeps
+/// a worker that briefly ran a huge batch from pinning memory forever).
+const MAX_PER_CLASS: usize = 8;
+
+/// Size classes cover lengths up to 2^32 floats (16 GiB — far beyond any
+/// layer operand; larger requests just bypass pooling via the last class).
+const CLASSES: usize = 33;
+
+/// Cumulative checkout counters (per thread) — the allocs-per-batch proxy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Stats {
+    /// buffers checked out via [`take`]
+    pub takes: u64,
+    /// checkouts that had to allocate because the class pool was empty
+    pub misses: u64,
+}
+
+/// A pool of reusable `f32` buffers keyed by power-of-two size class.
+pub struct Scratch {
+    pools: Vec<Vec<Vec<f32>>>,
+    stats: Stats,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { pools: (0..CLASSES).map(|_| Vec::new()).collect(), stats: Stats::default() }
+    }
+
+    /// Class a request of `len` is served from: ceil(log₂ len), so every
+    /// buffer parked there has capacity ≥ len.
+    fn take_class(len: usize) -> usize {
+        (len.max(1).next_power_of_two().trailing_zeros() as usize).min(CLASSES - 1)
+    }
+
+    /// Class a returned buffer parks in: floor(log₂ capacity), so its
+    /// capacity covers every request served from that class.
+    fn put_class(capacity: usize) -> usize {
+        ((usize::BITS - 1 - capacity.leading_zeros()) as usize).min(CLASSES - 1)
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        self.stats.takes += 1;
+        match self.pools[Self::take_class(len)].pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                self.stats.misses += 1;
+                // capacity rounded up to the class size, so [`Scratch::put`]
+                // parks this buffer back in the class it was served from
+                // (exact-`len` capacity would land one class lower and the
+                // pool would never warm for non-power-of-two sizes)
+                let mut buf = Vec::with_capacity(len.max(1).next_power_of_two());
+                buf.resize(len, 0.0);
+                buf
+            }
+        }
+    }
+
+    /// Park a buffer for reuse.  Contents are irrelevant ([`Scratch::take`]
+    /// re-zeroes); buffers beyond the per-class cap are dropped.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = Self::put_class(buf.capacity());
+        let pool = &mut self.pools[class];
+        if pool.len() < MAX_PER_CLASS {
+            pool.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> Stats {
+        self.stats
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Check out a zeroed buffer from this thread's arena.
+pub fn take(len: usize) -> Vec<f32> {
+    ARENA.with(|a| a.borrow_mut().take(len))
+}
+
+/// Return a buffer to this thread's arena.
+pub fn put(buf: Vec<f32>) {
+    ARENA.with(|a| a.borrow_mut().put(buf))
+}
+
+/// This thread's cumulative checkout counters.
+pub fn stats() -> Stats {
+    ARENA.with(|a| a.borrow().stats())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut s = Scratch::new();
+        let mut b = s.take(37);
+        assert_eq!(b.len(), 37);
+        assert!(b.iter().all(|v| *v == 0.0));
+        b.iter_mut().for_each(|v| *v = 1.0);
+        s.put(b);
+        let b2 = s.take(37);
+        assert_eq!(b2.len(), 37);
+        assert!(b2.iter().all(|v| *v == 0.0), "recycled buffer must re-zero");
+    }
+
+    #[test]
+    fn warm_pool_stops_missing() {
+        let mut s = Scratch::new();
+        let b = s.take(1000);
+        s.put(b);
+        assert_eq!(s.stats(), Stats { takes: 1, misses: 1 });
+        // same class (513..=1024 all map to class 10) reuses the buffer
+        for len in [1000usize, 513, 1024, 700] {
+            let b = s.take(len);
+            assert_eq!(b.len(), len);
+            s.put(b);
+        }
+        assert_eq!(s.stats(), Stats { takes: 5, misses: 1 });
+    }
+
+    #[test]
+    fn class_mapping_serves_capacity_covering_requests() {
+        // a buffer parked at floor(log2 cap) must satisfy any take that
+        // maps to the same class (ceil(log2 len))
+        for cap in [1usize, 2, 3, 8, 1000, 1024, 1025] {
+            let pc = Scratch::put_class(cap);
+            assert!(cap >= 1 << pc);
+        }
+        for len in [1usize, 2, 3, 8, 1000, 1024, 1025] {
+            let tc = Scratch::take_class(len);
+            assert!(len <= 1 << tc);
+        }
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut s = Scratch::new();
+        for _ in 0..3 * MAX_PER_CLASS {
+            s.put(vec![0.0; 64]);
+        }
+        assert_eq!(s.pools[Scratch::put_class(64)].len(), MAX_PER_CLASS);
+    }
+
+    #[test]
+    fn zero_len_take_is_safe() {
+        let mut s = Scratch::new();
+        let b = s.take(0);
+        assert!(b.is_empty());
+        s.put(b); // capacity 0: silently dropped
+    }
+
+    #[test]
+    fn thread_local_front_compiles_and_counts() {
+        let before = stats();
+        let b = take(16);
+        put(b);
+        let after = stats();
+        assert_eq!(after.takes, before.takes + 1);
+    }
+}

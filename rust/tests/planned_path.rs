@@ -1,0 +1,328 @@
+//! Planned-vs-unplanned bit-identity: the contract of the planned
+//! execution path (DESIGN.md §perf).
+//!
+//! The planned path (cached FFT plans + weight spectra, pre-encoded chip
+//! tiles, scratch arenas, scoped threads) must produce **exactly** the
+//! bytes of the unplanned reference — across random BCM shapes, through
+//! the whole engine on both backends, across drift ticks that invalidate
+//! the encoded-tile cache, and across an `EngineSlot` hot swap that
+//! retires one engine's tiles for another's.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use cirptc::circulant::{fft, Bcm, SignSplit};
+use cirptc::coordinator::Metrics;
+use cirptc::data::Bundle;
+use cirptc::drift::{
+    DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
+    EngineSlot, MonitorConfig,
+};
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::util::propcheck;
+use cirptc::util::rng::Rng;
+
+/// A mildly non-ideal chip of block order `l` (quantizers, Γ mixing,
+/// responsivity tilt, dark) — every encode stage exercised, no noise.
+fn chip(l: usize) -> ChipDescription {
+    let mut d = ChipDescription::ideal(l);
+    for i in 0..l {
+        for j in 0..l {
+            if i != j {
+                d.gamma[i * l + j] = 0.02 / (1.0 + (i as f32 - j as f32).abs());
+            }
+        }
+        d.resp[i] = 1.0 - 0.02 * i as f32;
+    }
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d
+}
+
+#[test]
+fn planned_mmm_fft_bit_identical_over_random_shapes() {
+    // the full (P, Q, l, b) lattice, including the serving order l=64
+    propcheck::check("planned fft path == reference", 30, |g| {
+        let (p, q) = (g.usize_in(1, 5), g.usize_in(1, 5));
+        let l = *g.choose(&[2usize, 4, 8, 16, 32, 64]);
+        let b = g.usize_in(1, 9);
+        let bcm = {
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            Bcm::new(p, q, l, w)
+        };
+        let x = Tensor::new(&[bcm.n(), b], g.vec_f32(bcm.n() * b, -1.0, 1.0));
+        let dy = Tensor::new(&[bcm.m(), b], g.vec_f32(bcm.m() * b, -1.0, 1.0));
+        let plan = fft::plan_for(l);
+        let spec = fft::WeightSpectra::new(&bcm, &plan);
+        let want = bcm.mmm_fft(&x);
+        let (dw_r, dx_r) = bcm.mmm_fft_backward(&x, &dy);
+        for threads in [1usize, 3, 8] {
+            let got = fft::bcm_mmm_fft_planned(&bcm, &x, &plan, &spec, threads);
+            cirptc::prop_assert!(
+                got.data == want.data,
+                "forward diverged: p={p} q={q} l={l} b={b} threads={threads}"
+            );
+            let (dw_p, dx_p) = fft::bcm_mmm_fft_backward_planned(
+                &bcm, &x, &dy, &plan, &spec, threads,
+            );
+            cirptc::prop_assert!(
+                dw_p == dw_r && dx_p.data == dx_r.data,
+                "backward diverged: p={p} q={q} l={l} b={b} threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planned_chip_passes_bit_identical_over_random_shapes() {
+    propcheck::check("planned chip pass == reference", 25, |g| {
+        let (p, q) = (g.usize_in(1, 4), g.usize_in(1, 4));
+        let l = *g.choose(&[2usize, 4, 8]);
+        let b = g.usize_in(1, 6);
+        let bcm = {
+            let mut w = vec![0.0f32; p * q * l];
+            g.rng.fill_uniform(&mut w);
+            for v in w.iter_mut() {
+                *v -= 0.5;
+            }
+            Bcm::new(p, q, l, w)
+        };
+        let sign = SignSplit::of(&bcm);
+        let x = Tensor::new(&[bcm.n(), b], g.vec_f32(bcm.n() * b, 0.0, 1.0));
+        let mut plain = ChipSim::deterministic(chip(l));
+        let mut planned = ChipSim::deterministic(chip(l));
+        for _ in 0..3 {
+            let y0 = plain.forward_signed(&bcm, &x);
+            let y1 = planned.forward_signed_planned(1, 0, &sign, &x);
+            cirptc::prop_assert!(
+                y0.data == y1.data,
+                "chip pass diverged: p={p} q={q} l={l} b={b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// In-memory circ engine: conv(1→cout, k=3) → relu → flatten → fc → 3
+/// classes, on 8×8 inputs, all layers at block order `l`.
+fn build_engine(l: usize, cout: usize, seed: u64) -> Engine {
+    let n_fc = cout * 64;
+    let manifest = Manifest::parse(&format!(
+        r#"{{
+          "dataset": "planned_prop", "classes": 3,
+          "layers": [
+            {{"kind": "conv", "cin": 1, "cout": {cout}, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "fc", "cin": {n_fc}, "cout": 3, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}}
+          ]}}"#
+    ))
+    .unwrap();
+    let mut bundle = Bundle::default();
+    let mut rng = Rng::new(seed);
+    let specs = manifest.layers.clone();
+    for (i, spec) in specs.iter().enumerate() {
+        if !matches!(spec.kind.as_str(), "conv" | "fc") {
+            continue;
+        }
+        let (p, q) = spec.bcm_dims();
+        let mut w = vec![0.0f32; p * q * spec.l];
+        rng.fill_uniform(&mut w);
+        for v in w.iter_mut() {
+            *v = (*v - 0.5) * 0.4;
+        }
+        bundle.insert_f32(&format!("layer{i}.w"), &[p, q, spec.l], w);
+        let mut bias = vec![0.0f32; spec.cout];
+        rng.fill_uniform(&mut bias);
+        bundle.insert_f32(&format!("layer{i}.b"), &[spec.cout], bias);
+    }
+    Engine::from_parts(manifest, &bundle).unwrap()
+}
+
+fn images(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut d = vec![0.0f32; 64];
+            rng.fill_uniform(&mut d);
+            Tensor::new(&[1, 8, 8], d)
+        })
+        .collect()
+}
+
+#[test]
+fn planned_engine_bit_identical_over_shapes_and_backends() {
+    propcheck::check("planned engine == reference engine", 8, |g| {
+        let l = *g.choose(&[2usize, 4, 16]);
+        let cout = *g.choose(&[4usize, 8]);
+        let b = g.usize_in(1, 5);
+        let seed = g.usize_in(1, 1_000_000) as u64;
+        let planned = build_engine(l, cout, seed);
+        let mut reference = build_engine(l, cout, seed);
+        reference.use_plans = false;
+        let imgs = images(b, seed ^ 0xABCD);
+        let yd_p = planned
+            .forward_batch(&imgs, &mut Backend::Digital)
+            .unwrap();
+        let yd_r = reference
+            .forward_batch(&imgs, &mut Backend::Digital)
+            .unwrap();
+        cirptc::prop_assert!(yd_p == yd_r, "digital diverged: l={l} b={b}");
+        let mut be_p =
+            Backend::PhotonicSim(ChipSim::deterministic(chip(l)));
+        let mut be_r =
+            Backend::PhotonicSim(ChipSim::deterministic(chip(l)));
+        let yp = planned.forward_batch(&imgs, &mut be_p).unwrap();
+        let yr = reference.forward_batch(&imgs, &mut be_r).unwrap();
+        cirptc::prop_assert!(yp == yr, "photonic diverged: l={l} b={b}");
+        Ok(())
+    });
+}
+
+fn accel_drift(seed: u64) -> DriftConfig {
+    DriftConfig {
+        seed,
+        passes_per_tick: 3,
+        gamma_walk: 2e-3,
+        resp_tilt: 5e-3,
+        dark_creep: 1e-4,
+        max_ticks: 0,
+    }
+}
+
+#[test]
+fn planned_engine_survives_drift_invalidation_bit_identically() {
+    // a stale encoded tile would be a *silent* accuracy bug: the serving
+    // path keeps producing plausible numbers computed against the chip's
+    // old responsivity.  Running identical drift episodes through the
+    // planned and reference engines catches any missed invalidation as a
+    // byte-level divergence on the first post-tick batch.
+    let planned = build_engine(4, 8, 77);
+    let mut reference = build_engine(4, 8, 77);
+    reference.use_plans = false;
+    let run = |engine: &Engine| -> Vec<Vec<Vec<f32>>> {
+        let mut sim = ChipSim::deterministic(chip(4));
+        sim.set_drift(DriftModel::new(accel_drift(5)));
+        let mut be = Backend::PhotonicSim(sim);
+        (0..8u64)
+            .map(|i| {
+                engine
+                    .forward_batch(&images(3, 1000 + i), &mut be)
+                    .unwrap()
+            })
+            .collect()
+    };
+    assert_eq!(run(&planned), run(&reference));
+}
+
+#[test]
+fn drift_tick_forces_reencode_of_cached_tiles() {
+    // the direct observable behind the bit-identity above: after the
+    // first on_pass tick, the planned path must re-encode instead of
+    // serving the pre-drift tiles
+    let engine = build_engine(4, 8, 78);
+    let mut sim = ChipSim::deterministic(chip(4));
+    // passes_per_tick=5: the first batch (4 passes: 2 layers × 2 sign
+    // halves) finishes before any tick, so its 4 encodes are the
+    // steady-state set; the tick lands during batch 2
+    sim.set_drift(DriftModel::new(DriftConfig {
+        seed: 9,
+        passes_per_tick: 5,
+        gamma_walk: 1e-3,
+        resp_tilt: 4e-3,
+        dark_creep: 1e-4,
+        max_ticks: 0,
+    }));
+    let mut be = Backend::PhotonicSim(sim);
+    engine
+        .forward_batch(&images(2, 2000), &mut be)
+        .unwrap();
+    if let Backend::PhotonicSim(sim) = &be {
+        assert_eq!(sim.encodes_done, 4, "first batch encodes each tile once");
+    }
+    engine
+        .forward_batch(&images(2, 2001), &mut be)
+        .unwrap();
+    if let Backend::PhotonicSim(sim) = &be {
+        assert!(
+            sim.encodes_done > 4,
+            "the drift tick must invalidate the encoded-tile cache \
+             (encodes_done = {})",
+            sim.encodes_done
+        );
+    }
+}
+
+#[test]
+fn hot_swap_retires_the_old_engines_tiles_bit_identically() {
+    // one worker chip serves engine A, then a hot-swapped engine B with
+    // different weights through the *same* sim.  B's outputs must match a
+    // reference-mode B on a fresh chip — i.e. no tile encoded for A (or
+    // cached by A's owner id) leaks into B's passes.
+    let slot = EngineSlot::new(build_engine(4, 8, 101));
+    let imgs = images(3, 3000);
+    let mut be = Backend::PhotonicSim(ChipSim::deterministic(chip(4)));
+    let a_first = slot.current().forward_batch(&imgs, &mut be).unwrap();
+    slot.current().forward_batch(&imgs, &mut be).unwrap();
+    // zero-downtime swap: readers pick up B between batches
+    slot.swap(build_engine(4, 8, 202));
+    let b_served = slot.current().forward_batch(&imgs, &mut be).unwrap();
+    let mut reference = build_engine(4, 8, 202);
+    reference.use_plans = false;
+    let mut be_ref = Backend::PhotonicSim(ChipSim::deterministic(chip(4)));
+    let b_want = reference.forward_batch(&imgs, &mut be_ref).unwrap();
+    assert_eq!(b_served, b_want, "swapped-in engine must re-encode");
+    assert_ne!(a_first, b_served, "distinct weights must serve distinctly");
+    if let Backend::PhotonicSim(sim) = &be {
+        assert_eq!(
+            sim.encodes_done, 8,
+            "4 tiles for engine A + 4 re-encoded for engine B"
+        );
+    }
+}
+
+#[test]
+fn drift_backend_probe_cache_stays_correct_under_monitoring() {
+    // the monitor's probe tile rides the same encode cache; interleaving
+    // probes with serving batches must leave both bit-identical to the
+    // unplanned world (metrics equal, no cross-contamination)
+    let run = |use_plans: bool| -> (Vec<Vec<Vec<f32>>>, i64) {
+        let metrics = Arc::new(Metrics::default());
+        let mut engine = build_engine(4, 8, 55);
+        engine.use_plans = use_plans;
+        let shared = DriftShared::new(engine, Arc::clone(&metrics));
+        let desc = chip(4);
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_drift(DriftModel::new(accel_drift(3)));
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                cooldown_passes: 0,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let (tx, rx) = mpsc::channel();
+        drop(rx); // monitor-only
+        let mut be = DriftBackend::new(shared, sim, monitor, tx);
+        use cirptc::coordinator::InferenceBackend;
+        let out = (0..6u64)
+            .map(|i| be.infer_batch(&images(2, 4000 + i)).unwrap())
+            .collect();
+        (out, metrics.last_probe_residual_ppm.get())
+    };
+    let (planned, res_p) = run(true);
+    let (reference, res_r) = run(false);
+    assert_eq!(planned, reference, "monitored serving must be bit-identical");
+    assert_eq!(res_p, res_r, "probe residuals must agree exactly");
+}
