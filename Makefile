@@ -8,7 +8,7 @@ PY ?= python3
 OUT ?= artifacts
 
 .PHONY: artifacts train train-smoke train-py train-py-quick verify \
-	bench-smoke drift-smoke help
+	bench-smoke drift-smoke lint loom validate help
 
 ## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
 artifacts:
@@ -38,6 +38,40 @@ train-py-quick:
 verify:
 	cargo build --release --workspace
 	cargo test -q --workspace
+
+## Repo-specific source lint: no unwrap/expect/panic on the request
+## path, no std::sync outside the util/sync shim, no allocation in the
+## zero-alloc kernels (escape with `// lint:allow(<rule>): <reason>`)
+lint:
+	cargo run --release --bin repo_lint
+
+## Model-check the concurrency protocols (engine hot swap, drift
+## single-flight gate, FFT plan cache) over every SC interleaving
+loom:
+	RUSTFLAGS="--cfg loom" cargo test --release -p cirptc --test loom_models
+
+## Static artifact validation: the committed fixture set must split
+## exactly into accepted valid artifacts and rejected corrupt ones
+validate:
+	cargo run --release --bin validate -- \
+		--manifest rust/tests/fixtures/verify/valid_model.json \
+		--bundle rust/tests/fixtures/verify/valid_model.cpt \
+		--chip rust/tests/fixtures/verify/chip.json
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/corrupt_graph.json \
+		--bundle rust/tests/fixtures/verify/valid_model.cpt
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/corrupt_quant.json \
+		--bundle rust/tests/fixtures/verify/valid_model.cpt
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/valid_model.json \
+		--bundle rust/tests/fixtures/verify/corrupt_blocks.cpt
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/valid_model.json \
+		--bundle rust/tests/fixtures/verify/corrupt_dangling.cpt
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/valid_model.json \
+		--bundle rust/tests/fixtures/verify/corrupt_spectra.cpt
 
 ## One-iteration serving + mvm bench smoke (works without artifacts —
 ## synthetic model); writes BENCH_serving.json / BENCH_mvm.json and diffs

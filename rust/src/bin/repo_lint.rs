@@ -1,0 +1,390 @@
+//! `repo_lint` — dependency-free source lint for the invariants this
+//! crate cares about but `clippy` cannot see.  Walks `rust/src` (or
+//! `src` when run from inside `rust/`) and enforces three rules:
+//!
+//! * **hot-path-unwrap** — no `.unwrap()` / `.expect(` / `panic!(` in
+//!   the request-path modules (`coordinator/`, `onn/`, `simulator/`,
+//!   `circulant/`).  A panic there poisons locks shared with sibling
+//!   workers and takes down the serving stack; errors must travel as
+//!   `Result` or be recovered (`PoisonError::into_inner`).
+//! * **std-sync** — no direct `std::sync` paths outside the
+//!   `util/sync/` shim (and `bin/`, which never runs under the model
+//!   checker).  Everything that synchronises must import through the
+//!   shim so `--cfg loom` can swap in the instrumented types.
+//! * **scratch-alloc** — the planned-path kernels that advertise
+//!   zero-alloc steady state (`bcm_mmm_fft_planned`, `bcm_mvm_fft`,
+//!   `column_spectra`, `pad_rows_pooled`, `multiply`) must not call
+//!   `vec![` / `Vec::with_capacity` / `Vec::new` / `.to_vec(` — they
+//!   draw from the thread-local scratch arena instead.
+//!
+//! Escapes: a `// lint:allow(<rule>): <reason>` comment suppresses the
+//! rule on the next non-comment line (or on its own line when it
+//! trails code).  An allow without a reason is itself a finding.
+//! Test code (everything from the first `#[cfg(test)]` to end of file)
+//! is exempt.  Exit status 1 when any finding survives.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const KNOWN_RULES: &[&str] = &["hot-path-unwrap", "std-sync", "scratch-alloc"];
+const UNWRAP_NEEDLES: &[&str] = &[".unwrap()", ".expect(", "panic!("];
+const ALLOC_NEEDLES: &[&str] = &["vec![", "Vec::with_capacity", "Vec::new", ".to_vec("];
+const HOT_DIRS: &[&str] = &["coordinator/", "onn/", "simulator/", "circulant/"];
+
+/// (file relative to src/, function name) pairs held to the
+/// scratch-arena-only allocation discipline.
+const SCRATCH_FNS: &[(&str, &str)] = &[
+    ("circulant/fft.rs", "bcm_mmm_fft_planned"),
+    ("circulant/fft.rs", "bcm_mvm_fft"),
+    ("circulant/fft.rs", "column_spectra"),
+    ("onn/engine.rs", "pad_rows_pooled"),
+    ("onn/plan.rs", "multiply"),
+];
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize, // 1-based
+    rule: &'static str,
+    excerpt: String,
+}
+
+impl Finding {
+    fn render(&self) -> String {
+        format!("src/{}:{}: [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// Remove string-literal contents and line comments so needles inside
+/// `"..."` or `// ...` never match.  Naive by design: no raw-string or
+/// block-comment awareness (the codebase uses neither in lint scope),
+/// but escape-aware inside strings so `"\""` does not derail it.
+fn strip_code(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if in_str {
+            if c == '\\' {
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = false;
+                out.push('"');
+            }
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            in_str = true;
+            out.push('"');
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < bytes.len() && bytes[i + 1] as char == '/' {
+            break; // line comment: drop the rest
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Parsed `lint:allow` escape comment.
+struct Allow {
+    rule: String,
+    has_reason: bool,
+    /// true when the comment trails code on the same line
+    trailing: bool,
+}
+
+fn parse_allow(raw: &str) -> Option<Allow> {
+    let pos = raw.find("// lint:allow(")?;
+    let rest = &raw[pos + "// lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = &rest[close + 1..];
+    let has_reason = after
+        .strip_prefix(':')
+        .map(|r| !r.trim().is_empty())
+        .unwrap_or(false);
+    let trailing = !strip_code(&raw[..pos]).trim().is_empty();
+    Some(Allow { rule, has_reason, trailing })
+}
+
+/// Line span (0-based, inclusive) of `fn <name>(` bodies found in the
+/// stripped lines, tracked by brace depth from the first `{` onward.
+fn fn_span(stripped: &[String], name: &str) -> Option<(usize, usize)> {
+    let needle = format!("fn {name}(");
+    let start = stripped.iter().position(|l| l.contains(&needle))?;
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (i, line) in stripped.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((start, i));
+        }
+    }
+    Some((start, stripped.len().saturating_sub(1)))
+}
+
+struct FileReport {
+    findings: Vec<Finding>,
+    allows: usize,
+}
+
+fn analyze_file(rel: &str, content: &str) -> FileReport {
+    let raw: Vec<&str> = content.lines().collect();
+    let stripped: Vec<String> = raw.iter().map(|l| strip_code(l)).collect();
+    let test_start = raw
+        .iter()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(raw.len());
+
+    let mut findings = Vec::new();
+    let mut allows = 0usize;
+    // line index -> rules allowed on that line
+    let mut allowed: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for (i, line) in raw.iter().enumerate() {
+        let Some(allow) = parse_allow(line) else { continue };
+        if i >= test_start || !KNOWN_RULES.contains(&allow.rule.as_str()) {
+            continue;
+        }
+        allows += 1;
+        if !allow.has_reason {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "lint-allow",
+                excerpt: format!("lint:allow({}) without a justification", allow.rule),
+            });
+            continue;
+        }
+        let target = if allow.trailing {
+            Some(i)
+        } else {
+            // a standalone allow covers the next line that is actual
+            // code — comment continuation lines strip to empty
+            (i + 1..raw.len()).find(|&j| !stripped[j].trim().is_empty())
+        };
+        if let Some(j) = target {
+            allowed.entry(j).or_default().push(allow.rule);
+        }
+    }
+
+    let is_allowed =
+        |i: usize, rule: &str| allowed.get(&i).is_some_and(|rs| rs.iter().any(|r| r == rule));
+
+    let hot_path = HOT_DIRS.iter().any(|d| rel.starts_with(d));
+    let sync_scoped = !rel.starts_with("util/sync/") && !rel.starts_with("bin/");
+    let scratch_spans: Vec<(usize, usize)> = SCRATCH_FNS
+        .iter()
+        .filter(|(f, _)| *f == rel)
+        .filter_map(|(_, name)| fn_span(&stripped, name))
+        .collect();
+
+    for (i, code) in stripped.iter().enumerate().take(test_start) {
+        if hot_path && !is_allowed(i, "hot-path-unwrap") {
+            if let Some(n) = UNWRAP_NEEDLES.iter().find(|n| code.contains(*n)) {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "hot-path-unwrap",
+                    excerpt: format!("`{n}` on the request path: {}", raw[i].trim()),
+                });
+            }
+        }
+        if sync_scoped && code.contains("std::sync") && !is_allowed(i, "std-sync") {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "std-sync",
+                excerpt: format!(
+                    "direct std::sync path (import via util::sync shim): {}",
+                    raw[i].trim()
+                ),
+            });
+        }
+        if scratch_spans.iter().any(|&(a, b)| i >= a && i <= b)
+            && !is_allowed(i, "scratch-alloc")
+        {
+            if let Some(n) = ALLOC_NEEDLES.iter().find(|n| code.contains(*n)) {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "scratch-alloc",
+                    excerpt: format!("`{n}` in a zero-alloc kernel: {}", raw[i].trim()),
+                });
+            }
+        }
+    }
+
+    FileReport { findings, allows }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let root = ["rust/src", "src"]
+        .iter()
+        .map(Path::new)
+        .find(|p| p.is_dir());
+    let Some(root) = root else {
+        eprintln!("repo_lint: neither rust/src nor src found; run from the repo root");
+        return ExitCode::FAILURE;
+    };
+
+    let mut files = Vec::new();
+    collect_rs(root, &mut files);
+
+    let mut findings = Vec::new();
+    let mut allows = 0usize;
+    for path in &files {
+        let Ok(content) = fs::read_to_string(path) else {
+            eprintln!("repo_lint: unreadable file {}", path.display());
+            return ExitCode::FAILURE;
+        };
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let report = analyze_file(&rel, &content);
+        findings.extend(report.findings);
+        allows += report.allows;
+    }
+
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    println!(
+        "repo_lint: {} files scanned, {} finding(s), {} allow(s)",
+        files.len(),
+        findings.len(),
+        allows
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_strings_and_comments() {
+        assert_eq!(strip_code(r#"let s = ".unwrap()"; // .expect("#), r#"let s = ""; "#);
+        assert_eq!(strip_code("x(); // panic!("), "x(); ");
+        assert_eq!(strip_code(r#"let q = "a\"b.unwrap()";"#), r#"let q = "";"#);
+    }
+
+    #[test]
+    fn hot_path_needles_fire_and_test_mod_is_exempt() {
+        let src = "fn f() {\n    x.unwrap();\n}\n#[cfg(test)]\nmod t {\n    \
+                   fn g() { y.unwrap(); }\n}\n";
+        let r = analyze_file("coordinator/worker.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.findings[0].rule, "hot-path-unwrap");
+        // same content outside the hot dirs: clean
+        assert!(analyze_file("util/cli.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn needles_inside_strings_and_comments_do_not_fire() {
+        let src = "fn f() {\n    let m = \"call .unwrap() later\";\n    \
+                   // .expect( is discussed here\n}\n";
+        assert!(analyze_file("onn/engine.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn standalone_allow_skips_comment_continuations() {
+        let src = "fn f() {\n    // lint:allow(hot-path-unwrap): startup only,\n    \
+                   // continuation of the justification\n    x.expect(\"boom\");\n}\n";
+        let r = analyze_file("coordinator/worker.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.allows, 1);
+    }
+
+    #[test]
+    fn trailing_allow_covers_its_own_line() {
+        let src = "fn f() {\n    x.unwrap(); \
+                   // lint:allow(hot-path-unwrap): infallible by construction\n}\n";
+        assert!(analyze_file("simulator/mod.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "fn f() {\n    // lint:allow(hot-path-unwrap)\n    x.unwrap();\n}\n";
+        let r = analyze_file("coordinator/worker.rs", src);
+        // the bare allow is flagged AND does not suppress the unwrap
+        assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+        assert!(r.findings.iter().any(|f| f.rule == "lint-allow"));
+        assert!(r.findings.iter().any(|f| f.rule == "hot-path-unwrap"));
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "fn f() {\n    // lint:allow(scratch-alloc): wrong rule\n    x.unwrap();\n}\n";
+        let r = analyze_file("circulant/fft.rs", src);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "hot-path-unwrap");
+    }
+
+    #[test]
+    fn std_sync_rule_scoping() {
+        let src = "use std::sync::Mutex;\n";
+        assert_eq!(analyze_file("coordinator/mod.rs", src).findings.len(), 1);
+        assert!(analyze_file("util/sync/mod.rs", src).findings.is_empty());
+        assert!(analyze_file("bin/validate.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn scratch_alloc_only_inside_configured_fns() {
+        let src = "pub fn bcm_mvm_fft(x: &[f32]) {\n    let v = vec![0.0; 4];\n}\n\n\
+                   pub fn other() {\n    let w = Vec::with_capacity(9);\n}\n";
+        let r = analyze_file("circulant/fft.rs", src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.findings[0].rule, "scratch-alloc");
+    }
+
+    #[test]
+    fn fn_span_tracks_nested_braces() {
+        let src = "pub fn multiply(a: u32) -> u32 {\n    let f = |x: u32| { x + 1 };\n    \
+                   f(a)\n}\nfn after() { let v = vec![1]; }\n";
+        let stripped: Vec<String> = src.lines().map(strip_code).collect();
+        assert_eq!(fn_span(&stripped, "multiply"), Some((0, 3)));
+        // the vec! in `after` is outside the multiply span
+        let r = analyze_file("onn/plan.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+}

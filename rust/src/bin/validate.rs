@@ -1,0 +1,89 @@
+//! `validate` — standalone front door to the static artifact validator
+//! ([`cirptc::verify`]).  Loads a manifest + CPT1 bundle (and optionally
+//! a chip description), runs the full pass pipeline and reports every
+//! attributed diagnostic.  Exit status is the contract CI scripts key on:
+//!
+//! * `0` — verdict matches the expectation (valid by default, invalid
+//!   with `--expect-invalid`)
+//! * `1` — verdict contradicts the expectation, or the files themselves
+//!   could not be loaded when they were expected to be valid
+//!
+//! A file that fails to parse counts as *invalid* (corrupt artifacts
+//! often fail at the parse layer before the validator sees them), so
+//! `--expect-invalid` fixtures may be broken at either level.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cirptc::data::Bundle;
+use cirptc::onn::Manifest;
+use cirptc::simulator::ChipDescription;
+use cirptc::util::cli::Args;
+use cirptc::verify::{validate_artifacts, Report};
+
+fn run(args: &Args) -> (bool, String) {
+    let manifest_path = PathBuf::from(args.str_or("manifest", "artifacts/model.json"));
+    let bundle_path = PathBuf::from(args.str_or("bundle", "artifacts/model.cpt"));
+    let manifest = match Manifest::load(&manifest_path) {
+        Ok(m) => m,
+        Err(e) => return (false, format!("manifest {}: {e:#}", manifest_path.display())),
+    };
+    let bundle = match Bundle::load(&bundle_path) {
+        Ok(b) => b,
+        Err(e) => return (false, format!("bundle {}: {e:#}", bundle_path.display())),
+    };
+    let chip = match args.get("chip") {
+        Some(p) => match ChipDescription::load(&PathBuf::from(p)) {
+            Ok(c) => Some(c),
+            Err(e) => return (false, format!("chip {p}: {e:#}")),
+        },
+        None => None,
+    };
+    let report = validate_artifacts(&manifest, &bundle, chip.as_ref());
+    let ok = report.is_ok();
+    (ok, render(&report, args.has("json")))
+}
+
+fn render(report: &Report, json: bool) -> String {
+    if json {
+        return report.json_dump();
+    }
+    if report.is_ok() {
+        return "ok: artifacts are structurally sound".to_string();
+    }
+    let mut s = format!("{} validation error(s):\n", report.diagnostics.len());
+    for d in &report.diagnostics {
+        s.push_str("  ");
+        s.push_str(&d.render());
+        s.push('\n');
+    }
+    s.pop();
+    s
+}
+
+fn main() -> ExitCode {
+    let mut args = Args::parse();
+    args.describe("manifest", "model manifest JSON (default artifacts/model.json)")
+        .describe("bundle", "CPT1 weight bundle (default artifacts/model.cpt)")
+        .describe("chip", "optional chip.json to check capability against")
+        .describe("json", "emit the machine-readable diagnostic dump")
+        .describe("expect-invalid", "exit 0 iff the artifacts are rejected")
+        .describe("help", "print this help");
+    if args.has("help") {
+        println!("{}", args.usage());
+        return ExitCode::SUCCESS;
+    }
+    let (valid, output) = run(&args);
+    println!("{output}");
+    let expected_valid = !args.has("expect-invalid");
+    if valid == expected_valid {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "validate: artifacts are {}, expected {}",
+            if valid { "valid" } else { "invalid" },
+            if expected_valid { "valid" } else { "invalid" },
+        );
+        ExitCode::FAILURE
+    }
+}

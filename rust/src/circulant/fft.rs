@@ -22,8 +22,7 @@
 //!   count (per-(block, column) op order is unchanged; the propcheck
 //!   suite in `rust/tests/planned_path.rs` pins this).
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::util::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use super::Bcm;
 use crate::tensor::Tensor;
@@ -137,17 +136,51 @@ impl FftPlan {
     }
 }
 
-/// Process-wide [`FftPlan`] cache, keyed by transform length.  Plans are
+/// A cache of [`FftPlan`]s keyed by transform length.  Plans are
 /// immutable once built, so one `Arc` per length serves every layer,
 /// every worker and every probe pass — nothing on the hot path re-derives
 /// a bit-reversal table or twiddle stage again.
-static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+///
+/// Const-constructible (a plain `Vec` behind one mutex, no lazy-init
+/// cell), so the process-wide instance below is a `static` and the
+/// model-checked tests in `rust/tests/loom_models.rs` can drive fresh
+/// instances through every lock interleaving.  The handful of distinct
+/// block orders in any model makes linear lookup the right structure.
+pub struct PlanCache {
+    plans: Mutex<Vec<Arc<FftPlan>>>,
+}
+
+impl PlanCache {
+    pub const fn new() -> PlanCache {
+        PlanCache { plans: Mutex::new(Vec::new()) }
+    }
+
+    /// The shared plan for power-of-two length `n` (built on first use).
+    /// A poisoned cache lock recovers: plans already inserted are
+    /// complete (insertion is the last step under the lock).
+    pub fn get(&self, n: usize) -> Arc<FftPlan> {
+        let mut plans = self.plans.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(p) = plans.iter().find(|p| p.len() == n) {
+            return Arc::clone(p);
+        }
+        let p = Arc::new(FftPlan::new(n));
+        plans.push(Arc::clone(&p));
+        p
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+/// Process-wide plan cache.
+static PLAN_CACHE: PlanCache = PlanCache::new();
 
 /// The shared plan for power-of-two length `n` (building it on first use).
 pub fn plan_for(n: usize) -> Arc<FftPlan> {
-    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = cache.lock().unwrap();
-    Arc::clone(map.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))))
+    PLAN_CACHE.get(n)
 }
 
 /// Block order at which the Eq. (2) route overtakes the direct compressed
@@ -209,6 +242,17 @@ impl WeightSpectra {
 
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
+    }
+
+    /// Block order the spectra were built at.
+    pub fn block_order(&self) -> usize {
+        self.l
+    }
+
+    /// The interleaved spectra buffer (`[re; l][im; l]` per block) — read
+    /// by the static validator's conjugate-symmetry pass.
+    pub fn raw(&self) -> &[f32] {
+        &self.data
     }
 
     /// (re, im) spectrum of block `i` (row-major over `[p][q]`).
@@ -341,7 +385,7 @@ pub fn bcm_mvm_fft(b: &Bcm, x: &[f32]) -> Vec<f32> {
         plan.forward(re, im);
     }
 
-    let mut y = vec![0.0f32; b.m()];
+    let mut y = scratch::take(b.m());
     let mut col = scratch::take(l2);
     let mut acc = scratch::take(l2);
     for bp in 0..b.p {
@@ -477,7 +521,9 @@ pub fn bcm_mmm_fft_planned(
     let mut out = scratch::take(bcm.m() * b);
     if b > 0 {
         scoped_chunks(workers, &mut out, l * b, |bp, ytile| {
+            // lint:allow(scratch-alloc): scoped threads are fresh per call, their arenas never warm
             let mut acc_re = vec![0.0f32; l];
+            // lint:allow(scratch-alloc): scoped threads are fresh per call, their arenas never warm
             let mut acc_im = vec![0.0f32; l];
             for col in 0..b {
                 acc_re.fill(0.0);

@@ -2,8 +2,9 @@
 //! `max_wait_us` expires, whichever first (the standard serving trade-off
 //! between throughput and tail latency — the knob the serving bench sweeps).
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::mpsc;
 
 use super::Request;
 

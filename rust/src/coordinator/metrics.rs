@@ -3,9 +3,8 @@
 //! per-batch latency histograms and a queue-depth gauge for the
 //! batch-major worker loop.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
-
+use crate::util::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::util::sync::{Mutex, MutexGuard};
 use crate::util::threadpool::WorkCounter;
 
 /// A current-value gauge (e.g. requests admitted but not yet computed).
@@ -131,12 +130,27 @@ pub struct Metrics {
     /// cumulative scratch-arena misses (checkouts that had to allocate)
     /// of the last reporting worker — flat once the arena is warm
     pub scratch_misses: Gauge,
+    /// poisoned-lock recoveries: a thread panicked while holding a shared
+    /// mutex and another thread took the lock anyway.  Non-zero means a
+    /// worker died mid-update — the data is still structurally valid (all
+    /// updates here are single `push`/`drain` calls), but the count is the
+    /// signal to go look at worker logs.
+    pub lock_poisons: WorkCounter,
     latencies_us: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
+    /// Lock the latency reservoir, recovering (and counting) a poisoned
+    /// lock instead of cascading the panic through every metrics reader.
+    fn latencies(&self) -> MutexGuard<'_, Vec<u64>> {
+        self.latencies_us.lock().unwrap_or_else(|e| {
+            self.lock_poisons.add(1);
+            e.into_inner()
+        })
+    }
+
     pub fn record_latency_us(&self, us: u64) {
-        let mut v = self.latencies_us.lock().unwrap();
+        let mut v = self.latencies();
         // bounded reservoir: keep the most recent 100k samples
         if v.len() >= 100_000 {
             v.drain(..50_000);
@@ -146,7 +160,7 @@ impl Metrics {
 
     /// (p50, p99) end-to-end latency in µs.
     pub fn latency_percentiles_us(&self) -> (u64, u64) {
-        let mut v = self.latencies_us.lock().unwrap().clone();
+        let mut v = self.latencies().clone();
         if v.is_empty() {
             return (0, 0);
         }
@@ -156,7 +170,7 @@ impl Metrics {
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let v = self.latencies_us.lock().unwrap();
+        let v = self.latencies();
         if v.is_empty() {
             return 0.0;
         }
@@ -179,7 +193,8 @@ impl Metrics {
         format!(
             "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
              p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs \
-             probes={} recals={} probe_res≤{}ppm scratch_miss={}/{}",
+             probes={} recals={} probe_res≤{}ppm scratch_miss={}/{} \
+             lock_poisons={}",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
@@ -195,6 +210,7 @@ impl Metrics {
             self.probe_residual_ppm.percentile(0.99),
             self.scratch_misses.get(),
             self.scratch_takes.get(),
+            self.lock_poisons.get(),
         )
     }
 }
@@ -303,6 +319,24 @@ mod tests {
         let h3 = Histogram::default();
         h3.record(1023);
         assert_eq!(h3.percentile(1.0), 1023);
+    }
+
+    #[test]
+    fn poisoned_reservoir_recovers_and_counts() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        let m2 = Arc::clone(&m);
+        // poison the reservoir lock: panic while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.latencies_us.lock().unwrap();
+            panic!("worker died mid-record");
+        })
+        .join();
+        // readers and writers keep working, and the recovery is counted
+        m.record_latency_us(7);
+        assert_eq!(m.latency_percentiles_us(), (7, 7));
+        assert!(m.lock_poisons.get() >= 1, "recovery must be counted");
+        assert!(m.summary().contains("lock_poisons="));
     }
 
     #[test]

@@ -13,9 +13,10 @@ pub mod metrics;
 pub mod scheduler;
 pub mod worker;
 
-use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
 
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -56,7 +57,7 @@ impl Pending {
 /// The running coordinator: intake channel + batcher thread + workers.
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     // keep the threads alive; joined on drop
     _batcher: worker::JoinOnDrop,
@@ -84,7 +85,7 @@ impl Coordinator {
     ) -> Coordinator {
         let (tx, rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
 
         let _batcher = worker::spawn_named("cirptc-batcher", {
             let cfg = cfg.clone();
@@ -105,7 +106,7 @@ impl Coordinator {
 
         Coordinator {
             tx,
-            next_id: std::sync::atomic::AtomicU64::new(1),
+            next_id: AtomicU64::new(1),
             metrics,
             _batcher,
             _workers,
@@ -115,14 +116,21 @@ impl Coordinator {
     /// Submit one image; returns a handle to await the response.
     pub fn submit(&self, image: Tensor) -> Pending {
         let (reply, rx) = mpsc::channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let sent = self
+            .tx
             .send(Request { id, image, enqueued: Instant::now(), reply })
-            .expect("coordinator alive");
-        self.metrics.submitted.add(1);
-        self.metrics.queue_depth.add(1);
+            .is_ok();
+        if sent {
+            self.metrics.submitted.add(1);
+            self.metrics.queue_depth.add(1);
+        } else {
+            // batcher gone (it only exits when the coordinator is being
+            // torn down): the dropped reply sender surfaces as a clean
+            // "reply channel closed" error from Pending::wait, instead
+            // of a panic in the submitting thread
+            self.metrics.errors.add(1);
+        }
         Pending { rx }
     }
 

@@ -1,10 +1,10 @@
 //! Worker loop: pulls batches from the shared queue, runs the backend,
 //! replies to each request, and records metrics.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
+
+use crate::util::sync::{mpsc, Arc, Mutex};
 
 use crate::onn::{Backend, Engine};
 use crate::tensor::Tensor;
@@ -114,8 +114,19 @@ pub fn run(
     metrics: Arc<Metrics>,
 ) {
     loop {
-        // take one batch while holding the lock, then release before compute
-        let batch = match rx.lock().unwrap().recv() {
+        // take one batch while holding the lock, then release before
+        // compute.  A poisoned lock means a sibling worker panicked while
+        // holding it; the queue itself is still sound (recv is the only
+        // op under the lock), so recover, count it, and keep serving —
+        // one dead worker must not cascade into a dead pool.
+        let batch = match rx
+            .lock()
+            .unwrap_or_else(|e| {
+                metrics.lock_poisons.add(1);
+                e.into_inner()
+            })
+            .recv()
+        {
             Ok(b) => b,
             Err(_) => return, // queue closed
         };
@@ -194,6 +205,9 @@ pub fn spawn_named<F: FnOnce() + Send + 'static>(name: &str, f: F) -> JoinOnDrop
         thread::Builder::new()
             .name(name.to_string())
             .spawn(f)
+            // lint:allow(hot-path-unwrap): spawn happens once at startup,
+            // not per batch; if the OS refuses a thread the coordinator
+            // cannot exist, and there is no caller to hand a Result to
             .expect("spawn thread"),
     ))
 }
@@ -272,6 +286,45 @@ mod tests {
         // received (nothing ever incremented it in this direct-channel
         // test, so it ends at -1)
         assert_eq!(metrics.queue_depth.get(), -1);
+    }
+
+    #[test]
+    fn worker_survives_poisoned_queue_lock() {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        // poison the shared queue lock: a "worker" panics while holding it
+        let _ = {
+            let rx = Arc::clone(&rx);
+            std::thread::spawn(move || {
+                let _g = rx.lock().unwrap();
+                panic!("sibling worker died holding the queue lock");
+            })
+            .join()
+        };
+        let h = spawn_named("t", {
+            let rx = Arc::clone(&rx);
+            let m = Arc::clone(&metrics);
+            move || run(Box::new(CountBackend(0)), rx, m)
+        });
+        let (reply, reply_rx) = mpsc::channel();
+        tx.send(Batch {
+            requests: vec![super::super::Request {
+                id: 9,
+                image: Tensor::zeros(&[1, 2, 2]),
+                enqueued: Instant::now(),
+                reply,
+            }],
+            formed: Instant::now(),
+        })
+        .unwrap();
+        let resp = reply_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("worker must recover the poisoned lock and serve");
+        assert_eq!(resp.id, 9);
+        assert!(metrics.lock_poisons.get() >= 1, "recovery must be counted");
+        drop(tx);
+        drop(h);
     }
 
     /// Offline stand-in for the XLA artifact contract: fixed batch

@@ -35,9 +35,7 @@ pub use model::{DriftConfig, DriftModel};
 pub use monitor::{DriftMonitor, MonitorConfig};
 pub use recal::{RecalConfig, Recalibrator};
 
-use std::sync::atomic::AtomicBool;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex, RwLock};
+use crate::util::sync::{mpsc, Arc, Mutex, SingleFlight, Slot};
 
 use crate::coordinator::{InferenceBackend, Metrics};
 use crate::onn::{Backend, Engine};
@@ -48,24 +46,26 @@ use crate::util::threadpool::WorkCounter;
 
 /// A hot-swappable engine handle: readers grab the current `Arc<Engine>`
 /// (one `RwLock` read + one `Arc` clone — cheap enough per batch), the
-/// recalibrator publishes a replacement atomically.
+/// recalibrator publishes a replacement atomically.  Thin wrapper over
+/// the generic [`crate::util::sync::Slot`] — the swap-vs-reader protocol
+/// is model-checked in `tests/loom_models.rs` against that type.
 pub struct EngineSlot {
-    inner: RwLock<Arc<Engine>>,
+    inner: Slot<Engine>,
 }
 
 impl EngineSlot {
     pub fn new(engine: Engine) -> EngineSlot {
-        EngineSlot { inner: RwLock::new(Arc::new(engine)) }
+        EngineSlot { inner: Slot::new(engine) }
     }
 
     /// The engine to use for the next batch.
     pub fn current(&self) -> Arc<Engine> {
-        self.inner.read().unwrap().clone()
+        self.inner.current()
     }
 
     /// Publish a new engine; in-flight batches finish on the old one.
     pub fn swap(&self, engine: Engine) {
-        *self.inner.write().unwrap() = Arc::new(engine);
+        self.inner.swap(engine);
     }
 }
 
@@ -87,7 +87,7 @@ pub struct DriftShared {
     /// and serving metrics land in one place)
     pub metrics: Arc<Metrics>,
     /// a recalibration is queued or running (single-flight gate)
-    pub recal_in_flight: AtomicBool,
+    pub recal_in_flight: SingleFlight,
     /// completed recalibration cycles *of this stack* — the control-plane
     /// generation monitors key their rebase on.  Deliberately separate
     /// from `metrics.recalibrations`: the metrics sink may be shared
@@ -107,7 +107,7 @@ impl DriftShared {
         Arc::new(DriftShared {
             slot: EngineSlot::new(engine),
             metrics,
-            recal_in_flight: AtomicBool::new(false),
+            recal_in_flight: SingleFlight::new(),
             recal_generation: WorkCounter::new(),
             recal_point: Mutex::new(None),
         })

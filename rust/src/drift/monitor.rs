@@ -20,8 +20,7 @@
 //! was trained against, so residuals always measure drift the served
 //! weights have never seen.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
+use crate::util::sync::{mpsc, PoisonError};
 
 use crate::circulant::Bcm;
 use crate::simulator::{ChipDescription, ChipSim};
@@ -150,7 +149,7 @@ impl DriftMonitor {
             let point = shared
                 .recal_point
                 .lock()
-                .unwrap()
+                .unwrap_or_else(PoisonError::into_inner)
                 .clone()
                 .unwrap_or_else(|| sim.desc.clone());
             self.rebase(&point);
@@ -171,7 +170,7 @@ impl DriftMonitor {
         if res >= self.cfg.residual_trigger
             && sim.passes().saturating_sub(self.last_recal_pass)
                 >= self.cfg.cooldown_passes
-            && !shared.recal_in_flight.swap(true, Ordering::SeqCst)
+            && shared.recal_in_flight.try_begin()
         {
             let req = RecalRequest {
                 desc: sim.desc.clone(),
@@ -180,7 +179,7 @@ impl DriftMonitor {
             };
             if recal_tx.send(req).is_err() {
                 // monitor-only deployment: nobody is listening
-                shared.recal_in_flight.store(false, Ordering::SeqCst);
+                shared.recal_in_flight.finish();
             }
         }
     }

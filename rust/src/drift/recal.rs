@@ -25,9 +25,7 @@
 //! only ever change through it, so the trainable copy never goes stale.
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::util::sync::{mpsc, Arc, PoisonError};
 
 use crate::coordinator::worker::{spawn_named, JoinOnDrop};
 use crate::data::datasets::Split;
@@ -144,7 +142,8 @@ impl Recalibrator {
         // and their monitors rebase to the point this cycle trained for
         let bundle = self.model.export_bundle();
         let engine = Engine::from_parts(self.model.manifest.clone(), &bundle)?;
-        *self.shared.recal_point.lock().unwrap() = Some(point);
+        *self.shared.recal_point.lock().unwrap_or_else(PoisonError::into_inner) =
+            Some(point);
         self.shared.slot.swap(engine);
         self.cycles += 1;
         // generation first (the monitors' rebase key), then the shared
@@ -161,7 +160,7 @@ impl Recalibrator {
             let outcome = self.recalibrate(req.desc);
             // clear the in-flight gate *after* the swap so the monitor
             // can't double-fire on the pre-swap residual
-            self.shared.recal_in_flight.store(false, Ordering::SeqCst);
+            self.shared.recal_in_flight.finish();
             if let Err(e) = outcome {
                 eprintln!(
                     "cirptc recalibrator: recalibration failed \

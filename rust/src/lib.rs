@@ -51,3 +51,4 @@ pub mod simulator;
 pub mod tensor;
 pub mod train;
 pub mod util;
+pub mod verify;

@@ -12,7 +12,8 @@
 //! `pjrt` cargo feature re-enables the XLA artifact paths.
 
 use std::path::PathBuf;
-use std::sync::Arc;
+
+use cirptc::util::sync::Arc;
 
 use cirptc::analysis::{AreaModel, PowerModel, WeightTech};
 use cirptc::arch::CirPtcConfig;

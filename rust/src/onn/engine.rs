@@ -78,7 +78,20 @@ impl Engine {
         Engine::from_parts(manifest, &bundle)
     }
 
+    /// [`Engine::from_parts_unchecked`] behind the static validator
+    /// ([`crate::verify::validate_artifacts`]): structurally broken
+    /// artifacts are refused with attributed diagnostics *before* any
+    /// layer state is built.
     pub fn from_parts(manifest: Manifest, bundle: &Bundle) -> Result<Engine> {
+        crate::verify::validate_artifacts(&manifest, bundle, None)
+            .into_result("refusing to build engine from invalid artifacts")?;
+        Engine::from_parts_unchecked(manifest, bundle)
+    }
+
+    /// Build without the validation pass — for callers that have already
+    /// validated (or deliberately want load-time failures instead, e.g.
+    /// micro-benches constructing throwaway engines in a hot loop).
+    pub fn from_parts_unchecked(manifest: Manifest, bundle: &Bundle) -> Result<Engine> {
         let mut layers = Vec::with_capacity(manifest.layers.len());
         for (i, spec) in manifest.layers.iter().enumerate() {
             let name = format!("layer{i}");

@@ -23,8 +23,8 @@
 //! false` re-routes the whole engine through the reference calls so the
 //! propcheck suite can pin the equivalence end to end.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Arc;
 
 use crate::circulant::{fft, Bcm, SignSplit};
 use crate::tensor::Tensor;

@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Arc;
+use crate::util::sync::Arc;
 
 use crate::bail;
 use crate::circulant::{Bcm, SignSplit};

@@ -219,6 +219,16 @@ impl TrainModel {
     /// engine is currently running, so recalibration fine-tunes the
     /// *live* weights rather than a re-initialized stack.
     pub fn from_parts(manifest: Manifest, bundle: &Bundle) -> Result<TrainModel> {
+        crate::verify::validate_artifacts(&manifest, bundle, None)
+            .into_result("refusing to build trainable model from invalid artifacts")?;
+        TrainModel::from_parts_unchecked(manifest, bundle)
+    }
+
+    /// [`TrainModel::from_parts`] without the static validation pass.
+    pub fn from_parts_unchecked(
+        manifest: Manifest,
+        bundle: &Bundle,
+    ) -> Result<TrainModel> {
         let mut layers = Vec::with_capacity(manifest.layers.len());
         for (i, spec) in manifest.layers.iter().enumerate() {
             let name = format!("layer{i}");

@@ -111,8 +111,8 @@ impl From<std::string::FromUtf8Error> for Error {
     }
 }
 
-impl From<std::sync::mpsc::RecvError> for Error {
-    fn from(_: std::sync::mpsc::RecvError) -> Error {
+impl From<crate::util::sync::mpsc::RecvError> for Error {
+    fn from(_: crate::util::sync::mpsc::RecvError) -> Error {
         Error::Msg("reply channel closed (request failed on the worker)".into())
     }
 }

@@ -9,4 +9,5 @@ pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod scratch;
+pub mod sync;
 pub mod threadpool;

@@ -1,0 +1,164 @@
+//! Single import surface for synchronization primitives (DESIGN.md
+//! §verify).
+//!
+//! Everything in the crate that locks, swaps or counts across threads
+//! imports from here, never from `std::sync` directly (`repo_lint`
+//! enforces it).  Normally the re-exports are exactly `std::sync`; under
+//! `--cfg loom` the lock and atomic types swap for the instrumented
+//! versions in [`model`], so the protocol tests in
+//! `rust/tests/loom_models.rs` can model-check the very same primitives
+//! the serving stack runs on.
+//!
+//! The shared protocols themselves live here too, as small generic
+//! types the hot paths and the model tests both use verbatim:
+//! [`Slot`] (the hot-swap publication cell behind
+//! [`crate::drift::EngineSlot`]) and [`SingleFlight`] (the drift
+//! monitor's recalibration gate).
+
+pub mod model;
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    atomic, mpsc, Arc, Condvar, LockResult, Mutex, MutexGuard, OnceLock,
+    PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard, Weak,
+};
+
+#[cfg(loom)]
+pub use std::sync::{mpsc, Arc, Condvar, LockResult, OnceLock, PoisonError, Weak};
+
+#[cfg(loom)]
+pub use self::model::{
+    Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Atomic types, instrumented under `--cfg loom`.
+#[cfg(loom)]
+pub mod atomic {
+    pub use super::model::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+/// A read-mostly publication cell: many readers grab the current value,
+/// one writer atomically replaces it (the hot-swap half of the drift
+/// protocol — readers in flight keep the `Arc` they captured, new
+/// readers see the replacement).
+///
+/// Poisoning recovers rather than cascades: a reader never mutates, and
+/// the writer replaces the whole `Arc`, so a panic mid-critical-section
+/// cannot leave a torn value behind.
+pub struct Slot<T> {
+    inner: RwLock<Arc<T>>,
+}
+
+impl<T> Slot<T> {
+    pub fn new(value: T) -> Slot<T> {
+        Slot { inner: RwLock::new(Arc::new(value)) }
+    }
+
+    /// The currently published value.
+    pub fn current(&self) -> Arc<T> {
+        Arc::clone(&self.inner.read().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    /// Atomically publish a replacement value.
+    pub fn swap(&self, value: T) {
+        self.publish(Arc::new(value));
+    }
+
+    /// Atomically publish an already-shared replacement.
+    pub fn publish(&self, value: Arc<T>) {
+        *self.inner.write().unwrap_or_else(PoisonError::into_inner) = value;
+    }
+}
+
+/// A single-admission gate: the first `try_begin` wins and everyone else
+/// is refused until the winner calls `finish` (the drift monitor's
+/// "exactly one recalibration in flight" protocol).
+pub struct SingleFlight {
+    busy: atomic::AtomicBool,
+}
+
+impl SingleFlight {
+    pub const fn new() -> SingleFlight {
+        SingleFlight { busy: atomic::AtomicBool::new(false) }
+    }
+
+    /// Try to become the single admitted flight; true exactly once per
+    /// `finish` cycle, over every interleaving (see `loom_models.rs`).
+    pub fn try_begin(&self) -> bool {
+        !self.busy.swap(true, atomic::Ordering::SeqCst)
+    }
+
+    /// Reopen the gate (called by whoever owns the completed flight).
+    pub fn finish(&self) {
+        self.busy.store(false, atomic::Ordering::SeqCst);
+    }
+
+    /// Whether a flight currently holds the gate.
+    pub fn in_flight(&self) -> bool {
+        self.busy.load(atomic::Ordering::SeqCst)
+    }
+}
+
+impl Default for SingleFlight {
+    fn default() -> Self {
+        SingleFlight::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn slot_swaps_under_concurrent_readers() {
+        let slot = Arc::new(Slot::new(0u64));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    let mut last = 0;
+                    for _ in 0..500 {
+                        let v = *slot.current();
+                        assert!(v >= last, "published values are monotone");
+                        last = v;
+                    }
+                })
+            })
+            .collect();
+        for g in 1..=50u64 {
+            slot.swap(g);
+        }
+        for r in readers {
+            r.join().expect("reader");
+        }
+        assert_eq!(*slot.current(), 50);
+    }
+
+    #[test]
+    fn single_flight_admits_exactly_one() {
+        let gate = SingleFlight::new();
+        assert!(gate.try_begin());
+        assert!(!gate.try_begin(), "second entry refused");
+        assert!(gate.in_flight());
+        gate.finish();
+        assert!(!gate.in_flight());
+        assert!(gate.try_begin(), "gate reopens after finish");
+    }
+
+    #[test]
+    fn single_flight_races_admit_one_winner() {
+        let gate = Arc::new(SingleFlight::new());
+        let winners: Vec<bool> = (0..8)
+            .map(|_| {
+                let gate = Arc::clone(&gate);
+                thread::spawn(move || gate.try_begin())
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("racer"))
+            .collect();
+        assert_eq!(winners.iter().filter(|w| **w).count(), 1);
+    }
+}

@@ -1,0 +1,806 @@
+//! Bounded model checker for the crate's lock/atomic protocols (loom is
+//! not in the offline vendor set — same from-scratch philosophy as
+//! `util/propcheck.rs`).
+//!
+//! [`Checker::check`] re-runs a small multi-threaded scenario under every
+//! reachable thread interleaving: model threads run as real OS threads,
+//! but each instrumented operation (lock acquire, atomic access) first
+//! parks on a scheduling gate, and a controller thread enumerates the
+//! schedules by depth-first search over the per-step choice of which
+//! runnable thread proceeds.  Exactly one model thread runs between
+//! decisions, so every execution is deterministic given its schedule and
+//! replay is exact.
+//!
+//! Scope, stated honestly: the checker explores **sequentially
+//! consistent** interleavings at instrumented-operation granularity.  It
+//! catches lost updates, ordering bugs between sync operations, double
+//! entry through gates, and deadlocks (no runnable thread while blocked
+//! threads remain) — it does *not* model weak-memory reorderings the way
+//! real loom does, so `Relaxed`-ordering bugs that need hardware
+//! reordering to surface are out of reach.  The protocols it guards
+//! (`Slot` hot swap, `SingleFlight`, the FFT plan cache) are
+//! `SeqCst`/lock-based, where this is the relevant semantics.
+//!
+//! The instrumented [`Mutex`]/[`RwLock`]/atomic types compile in every
+//! configuration; outside a model run they fall back to plain spin-lock /
+//! raw-atomic behaviour.  Under `--cfg loom` the [`crate::util::sync`]
+//! shim re-exports them as *the* sync primitives, so the whole crate's
+//! protocols run instrumented inside `rust/tests/loom_models.rs`.
+
+use std::cell::RefCell;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Arc, Condvar, Mutex as StdMutex};
+use std::thread;
+
+pub use std::sync::atomic::Ordering;
+pub use std::sync::{LockResult, PoisonError};
+
+/// Sentinel panic message for threads torn down by deadlock abort; the
+/// controller reports the deadlock itself, not these unwinds.
+const ABORT_MSG: &str = "__cirptc_model_abort__";
+
+// ---------------------------------------------------------------------
+// scheduler core
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    /// running real code between two instrumented operations
+    Running,
+    /// parked at a scheduling gate, eligible to be granted a step
+    AtYield,
+    /// parked waiting for a resource (mutex/rwlock) to be released
+    Blocked(usize),
+    Finished,
+}
+
+struct SchedState {
+    statuses: Vec<Status>,
+    /// thread currently granted its next step
+    grant: Option<usize>,
+    /// panic messages collected from model threads (tid, message)
+    panics: Vec<(usize, String)>,
+    /// set on deadlock teardown: parked threads unwind instead of waiting
+    abort: bool,
+}
+
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: Condvar,
+}
+
+impl Sched {
+    fn new(n_threads: usize) -> Sched {
+        Sched {
+            state: StdMutex::new(SchedState {
+                statuses: vec![Status::Running; n_threads],
+                grant: None,
+                panics: Vec::new(),
+                abort: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Park as `mark`, then wait until granted the next step (or aborted).
+    fn park(&self, tid: usize, mark: Status) {
+        let mut st = self.lock();
+        st.statuses[tid] = mark;
+        self.cv.notify_all();
+        while st.grant != Some(tid) && !st.abort {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.abort {
+            drop(st);
+            panic!("{ABORT_MSG}");
+        }
+        // controller already marked us Running when granting
+        st.grant = None;
+    }
+
+    fn yield_op(&self, tid: usize) {
+        self.park(tid, Status::AtYield);
+    }
+
+    fn block_on(&self, tid: usize, resource: usize) {
+        self.park(tid, Status::Blocked(resource));
+    }
+
+    /// A resource was released: every thread blocked on it becomes
+    /// schedulable again.  Never parks (safe during unwinding).
+    fn release(&self, resource: usize) {
+        let mut st = self.lock();
+        for s in st.statuses.iter_mut() {
+            if *s == Status::Blocked(resource) {
+                *s = Status::AtYield;
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn finish(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.lock();
+        st.statuses[tid] = Status::Finished;
+        if let Some(m) = panic_msg {
+            st.panics.push((tid, m));
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Per-thread handle into the active scheduler.
+struct ThreadCtx {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Arc<ThreadCtx>>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<Arc<ThreadCtx>> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Scheduling gate before an instrumented operation; no-op outside a
+/// model run and while unwinding (guard drops during a panic must not
+/// park — the controller would never see the thread finish).
+fn sync_point() {
+    if thread::panicking() {
+        return;
+    }
+    if let Some(ctx) = current() {
+        ctx.sched.yield_op(ctx.tid);
+    }
+}
+
+// ---------------------------------------------------------------------
+// explorer
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct Decision {
+    /// index chosen into the sorted runnable list
+    choice: usize,
+    /// how many threads were runnable at this step
+    options: usize,
+}
+
+type Body = Box<dyn FnOnce() + Send + 'static>;
+
+/// One scheduled execution being assembled by the scenario closure:
+/// register thread bodies with [`Run::thread`] and an optional
+/// post-condition with [`Run::after`].
+#[derive(Default)]
+pub struct Run {
+    bodies: Vec<Body>,
+    after: Option<Box<dyn FnOnce()>>,
+}
+
+impl Run {
+    /// Register a model thread for this execution.
+    pub fn thread<F: FnOnce() + Send + 'static>(&mut self, f: F) {
+        self.bodies.push(Box::new(f));
+    }
+
+    /// Register a check that runs after every schedule completes (on the
+    /// controller thread, with scheduling disabled).
+    pub fn after<F: FnOnce() + 'static>(&mut self, f: F) {
+        self.after = Some(Box::new(f));
+    }
+}
+
+/// Result of a completed exploration.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    /// distinct schedules executed
+    pub schedules: usize,
+}
+
+/// Exhaustive schedule explorer; see the module docs for semantics.
+pub struct Checker {
+    name: String,
+    max_schedules: usize,
+}
+
+impl Checker {
+    pub fn new(name: &str) -> Checker {
+        Checker { name: name.to_string(), max_schedules: 100_000 }
+    }
+
+    /// Cap on explored schedules; exceeding it fails the check loudly
+    /// (silent truncation would read as full coverage).
+    pub fn max_schedules(mut self, n: usize) -> Checker {
+        self.max_schedules = n;
+        self
+    }
+
+    /// Run `scenario` under every reachable interleaving.  The closure is
+    /// invoked once per schedule to build fresh state and register the
+    /// thread bodies; panics inside model threads (assertion failures,
+    /// detected deadlocks) propagate with the offending schedule attached.
+    pub fn check<F: Fn(&mut Run)>(self, scenario: F) -> Summary {
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            let mut run = Run::default();
+            scenario(&mut run);
+            let trace = self.execute(run.bodies, &prefix);
+            if let Some(after) = run.after {
+                after();
+            }
+            schedules += 1;
+            assert!(
+                schedules <= self.max_schedules,
+                "model '{}': exploration cap {} exceeded — state space too \
+                 large for an exhaustive check",
+                self.name,
+                self.max_schedules
+            );
+            match next_prefix(&trace) {
+                Some(p) => prefix = p,
+                None => break,
+            }
+        }
+        Summary { schedules }
+    }
+
+    /// Execute one schedule: spawn the bodies, drive them step by step
+    /// replaying `prefix` then defaulting to the first runnable thread,
+    /// and return the full decision trace.
+    fn execute(&self, bodies: Vec<Body>, prefix: &[usize]) -> Vec<Decision> {
+        let n = bodies.len();
+        let sched = Arc::new(Sched::new(n));
+        let mut handles = Vec::with_capacity(n);
+        for (tid, body) in bodies.into_iter().enumerate() {
+            let sched = Arc::clone(&sched);
+            handles.push(thread::spawn(move || {
+                let ctx = Arc::new(ThreadCtx { sched: Arc::clone(&sched), tid });
+                CTX.with(|c| *c.borrow_mut() = Some(ctx));
+                // start gate: no body code runs until the controller
+                // grants the first step (keeps replays deterministic)
+                let gate = catch_unwind(AssertUnwindSafe(|| {
+                    sched.yield_op(tid);
+                    body();
+                }));
+                CTX.with(|c| *c.borrow_mut() = None);
+                sched.finish(tid, gate.err().map(panic_message));
+            }));
+        }
+
+        let mut decisions: Vec<Decision> = Vec::new();
+        let deadlock: Option<Vec<(usize, usize)>> = loop {
+            let mut st = sched.lock();
+            while st.statuses.iter().any(|s| *s == Status::Running) {
+                st = sched.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if st.statuses.iter().all(|s| *s == Status::Finished) {
+                break None;
+            }
+            let runnable: Vec<usize> = st
+                .statuses
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s == Status::AtYield)
+                .map(|(i, _)| i)
+                .collect();
+            if runnable.is_empty() {
+                // deadlock: tear parked threads down so join() returns
+                let blocked: Vec<(usize, usize)> = st
+                    .statuses
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| match s {
+                        Status::Blocked(r) => Some((i, *r)),
+                        _ => None,
+                    })
+                    .collect();
+                st.abort = true;
+                sched.cv.notify_all();
+                break Some(blocked);
+            }
+            let d = decisions.len();
+            let choice = if d < prefix.len() { prefix[d] } else { 0 };
+            assert!(
+                choice < runnable.len(),
+                "model '{}': non-deterministic scenario (replay diverged at \
+                 step {d}: choice {choice} of {} runnable)",
+                self.name,
+                runnable.len()
+            );
+            let tid = runnable[choice];
+            decisions.push(Decision { choice, options: runnable.len() });
+            st.statuses[tid] = Status::Running;
+            st.grant = Some(tid);
+            sched.cv.notify_all();
+        };
+
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(blocked) = deadlock {
+            panic!(
+                "model '{}': deadlock under schedule {:?} — blocked: {:?}",
+                self.name,
+                choices(&decisions),
+                blocked
+            );
+        }
+        let st = sched.lock();
+        if let Some((tid, msg)) = st.panics.iter().find(|(_, m)| m != ABORT_MSG) {
+            panic!(
+                "model '{}': thread {tid} panicked under schedule {:?}: {msg}",
+                self.name,
+                choices(&decisions)
+            );
+        }
+        drop(st);
+        decisions
+    }
+}
+
+fn choices(trace: &[Decision]) -> Vec<usize> {
+    trace.iter().map(|d| d.choice).collect()
+}
+
+/// Deepest decision with an unexplored sibling, as the next DFS prefix.
+fn next_prefix(trace: &[Decision]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        if trace[i].choice + 1 < trace[i].options {
+            let mut p = choices(&trace[..i]);
+            p.push(trace[i].choice + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// instrumented sync primitives
+// ---------------------------------------------------------------------
+
+/// A mutex whose acquire is a scheduling point inside a model run;
+/// outside one it degrades to a spin lock.  `lock()` always returns `Ok`
+/// (no poisoning), so `std`-style call sites compile against both.
+pub struct Mutex<T> {
+    held: std::sync::atomic::AtomicBool,
+    cell: UnsafeCell<T>,
+}
+
+// Safety: `held` enforces exclusive access to `cell` (CAS outside model
+// runs; single-running-thread serialization inside them).
+unsafe impl<T: Send> Send for Mutex<T> {}
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Mutex<T> {
+        Mutex {
+            held: std::sync::atomic::AtomicBool::new(false),
+            cell: UnsafeCell::new(value),
+        }
+    }
+
+    fn id(&self) -> usize {
+        self as *const Mutex<T> as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current() {
+            Some(ctx) if !thread::panicking() => {
+                ctx.sched.yield_op(ctx.tid);
+                while self.held.swap(true, StdOrdering::SeqCst) {
+                    ctx.sched.block_on(ctx.tid, self.id());
+                }
+            }
+            _ => {
+                while self.held.swap(true, StdOrdering::SeqCst) {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        Ok(MutexGuard { m: self })
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    m: &'a Mutex<T>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // Safety: exclusive while `held`
+        unsafe { &*self.m.cell.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // Safety: exclusive while `held`
+        unsafe { &mut *self.m.cell.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.m.held.store(false, StdOrdering::SeqCst);
+        if let Some(ctx) = current() {
+            ctx.sched.release(self.m.id());
+        }
+    }
+}
+
+/// Reader–writer lock; same instrumentation contract as [`Mutex`].
+pub struct RwLock<T> {
+    writer: std::sync::atomic::AtomicBool,
+    readers: std::sync::atomic::AtomicUsize,
+    cell: UnsafeCell<T>,
+}
+
+// Safety: writer/readers flags enforce the usual shared-xor-mut protocol.
+unsafe impl<T: Send> Send for RwLock<T> {}
+unsafe impl<T: Send + Sync> Sync for RwLock<T> {}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> RwLock<T> {
+        RwLock::new(T::default())
+    }
+}
+
+impl<T> RwLock<T> {
+    pub const fn new(value: T) -> RwLock<T> {
+        RwLock {
+            writer: std::sync::atomic::AtomicBool::new(false),
+            readers: std::sync::atomic::AtomicUsize::new(0),
+            cell: UnsafeCell::new(value),
+        }
+    }
+
+    fn id(&self) -> usize {
+        self as *const RwLock<T> as usize
+    }
+
+    fn try_read(&self) -> bool {
+        if self.writer.load(StdOrdering::SeqCst) {
+            return false;
+        }
+        self.readers.fetch_add(1, StdOrdering::SeqCst);
+        if self.writer.load(StdOrdering::SeqCst) {
+            self.readers.fetch_sub(1, StdOrdering::SeqCst);
+            return false;
+        }
+        true
+    }
+
+    fn try_write(&self) -> bool {
+        if self
+            .writer
+            .compare_exchange(false, true, StdOrdering::SeqCst, StdOrdering::SeqCst)
+            .is_err()
+        {
+            return false;
+        }
+        if self.readers.load(StdOrdering::SeqCst) != 0 {
+            self.writer.store(false, StdOrdering::SeqCst);
+            return false;
+        }
+        true
+    }
+
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        self.acquire(Self::try_read);
+        Ok(RwLockReadGuard { l: self })
+    }
+
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        self.acquire(Self::try_write);
+        Ok(RwLockWriteGuard { l: self })
+    }
+
+    fn acquire(&self, try_op: fn(&RwLock<T>) -> bool) {
+        match current() {
+            Some(ctx) if !thread::panicking() => {
+                ctx.sched.yield_op(ctx.tid);
+                while !try_op(self) {
+                    ctx.sched.block_on(ctx.tid, self.id());
+                }
+            }
+            _ => {
+                while !try_op(self) {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    l: &'a RwLock<T>,
+}
+
+impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // Safety: shared access held via the readers count
+        unsafe { &*self.l.cell.get() }
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        self.l.readers.fetch_sub(1, StdOrdering::SeqCst);
+        if let Some(ctx) = current() {
+            ctx.sched.release(self.l.id());
+        }
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    l: &'a RwLock<T>,
+}
+
+impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // Safety: exclusive while `writer`
+        unsafe { &*self.l.cell.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // Safety: exclusive while `writer`
+        unsafe { &mut *self.l.cell.get() }
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        self.l.writer.store(false, StdOrdering::SeqCst);
+        if let Some(ctx) = current() {
+            ctx.sched.release(self.l.id());
+        }
+    }
+}
+
+/// Instrumented boolean atomic: every access is a scheduling point.
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool { inner: std::sync::atomic::AtomicBool::new(v) }
+    }
+    pub fn load(&self, order: Ordering) -> bool {
+        sync_point();
+        self.inner.load(order)
+    }
+    pub fn store(&self, v: bool, order: Ordering) {
+        sync_point();
+        self.inner.store(v, order);
+    }
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        sync_point();
+        self.inner.swap(v, order)
+    }
+}
+
+impl Default for AtomicBool {
+    fn default() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+}
+
+macro_rules! instrumented_int_atomic {
+    ($name:ident, $std:ty, $prim:ty) => {
+        /// Instrumented integer atomic: every access is a scheduling point.
+        pub struct $name {
+            inner: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> $name {
+                $name { inner: <$std>::new(v) }
+            }
+            pub fn load(&self, order: Ordering) -> $prim {
+                sync_point();
+                self.inner.load(order)
+            }
+            pub fn store(&self, v: $prim, order: Ordering) {
+                sync_point();
+                self.inner.store(v, order);
+            }
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                sync_point();
+                self.inner.fetch_add(v, order)
+            }
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                sync_point();
+                self.inner.fetch_sub(v, order)
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> $name {
+                $name::new(0)
+            }
+        }
+    };
+}
+
+instrumented_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+instrumented_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+instrumented_int_atomic!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as PlainMutex;
+
+    #[test]
+    fn explores_every_interleaving_of_two_counters() {
+        let finals: Arc<PlainMutex<Vec<usize>>> = Arc::default();
+        let f2 = Arc::clone(&finals);
+        let summary = Checker::new("two-counters").check(move |run| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let (na, nb) = (Arc::clone(&n), Arc::clone(&n));
+            run.thread(move || {
+                na.fetch_add(1, Ordering::SeqCst);
+                na.fetch_add(1, Ordering::SeqCst);
+            });
+            run.thread(move || {
+                nb.fetch_add(1, Ordering::SeqCst);
+                nb.fetch_add(1, Ordering::SeqCst);
+            });
+            let sink = Arc::clone(&f2);
+            run.after(move || {
+                sink.lock().unwrap().push(n.load(Ordering::SeqCst));
+            });
+        });
+        assert!(summary.schedules > 1, "must explore > 1 schedule");
+        let finals = finals.lock().unwrap();
+        assert_eq!(finals.len(), summary.schedules);
+        assert!(finals.iter().all(|v| *v == 4), "fetch_add is atomic");
+    }
+
+    #[test]
+    fn finds_lost_update_in_unlocked_rmw() {
+        // non-atomic read-modify-write: load, then store — some schedule
+        // must lose an update, which is exactly what the checker is for
+        let finals: Arc<PlainMutex<Vec<usize>>> = Arc::default();
+        let f2 = Arc::clone(&finals);
+        Checker::new("lost-update").check(move |run| {
+            let n = Arc::new(AtomicUsize::new(0));
+            for _ in 0..2 {
+                let n = Arc::clone(&n);
+                run.thread(move || {
+                    let v = n.load(Ordering::SeqCst);
+                    n.store(v + 1, Ordering::SeqCst);
+                });
+            }
+            let sink = Arc::clone(&f2);
+            run.after(move || {
+                sink.lock().unwrap().push(n.load(Ordering::SeqCst));
+            });
+        });
+        let finals = finals.lock().unwrap();
+        assert!(finals.contains(&2), "serial schedules reach 2");
+        assert!(finals.contains(&1), "interleaved schedules lose an update");
+    }
+
+    #[test]
+    fn mutex_restores_atomicity() {
+        let finals: Arc<PlainMutex<Vec<usize>>> = Arc::default();
+        let f2 = Arc::clone(&finals);
+        Checker::new("mutex-rmw").check(move |run| {
+            let n = Arc::new(Mutex::new(0usize));
+            for _ in 0..2 {
+                let n = Arc::clone(&n);
+                run.thread(move || {
+                    let mut g = n.lock().unwrap();
+                    *g += 1;
+                });
+            }
+            let sink = Arc::clone(&f2);
+            run.after(move || {
+                sink.lock().unwrap().push(*n.lock().unwrap());
+            });
+        });
+        assert!(finals.lock().unwrap().iter().all(|v| *v == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn detects_abba_deadlock() {
+        Checker::new("abba").check(|run| {
+            let a = Arc::new(Mutex::new(0u32));
+            let b = Arc::new(Mutex::new(0u32));
+            let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+            run.thread(move || {
+                let _ga = a1.lock().unwrap();
+                let _gb = b1.lock().unwrap();
+            });
+            run.thread(move || {
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+            });
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "thread 0 panicked")]
+    fn propagates_thread_assertions() {
+        Checker::new("assert").check(|run| {
+            let n = Arc::new(AtomicUsize::new(0));
+            run.thread(move || {
+                assert_eq!(n.load(Ordering::SeqCst), 99, "forced failure");
+            });
+        });
+    }
+
+    #[test]
+    fn rwlock_excludes_writers_from_readers() {
+        Checker::new("rwlock").max_schedules(50_000).check(|run| {
+            // writer publishes (a, b) as a pair with a scheduling point
+            // mid-update; readers must never see a torn pair — RwLock
+            // write exclusivity is the whole invariant
+            let cell = Arc::new(RwLock::new((0u32, 0u32)));
+            let tick = Arc::new(AtomicUsize::new(0));
+            let w = Arc::clone(&cell);
+            let wt = Arc::clone(&tick);
+            run.thread(move || {
+                let mut g = w.write().unwrap();
+                g.0 = 1;
+                // a broken lock would let a reader run right here
+                wt.fetch_add(1, Ordering::SeqCst);
+                g.1 = 1;
+            });
+            for _ in 0..2 {
+                let r = Arc::clone(&cell);
+                run.thread(move || {
+                    let g = r.read().unwrap();
+                    assert_eq!(g.0, g.1, "torn read through RwLock");
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn fallback_mode_works_without_a_model_run() {
+        // outside Checker::check the instrumented types act as plain
+        // spin locks / raw atomics (this is the --cfg loom fallback path)
+        let m = Mutex::new(5i32);
+        *m.lock().unwrap() += 1;
+        assert_eq!(*m.lock().unwrap(), 6);
+        let l = RwLock::new(7i32);
+        assert_eq!(*l.read().unwrap(), 7);
+        *l.write().unwrap() = 8;
+        assert_eq!(*l.read().unwrap(), 8);
+        let a = AtomicU64::new(1);
+        a.fetch_add(2, Ordering::SeqCst);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+    }
+}

@@ -2,9 +2,8 @@
 //! vendored offline).  The coordinator's worker pool and the simulator's
 //! tile-parallel execution are built on this.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;

@@ -1,0 +1,179 @@
+//! Static artifact/plan verification (DESIGN.md §verify).
+//!
+//! A pass pipeline that checks a [`Manifest`] + weight [`Bundle`] (and
+//! optionally a [`ChipDescription`]) **before** an engine is built from
+//! them: layer-graph shape propagation, block-size divisibility, tensor
+//! presence/shape/finiteness, BN statistics sanity, quantizer scales,
+//! weight-spectra consistency, chip capability and dangling artifact
+//! references.  Every violation is an attributed, machine-readable
+//! [`Diagnostic`] (which layer, which field, expected vs found), so a
+//! refused artifact says *what* is wrong instead of failing deep inside
+//! layer construction with a shape panic.
+//!
+//! Wired into [`crate::onn::Engine::from_parts`] and
+//! [`crate::train::TrainModel::from_parts`] (hard error by default; the
+//! `_unchecked` constructors skip it), and exposed standalone through the
+//! `validate` binary for CI and operators.
+
+pub mod passes;
+
+use crate::data::Bundle;
+use crate::onn::Manifest;
+use crate::simulator::ChipDescription;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One attributed violation found by a validation pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    /// which pass fired (`graph`, `tensors`, `blocks`, `bn`, `quantizer`,
+    /// `spectra`, `chip`, `artifacts`)
+    pub pass: &'static str,
+    /// the layer the violation is attributed to (`None` for bundle- or
+    /// chip-level findings)
+    pub layer: Option<usize>,
+    /// the manifest field or bundle tensor at fault
+    pub field: String,
+    /// what a well-formed artifact would contain
+    pub expected: String,
+    /// what was actually found
+    pub found: String,
+    /// one-line human explanation
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pass", Json::Str(self.pass.to_string())),
+            (
+                "layer",
+                match self.layer {
+                    Some(i) => Json::Num(i as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("field", Json::Str(self.field.clone())),
+            ("expected", Json::Str(self.expected.clone())),
+            ("found", Json::Str(self.found.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+
+    /// One-line rendering for logs / the `validate` CLI.
+    pub fn render(&self) -> String {
+        let at = match self.layer {
+            Some(i) => format!("layer {i} "),
+            None => String::new(),
+        };
+        format!(
+            "{at}[{}] {}: expected {}, found {} — {}",
+            self.pass, self.field, self.expected, self.found, self.message
+        )
+    }
+}
+
+/// The outcome of a validation run: every diagnostic from every pass
+/// (passes never early-exit, so one run reports all violations at once).
+#[derive(Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn is_ok(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Machine-readable dump: `{"ok": bool, "diagnostics": [...]}` with
+    /// stable key order.
+    pub fn json_dump(&self) -> String {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.is_ok())),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+        .dump()
+    }
+
+    /// Collapse into a crate [`Result`]: the error message carries the
+    /// per-line renderings plus the JSON dump, so a refused
+    /// `Engine::from_parts` is diagnosable from the error alone.
+    pub fn into_result(self, context: &str) -> Result<()> {
+        if self.is_ok() {
+            return Ok(());
+        }
+        let lines: Vec<String> =
+            self.diagnostics.iter().map(Diagnostic::render).collect();
+        Err(Error::msg(format!(
+            "{context}: {} validation error(s):\n  {}\n{}",
+            self.diagnostics.len(),
+            lines.join("\n  "),
+            self.json_dump()
+        )))
+    }
+}
+
+/// Run the full pass pipeline over a manifest + bundle (+ optional chip).
+///
+/// Returns every violation found; an empty report means the artifacts are
+/// structurally sound and an engine built from them cannot hit a shape,
+/// divisibility or non-finite-parameter failure at load or serve time.
+pub fn validate_artifacts(
+    manifest: &Manifest,
+    bundle: &Bundle,
+    chip: Option<&ChipDescription>,
+) -> Report {
+    let mut out = Vec::new();
+    passes::check_graph(manifest, &mut out);
+    passes::check_tensors(manifest, bundle, &mut out);
+    passes::check_blocks(manifest, bundle, &mut out);
+    passes::check_bn_stats(manifest, bundle, &mut out);
+    passes::check_quantizers(manifest, &mut out);
+    passes::check_weight_spectra(manifest, bundle, &mut out);
+    if let Some(c) = chip {
+        passes::check_chip(manifest, c, &mut out);
+    }
+    passes::check_artifact_coverage(manifest, bundle, &mut out);
+    Report { diagnostics: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostic_renders_and_dumps() {
+        let d = Diagnostic {
+            pass: "graph",
+            layer: Some(3),
+            field: "cin".into(),
+            expected: "8".into(),
+            found: "4".into(),
+            message: "channel mismatch".into(),
+        };
+        let r = d.render();
+        assert!(r.contains("layer 3"));
+        assert!(r.contains("[graph]"));
+        assert!(r.contains("expected 8, found 4"));
+        let rep = Report { diagnostics: vec![d] };
+        assert!(!rep.is_ok());
+        let dump = rep.json_dump();
+        assert!(dump.contains("\"ok\":false"));
+        assert!(dump.contains("\"layer\":3"));
+        let err = rep.into_result("loading model").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("loading model"));
+        assert!(msg.contains("\"pass\":\"graph\""), "json dump embedded: {msg}");
+    }
+
+    #[test]
+    fn empty_report_is_ok() {
+        let rep = Report::default();
+        assert!(rep.is_ok());
+        assert!(rep.json_dump().contains("\"ok\":true"));
+        assert!(rep.into_result("x").is_ok());
+    }
+}

@@ -1,0 +1,673 @@
+//! The individual validation passes behind
+//! [`super::validate_artifacts`].  Each pass appends attributed
+//! [`Diagnostic`]s and never early-exits, so one run reports every
+//! violation at once.  Passes are tolerant where the runtime is tolerant
+//! (a first layer accepts any input, unknown bundle names that don't look
+//! like layer tensors are ignored) and strict exactly where the engine
+//! would otherwise panic or serve garbage.
+
+use crate::circulant::{fft, Bcm};
+use crate::data::bundle::Entry;
+use crate::data::Bundle;
+use crate::onn::manifest::{LayerKind, LayerSpec};
+use crate::onn::Manifest;
+use crate::simulator::ChipDescription;
+
+use super::Diagnostic;
+
+fn diag(
+    pass: &'static str,
+    layer: Option<usize>,
+    field: impl Into<String>,
+    expected: impl Into<String>,
+    found: impl Into<String>,
+    message: impl Into<String>,
+) -> Diagnostic {
+    Diagnostic {
+        pass,
+        layer,
+        field: field.into(),
+        expected: expected.into(),
+        found: found.into(),
+        message: message.into(),
+    }
+}
+
+fn is_linear(spec: &LayerSpec) -> bool {
+    matches!(spec.kind, LayerKind::Conv | LayerKind::Fc)
+}
+
+fn is_circ(spec: &LayerSpec) -> bool {
+    is_linear(spec) && spec.arch == "circ"
+}
+
+/// What a layer's activation looks like while walking the graph.
+enum Sig {
+    /// nothing known yet (model input, or downstream of a broken layer)
+    Unknown,
+    /// image activation with this many channels
+    Image(usize),
+    /// flattened image features; channel count still known
+    Flat(usize),
+    /// flat feature vector of exactly this width (after an fc)
+    Width(usize),
+}
+
+/// Layer-graph shape propagation: walk the stack once, tracking what each
+/// layer hands to the next, and flag every place the declared `cin`
+/// cannot match what actually arrives.  Channel-based (spatial size
+/// depends on the served image, which the engine accepts dynamically), so
+/// a violation here is a contradiction *within* the manifest — it cannot
+/// be fixed by feeding a different input.
+pub fn check_graph(manifest: &Manifest, out: &mut Vec<Diagnostic>) {
+    let mut sig = Sig::Unknown;
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        match spec.kind {
+            LayerKind::Conv => {
+                if spec.cout == 0 || spec.n_in() == 0 {
+                    out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cout/cin/k",
+                        "positive dimensions",
+                        format!("cin={} cout={} k={}", spec.cin, spec.cout, spec.k),
+                        "conv layer with a zero-sized weight grid",
+                    ));
+                }
+                match sig {
+                    Sig::Image(c) if c != spec.cin => out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cin",
+                        format!("{c} (previous layer's output channels)"),
+                        format!("{}", spec.cin),
+                        "conv input channels contradict the layer above",
+                    )),
+                    Sig::Flat(_) | Sig::Width(_) => out.push(diag(
+                        "graph",
+                        Some(i),
+                        "kind",
+                        "image activation",
+                        "flattened activation",
+                        "conv cannot follow flatten/fc",
+                    )),
+                    _ => {}
+                }
+                sig = Sig::Image(spec.cout);
+            }
+            LayerKind::Fc => {
+                if spec.cout == 0 || spec.cin == 0 {
+                    out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cin/cout",
+                        "positive dimensions",
+                        format!("cin={} cout={}", spec.cin, spec.cout),
+                        "fc layer with a zero-sized weight grid",
+                    ));
+                }
+                match sig {
+                    Sig::Width(n) if n != spec.cin => out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cin",
+                        format!("{n} (previous fc's output width)"),
+                        format!("{}", spec.cin),
+                        "fc input width contradicts the layer above",
+                    )),
+                    // after an image/flatten, the flat width is
+                    // channels·H·W for some spatial size — cin must at
+                    // least be a multiple of the channel count
+                    Sig::Image(c) | Sig::Flat(c) if spec.cin % c.max(1) != 0 => {
+                        out.push(diag(
+                            "graph",
+                            Some(i),
+                            "cin",
+                            format!("a multiple of {c} (upstream channels)"),
+                            format!("{}", spec.cin),
+                            "fc width cannot be channels·H·W for any H·W",
+                        ))
+                    }
+                    _ => {}
+                }
+                sig = Sig::Width(spec.cout);
+            }
+            LayerKind::Bn => {
+                match sig {
+                    Sig::Image(c) if c != spec.cin => out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cin",
+                        format!("{c} (channels being normalized)"),
+                        format!("{}", spec.cin),
+                        "bn channel count contradicts the layer above",
+                    )),
+                    Sig::Width(n) if n != spec.cin => out.push(diag(
+                        "graph",
+                        Some(i),
+                        "cin",
+                        format!("{n} (features being normalized)"),
+                        format!("{}", spec.cin),
+                        "bn feature count contradicts the fc above",
+                    )),
+                    _ => {}
+                }
+                if matches!(sig, Sig::Unknown) {
+                    sig = Sig::Image(spec.cin);
+                }
+            }
+            LayerKind::Relu => {}
+            LayerKind::Pool => {
+                if matches!(sig, Sig::Flat(_) | Sig::Width(_)) {
+                    out.push(diag(
+                        "graph",
+                        Some(i),
+                        "kind",
+                        "image activation",
+                        "flattened activation",
+                        "pool cannot follow flatten/fc",
+                    ));
+                }
+            }
+            LayerKind::Flatten => {
+                sig = match sig {
+                    Sig::Image(c) => Sig::Flat(c),
+                    Sig::Flat(_) | Sig::Width(_) => {
+                        out.push(diag(
+                            "graph",
+                            Some(i),
+                            "kind",
+                            "image activation",
+                            "already-flattened activation",
+                            "flatten applied twice",
+                        ));
+                        Sig::Unknown
+                    }
+                    Sig::Unknown => Sig::Unknown,
+                };
+            }
+        }
+    }
+}
+
+fn entry_f32<'a>(
+    pass: &'static str,
+    layer: usize,
+    bundle: &'a Bundle,
+    name: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Option<&'a Entry> {
+    match bundle.tensors.get(name) {
+        Some(e) => {
+            if e.as_f32().is_err() {
+                out.push(diag(
+                    pass,
+                    Some(layer),
+                    name,
+                    "f32 tensor",
+                    "i32 tensor",
+                    "wrong dtype for a weight tensor",
+                ));
+                None
+            } else {
+                Some(e)
+            }
+        }
+        None => {
+            out.push(diag(
+                pass,
+                Some(layer),
+                name,
+                "tensor present in bundle",
+                "missing",
+                "the layer's weights are absent",
+            ));
+            None
+        }
+    }
+}
+
+fn check_finite(
+    pass: &'static str,
+    layer: usize,
+    name: &str,
+    data: &[f32],
+    out: &mut Vec<Diagnostic>,
+) -> bool {
+    let bad = data.iter().filter(|v| !v.is_finite()).count();
+    if bad > 0 {
+        out.push(diag(
+            pass,
+            Some(layer),
+            name,
+            "all values finite",
+            format!("{bad} non-finite of {}", data.len()),
+            "NaN/Inf parameters poison every downstream activation",
+        ));
+    }
+    bad == 0
+}
+
+/// Tensor presence, shape and finiteness for every stateful layer.
+pub fn check_tensors(manifest: &Manifest, bundle: &Bundle, out: &mut Vec<Diagnostic>) {
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        let name = format!("layer{i}");
+        match spec.kind {
+            LayerKind::Conv | LayerKind::Fc => {
+                let wname = format!("{name}.w");
+                if let Some(w) = entry_f32("tensors", i, bundle, &wname, out) {
+                    if spec.arch == "circ" {
+                        let (p, q) = spec.bcm_dims();
+                        if w.shape() != [p, q, spec.l] {
+                            out.push(diag(
+                                "tensors",
+                                Some(i),
+                                &wname,
+                                format!("shape [{p}, {q}, {}]", spec.l),
+                                format!("shape {:?}", w.shape()),
+                                "compressed BCM grid disagrees with the \
+                                 manifest's (cout, n_in, l)",
+                            ));
+                        }
+                    } else {
+                        let want = spec.cout * spec.n_in();
+                        let got: usize = w.shape().iter().product();
+                        if got != want {
+                            out.push(diag(
+                                "tensors",
+                                Some(i),
+                                &wname,
+                                format!("{want} elements (cout × n_in)"),
+                                format!("{got} elements"),
+                                "dense weight size disagrees with the manifest",
+                            ));
+                        }
+                    }
+                    if let Ok(data) = w.as_f32() {
+                        check_finite("tensors", i, &wname, data, out);
+                    }
+                }
+                let bname = format!("{name}.b");
+                if let Some(b) = entry_f32("tensors", i, bundle, &bname, out) {
+                    if let Ok(data) = b.as_f32() {
+                        if data.len() != spec.cout {
+                            out.push(diag(
+                                "tensors",
+                                Some(i),
+                                &bname,
+                                format!("{} values (one per output)", spec.cout),
+                                format!("{} values", data.len()),
+                                "bias length disagrees with cout",
+                            ));
+                        }
+                        check_finite("tensors", i, &bname, data, out);
+                    }
+                }
+            }
+            LayerKind::Bn => {
+                for part in ["gamma", "beta", "state.mean", "state.var"] {
+                    let tname = format!("{name}.{part}");
+                    if let Some(t) = entry_f32("tensors", i, bundle, &tname, out) {
+                        if let Ok(data) = t.as_f32() {
+                            if data.len() != spec.cin {
+                                out.push(diag(
+                                    "tensors",
+                                    Some(i),
+                                    &tname,
+                                    format!("{} values (one per channel)", spec.cin),
+                                    format!("{} values", data.len()),
+                                    "bn statistics length disagrees with cin",
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Block-size divisibility: for every circ layer, the block order must
+/// divide the padded operand width the stored tensor implies (`l | n_pad`
+/// — Eq. (1)'s partitioning is undefined otherwise).
+pub fn check_blocks(manifest: &Manifest, bundle: &Bundle, out: &mut Vec<Diagnostic>) {
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        if !is_circ(spec) {
+            continue;
+        }
+        if spec.l == 0 {
+            out.push(diag(
+                "blocks",
+                Some(i),
+                "l",
+                "block order ≥ 1",
+                "0",
+                "a zero block order cannot partition anything",
+            ));
+            continue;
+        }
+        if let Some(w) = bundle.tensors.get(&format!("layer{i}.w")) {
+            if w.shape().len() == 3 {
+                let n_pad = w.shape()[1] * w.shape()[2];
+                if n_pad % spec.l != 0 {
+                    out.push(diag(
+                        "blocks",
+                        Some(i),
+                        format!("layer{i}.w"),
+                        format!("padded width divisible by l={}", spec.l),
+                        format!("n_pad={n_pad}"),
+                        "the stored grid cannot be partitioned into \
+                         l-sized circulant blocks",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// BN statistics sanity: finite values, non-negative variances.
+pub fn check_bn_stats(manifest: &Manifest, bundle: &Bundle, out: &mut Vec<Diagnostic>) {
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        if spec.kind != LayerKind::Bn {
+            continue;
+        }
+        for part in ["gamma", "beta", "state.mean", "state.var"] {
+            let tname = format!("layer{i}.{part}");
+            let Some(Ok(data)) = bundle.tensors.get(&tname).map(Entry::as_f32)
+            else {
+                continue; // presence/dtype handled by the tensors pass
+            };
+            if !check_finite("bn", i, &tname, data, out) {
+                continue;
+            }
+            if part == "state.var" {
+                let neg = data.iter().filter(|v| **v < 0.0).count();
+                if neg > 0 {
+                    out.push(diag(
+                        "bn",
+                        Some(i),
+                        &tname,
+                        "variances ≥ 0",
+                        format!("{neg} negative"),
+                        "a negative variance makes the normalizer NaN",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Quantizer sanity: every linear layer's activation scale must be a
+/// finite, positive number (the fixed-point grid divides by it).
+pub fn check_quantizers(manifest: &Manifest, out: &mut Vec<Diagnostic>) {
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        if !is_linear(spec) {
+            continue;
+        }
+        if !(spec.act_scale.is_finite() && spec.act_scale > 0.0) {
+            out.push(diag(
+                "quantizer",
+                Some(i),
+                "act_scale",
+                "finite and > 0",
+                format!("{}", spec.act_scale),
+                "the activation quantizer grid would be degenerate",
+            ));
+        }
+    }
+}
+
+/// Conjugate-symmetry check over an interleaved spectra buffer
+/// (`[re; l][im; l]` per block, [`fft::WeightSpectra`] layout).  The
+/// spectrum of a real first column must satisfy `X[k] = conj(X[l-k])` —
+/// a violation means the cached spectra were not produced from the
+/// weights they claim to summarize.
+pub fn check_spectra(
+    layer: Option<usize>,
+    l: usize,
+    n_blocks: usize,
+    data: &[f32],
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let l2 = 2 * l;
+    if data.len() != n_blocks * l2 {
+        out.push(diag(
+            "spectra",
+            layer,
+            "spectra",
+            format!("{} values ({n_blocks} blocks × 2l)", n_blocks * l2),
+            format!("{} values", data.len()),
+            "spectra buffer length disagrees with the block grid",
+        ));
+        return out;
+    }
+    for blk in 0..n_blocks {
+        let (re, im) = data[blk * l2..(blk + 1) * l2].split_at(l);
+        let scale = re
+            .iter()
+            .chain(im.iter())
+            .fold(1.0f32, |m, v| m.max(v.abs()));
+        if !scale.is_finite() {
+            out.push(diag(
+                "spectra",
+                layer,
+                format!("block {blk}"),
+                "finite spectrum",
+                "non-finite values",
+                "spectra computed from non-finite weights",
+            ));
+            continue;
+        }
+        let tol = 1e-3 * scale;
+        let mut broken = im[0].abs() > tol;
+        for k in 1..l {
+            if (re[k] - re[l - k]).abs() > tol || (im[k] + im[l - k]).abs() > tol {
+                broken = true;
+            }
+        }
+        if broken {
+            out.push(diag(
+                "spectra",
+                layer,
+                format!("block {blk}"),
+                "conjugate-symmetric spectrum (real first column)",
+                "asymmetric spectrum",
+                "cached spectrum does not match any real weight block",
+            ));
+        }
+    }
+    out
+}
+
+/// Weight-spectra consistency for every circ layer: the spectra the
+/// planned FFT path would cache must have the length the block grid
+/// implies, and (for layers past the FFT crossover) must come out
+/// conjugate-symmetric when rebuilt from the stored weights.
+pub fn check_weight_spectra(
+    manifest: &Manifest,
+    bundle: &Bundle,
+    out: &mut Vec<Diagnostic>,
+) {
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        if !is_circ(spec) || spec.l == 0 {
+            continue;
+        }
+        let Some(w) = bundle.tensors.get(&format!("layer{i}.w")) else {
+            continue; // missing handled by the tensors pass
+        };
+        let sh = w.shape();
+        let Ok(data) = w.as_f32() else {
+            continue; // dtype handled by the tensors pass
+        };
+        if sh.len() != 3 {
+            continue; // shape handled by the tensors pass
+        }
+        let (p, q) = spec.bcm_dims();
+        let expected = p * q * 2 * spec.l;
+        let implied = sh[0] * sh[1] * 2 * sh[2];
+        if implied != expected {
+            out.push(diag(
+                "spectra",
+                Some(i),
+                format!("layer{i}.w"),
+                format!("spectra of {expected} values ({p}×{q} blocks × 2·l)"),
+                format!("spectra of {implied} values"),
+                "stored grid would cache spectra of the wrong length",
+            ));
+            continue;
+        }
+        // full rebuild + symmetry check only where the planned path would
+        // actually cache spectra (past the FFT crossover) and the data is
+        // clean enough to FFT
+        if sh == [p, q, spec.l]
+            && fft::use_fft_path(spec.l)
+            && data.iter().all(|v| v.is_finite())
+        {
+            let bcm = Bcm::new(p, q, spec.l, data.to_vec());
+            let plan = fft::plan_for(spec.l);
+            let spectra = fft::WeightSpectra::new(&bcm, &plan);
+            out.extend(check_spectra(
+                Some(i),
+                spectra.block_order(),
+                spectra.n_blocks(),
+                spectra.raw(),
+            ));
+        }
+    }
+}
+
+/// Chip capability: the description must be internally consistent, and
+/// every circ layer's block order must match the MRR bank the chip
+/// actually has.
+pub fn check_chip(
+    manifest: &Manifest,
+    chip: &ChipDescription,
+    out: &mut Vec<Diagnostic>,
+) {
+    if chip.gamma.len() != chip.l * chip.l {
+        out.push(diag(
+            "chip",
+            None,
+            "gamma_true",
+            format!("{}×{} crosstalk operator", chip.l, chip.l),
+            format!("{} values", chip.gamma.len()),
+            "crosstalk operator size disagrees with the chip's l",
+        ));
+    }
+    if chip.resp.len() != chip.l {
+        out.push(diag(
+            "chip",
+            None,
+            "resp",
+            format!("{} responsivities (one per wavelength)", chip.l),
+            format!("{} values", chip.resp.len()),
+            "responsivity vector disagrees with the chip's l",
+        ));
+    }
+    let all_finite = chip
+        .gamma
+        .iter()
+        .chain(chip.resp.iter())
+        .all(|v| v.is_finite())
+        && chip.dark.is_finite();
+    if !all_finite {
+        out.push(diag(
+            "chip",
+            None,
+            "gamma_true/resp/dark",
+            "finite values",
+            "non-finite values",
+            "a non-finite chip parameter poisons every pass",
+        ));
+    }
+    for (fname, v) in [("sigma_rel", chip.sigma_rel), ("sigma_abs", chip.sigma_abs)] {
+        if !(v.is_finite() && v >= 0.0) {
+            out.push(diag(
+                "chip",
+                None,
+                fname,
+                "finite and ≥ 0",
+                format!("{v}"),
+                "noise amplitudes cannot be negative",
+            ));
+        }
+    }
+    for (fname, b) in [("w_bits", chip.w_bits), ("x_bits", chip.x_bits)] {
+        if b > 32 {
+            out.push(diag(
+                "chip",
+                None,
+                fname,
+                "0 (disabled) or 1..=32",
+                format!("{b}"),
+                "DAC resolution beyond 32 bits is not representable",
+            ));
+        }
+    }
+    for (i, spec) in manifest.layers.iter().enumerate() {
+        if is_circ(spec) && spec.l != chip.l {
+            out.push(diag(
+                "chip",
+                Some(i),
+                "l",
+                format!("{} (the chip's MRR bank size)", chip.l),
+                format!("{}", spec.l),
+                "block order does not fit the chip's wavelength bank",
+            ));
+        }
+    }
+}
+
+/// Artifact coverage: every `layer{N}.…` tensor in the bundle must refer
+/// to a real layer and a field that layer actually has.  Catches dangling
+/// references (a renamed/reordered stack leaving orphaned weights) that
+/// would otherwise be silently ignored at load time.
+pub fn check_artifact_coverage(
+    manifest: &Manifest,
+    bundle: &Bundle,
+    out: &mut Vec<Diagnostic>,
+) {
+    for name in bundle.tensors.keys() {
+        let Some(rest) = name.strip_prefix("layer") else {
+            continue; // non-layer tensors (datasets, calibration) are fine
+        };
+        let Some(dot) = rest.find('.') else {
+            continue;
+        };
+        let Ok(idx) = rest[..dot].parse::<usize>() else {
+            continue;
+        };
+        let field = &rest[dot + 1..];
+        let Some(spec) = manifest.layers.get(idx) else {
+            out.push(diag(
+                "artifacts",
+                None,
+                name.clone(),
+                format!("layer index < {}", manifest.layers.len()),
+                format!("layer{idx}"),
+                "tensor refers to a layer the manifest does not have",
+            ));
+            continue;
+        };
+        let valid: &[&str] = match spec.kind {
+            LayerKind::Conv | LayerKind::Fc => &["w", "b"],
+            LayerKind::Bn => &["gamma", "beta", "state.mean", "state.var"],
+            _ => &[],
+        };
+        if !valid.contains(&field) {
+            out.push(diag(
+                "artifacts",
+                Some(idx),
+                name.clone(),
+                if valid.is_empty() {
+                    "no tensors (stateless layer)".to_string()
+                } else {
+                    format!("one of {valid:?}")
+                },
+                format!("'{field}'"),
+                "tensor does not belong to this layer kind",
+            ));
+        }
+    }
+}

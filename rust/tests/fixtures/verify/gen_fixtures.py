@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Regenerate the validator fixtures in this directory.
+
+Deterministic (no RNG, no timestamps): running it twice produces
+byte-identical files, so `verify_artifacts.rs` can assert the committed
+fixtures are exactly what validation ran against.
+
+Model: conv(1->4, k3, circ l4) / bn(4) / relu / pool(2) / flatten /
+fc(64->3, circ l4), classes=3.  Block grids (ceil-div): layer0.w
+[p=1, q=3, l=4] (n_in = 1*3*3 = 9), layer5.w [p=1, q=16, l=4].
+
+Corrupt variants, one per validator pass under test:
+  corrupt_graph.json    bn expects 8 channels after a cout=4 conv
+  corrupt_blocks.cpt    layer5.w block grid [1,13,5]: 65 % l(4) != 0
+  corrupt_quant.json    fc act_scale = 1e999 -> parses to +inf
+  corrupt_dangling.cpt  extra tensor layer9.w for a 6-layer manifest
+  corrupt_spectra.cpt   layer5.w [1,16,8]: implied spectra length 256
+                        vs the 128 the manifest's l=4 grid implies
+"""
+
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def val(i):
+    """Deterministic pseudo-values in [-0.5, 0.5), exact in f32."""
+    return ((i * 37 + 13) % 97) / 97.0 - 0.5
+
+
+def tensor_bytes(name, dims, data):
+    out = struct.pack("<I", len(name)) + name.encode()
+    out += struct.pack("<BB", 0, len(dims))  # dtype 0 = f32
+    for d in dims:
+        out += struct.pack("<I", d)
+    assert len(data) == prod(dims), (name, dims, len(data))
+    for v in data:
+        out += struct.pack("<f", v)
+    return out
+
+
+def prod(dims):
+    p = 1
+    for d in dims:
+        p *= d
+    return p
+
+
+def bundle_bytes(tensors):
+    out = b"CPT1" + struct.pack("<I", len(tensors))
+    for name, dims, data in tensors:
+        out += tensor_bytes(name, dims, data)
+    return out
+
+
+def layer(kind, cin=0, cout=0, k=0, pool=2, arch="circ", l=4, act="4.0"):
+    return (
+        '{"kind": "%s", "cin": %d, "cout": %d, "k": %d, "pool": %d, '
+        '"arch": "%s", "l": %d, "act_scale": %s}'
+        % (kind, cin, cout, k, pool, arch, l, act)
+    )
+
+
+def manifest_json(bn_cin=4, fc_act="4.0"):
+    layers = ",\n    ".join(
+        [
+            layer("conv", cin=1, cout=4, k=3),
+            layer("bn", cin=bn_cin, cout=bn_cin),
+            layer("relu"),
+            layer("pool"),
+            layer("flatten"),
+            layer("fc", cin=64, cout=3, act=fc_act),
+        ]
+    )
+    return (
+        '{\n  "dataset": "mnist",\n  "classes": 3,\n  "layers": [\n    %s\n  ]\n}\n'
+        % layers
+    )
+
+
+def write(name, data):
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(os.path.join(HERE, name), mode) as f:
+        f.write(data)
+    print("wrote", name)
+
+
+def fill(dims, salt):
+    return [val(salt + i) for i in range(prod(dims))]
+
+
+VALID_TENSORS = [
+    ("layer0.w", [1, 3, 4], fill([1, 3, 4], 0)),
+    ("layer0.b", [4], fill([4], 100)),
+    ("layer1.gamma", [4], [1.0 + 0.1 * i for i in range(4)]),
+    ("layer1.beta", [4], fill([4], 200)),
+    ("layer1.state.mean", [4], fill([4], 300)),
+    ("layer1.state.var", [4], [0.5 + 0.25 * i for i in range(4)]),
+    ("layer5.w", [1, 16, 4], fill([1, 16, 4], 400)),
+    ("layer5.b", [3], fill([3], 500)),
+]
+
+
+def variant(replace=None, extra=None):
+    out = []
+    for name, dims, data in VALID_TENSORS:
+        if replace and name in replace:
+            dims = replace[name]
+            data = fill(dims, 900)
+        out.append((name, dims, data))
+    if extra:
+        out.extend(extra)
+    return out
+
+
+CHIP_JSON = """{
+  "l": 4,
+  "gamma_true": [1.0, 0.02, 0.02, 0.02,
+                 0.02, 1.0, 0.02, 0.02,
+                 0.02, 0.02, 1.0, 0.02,
+                 0.02, 0.02, 0.02, 1.0],
+  "resp": [1.0, 1.0, 1.0, 1.0],
+  "dark": 0.0,
+  "sigma_rel": 0.01,
+  "sigma_abs": 0.001,
+  "w_bits": 8,
+  "x_bits": 8,
+  "seed": 7
+}
+"""
+
+write("valid_model.json", manifest_json())
+write("valid_model.cpt", bundle_bytes(VALID_TENSORS))
+write("chip.json", CHIP_JSON)
+
+write("corrupt_graph.json", manifest_json(bn_cin=8))
+write("corrupt_quant.json", manifest_json(fc_act="1e999"))
+write("corrupt_blocks.cpt", bundle_bytes(variant(replace={"layer5.w": [1, 13, 5]})))
+write(
+    "corrupt_dangling.cpt",
+    bundle_bytes(variant(extra=[("layer9.w", [1, 1, 4], fill([1, 1, 4], 800))])),
+)
+write("corrupt_spectra.cpt", bundle_bytes(variant(replace={"layer5.w": [1, 16, 8]})))

@@ -1,0 +1,158 @@
+//! Model-checked concurrency protocols (DESIGN.md §verify).
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (the CI `loom` job and
+//! `make loom`); a plain `cargo test` sees an empty crate.  With the cfg
+//! set, `cirptc::util::sync` re-exports the instrumented lock/atomic
+//! types from `util::sync::model`, and the [`Checker`] drives every
+//! reachable sequentially-consistent interleaving of the small thread
+//! programs below.  Three protocols the serving stack bets on:
+//!
+//! 1. **Engine hot swap** — `Slot` readers never observe a torn engine
+//!    while a recalibration publishes a replacement, and the swap is
+//!    visible once all threads join.
+//! 2. **Drift single-flight gate** — at most one recalibration is ever
+//!    admitted concurrently, the gate reopens after `finish`, and the
+//!    recal point is published before the generation bump that
+//!    advertises it.
+//! 3. **FFT plan cache** — concurrent `PlanCache::get` calls for the
+//!    same length converge on one shared plan.
+#![cfg(loom)]
+
+use cirptc::circulant::fft::PlanCache;
+use cirptc::util::sync::atomic::{AtomicUsize, Ordering};
+use cirptc::util::sync::model::Checker;
+use cirptc::util::sync::{Arc, Mutex, PoisonError, SingleFlight, Slot};
+
+/// Stand-in for the serving engine: `checksum` is derived from
+/// `generation`, so any torn or half-published read breaks the pair.
+struct Engine {
+    generation: usize,
+    checksum: usize,
+}
+
+impl Engine {
+    fn new(generation: usize) -> Engine {
+        Engine { generation, checksum: generation.wrapping_mul(31) + 7 }
+    }
+}
+
+#[test]
+fn slot_hot_swap_readers_never_tear() {
+    let summary = Checker::new("slot-hot-swap").check(|run| {
+        let slot = Arc::new(Slot::new(Engine::new(0)));
+        for _ in 0..2 {
+            let slot = Arc::clone(&slot);
+            run.thread(move || {
+                let engine = slot.current();
+                assert_eq!(
+                    engine.checksum,
+                    engine.generation.wrapping_mul(31) + 7,
+                    "reader observed a torn engine"
+                );
+                assert!(engine.generation <= 1);
+            });
+        }
+        let swapper = Arc::clone(&slot);
+        run.thread(move || swapper.swap(Engine::new(1)));
+        let after = Arc::clone(&slot);
+        run.after(move || {
+            assert_eq!(
+                after.current().generation,
+                1,
+                "swap must be visible once every thread joined"
+            );
+        });
+    });
+    assert!(summary.schedules >= 2, "only {} schedules explored", summary.schedules);
+}
+
+#[test]
+fn single_flight_admits_at_most_one_concurrently() {
+    let summary = Checker::new("drift-single-flight").check(|run| {
+        let gate = Arc::new(SingleFlight::new());
+        let inside = Arc::new(AtomicUsize::new(0));
+        let completed = Arc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let gate = Arc::clone(&gate);
+            let inside = Arc::clone(&inside);
+            let completed = Arc::clone(&completed);
+            run.thread(move || {
+                if gate.try_begin() {
+                    let now_inside = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                    assert_eq!(now_inside, 1, "two recalibrations admitted concurrently");
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    inside.fetch_sub(1, Ordering::SeqCst);
+                    gate.finish();
+                }
+            });
+        }
+        let gate = Arc::clone(&gate);
+        let completed = Arc::clone(&completed);
+        run.after(move || {
+            assert!(!gate.in_flight(), "gate reopens after the last finish");
+            let done = completed.load(Ordering::SeqCst);
+            assert!(
+                (1..=2).contains(&done),
+                "at least one probe must win the gate, {done} completed"
+            );
+        });
+    });
+    assert!(summary.schedules >= 2, "only {} schedules explored", summary.schedules);
+}
+
+#[test]
+fn recal_point_published_before_generation_bump() {
+    Checker::new("drift-recal-ordering").check(|run| {
+        let point = Arc::new(Mutex::new(None::<usize>));
+        let generation = Arc::new(AtomicUsize::new(0));
+        let w_point = Arc::clone(&point);
+        let w_gen = Arc::clone(&generation);
+        run.thread(move || {
+            // recal worker: store the new operating point, then bump the
+            // generation that advertises it (recal.rs order)
+            *w_point.lock().unwrap_or_else(PoisonError::into_inner) = Some(42);
+            w_gen.store(1, Ordering::SeqCst);
+        });
+        let r_point = Arc::clone(&point);
+        let r_gen = Arc::clone(&generation);
+        run.thread(move || {
+            // monitor: a bumped generation implies the point is readable
+            if r_gen.load(Ordering::SeqCst) == 1 {
+                let p = *r_point.lock().unwrap_or_else(PoisonError::into_inner);
+                assert_eq!(p, Some(42), "generation advertised before its recal point");
+            }
+        });
+    });
+}
+
+#[test]
+fn plan_cache_converges_on_one_plan_per_length() {
+    Checker::new("fft-plan-cache").check(|run| {
+        let cache = Arc::new(PlanCache::new());
+        let grabbed = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..2 {
+            let cache = Arc::clone(&cache);
+            let grabbed = Arc::clone(&grabbed);
+            run.thread(move || {
+                let plan = cache.get(8);
+                assert_eq!(plan.len(), 8);
+                grabbed.lock().unwrap_or_else(PoisonError::into_inner).push(plan);
+            });
+        }
+        let other_len = Arc::clone(&cache);
+        run.thread(move || {
+            assert_eq!(other_len.get(4).len(), 4, "interleaved other-length get");
+        });
+        let cache = Arc::clone(&cache);
+        let grabbed = Arc::clone(&grabbed);
+        run.after(move || {
+            let got = grabbed.lock().unwrap_or_else(PoisonError::into_inner);
+            assert_eq!(got.len(), 2);
+            assert!(
+                Arc::ptr_eq(&got[0], &got[1]),
+                "racing gets for one length must share one plan"
+            );
+            assert!(Arc::ptr_eq(&got[0], &cache.get(8)), "cache still serves the same plan");
+        });
+    });
+}

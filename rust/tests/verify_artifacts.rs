@@ -1,0 +1,149 @@
+//! End-to-end tests of the static artifact validator (DESIGN.md §verify)
+//! against the committed fixture set in `tests/fixtures/verify/`
+//! (regenerate with `gen_fixtures.py` — deterministic, byte-stable).
+//!
+//! One corrupt fixture per validator pass proves each pass actually
+//! fires, with the diagnostic attributed to the right layer; the valid
+//! fixture proves the pipeline is read-only (byte-for-byte unchanged
+//! files) and accepted by `Engine::from_parts`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use cirptc::data::Bundle;
+use cirptc::onn::{Engine, Manifest};
+use cirptc::simulator::ChipDescription;
+use cirptc::verify::passes::check_spectra;
+use cirptc::verify::{validate_artifacts, Report};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new("tests/fixtures/verify").join(name)
+}
+
+fn validate_pair(manifest: &str, bundle: &str) -> Report {
+    let m = Manifest::load(&fixture(manifest)).expect(manifest);
+    let b = Bundle::load(&fixture(bundle)).expect(bundle);
+    validate_artifacts(&m, &b, None)
+}
+
+/// Assert the report rejects the artifacts with at least one diagnostic
+/// from `pass` attributed to `layer`.
+fn assert_rejected(report: &Report, pass: &str, layer: Option<usize>) {
+    assert!(!report.is_ok(), "corrupt artifacts accepted");
+    let hit = report
+        .diagnostics
+        .iter()
+        .any(|d| d.pass == pass && d.layer == layer);
+    assert!(
+        hit,
+        "expected a [{pass}] diagnostic for layer {layer:?}, got:\n{}",
+        report.json_dump()
+    );
+}
+
+#[test]
+fn valid_fixture_passes_and_files_are_untouched() {
+    let paths = ["valid_model.json", "valid_model.cpt", "chip.json"];
+    let before: Vec<Vec<u8>> = paths
+        .iter()
+        .map(|p| fs::read(fixture(p)).expect(p))
+        .collect();
+
+    let manifest = Manifest::load(&fixture("valid_model.json")).expect("manifest");
+    let bundle = Bundle::load(&fixture("valid_model.cpt")).expect("bundle");
+    let chip = ChipDescription::load(&fixture("chip.json")).expect("chip");
+    let report = validate_artifacts(&manifest, &bundle, Some(&chip));
+    assert!(report.is_ok(), "valid fixture rejected:\n{}", report.json_dump());
+
+    for (p, snap) in paths.iter().zip(&before) {
+        let after = fs::read(fixture(p)).expect(p);
+        assert_eq!(&after, snap, "{p} changed during validation");
+    }
+}
+
+#[test]
+fn engine_accepts_valid_and_refuses_corrupt_artifacts() {
+    let manifest = Manifest::load(&fixture("valid_model.json")).expect("manifest");
+    let bundle = Bundle::load(&fixture("valid_model.cpt")).expect("bundle");
+    Engine::from_parts(manifest.clone(), &bundle).expect("valid artifacts build");
+
+    let corrupt = Bundle::load(&fixture("corrupt_blocks.cpt")).expect("bundle");
+    let err = match Engine::from_parts(manifest, &corrupt) {
+        Ok(_) => panic!("corrupt bundle accepted"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("invalid artifacts"), "unexpected error: {msg}");
+    assert!(msg.contains("blocks") || msg.contains("tensors"), "unattributed: {msg}");
+}
+
+#[test]
+fn graph_pass_catches_channel_mismatch() {
+    // bn declares 8 channels right after a cout=4 conv
+    let report = validate_pair("corrupt_graph.json", "valid_model.cpt");
+    assert_rejected(&report, "graph", Some(1));
+}
+
+#[test]
+fn blocks_pass_catches_indivisible_padding() {
+    // layer5.w grid [1,13,5]: n_pad 65 is not a multiple of l=4
+    let report = validate_pair("valid_model.json", "corrupt_blocks.cpt");
+    assert_rejected(&report, "blocks", Some(5));
+}
+
+#[test]
+fn quantizer_pass_catches_infinite_scale() {
+    // act_scale 1e999 overflows to +inf at parse time
+    let report = validate_pair("corrupt_quant.json", "valid_model.cpt");
+    assert_rejected(&report, "quantizer", Some(5));
+}
+
+#[test]
+fn artifacts_pass_catches_dangling_layer_reference() {
+    // layer9.w in a 6-layer model
+    let report = validate_pair("valid_model.json", "corrupt_dangling.cpt");
+    assert!(!report.is_ok());
+    let hit = report
+        .diagnostics
+        .iter()
+        .any(|d| d.pass == "artifacts" && d.field.contains("layer9"));
+    assert!(hit, "no dangling-reference diagnostic:\n{}", report.json_dump());
+}
+
+#[test]
+fn spectra_pass_catches_wrong_spectra_length() {
+    // layer5.w [1,16,8] implies 256 spectrum values, the manifest's
+    // l=4 grid implies 128
+    let report = validate_pair("valid_model.json", "corrupt_spectra.cpt");
+    assert_rejected(&report, "spectra", Some(5));
+}
+
+#[test]
+fn nan_act_scale_is_rejected_in_memory() {
+    // JSON cannot carry NaN, so this corruption class is in-memory only
+    let mut manifest = Manifest::load(&fixture("valid_model.json")).expect("manifest");
+    let bundle = Bundle::load(&fixture("valid_model.cpt")).expect("bundle");
+    manifest.layers[5].act_scale = f32::NAN;
+    let report = validate_artifacts(&manifest, &bundle, None);
+    assert_rejected(&report, "quantizer", Some(5));
+}
+
+#[test]
+fn conjugate_symmetry_violations_are_attributed() {
+    let l = 8;
+    // a legitimate real-signal spectrum block: re mirrored, im anti-
+    // mirrored with im[0] = im[l/2] = 0
+    let re = [4.0f32, 1.0, 2.0, 3.0, 9.0, 3.0, 2.0, 1.0];
+    let im = [0.0f32, 5.0, 6.0, 7.0, 0.0, -7.0, -6.0, -5.0];
+    let mut data: Vec<f32> = re.iter().chain(im.iter()).copied().collect();
+    assert!(check_spectra(Some(3), l, 1, &data).is_empty(), "clean block flagged");
+
+    data[l] = 1.0; // im[0] must stay (numerically) zero
+    let diags = check_spectra(Some(3), l, 1, &data);
+    assert!(!diags.is_empty(), "broken symmetry not flagged");
+    assert!(diags.iter().all(|d| d.pass == "spectra" && d.layer == Some(3)));
+
+    // wrong total length is its own diagnostic
+    let short = vec![0.0f32; 2 * l - 2];
+    assert!(!check_spectra(None, l, 1, &short).is_empty());
+}
