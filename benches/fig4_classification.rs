@@ -61,7 +61,7 @@ fn live_accuracy(dir: &PathBuf, model: &str, photonic: bool, limit: usize) -> Op
         .collect();
     let coord = Coordinator::start(
         factories,
-        BatcherConfig { max_batch: 8, max_wait_us: 1000 },
+        BatcherConfig { max_batch: 8, max_wait_us: 1000, queue_cap: 0 },
     );
     let rs = coord.classify_all(&images).ok()?;
     Some(

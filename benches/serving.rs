@@ -24,7 +24,8 @@ use std::time::{Duration, Instant};
 
 use cirptc::coordinator::worker::EngineBackend;
 use cirptc::coordinator::{
-    BackendFactory, BatcherConfig, Coordinator, InferenceBackend, Metrics,
+    BackendFactory, BatcherConfig, Coordinator, EngineSource, InferenceBackend,
+    Metrics, Staged, StagedFactory,
 };
 use cirptc::data::datasets::{self, Split};
 use cirptc::data::Bundle;
@@ -222,7 +223,7 @@ fn drift_scenario(smoke: bool) {
         };
         let coord = Coordinator::start_with_metrics(
             vec![factory],
-            BatcherConfig { max_batch: 8, max_wait_us: 20_000 },
+            BatcherConfig { max_batch: 8, max_wait_us: 20_000, queue_cap: 0 },
             Arc::clone(&metrics),
         );
         for round in 0..rounds {
@@ -367,7 +368,7 @@ fn main() {
             Box::new(EngineBackend { engine: engine2, mode: Backend::Digital })
                 as Box<dyn cirptc::coordinator::InferenceBackend>
         })],
-        BatcherConfig { max_batch: 8, max_wait_us: 500 },
+        BatcherConfig { max_batch: 8, max_wait_us: 500, queue_cap: 0 },
     );
     let t0 = Instant::now();
     coord.classify_all(&images).unwrap();
@@ -392,6 +393,171 @@ fn main() {
     );
     drop(coord);
 
+    section("pipelined vs sequential serving (photonic, 1 worker)");
+    // same engine, same deterministic chip, same batch policy: the only
+    // difference is the worker loop — monolithic forward_batch vs the
+    // pre/chip/post stage pipeline (batch i+1's electronic operand prep
+    // overlaps batch i's chip passes, bit-identical by construction)
+    let photonic_chip = || ChipSim::deterministic(ChipDescription::ideal(4));
+    let reps = if smoke { 3 } else { 4 };
+    let mut best_speedup = 0.0f64;
+    let mut pipe_rps_b8 = 0.0f64;
+    for batch in [8usize, 32] {
+        if batch > n {
+            continue;
+        }
+        let measure = |pipelined: bool| -> (f64, Arc<Metrics>) {
+            let coord = if pipelined {
+                let engine = Arc::clone(&engine);
+                Coordinator::start_pipelined(
+                    vec![Box::new(move || {
+                        Staged::new(
+                            EngineSource::Fixed(engine),
+                            Backend::PhotonicSim(photonic_chip()),
+                        )
+                    }) as StagedFactory],
+                    BatcherConfig {
+                        max_batch: batch,
+                        max_wait_us: 2_000,
+                        queue_cap: 0,
+                    },
+                )
+            } else {
+                let engine = Arc::clone(&engine);
+                Coordinator::start(
+                    vec![Box::new(move || {
+                        Box::new(EngineBackend {
+                            engine,
+                            mode: Backend::PhotonicSim(photonic_chip()),
+                        })
+                            as Box<dyn InferenceBackend>
+                    }) as BackendFactory],
+                    BatcherConfig {
+                        max_batch: batch,
+                        max_wait_us: 2_000,
+                        queue_cap: 0,
+                    },
+                )
+            };
+            // warm: plan caches, scratch arenas, encoded chip tiles
+            coord.classify_all(&images[..batch.min(n)]).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                coord.classify_all(&images).unwrap();
+            }
+            (t0.elapsed().as_secs_f64(), Arc::clone(&coord.metrics))
+        };
+        let (seq_s, _) = measure(false);
+        let (pipe_s, pm) = measure(true);
+        let served = (n * reps) as f64;
+        let speedup = seq_s / pipe_s;
+        best_speedup = best_speedup.max(speedup);
+        row(&format!("photonic b={batch}"), &[
+            ("seq_img_s", format!("{:.1}", served / seq_s)),
+            ("pipe_img_s", format!("{:.1}", served / pipe_s)),
+            ("speedup", format!("{speedup:.2}x")),
+            (
+                "stage_p99_us (pre/chip/post)",
+                format!(
+                    "≤{}/≤{}/≤{}",
+                    pm.stage_pre_us.percentile(0.99),
+                    pm.stage_chip_us.percentile(0.99),
+                    pm.stage_post_us.percentile(0.99)
+                ),
+            ),
+        ]);
+        rep.metric(&format!("pipelined_speedup_photonic_b{batch}"), speedup);
+        rep.metric(
+            &format!("pipelined_photonic_b{batch}_img_s"),
+            served / pipe_s,
+        );
+        if batch == 8 {
+            pipe_rps_b8 = served / pipe_s;
+            rep.metric(
+                "stage_pre_p99_us",
+                pm.stage_pre_us.percentile(0.99) as f64,
+            );
+            rep.metric(
+                "stage_chip_p99_us",
+                pm.stage_chip_us.percentile(0.99) as f64,
+            );
+            rep.metric(
+                "stage_post_p99_us",
+                pm.stage_post_us.percentile(0.99) as f64,
+            );
+            rep.metric(
+                "batch_wait_p99_us",
+                pm.batch_wait_us.percentile(0.99) as f64,
+            );
+        }
+    }
+    rep.metric("pipelined_speedup_photonic_best", best_speedup);
+
+    section("open-loop Poisson traffic (pipelined photonic, admission ctl)");
+    // arrivals are scheduled on a wall clock independent of completions
+    // (open loop), at fractions of the capacity just measured — so the
+    // load points mean the same thing on any machine.  The SLO budget is
+    // likewise relative: 20 batch-times at b=8.
+    let capacity_rps = pipe_rps_b8.max(1.0);
+    let batch_time_us = 8.0 * 1e6 / capacity_rps;
+    let budget_us = (20.0 * batch_time_us) as u64;
+    let loads: &[f64] = if smoke { &[0.8] } else { &[0.5, 0.8, 0.95] };
+    for &load in loads {
+        let rate = capacity_rps * load;
+        let n_req = if smoke { 64 } else { 256 };
+        let engine2 = Arc::clone(&engine);
+        let coord = Coordinator::start_pipelined(
+            vec![Box::new(move || {
+                Staged::new(
+                    EngineSource::Fixed(engine2),
+                    Backend::PhotonicSim(photonic_chip()),
+                )
+            }) as StagedFactory],
+            // bounded queue: above-capacity bursts shed at the door
+            // instead of queueing past the deadline
+            BatcherConfig { max_batch: 8, max_wait_us: 2_000, queue_cap: 64 },
+        );
+        let mut rng = Rng::new(0x9015_5011);
+        let mut accepted = Vec::with_capacity(n_req);
+        let mut shed = 0usize;
+        let mut due = 0.0f64;
+        let t0 = Instant::now();
+        for i in 0..n_req {
+            due += -(1.0 - rng.f64()).ln() / rate;
+            let target = Duration::from_secs_f64(due);
+            let now = t0.elapsed();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let adm = coord.submit(images[i % n].clone());
+            if adm.is_shed() {
+                shed += 1;
+            } else {
+                accepted.push(adm);
+            }
+        }
+        let n_acc = accepted.len();
+        for adm in accepted {
+            adm.wait().expect("accepted request must complete");
+        }
+        let (p50, p99) = coord.metrics.latency_percentiles_us();
+        let headroom = budget_us as f64 / p99.max(1) as f64;
+        let accept_frac = n_acc as f64 / n_req as f64;
+        row(&format!("load={:.2}", load), &[
+            ("rps", format!("{rate:.1}")),
+            ("p50_us", format!("{p50}")),
+            ("p99_us", format!("{p99}")),
+            ("shed", format!("{shed}")),
+            ("slo_headroom", format!("{headroom:.2}")),
+        ]);
+        if (load - 0.8).abs() < 1e-9 {
+            rep.metric("poisson_p99_us_load80", p99 as f64);
+            rep.metric("poisson_slo_headroom_load80", headroom);
+            rep.metric("poisson_accept_frac_load80", accept_frac);
+        }
+        drop(coord);
+    }
+
     if smoke {
         println!("\nsmoke mode: skipping policy sweep + worker scaling");
         rep.save(&workspace_path("BENCH_serving.json"))
@@ -412,7 +578,7 @@ fn main() {
             .collect();
         let coord = Coordinator::start(
             factories,
-            BatcherConfig { max_batch: batch, max_wait_us: 400 },
+            BatcherConfig { max_batch: batch, max_wait_us: 400, queue_cap: 0 },
         );
         let t0 = Instant::now();
         coord.classify_all(&images).unwrap();
@@ -443,7 +609,7 @@ fn main() {
             .collect();
         let coord = Coordinator::start(
             factories,
-            BatcherConfig { max_batch: 8, max_wait_us: 400 },
+            BatcherConfig { max_batch: 8, max_wait_us: 400, queue_cap: 0 },
         );
         let t0 = Instant::now();
         coord.classify_all(&images).unwrap();

@@ -47,7 +47,7 @@ fn run_backends(
 ) -> Result<RunResult> {
     let coord = Coordinator::start(
         backends,
-        BatcherConfig { max_batch, max_wait_us: 1500 },
+        BatcherConfig { max_batch, max_wait_us: 1500, queue_cap: 0 },
     );
     let t0 = Instant::now();
     let responses = coord.classify_all(images)?;

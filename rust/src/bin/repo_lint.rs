@@ -16,6 +16,11 @@
 //!   `column_spectra`, `pad_rows_pooled`, `multiply`) must not call
 //!   `vec![` / `Vec::with_capacity` / `Vec::new` / `.to_vec(` — they
 //!   draw from the thread-local scratch arena instead.
+//! * **stage-buffer-bounded** — the stage-pipeline executor
+//!   (`coordinator/pipeline.rs`) must not create unbounded
+//!   `mpsc::channel` inter-stage buffers: stage hand-offs go through
+//!   `mpsc::sync_channel` so a slow stage exerts backpressure instead
+//!   of queueing batches (and their scratch buffers) without bound.
 //!
 //! Escapes: a `// lint:allow(<rule>): <reason>` comment suppresses the
 //! rule on the next non-comment line (or on its own line when it
@@ -28,10 +33,17 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-const KNOWN_RULES: &[&str] = &["hot-path-unwrap", "std-sync", "scratch-alloc"];
+const KNOWN_RULES: &[&str] =
+    &["hot-path-unwrap", "std-sync", "scratch-alloc", "stage-buffer-bounded"];
 const UNWRAP_NEEDLES: &[&str] = &[".unwrap()", ".expect(", "panic!("];
 const ALLOC_NEEDLES: &[&str] = &["vec![", "Vec::with_capacity", "Vec::new", ".to_vec("];
 const HOT_DIRS: &[&str] = &["coordinator/", "onn/", "simulator/", "circulant/"];
+
+/// Files whose non-test code must only use bounded (`sync_channel`)
+/// stage buffers.  `mpsc::sync_channel` does not contain the needle, so
+/// matching the bare path is safe (and catches turbofish call sites).
+const BOUNDED_CHANNEL_FILES: &[&str] = &["coordinator/pipeline.rs"];
+const UNBOUNDED_CHANNEL_NEEDLE: &str = "mpsc::channel";
 
 /// (file relative to src/, function name) pairs held to the
 /// scratch-arena-only allocation discipline.
@@ -191,6 +203,7 @@ fn analyze_file(rel: &str, content: &str) -> FileReport {
 
     let hot_path = HOT_DIRS.iter().any(|d| rel.starts_with(d));
     let sync_scoped = !rel.starts_with("util/sync/") && !rel.starts_with("bin/");
+    let bounded_channels = BOUNDED_CHANNEL_FILES.contains(&rel);
     let scratch_spans: Vec<(usize, usize)> = SCRATCH_FNS
         .iter()
         .filter(|(f, _)| *f == rel)
@@ -215,6 +228,21 @@ fn analyze_file(rel: &str, content: &str) -> FileReport {
                 rule: "std-sync",
                 excerpt: format!(
                     "direct std::sync path (import via util::sync shim): {}",
+                    raw[i].trim()
+                ),
+            });
+        }
+        if bounded_channels
+            && code.contains(UNBOUNDED_CHANNEL_NEEDLE)
+            && !is_allowed(i, "stage-buffer-bounded")
+        {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "stage-buffer-bounded",
+                excerpt: format!(
+                    "unbounded mpsc::channel in the stage pipeline (use \
+                     sync_channel for backpressure): {}",
                     raw[i].trim()
                 ),
             });
@@ -375,6 +403,19 @@ mod tests {
         assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
         assert_eq!(r.findings[0].line, 2);
         assert_eq!(r.findings[0].rule, "scratch-alloc");
+    }
+
+    #[test]
+    fn stage_buffer_rule_flags_unbounded_channels_in_pipeline_only() {
+        let src = "fn wire() {\n    let (tx, rx) = mpsc::channel::<Batch>();\n}\n";
+        let r = analyze_file("coordinator/pipeline.rs", src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "stage-buffer-bounded");
+        // bounded buffers are the sanctioned hand-off
+        let ok = "fn wire() {\n    let (tx, rx) = mpsc::sync_channel::<Batch>(2);\n}\n";
+        assert!(analyze_file("coordinator/pipeline.rs", ok).findings.is_empty());
+        // the reply channels elsewhere in the coordinator stay legal
+        assert!(analyze_file("coordinator/mod.rs", src).findings.is_empty());
     }
 
     #[test]

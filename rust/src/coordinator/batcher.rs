@@ -11,13 +11,24 @@ use super::Request;
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     pub max_batch: usize,
-    /// maximum time the *oldest* request may wait before dispatch (µs)
+    /// maximum time the *oldest* request may wait before dispatch (µs).
+    /// The batcher drains on deadline-or-size: a batch goes out the
+    /// moment it reaches `max_batch` *or* its oldest request has waited
+    /// `max_wait_us`, whichever first.  `0` degenerates to the greedy
+    /// drain — whatever is already queued dispatches immediately, never
+    /// waiting for stragglers.
     pub max_wait_us: u64,
+    /// admission-control bound on requests in flight (intake channel +
+    /// formed-but-unclaimed batches): [`super::Coordinator::submit`]
+    /// sheds with [`super::Admission::Shed`] once `queue_depth` reaches
+    /// this, trading a fast rejection for unbounded queueing latency.
+    /// `0` = unbounded (the pre-SLO behavior).
+    pub queue_cap: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait_us: 2000 }
+        BatcherConfig { max_batch: 8, max_wait_us: 2000, queue_cap: 0 }
     }
 }
 
@@ -115,8 +126,11 @@ mod tests {
 
     #[test]
     fn fills_to_max_batch() {
-        let (tx, brx) =
-            start(BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 });
+        let (tx, brx) = start(BatcherConfig {
+            max_batch: 4,
+            max_wait_us: 1_000_000,
+            queue_cap: 0,
+        });
         for i in 0..4 {
             tx.send(req(i).0).unwrap();
         }
@@ -126,8 +140,11 @@ mod tests {
 
     #[test]
     fn flushes_on_timeout() {
-        let (tx, brx) =
-            start(BatcherConfig { max_batch: 64, max_wait_us: 3_000 });
+        let (tx, brx) = start(BatcherConfig {
+            max_batch: 64,
+            max_wait_us: 3_000,
+            queue_cap: 0,
+        });
         tx.send(req(1).0).unwrap();
         let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.requests.len(), 1, "partial batch must flush");
@@ -135,8 +152,11 @@ mod tests {
 
     #[test]
     fn flushes_remainder_on_shutdown() {
-        let (tx, brx) =
-            start(BatcherConfig { max_batch: 64, max_wait_us: 10_000_000 });
+        let (tx, brx) = start(BatcherConfig {
+            max_batch: 64,
+            max_wait_us: 10_000_000,
+            queue_cap: 0,
+        });
         tx.send(req(1).0).unwrap();
         tx.send(req(2).0).unwrap();
         drop(tx);
@@ -154,7 +174,15 @@ mod tests {
             tx.send(req(i).0).unwrap();
         }
         thread::spawn(move || {
-            run(rx, btx, BatcherConfig { max_batch: 4, max_wait_us: 1_000_000 })
+            run(
+                rx,
+                btx,
+                BatcherConfig {
+                    max_batch: 4,
+                    max_wait_us: 1_000_000,
+                    queue_cap: 0,
+                },
+            )
         });
         let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(b.requests.len(), 4, "backlog must batch in one dispatch");
@@ -162,13 +190,91 @@ mod tests {
 
     #[test]
     fn order_preserved_within_batch() {
-        let (tx, brx) =
-            start(BatcherConfig { max_batch: 3, max_wait_us: 1_000_000 });
+        let (tx, brx) = start(BatcherConfig {
+            max_batch: 3,
+            max_wait_us: 1_000_000,
+            queue_cap: 0,
+        });
         for i in [10u64, 11, 12] {
             tx.send(req(i).0).unwrap();
         }
         let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
         let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn idle_batcher_never_emits_empty_batches() {
+        // deadline edge 1: an empty queue riding through many timeout
+        // cycles must stay silent — the deadline only applies to a
+        // non-empty pending set
+        let (tx, brx) = start(BatcherConfig {
+            max_batch: 4,
+            max_wait_us: 1_000,
+            queue_cap: 0,
+        });
+        assert!(
+            brx.recv_timeout(Duration::from_millis(120)).is_err(),
+            "idle batcher must not dispatch"
+        );
+        // and it is still alive and batching afterwards
+        tx.send(req(1).0).unwrap();
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 1);
+    }
+
+    #[test]
+    fn burst_larger_than_max_batch_splits_into_full_batches() {
+        // deadline edge 2: a 10-request burst against max_batch=4 must
+        // come out as [4, 4, 2] — full batches immediately on size, the
+        // remainder on the deadline — with order preserved across splits
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i).0).unwrap();
+        }
+        thread::spawn(move || {
+            run(
+                rx,
+                btx,
+                BatcherConfig {
+                    max_batch: 4,
+                    max_wait_us: 5_000,
+                    queue_cap: 0,
+                },
+            )
+        });
+        let mut sizes = Vec::new();
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+            sizes.push(b.requests.len());
+            ids.extend(b.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn max_wait_zero_dispatches_greedily() {
+        // the greedy pre-deadline policy is the max_wait = 0 case: a
+        // backlog dispatches as one batch the instant the batcher wakes,
+        // and a lone request never waits for company
+        let (tx, rx) = mpsc::channel();
+        let (btx, brx) = mpsc::channel();
+        tx.send(req(0).0).unwrap();
+        tx.send(req(1).0).unwrap();
+        thread::spawn(move || {
+            run(
+                rx,
+                btx,
+                BatcherConfig { max_batch: 8, max_wait_us: 0, queue_cap: 0 },
+            )
+        });
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 2, "backlog goes out in one batch");
+        tx.send(req(2).0).unwrap();
+        let b = brx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.requests.len(), 1, "a singleton must not wait");
     }
 }

@@ -3,6 +3,8 @@
 //! per-batch latency histograms and a queue-depth gauge for the
 //! batch-major worker loop.
 
+use std::time::Instant;
+
 use crate::util::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use crate::util::sync::{Mutex, MutexGuard};
 use crate::util::threadpool::WorkCounter;
@@ -93,6 +95,41 @@ impl Histogram {
         }
         (1u64 << 40) - 1
     }
+
+    /// Start an RAII stage timer recording into this histogram: elapsed
+    /// µs land on drop, or explicitly via [`TimerGuard::stop`] (which
+    /// also returns the reading — the pipeline threads sum stage times
+    /// into the per-batch compute figure).
+    pub fn timer(&self) -> TimerGuard<'_> {
+        TimerGuard { h: self, t0: Instant::now(), armed: true }
+    }
+}
+
+/// RAII timer for a pipeline stage (see [`Histogram::timer`]): records
+/// the elapsed µs (clamped to ≥1) exactly once — on [`TimerGuard::stop`]
+/// or, if the stage unwinds early, on drop.
+pub struct TimerGuard<'a> {
+    h: &'a Histogram,
+    t0: Instant,
+    armed: bool,
+}
+
+impl TimerGuard<'_> {
+    /// Record now and return the elapsed µs (disarms the drop record).
+    pub fn stop(mut self) -> u64 {
+        self.armed = false;
+        let us = (self.t0.elapsed().as_micros() as u64).max(1);
+        self.h.record(us);
+        us
+    }
+}
+
+impl Drop for TimerGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.h.record((self.t0.elapsed().as_micros() as u64).max(1));
+        }
+    }
 }
 
 /// All coordinator metrics (shared via Arc).
@@ -101,14 +138,35 @@ pub struct Metrics {
     pub submitted: WorkCounter,
     pub completed: WorkCounter,
     pub errors: WorkCounter,
+    /// requests shed at admission: the bounded submit queue was at
+    /// capacity, so the caller got an immediate
+    /// [`super::Admission::Shed`] instead of unbounded queueing latency.
+    /// Shed requests also count in `submitted` (they were offered), but
+    /// never in `completed` or `errors`.
+    pub rejected: WorkCounter,
     pub batches: WorkCounter,
     /// requests admitted (submit) minus requests handed to a backend —
     /// the live queue depth across intake channel + formed batches
     pub queue_depth: Gauge,
-    /// wall time of each backend `infer_batch` call, µs (whole batch)
+    /// wall time of each backend `infer_batch` call, µs (whole batch);
+    /// on the pipelined path, the sum of a batch's pre+chip+post stage
+    /// work (comparable, but stages of *different* batches overlap)
     pub batch_compute_us: Histogram,
     /// dispatched batch sizes (requests per batch)
     pub batch_sizes: Histogram,
+    /// pipelined path, per batch: electronic pre-stage wall time
+    /// (validate/pack, prefix layers, im2col + operand encode), µs
+    pub stage_pre_us: Histogram,
+    /// pipelined path, per batch: chip-stage wall time (the sign-split
+    /// crossbar passes and inter-linear layers), µs — the stage whose
+    /// share of `batch_compute_us` says where the next bottleneck is
+    pub stage_chip_us: Histogram,
+    /// pipelined path, per batch: electronic post-stage wall time
+    /// (suffix layers + logits extraction), µs
+    pub stage_post_us: Histogram,
+    /// per request: time spent waiting in the batcher between submit and
+    /// batch formation, µs (the deadline-batching knob's direct cost)
+    pub batch_wait_us: Histogram,
     /// calibration probes executed by drift-aware workers
     /// ([`crate::drift::DriftMonitor`])
     pub probes: WorkCounter,
@@ -191,13 +249,16 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let (p50, p99) = self.latency_percentiles_us();
         format!(
-            "submitted={} completed={} errors={} batches={} mean_batch={:.2} \
+            "submitted={} completed={} errors={} rejected={} batches={} \
+             mean_batch={:.2} \
              p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs \
+             pre_p99≤{}µs chip_p99≤{}µs post_p99≤{}µs wait_p99≤{}µs \
              probes={} recals={} probe_res≤{}ppm scratch_miss={}/{} \
              lock_poisons={}",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
+            self.rejected.get(),
             self.batches.get(),
             self.mean_batch_size(),
             p50,
@@ -205,6 +266,10 @@ impl Metrics {
             self.queue_depth.get(),
             self.batch_compute_us.percentile(0.5),
             self.batch_compute_us.percentile(0.99),
+            self.stage_pre_us.percentile(0.99),
+            self.stage_chip_us.percentile(0.99),
+            self.stage_post_us.percentile(0.99),
+            self.batch_wait_us.percentile(0.99),
             self.probes.get(),
             self.recalibrations.get(),
             self.probe_residual_ppm.percentile(0.99),
@@ -337,6 +402,37 @@ mod tests {
         assert_eq!(m.latency_percentiles_us(), (7, 7));
         assert!(m.lock_poisons.get() >= 1, "recovery must be counted");
         assert!(m.summary().contains("lock_poisons="));
+    }
+
+    #[test]
+    fn timer_guard_records_on_stop_and_on_drop() {
+        let h = Histogram::default();
+        let us = h.timer().stop();
+        assert!(us >= 1, "stop clamps to ≥1µs");
+        assert_eq!(h.count(), 1, "stop records exactly once");
+        {
+            let _t = h.timer();
+            // dropped without stop: the guard must still record
+        }
+        assert_eq!(h.count(), 2, "drop records a stage that unwound");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert_eq!(h.count(), 2, "a consumed guard must not record again");
+    }
+
+    #[test]
+    fn stage_and_rejection_metrics_surface_in_summary() {
+        let m = Metrics::default();
+        m.rejected.add(2);
+        m.stage_pre_us.record(10);
+        m.stage_chip_us.record(100);
+        m.stage_post_us.record(5);
+        m.batch_wait_us.record(50);
+        let s = m.summary();
+        assert!(s.contains("rejected=2"), "summary: {s}");
+        assert!(s.contains("pre_p99≤15µs"), "summary: {s}");
+        assert!(s.contains("chip_p99≤127µs"), "summary: {s}");
+        assert!(s.contains("post_p99≤7µs"), "summary: {s}");
+        assert!(s.contains("wait_p99≤63µs"), "summary: {s}");
     }
 
     #[test]

@@ -10,11 +10,13 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod pipeline;
 pub mod scheduler;
 pub mod worker;
 
 use std::time::Instant;
 
+use crate::bail;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::{mpsc, Arc, Mutex};
 
@@ -22,7 +24,8 @@ use crate::tensor::Tensor;
 use crate::util::error::Result;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use metrics::{Gauge, Histogram, Metrics};
+pub use metrics::{Gauge, Histogram, Metrics, TimerGuard};
+pub use pipeline::{EngineSource, PipelineConfig, Staged, StagedFactory};
 pub use scheduler::TileScheduler;
 pub use worker::{BackendFactory, InferenceBackend};
 
@@ -54,10 +57,48 @@ impl Pending {
     }
 }
 
+/// Admission-control outcome of [`Coordinator::submit`]: either the
+/// request entered the queue ([`Admission::Accepted`]) or it was shed at
+/// the door because `queue_cap` requests were already in flight
+/// ([`Admission::Shed`]).  Shedding is the SLO-preserving alternative to
+/// unbounded queueing: a rejected client learns *now* instead of holding
+/// a slot whose deadline has already passed.
+#[must_use = "a shed admission must be observed, or the rejection is silent"]
+pub enum Admission {
+    Accepted(Pending),
+    Shed { id: u64 },
+}
+
+impl Admission {
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Admission::Shed { .. })
+    }
+
+    pub fn pending(self) -> Option<Pending> {
+        match self {
+            Admission::Accepted(p) => Some(p),
+            Admission::Shed { .. } => None,
+        }
+    }
+
+    /// Wait for the response; a shed request surfaces as an error (so
+    /// call sites that never configure a `queue_cap` can keep chaining
+    /// `submit(..).wait()` — with `queue_cap = 0` nothing sheds).
+    pub fn wait(self) -> Result<Response> {
+        match self {
+            Admission::Accepted(p) => p.wait(),
+            Admission::Shed { id } => {
+                bail!("request {id} shed: serving queue at capacity")
+            }
+        }
+    }
+}
+
 /// The running coordinator: intake channel + batcher thread + workers.
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
     next_id: AtomicU64,
+    queue_cap: usize,
     pub metrics: Arc<Metrics>,
     // keep the threads alive; joined on drop
     _batcher: worker::JoinOnDrop,
@@ -107,16 +148,82 @@ impl Coordinator {
         Coordinator {
             tx,
             next_id: AtomicU64::new(1),
+            queue_cap: cfg.queue_cap,
             metrics,
             _batcher,
             _workers,
         }
     }
 
-    /// Submit one image; returns a handle to await the response.
-    pub fn submit(&self, image: Tensor) -> Pending {
-        let (reply, rx) = mpsc::channel();
+    /// [`Coordinator::start`], but each worker runs the three-stage
+    /// pipeline executor ([`pipeline::run`]) instead of the monolithic
+    /// [`worker::run`] loop: batch *i+1*'s electronic operand prep
+    /// overlaps batch *i*'s chip passes, bit-identical to sequential.
+    pub fn start_pipelined(
+        staged: Vec<StagedFactory>,
+        cfg: BatcherConfig,
+    ) -> Coordinator {
+        Coordinator::start_pipelined_with_metrics(
+            staged,
+            cfg,
+            Arc::new(Metrics::default()),
+        )
+    }
+
+    /// [`Coordinator::start_pipelined`] with a caller-supplied metrics
+    /// sink (shared with the drift monitor/recalibrator, same as
+    /// [`Coordinator::start_with_metrics`]).
+    pub fn start_pipelined_with_metrics(
+        staged: Vec<StagedFactory>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let _batcher = worker::spawn_named("cirptc-batcher", {
+            let cfg = cfg.clone();
+            move || batcher::run(rx, batch_tx, cfg)
+        });
+
+        let _workers = staged
+            .into_iter()
+            .enumerate()
+            .map(|(i, factory)| {
+                let rx = Arc::clone(&batch_rx);
+                let metrics = Arc::clone(&metrics);
+                worker::spawn_named(&format!("cirptc-pipe-{i}"), move || {
+                    pipeline::run(factory(), rx, metrics)
+                })
+            })
+            .collect();
+
+        Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            queue_cap: cfg.queue_cap,
+            metrics,
+            _batcher,
+            _workers,
+        }
+    }
+
+    /// Submit one image; returns the admission outcome.  With
+    /// `queue_cap = 0` (the default) every request is accepted and this
+    /// behaves exactly like the pre-admission-control submit.
+    pub fn submit(&self, image: Tensor) -> Admission {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if self.queue_cap > 0
+            && self.metrics.queue_depth.get() >= self.queue_cap as i64
+        {
+            // shed at the door: counted in `submitted` (it *was* offered)
+            // and `rejected`, never in `completed`/`errors`
+            self.metrics.submitted.add(1);
+            self.metrics.rejected.add(1);
+            return Admission::Shed { id };
+        }
+        let (reply, rx) = mpsc::channel();
         let sent = self
             .tx
             .send(Request { id, image, enqueued: Instant::now(), reply })
@@ -131,14 +238,15 @@ impl Coordinator {
             // of a panic in the submitting thread
             self.metrics.errors.add(1);
         }
-        Pending { rx }
+        Admission::Accepted(Pending { rx })
     }
 
     /// Submit a whole slice and wait for all responses (ordered by input).
+    /// Errors if any request was shed (only possible with `queue_cap > 0`).
     pub fn classify_all(&self, images: &[Tensor]) -> Result<Vec<Response>> {
-        let pendings: Vec<Pending> =
+        let admissions: Vec<Admission> =
             images.iter().map(|im| self.submit(im.clone())).collect();
-        pendings.into_iter().map(|p| p.wait()).collect()
+        admissions.into_iter().map(|a| a.wait()).collect()
     }
 }
 
@@ -178,7 +286,7 @@ mod tests {
     fn end_to_end_single() {
         let c = Coordinator::start(
             vec![Box::new(|| Box::new(MeanBackend) as _)],
-            BatcherConfig { max_batch: 4, max_wait_us: 500 },
+            BatcherConfig { max_batch: 4, max_wait_us: 500, queue_cap: 0 },
         );
         let r = c.submit(img(1)).wait().unwrap();
         assert_eq!(r.logits.len(), 3);
@@ -192,7 +300,7 @@ mod tests {
                 Box::new(|| Box::new(MeanBackend) as _),
                 Box::new(|| Box::new(MeanBackend) as _),
             ],
-            BatcherConfig { max_batch: 8, max_wait_us: 200 },
+            BatcherConfig { max_batch: 8, max_wait_us: 200, queue_cap: 0 },
         );
         let images: Vec<Tensor> = (0..100).map(img).collect();
         let responses = c.classify_all(&images).unwrap();
@@ -210,7 +318,7 @@ mod tests {
     fn responses_match_inputs() {
         let c = Coordinator::start(
             vec![Box::new(|| Box::new(MeanBackend) as _)],
-            BatcherConfig { max_batch: 3, max_wait_us: 100 },
+            BatcherConfig { max_batch: 3, max_wait_us: 100, queue_cap: 0 },
         );
         let images: Vec<Tensor> = (0..10).map(img).collect();
         let responses = c.classify_all(&images).unwrap();
@@ -224,7 +332,7 @@ mod tests {
     fn queue_depth_drains_to_zero_and_batches_instrumented() {
         let c = Coordinator::start(
             vec![Box::new(|| Box::new(MeanBackend) as _)],
-            BatcherConfig { max_batch: 4, max_wait_us: 200 },
+            BatcherConfig { max_batch: 4, max_wait_us: 200, queue_cap: 0 },
         );
         let images: Vec<Tensor> = (0..30).map(img).collect();
         c.classify_all(&images).unwrap();
@@ -246,11 +354,70 @@ mod tests {
         assert!(s.contains("queue_depth=0"), "summary: {s}");
     }
 
+    /// Backend that reports entering each batch and then blocks until
+    /// released, so the test can pin requests in the queue
+    /// deterministically.
+    struct GateBackend {
+        entered: mpsc::Sender<usize>,
+        release: mpsc::Receiver<()>,
+    }
+
+    impl InferenceBackend for GateBackend {
+        fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            self.entered.send(imgs.len()).ok();
+            let _ = self.release.recv();
+            Ok(imgs.iter().map(|_| vec![0.0]).collect())
+        }
+
+        fn name(&self) -> String {
+            "gate".into()
+        }
+    }
+
+    #[test]
+    fn submit_sheds_at_capacity_and_recovers() {
+        let (entered_tx, entered) = mpsc::channel();
+        let (release, release_rx) = mpsc::channel();
+        let c = Coordinator::start(
+            vec![Box::new(move || {
+                Box::new(GateBackend { entered: entered_tx, release: release_rx })
+                    as _
+            })],
+            BatcherConfig { max_batch: 1, max_wait_us: 0, queue_cap: 2 },
+        );
+        // first request reaches the (gated) backend: its queue_depth
+        // decrement has happened by the time `entered` fires
+        let a = c.submit(img(1));
+        assert!(!a.is_shed());
+        entered.recv().unwrap();
+        // the worker is now pinned inside infer_batch, so the next two
+        // admissions stay queued: depth 1, then 2 == queue_cap
+        let b = c.submit(img(2));
+        let d = c.submit(img(3));
+        assert!(!b.is_shed() && !d.is_shed());
+        // at capacity: the fourth request sheds at the door
+        let e = c.submit(img(4));
+        assert!(e.is_shed(), "submit above queue_cap must shed");
+        assert!(e.wait().is_err(), "a shed admission reports as an error");
+        assert_eq!(c.metrics.rejected.get(), 1);
+        assert_eq!(c.metrics.submitted.get(), 4);
+        // open the gate: every *accepted* request still completes
+        for _ in 0..3 {
+            release.send(()).unwrap();
+        }
+        for adm in [a, b, d] {
+            adm.wait().unwrap();
+        }
+        assert_eq!(c.metrics.completed.get(), 3);
+        assert_eq!(c.metrics.errors.get(), 0);
+        assert_eq!(c.metrics.queue_depth.get(), 0);
+    }
+
     #[test]
     fn metrics_latencies_recorded() {
         let c = Coordinator::start(
             vec![Box::new(|| Box::new(MeanBackend) as _)],
-            BatcherConfig { max_batch: 2, max_wait_us: 100 },
+            BatcherConfig { max_batch: 2, max_wait_us: 100, queue_cap: 0 },
         );
         let images: Vec<Tensor> = (0..20).map(img).collect();
         c.classify_all(&images).unwrap();

@@ -1,0 +1,504 @@
+//! Stage-pipelined worker executor (DESIGN.md §pipeline): splits each
+//! batch into the engine's pre / chip / post stages and runs them on
+//! three lanes, so batch *i+1*'s electronic operand prep (im2col, clamp,
+//! pad, quantize + Γ-mix) overlaps batch *i*'s chip passes, and batch
+//! *i−1*'s bias/activation/logits work overlaps both.
+//!
+//! Bit-identity with the sequential worker loop is structural, not
+//! aspirational: `Engine::forward_batch` *is* `pre_batch ∘ chip_batch ∘
+//! post_batch`, the chip stage is the only lane that touches the backend
+//! (so the sim's pass-count drift clock advances in FIFO batch order,
+//! exactly as sequentially), and the pre stage's speculative operand
+//! encode is stamped with the chip's encoding generation — the chip
+//! stage re-encodes inline whenever the chip moved in between
+//! (`rust/tests/pipelined_path.rs` pins all of this).
+//!
+//! Lane layout per worker (one OS thread each, scoped to the executor):
+//!
+//! ```text
+//!   shared batch queue ──▶ [pre]──bounded(depth)──▶ [chip]──bounded(depth)──▶ [post]──▶ replies
+//!        (electronic: pack, im2col,     (crossbar passes,      (bias, relu, pool,
+//!         clamp, pad, Γ-encode)          drift clock, hook)     logits, metrics)
+//! ```
+//!
+//! The inter-stage channels are *bounded* (capacity = `depth`): if the
+//! chip is the bottleneck the pre lane blocks instead of buffering
+//! unboundedly, and queueing pressure stays visible to admission control
+//! at the intake queue where [`super::Coordinator::submit`] can shed.
+
+use std::time::Instant;
+
+use crate::util::sync::{mpsc, Arc, Mutex};
+
+use crate::drift::{DriftShared, EngineSlot};
+use crate::onn::{Backend, Engine, MidBatch, PreBatch};
+use crate::simulator::EncodeSnapshot;
+use crate::util::scratch;
+use crate::util::threadpool::spawn_scoped_named;
+
+use super::metrics::Metrics;
+use super::{Batch, Response};
+
+/// Tuning for one pipelined worker.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// capacity of each inter-stage channel — how many batches a stage
+    /// may run ahead of the next.  `1` (the default) already yields full
+    /// three-stage overlap; larger values only smooth jittery stage
+    /// times, at the cost of latency hidden from admission control.
+    pub depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { depth: 1 }
+    }
+}
+
+/// Where the pipeline reads "the engine to use for the next batch":
+/// fixed, hot-swappable ([`EngineSlot`]), or the drift subsystem's shared
+/// state.  Read once per batch at the *pre* stage; the same `Arc` rides
+/// the batch through chip and post, so a hot swap never splits a batch
+/// across engines.
+pub enum EngineSource {
+    Fixed(Arc<Engine>),
+    Slot(Arc<EngineSlot>),
+    Shared(Arc<DriftShared>),
+}
+
+impl EngineSource {
+    pub fn current(&self) -> Arc<Engine> {
+        match self {
+            EngineSource::Fixed(e) => Arc::clone(e),
+            EngineSource::Slot(s) => s.current(),
+            EngineSource::Shared(d) => d.slot.current(),
+        }
+    }
+}
+
+/// Chip-stage hook, run after each batch's passes while the backend is
+/// quiescent — exactly where the sequential [`super::worker`] loop's
+/// drift monitor runs ([`crate::drift::DriftBackend`]), so probe passes
+/// and recalibration triggers interleave with traffic identically.
+pub type ChipHook = Box<dyn FnMut(&mut Backend) + Send>;
+
+/// Everything one pipelined worker owns: the engine source, its private
+/// backend (its own "chip"), an optional chip-stage hook and tuning.
+pub struct Staged {
+    pub source: EngineSource,
+    pub backend: Backend,
+    pub hook: Option<ChipHook>,
+    pub cfg: PipelineConfig,
+}
+
+impl Staged {
+    pub fn new(source: EngineSource, backend: Backend) -> Staged {
+        Staged { source, backend, hook: None, cfg: PipelineConfig::default() }
+    }
+
+    pub fn with_hook(mut self, hook: ChipHook) -> Staged {
+        self.hook = Some(hook);
+        self
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> Staged {
+        self.cfg.depth = depth.max(1);
+        self
+    }
+}
+
+/// Constructs a [`Staged`] worker *on its own thread* (same rationale as
+/// [`super::worker::BackendFactory`]: each worker owns its own chip sim).
+pub type StagedFactory = Box<dyn FnOnce() -> Staged + Send>;
+
+type Reply = (u64, Instant, mpsc::Sender<Response>);
+
+/// A batch between pre and chip: prepped operand + everything needed to
+/// answer the requests downstream.
+struct PreItem {
+    engine: Arc<Engine>,
+    pre: PreBatch,
+    replies: Vec<Reply>,
+    formed: Instant,
+    pre_us: u64,
+}
+
+/// A batch between chip and post.
+struct PostItem {
+    engine: Arc<Engine>,
+    mid: MidBatch,
+    replies: Vec<Reply>,
+    formed: Instant,
+    /// pre + chip stage time so far (µs); post adds its own share
+    work_us: u64,
+}
+
+/// Pipelined worker loop body (runs on its own thread; the pre and post
+/// lanes are scoped children of it).  Exits when the shared batch queue
+/// closes, draining every in-flight batch first — accounting is
+/// one-for-one with [`super::worker::run`]: a request ends in exactly one
+/// of `completed` (reply sent) or `errors` (reply dropped).
+pub fn run(
+    staged: Staged,
+    rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    metrics: Arc<Metrics>,
+) {
+    let Staged { source, mut backend, mut hook, cfg } = staged;
+    let depth = cfg.depth.max(1);
+    let photonic = matches!(backend, Backend::PhotonicSim(_));
+    // the chip stage publishes an encoding snapshot after each batch's
+    // passes; the pre stage speculatively Γ-encodes the *next* batch
+    // against it.  Generation-stamped: a stale encode is detected per
+    // pass and redone inline, so this is purely a throughput lever.
+    let snap: Mutex<Option<EncodeSnapshot>> = Mutex::new(match &backend {
+        Backend::PhotonicSim(sim) => Some(sim.encode_snapshot()),
+        Backend::Digital => None,
+    });
+
+    std::thread::scope(|s| {
+        let (pre_tx, pre_rx) = mpsc::sync_channel::<PreItem>(depth);
+        let (post_tx, post_rx) = mpsc::sync_channel::<PostItem>(depth);
+
+        // ── pre lane ────────────────────────────────────────────────
+        spawn_scoped_named(s, "cirptc-pre", {
+            let metrics = &metrics;
+            let snap = &snap;
+            let source = &source;
+            move || loop {
+                // same shared-queue discipline as worker::run: take one
+                // batch under the lock, recover a poisoned lock (a dead
+                // sibling must not kill the pool), release before work
+                let batch = match rx
+                    .lock()
+                    .unwrap_or_else(|e| {
+                        metrics.lock_poisons.add(1);
+                        e.into_inner()
+                    })
+                    .recv()
+                {
+                    Ok(b) => b,
+                    Err(_) => return, // queue closed: pre_tx drops, lanes drain
+                };
+                if batch.requests.is_empty() {
+                    continue;
+                }
+                let Batch { requests, formed } = batch;
+                let n = requests.len();
+                // requests leave the queue the moment a worker owns them
+                metrics.queue_depth.sub(n as i64);
+                let mut images = Vec::with_capacity(n);
+                let mut replies: Vec<Reply> = Vec::with_capacity(n);
+                for req in requests {
+                    metrics.batch_wait_us.record(
+                        formed.duration_since(req.enqueued).as_micros() as u64,
+                    );
+                    images.push(req.image);
+                    replies.push((req.id, req.enqueued, req.reply));
+                }
+                // engine read once per batch: hot swaps land *between*
+                // batches; this Arc rides the batch through all stages
+                let engine = source.current();
+                let snap_now = snap
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .clone();
+                let t = metrics.stage_pre_us.timer();
+                match engine.pre_batch(&images, photonic, snap_now.as_ref()) {
+                    Ok(pre) => {
+                        let pre_us = t.stop();
+                        if pre_tx
+                            .send(PreItem { engine, pre, replies, formed, pre_us })
+                            .is_err()
+                        {
+                            return; // chip lane gone: tearing down
+                        }
+                    }
+                    Err(e) => {
+                        // fail the whole batch here: drop reply senders
+                        // (receivers see a closed channel), count errors
+                        eprintln!("cirptc pre stage failed: {e:#}");
+                        metrics.errors.add(n);
+                    }
+                }
+            }
+        });
+
+        // ── post lane ───────────────────────────────────────────────
+        spawn_scoped_named(s, "cirptc-post", {
+            let metrics = &metrics;
+            move || {
+                for PostItem { engine, mid, replies, formed, work_us } in post_rx {
+                    let n = replies.len();
+                    let t = metrics.stage_post_us.timer();
+                    match engine.post_batch(mid) {
+                        Ok(all_logits) => {
+                            let post_us = t.stop();
+                            // the batch's *work* time: the sum of its
+                            // three stage times (what the batch cost),
+                            // not wall time (which overlaps neighbors)
+                            let batch_us = (work_us + post_us).max(1);
+                            metrics.batch_compute_us.record(batch_us);
+                            metrics.batch_sizes.record(n as u64);
+                            let compute_us = (batch_us / n as u64).max(1);
+                            for ((id, enqueued, reply), logits) in
+                                replies.into_iter().zip(all_logits)
+                            {
+                                let queue_us = formed
+                                    .duration_since(enqueued)
+                                    .as_micros()
+                                    as u64;
+                                let total =
+                                    enqueued.elapsed().as_micros() as u64;
+                                metrics.record_latency_us(total);
+                                metrics.completed.add(1);
+                                let _ = reply.send(Response {
+                                    id,
+                                    logits,
+                                    queue_us,
+                                    compute_us,
+                                });
+                            }
+                            metrics.batches.add(1);
+                            let st = scratch::stats();
+                            metrics.scratch_takes.set(st.takes as i64);
+                            metrics.scratch_misses.set(st.misses as i64);
+                        }
+                        Err(e) => {
+                            eprintln!("cirptc post stage failed: {e:#}");
+                            metrics.errors.add(n);
+                        }
+                    }
+                }
+            }
+        });
+
+        // ── chip lane (this thread) ─────────────────────────────────
+        for PreItem { engine, pre, replies, formed, pre_us } in pre_rx {
+            let n = replies.len();
+            let t = metrics.stage_chip_us.timer();
+            match engine.chip_batch(pre, &mut backend) {
+                Ok(mid) => {
+                    let chip_us = t.stop();
+                    // monitor/recal hook sees the chip between batches,
+                    // exactly like the sequential DriftBackend
+                    if let Some(h) = hook.as_mut() {
+                        h(&mut backend);
+                    }
+                    // publish the post-hook encoding state: probe passes
+                    // may have ticked the drift clock, and the next
+                    // batch's speculative encode must target *this*
+                    if let Backend::PhotonicSim(sim) = &backend {
+                        *snap.lock().unwrap_or_else(|e| e.into_inner()) =
+                            Some(sim.encode_snapshot());
+                    }
+                    let item = PostItem {
+                        engine,
+                        mid,
+                        replies,
+                        formed,
+                        work_us: pre_us + chip_us,
+                    };
+                    if post_tx.send(item).is_err() {
+                        break; // post lane gone: tearing down
+                    }
+                }
+                Err(e) => {
+                    eprintln!("cirptc chip stage failed: {e:#}");
+                    metrics.errors.add(n);
+                }
+            }
+        }
+        // shutdown order matters: the pre lane exited (queue closed) and
+        // dropped pre_tx, which ended the loop above; dropping post_tx now
+        // lets the post lane drain and exit, then the scope joins both
+        drop(post_tx);
+    });
+}
+
+/// Convenience for the common fleet shape: `n` pipelined workers over one
+/// engine source, each constructing its own backend on its own thread.
+pub fn staged_fleet(
+    n: usize,
+    source: impl Fn() -> EngineSource + Send + Sync + 'static,
+    backend: impl Fn() -> Backend + Send + Sync + 'static,
+) -> Vec<StagedFactory> {
+    let source = Arc::new(source);
+    let backend = Arc::new(backend);
+    (0..n.max(1))
+        .map(|_| {
+            let source = Arc::clone(&source);
+            let backend = Arc::clone(&backend);
+            Box::new(move || Staged::new(source(), backend())) as StagedFactory
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatcherConfig, Coordinator};
+    use crate::data::Bundle;
+    use crate::onn::Manifest;
+    use crate::simulator::{ChipDescription, ChipSim};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Tiny circ conv→relu→flatten→fc engine (same shape as the drift
+    /// unit tests).
+    fn tiny_engine(seed: u64) -> Engine {
+        let manifest = Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 3,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 4, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 256, "cout": 3, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap();
+        let mut bundle = Bundle::default();
+        let mut rng = Rng::new(seed);
+        let mut w0 = vec![0.0f32; 3 * 4];
+        rng.fill_uniform(&mut w0);
+        bundle.insert_f32("layer0.w", &[1, 3, 4], w0);
+        bundle.insert_f32("layer0.b", &[4], vec![0.1; 4]);
+        let mut w3 = vec![0.0f32; 64 * 4];
+        rng.fill_uniform(&mut w3);
+        bundle.insert_f32("layer3.w", &[1, 64, 4], w3);
+        bundle.insert_f32("layer3.b", &[3], vec![0.0; 3]);
+        Engine::from_parts(manifest, &bundle).unwrap()
+    }
+
+    fn img(seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut d = vec![0.0f32; 64];
+        r.fill_uniform(&mut d);
+        Tensor::new(&[1, 8, 8], d)
+    }
+
+    #[test]
+    fn pipelined_digital_matches_per_image_oracle_and_records_stages() {
+        let oracle = Arc::new(tiny_engine(5));
+        let engine = Arc::clone(&oracle);
+        let c = Coordinator::start_pipelined(
+            vec![Box::new(move || {
+                Staged::new(EngineSource::Fixed(engine), Backend::Digital)
+            })],
+            BatcherConfig { max_batch: 4, max_wait_us: 300, queue_cap: 0 },
+        );
+        let images: Vec<Tensor> = (0..24).map(img).collect();
+        let responses = c.classify_all(&images).unwrap();
+        assert_eq!(responses.len(), 24);
+        for (im, r) in images.iter().zip(&responses) {
+            let want = oracle.forward(im, &mut Backend::Digital).unwrap();
+            assert_eq!(r.logits, want, "pipelined digital must be exact");
+        }
+        assert_eq!(c.metrics.completed.get(), 24);
+        assert_eq!(c.metrics.errors.get(), 0);
+        assert_eq!(c.metrics.queue_depth.get(), 0);
+        // every stage lane is instrumented per batch, and the batch
+        // histograms stay one-sample-per-batch like the sequential loop
+        let batches = c.metrics.batches.get() as u64;
+        assert!(batches >= 6, "max_batch=4 over 24 ⇒ ≥6 batches");
+        assert_eq!(c.metrics.stage_pre_us.count(), batches);
+        assert_eq!(c.metrics.stage_chip_us.count(), batches);
+        assert_eq!(c.metrics.stage_post_us.count(), batches);
+        assert_eq!(c.metrics.batch_compute_us.count(), batches);
+        assert_eq!(c.metrics.batch_wait_us.count(), 24);
+    }
+
+    #[test]
+    fn pipelined_photonic_matches_sequential_twin_chip() {
+        // one pipelined worker over a deterministic chip; a twin sim
+        // served sequentially is the oracle.  Submitting one request at a
+        // time makes the batch partition deterministic (all singletons),
+        // so the two pass streams line up one-to-one.
+        let engine = Arc::new(tiny_engine(7));
+        let desc = ChipDescription::ideal(4);
+        let sim = ChipSim::deterministic(desc.clone());
+        let mut twin = Backend::PhotonicSim(ChipSim::deterministic(desc));
+        let c = Coordinator::start_pipelined(
+            vec![{
+                let engine = Arc::clone(&engine);
+                Box::new(move || {
+                    Staged::new(
+                        EngineSource::Fixed(engine),
+                        Backend::PhotonicSim(sim),
+                    )
+                }) as StagedFactory
+            }],
+            BatcherConfig { max_batch: 1, max_wait_us: 0, queue_cap: 0 },
+        );
+        for i in 0..8 {
+            let im = img(100 + i);
+            let got = c.submit(im.clone()).wait().unwrap().logits;
+            let want = engine
+                .forward_batch(std::slice::from_ref(&im), &mut twin)
+                .unwrap();
+            assert_eq!(got, want[0], "image {i}: photonic pipeline must be exact");
+        }
+        assert_eq!(c.metrics.errors.get(), 0);
+    }
+
+    #[test]
+    fn pipeline_exits_cleanly_when_queue_closes() {
+        let engine = Arc::new(tiny_engine(9));
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let h = crate::coordinator::worker::spawn_named("t", {
+            let rx = Arc::clone(&rx);
+            let m = Arc::clone(&metrics);
+            move || {
+                run(
+                    Staged::new(EngineSource::Fixed(engine), Backend::Digital),
+                    rx,
+                    m,
+                )
+            }
+        });
+        // a batch in flight while the queue closes must still be answered
+        let (reply, reply_rx) = mpsc::channel();
+        tx.send(Batch {
+            requests: vec![crate::coordinator::Request {
+                id: 3,
+                image: img(3),
+                enqueued: Instant::now(),
+                reply,
+            }],
+            formed: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let resp = reply_rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("in-flight batch must drain on shutdown");
+        assert_eq!(resp.id, 3);
+        drop(h); // join must not hang (lane channels close in order)
+        assert_eq!(metrics.completed.get(), 1);
+    }
+
+    #[test]
+    fn staged_fleet_builds_n_independent_workers() {
+        let engine = Arc::new(tiny_engine(11));
+        let factories = staged_fleet(
+            3,
+            move || EngineSource::Fixed(Arc::clone(&engine)),
+            || Backend::Digital,
+        );
+        assert_eq!(factories.len(), 3);
+        let c = Coordinator::start_pipelined(
+            factories,
+            BatcherConfig { max_batch: 2, max_wait_us: 100, queue_cap: 0 },
+        );
+        let images: Vec<Tensor> = (0..12).map(img).collect();
+        let responses = c.classify_all(&images).unwrap();
+        assert_eq!(responses.len(), 12);
+        assert_eq!(c.metrics.completed.get(), 12);
+    }
+}

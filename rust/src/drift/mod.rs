@@ -145,6 +145,32 @@ impl DriftBackend {
     }
 }
 
+/// Drift-monitored *pipelined* serving: the staged twin of
+/// [`DriftBackend`] for [`crate::coordinator::Coordinator::start_pipelined`].
+/// The monitor runs as the chip-stage hook, after each batch's passes
+/// while the chip is quiescent — exactly where the sequential backend
+/// runs it — so probe cadence, residuals and recalibration triggers are
+/// identical between the two serving loops.
+pub fn staged_drift(
+    shared: Arc<DriftShared>,
+    sim: ChipSim,
+    mut monitor: DriftMonitor,
+    recal_tx: mpsc::Sender<RecalRequest>,
+) -> crate::coordinator::Staged {
+    let hook_shared = Arc::clone(&shared);
+    let mut batches = 0u64;
+    crate::coordinator::Staged::new(
+        crate::coordinator::EngineSource::Shared(shared),
+        Backend::PhotonicSim(sim),
+    )
+    .with_hook(Box::new(move |backend: &mut Backend| {
+        if let Backend::PhotonicSim(sim) = backend {
+            batches += 1;
+            monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
+        }
+    }))
+}
+
 impl InferenceBackend for DriftBackend {
     fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
         // read the slot once per batch: hot swaps land *between* drained

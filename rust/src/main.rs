@@ -45,7 +45,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
-                 [--model NAME] [--backend digital|photonic] [--size S]"
+                 [--model NAME] [--backend digital|photonic] [--size S] \
+                 [--batch N] [--wait-us US] [--queue-cap N]"
             );
             Ok(())
         }
@@ -130,6 +131,7 @@ fn serve(args: &Args) -> Result<()> {
         BatcherConfig {
             max_batch: args.usize_or("batch", 8),
             max_wait_us: args.usize_or("wait-us", 2000) as u64,
+            queue_cap: args.usize_or("queue-cap", 0),
         },
     );
     let t0 = std::time::Instant::now();

@@ -5,7 +5,7 @@ use std::path::Path;
 use crate::bail;
 use crate::circulant::Bcm;
 use crate::data::Bundle;
-use crate::simulator::ChipSim;
+use crate::simulator::{ChipSim, EncodeSnapshot, EncodedOperand};
 use crate::tensor::{self, Tensor};
 use crate::util::error::{Context, Result};
 use crate::util::scratch;
@@ -194,13 +194,48 @@ impl Engine {
         imgs: &[Tensor],
         backend: &mut Backend,
     ) -> Result<Vec<Vec<f32>>> {
+        // the sequential path IS the staged path run back to back — the
+        // stage split can't drift from it because there is nothing else
+        // to drift from (rust/tests/pipelined_path.rs pins the overlap)
+        let photonic = matches!(backend, Backend::PhotonicSim(_));
+        let pre = self.pre_batch(imgs, photonic, None)?;
+        let mid = self.chip_batch(pre, backend)?;
+        self.post_batch(mid)
+    }
+
+    /// Index of the first conv/fc layer, if any.
+    fn first_linear(&self) -> Option<usize> {
+        self.manifest
+            .layers
+            .iter()
+            .position(|s| matches!(s.kind, LayerKind::Conv | LayerKind::Fc))
+    }
+
+    /// Index of the last conv/fc layer, if any.
+    fn last_linear(&self) -> Option<usize> {
+        self.manifest
+            .layers
+            .iter()
+            .rposition(|s| matches!(s.kind, LayerKind::Conv | LayerKind::Fc))
+    }
+
+    /// **Pre stage** (electronic, chip-free): validate + pack the image
+    /// batch, run every layer before the first linear, and pack the first
+    /// linear's operand (im2col / transpose + activation-scale clamp +
+    /// row padding).  With an [`EncodeSnapshot`] the operand is also
+    /// quantized + Γ-mixed here — the expensive half of a chip pass —
+    /// stamped with the snapshot generation so the chip stage can reject
+    /// it if the chip moved in between.  Touches neither the backend nor
+    /// any engine state, so a pipeline may run it for batch *i+1* while
+    /// batch *i* is still on the chip.
+    pub fn pre_batch(
+        &self,
+        imgs: &[Tensor],
+        photonic: bool,
+        snap: Option<&EncodeSnapshot>,
+    ) -> Result<PreBatch> {
         if imgs.is_empty() {
-            return Ok(Vec::new());
-        }
-        // propagate the engine's worker count into the sim's crossbar /
-        // Γ-encode kernels (results are bit-identical for any value)
-        if let Backend::PhotonicSim(sim) = backend {
-            sim.threads = self.threads;
+            return Ok(PreBatch { state: PreState::Empty });
         }
         let shape = &imgs[0].shape;
         if shape.len() != 3 {
@@ -223,8 +258,77 @@ impl Engine {
             &[b, shape[0], shape[1], shape[2]],
             data,
         ));
-        for (i, spec) in self.manifest.layers.iter().enumerate() {
-            act = self.run_layer(i, spec, act, backend)?;
+        let first = self.first_linear();
+        let stop = first.unwrap_or(self.manifest.layers.len());
+        for idx in 0..stop {
+            act = self.run_electronic_layer(idx, &self.manifest.layers[idx], act)?;
+        }
+        let state = match first {
+            Some(idx)
+                if matches!(self.plans[idx], LayerPlan::Linear(_)) || photonic =>
+            {
+                let prep = self.prep_linear(
+                    idx,
+                    &self.manifest.layers[idx],
+                    act,
+                    photonic,
+                    snap,
+                )?;
+                PreState::Prepped { prep }
+            }
+            // gemm-arch first linear (digital): no operand prep to hoist
+            Some(idx) => PreState::Plain { act, next: idx },
+            None => PreState::Plain { act, next: stop },
+        };
+        Ok(PreBatch { state })
+    }
+
+    /// **Chip stage**: consume a [`PreBatch`], run the span from the
+    /// first through the last linear layer (the chip-occupying window —
+    /// every crossbar pass, plus whatever electronic layers sit between
+    /// linears), and hand back the activation for the post stage.  This
+    /// is the only stage that touches the backend, so batches streaming
+    /// through a pipeline serialize here in FIFO order and the sim's
+    /// pass-count drift clock advances exactly as in the sequential path.
+    pub fn chip_batch(
+        &self,
+        pre: PreBatch,
+        backend: &mut Backend,
+    ) -> Result<MidBatch> {
+        // propagate the engine's worker count into the sim's crossbar /
+        // Γ-encode kernels (results are bit-identical for any value)
+        if let Backend::PhotonicSim(sim) = backend {
+            sim.threads = self.threads;
+        }
+        let (mut act, mut next) = match pre.state {
+            PreState::Empty => {
+                return Ok(MidBatch { state: MidState::Empty });
+            }
+            PreState::Plain { act, next } => (act, next),
+            PreState::Prepped { prep } => {
+                let idx = prep.idx;
+                (self.finish_linear(prep, backend)?, idx + 1)
+            }
+        };
+        let stop = self.last_linear().map(|i| i + 1).unwrap_or(next).max(next);
+        while next < stop {
+            act = self.run_layer(next, &self.manifest.layers[next], act, backend)?;
+            next += 1;
+        }
+        Ok(MidBatch { state: MidState::Act { act, next } })
+    }
+
+    /// **Post stage** (electronic, chip-free): run every layer after the
+    /// last linear and extract per-image logits.  Like the pre stage it
+    /// touches no shared state, so it can overlap the next batch's chip
+    /// passes.
+    pub fn post_batch(&self, mid: MidBatch) -> Result<Vec<Vec<f32>>> {
+        let (mut act, next) = match mid.state {
+            MidState::Empty => return Ok(Vec::new()),
+            MidState::Act { act, next } => (act, next),
+        };
+        for idx in next..self.manifest.layers.len() {
+            act = self.run_electronic_layer(idx, &self.manifest.layers[idx], act)?;
         }
         match act {
             Activation::Matrix(t) => {
@@ -242,165 +346,242 @@ impl Engine {
         act: Activation,
         backend: &mut Backend,
     ) -> Result<Activation> {
-        Ok(match (&self.layers[idx], spec.kind) {
+        match (&self.layers[idx], spec.kind) {
             (LayerState::Linear(wts), LayerKind::Conv) => {
+                if matches!(self.plans[idx], LayerPlan::Linear(_))
+                    || matches!(backend, Backend::PhotonicSim(_))
+                {
+                    // circ layers (and every photonic layer — the circ
+                    // arch requirement is enforced in prep) run the same
+                    // prep/finish pair the staged pipeline uses, so the
+                    // in-line and pipelined paths cannot drift apart
+                    let photonic = matches!(backend, Backend::PhotonicSim(_));
+                    let prep =
+                        self.prep_linear(idx, spec, act, photonic, None)?;
+                    self.finish_linear(prep, backend)
+                } else {
+                    // gemm arch on the digital backend: dense multiply,
+                    // logical dims
+                    let imgs = act.image()?;
+                    let (b, h, w) =
+                        (imgs.shape[0], imgs.shape[2], imgs.shape[3]);
+                    let xm = tensor::im2col_same_batch(&imgs, spec.k);
+                    let dense = wts
+                        .dense
+                        .as_ref()
+                        .context("gemm layer without dense weights")?;
+                    let y = dense.matmul_par(&xm, self.threads);
+                    scratch::put(xm.data);
+                    let out = cols_to_images(&y, b, spec.cout, h, w);
+                    scratch::put(y.data);
+                    Ok(Activation::Image(add_channel_bias_batch(
+                        out, &wts.bias,
+                    )))
+                }
+            }
+            (LayerState::Linear(wts), LayerKind::Fc) => {
+                if matches!(self.plans[idx], LayerPlan::Linear(_))
+                    || matches!(backend, Backend::PhotonicSim(_))
+                {
+                    let photonic = matches!(backend, Backend::PhotonicSim(_));
+                    let prep =
+                        self.prep_linear(idx, spec, act, photonic, None)?;
+                    self.finish_linear(prep, backend)
+                } else {
+                    let x = act.matrix()?; // (b, n)
+                    let b = x.shape[0];
+                    let xt = x.transpose2();
+                    let y = wts
+                        .dense
+                        .as_ref()
+                        .context("gemm layer without dense weights")?
+                        .matmul_par(&xt, self.threads);
+                    // keep logical rows, transpose to (b, cout), add bias
+                    let m = spec.cout.min(y.shape[0]);
+                    let mut out = Tensor::zeros(&[b, m]);
+                    for bi in 0..b {
+                        for r in 0..m {
+                            out.data[bi * m + r] = y.at2(r, bi)
+                                + wts.bias.get(r).copied().unwrap_or(0.0);
+                        }
+                    }
+                    scratch::put(y.data);
+                    Ok(Activation::Matrix(out))
+                }
+            }
+            _ => self.run_electronic_layer(idx, spec, act),
+        }
+    }
+
+    /// Pack linear layer `idx`'s operand from the incoming activation:
+    /// im2col / transpose, the photonic activation-scale clamp, row
+    /// padding to the BCM width, and (given a snapshot) the off-thread
+    /// quantize + Γ-mix.  Pure with respect to the backend — this is the
+    /// half of a linear layer the pipeline's pre stage hoists.
+    fn prep_linear(
+        &self,
+        idx: usize,
+        spec: &LayerSpec,
+        act: Activation,
+        photonic: bool,
+        snap: Option<&EncodeSnapshot>,
+    ) -> Result<LinearPrep> {
+        let (_, lp) = self.linear_plan(idx)?;
+        let (xp, shape) = match spec.kind {
+            LayerKind::Conv => {
                 let imgs = act.image()?;
                 let (b, h, w) =
                     (imgs.shape[0], imgs.shape[2], imgs.shape[3]);
-                let y = match backend {
-                    Backend::Digital => match (&wts.bcm, &self.plans[idx]) {
-                        (Some(bcm), LayerPlan::Linear(lp)) => {
-                            // one multi-column compressed multiply for the
-                            // whole batch (direct or planned Eq. (2) by the
-                            // crossover); rows padded to the BCM width
-                            let xm =
-                                tensor::im2col_same_batch(&imgs, spec.k);
-                            if xm.shape[0] != lp.rows {
-                                bail!(
-                                    "layer {idx}: conv operand rows {} != \
-                                     c·k·k = {} (input channel mismatch)",
-                                    xm.shape[0],
-                                    lp.rows
-                                );
-                            }
-                            let xp = pad_rows_pooled(xm, lp.n_pad);
-                            let y = if self.use_plans {
-                                lp.multiply(bcm, &xp, self.threads)
-                            } else {
-                                lp.multiply_reference(bcm, &xp)
-                            };
-                            scratch::put(xp.data);
-                            y
-                        }
-                        _ => {
-                            // gemm arch: dense multiply, logical dims
-                            let xm =
-                                tensor::im2col_same_batch(&imgs, spec.k);
-                            let dense = wts
-                                .dense
-                                .as_ref()
-                                .context("gemm layer without dense weights")?;
-                            let y = dense.matmul_par(&xm, self.threads);
-                            scratch::put(xm.data);
-                            y
-                        }
-                    },
-                    Backend::PhotonicSim(sim) => {
-                        let (bcm, lp) = self.linear_plan(idx)?;
-                        let xm = tensor::im2col_same_batch(
-                            &imgs.map(|x| {
-                                (x / spec.act_scale).clamp(0.0, 1.0)
-                            }),
-                            spec.k,
-                        );
-                        if xm.shape[0] != lp.rows {
-                            bail!(
-                                "layer {idx}: conv operand rows {} != \
-                                 c·k·k = {} (input channel mismatch)",
-                                xm.shape[0],
-                                lp.rows
-                            );
-                        }
-                        let xp = pad_rows_pooled(xm, lp.n_pad);
-                        let y = if self.use_plans {
-                            // in-place rescale keeps the pooled buffer (same
-                            // op order as the reference's .scale: one extra
-                            // multiply per element after the sign fuse)
-                            let mut y = sim.forward_signed_planned(
-                                self.tile_owner,
-                                idx,
-                                &lp.sign,
-                                &xp,
-                            );
-                            for v in y.data.iter_mut() {
-                                *v *= spec.act_scale;
-                            }
-                            y
-                        } else {
-                            sim.forward_signed(bcm, &xp)
-                                .scale(spec.act_scale)
-                        };
-                        scratch::put(xp.data);
-                        y
-                    }
+                let xm = if photonic {
+                    tensor::im2col_same_batch(
+                        &imgs.map(|x| {
+                            (x / spec.act_scale).clamp(0.0, 1.0)
+                        }),
+                        spec.k,
+                    )
+                } else {
+                    tensor::im2col_same_batch(&imgs, spec.k)
                 };
-                let out = cols_to_images(&y, b, spec.cout, h, w);
-                scratch::put(y.data);
-                Activation::Image(add_channel_bias_batch(out, &wts.bias))
+                if xm.shape[0] != lp.rows {
+                    bail!(
+                        "layer {idx}: conv operand rows {} != \
+                         c·k·k = {} (input channel mismatch)",
+                        xm.shape[0],
+                        lp.rows
+                    );
+                }
+                (pad_rows_pooled(xm, lp.n_pad), PrepShape::Conv { b, h, w })
             }
-            (LayerState::Linear(wts), LayerKind::Fc) => {
+            LayerKind::Fc => {
                 let x = act.matrix()?; // (b, n)
                 let b = x.shape[0];
-                let y = match backend {
-                    Backend::Digital => match (&wts.bcm, &self.plans[idx]) {
-                        (Some(bcm), LayerPlan::Linear(lp)) => {
-                            let n = x.shape[1];
-                            // the digital path keeps the dense-matmul-era
-                            // strictness: exact logical width, no silent
-                            // zero-padding of a malformed operand
-                            if n != lp.rows {
-                                bail!(
-                                    "layer {idx}: fc input width {n} != \
-                                     manifest cin {}",
-                                    lp.rows
-                                );
-                            }
-                            // (m, b): column j is image j, same per-column
-                            // accumulation order as the per-image multiply
-                            let xp = pad_rows_pooled(x.transpose2(), lp.n_pad);
-                            let y = if self.use_plans {
-                                lp.multiply(bcm, &xp, self.threads)
-                            } else {
-                                lp.multiply_reference(bcm, &xp)
-                            };
-                            scratch::put(xp.data);
-                            y
-                        }
-                        _ => {
-                            let xt = x.transpose2();
-                            wts.dense
-                                .as_ref()
-                                .context("gemm layer without dense weights")?
-                                .matmul_par(&xt, self.threads)
-                        }
-                    },
-                    Backend::PhotonicSim(sim) => {
-                        let n = x.shape[1];
-                        let (bcm, lp) = self.linear_plan(idx)?;
-                        if n > lp.n_pad {
-                            bail!(
-                                "layer {idx}: fc input width {n} exceeds \
-                                 padded BCM width {}",
-                                lp.n_pad
-                            );
-                        }
-                        let s = spec.act_scale;
-                        let mut xp =
-                            Tensor::new(&[lp.n_pad, b], scratch::take(lp.n_pad * b));
-                        for bi in 0..b {
-                            for i in 0..n {
-                                xp.data[i * b + bi] =
-                                    (x.at2(bi, i) / s).clamp(0.0, 1.0);
-                            }
-                        }
-                        let y = if self.use_plans {
-                            let mut y = sim.forward_signed_planned(
-                                self.tile_owner,
-                                idx,
-                                &lp.sign,
-                                &xp,
-                            );
-                            for v in y.data.iter_mut() {
-                                *v *= s;
-                            }
-                            y
-                        } else {
-                            sim.forward_signed(bcm, &xp).scale(s)
-                        };
-                        scratch::put(xp.data);
-                        y
+                let n = x.shape[1];
+                if photonic {
+                    if n > lp.n_pad {
+                        bail!(
+                            "layer {idx}: fc input width {n} exceeds \
+                             padded BCM width {}",
+                            lp.n_pad
+                        );
                     }
+                    let s = spec.act_scale;
+                    let mut xp = Tensor::new(
+                        &[lp.n_pad, b],
+                        scratch::take(lp.n_pad * b),
+                    );
+                    for bi in 0..b {
+                        for i in 0..n {
+                            xp.data[i * b + bi] =
+                                (x.at2(bi, i) / s).clamp(0.0, 1.0);
+                        }
+                    }
+                    (xp, PrepShape::Fc { b })
+                } else {
+                    // the digital path keeps the dense-matmul-era
+                    // strictness: exact logical width, no silent
+                    // zero-padding of a malformed operand
+                    if n != lp.rows {
+                        bail!(
+                            "layer {idx}: fc input width {n} != \
+                             manifest cin {}",
+                            lp.rows
+                        );
+                    }
+                    // (m, b): column j is image j, same per-column
+                    // accumulation order as the per-image multiply
+                    (
+                        pad_rows_pooled(x.transpose2(), lp.n_pad),
+                        PrepShape::Fc { b },
+                    )
+                }
+            }
+            _ => bail!("layer {idx}: prep_linear on a non-linear layer"),
+        };
+        // optimistic pre-encode: only worth stamping on the planned
+        // photonic path (the chip re-validates the generation per pass)
+        let enc = match snap {
+            Some(snap) if photonic && self.use_plans => {
+                Some(snap.encode_operand(&xp, self.threads))
+            }
+            _ => None,
+        };
+        Ok(LinearPrep { idx, photonic, xp, enc, shape })
+    }
+
+    /// Execute linear layer `idx` from its packed operand: the backend
+    /// multiply (the chip's sign-split pass pair on the photonic path,
+    /// consuming a still-valid pre-encode if the prep carries one), the
+    /// activation rescale, and the reshape + bias back into an
+    /// activation.  The only half of a linear layer that touches the
+    /// backend — the pipeline's chip stage.
+    fn finish_linear(
+        &self,
+        prep: LinearPrep,
+        backend: &mut Backend,
+    ) -> Result<Activation> {
+        let LinearPrep { idx, photonic, xp, enc, shape } = prep;
+        let spec = &self.manifest.layers[idx];
+        let wts = match &self.layers[idx] {
+            LayerState::Linear(w) => w,
+            _ => bail!("layer {idx}: finish_linear on a non-linear layer"),
+        };
+        let (bcm, lp) = self.linear_plan(idx)?;
+        let y = match backend {
+            Backend::Digital => {
+                if photonic {
+                    bail!(
+                        "layer {idx}: photonic operand prep handed to a \
+                         digital backend"
+                    );
+                }
+                let y = if self.use_plans {
+                    lp.multiply(bcm, &xp, self.threads)
+                } else {
+                    lp.multiply_reference(bcm, &xp)
                 };
+                scratch::put(xp.data);
+                y
+            }
+            Backend::PhotonicSim(sim) => {
+                if !photonic {
+                    bail!(
+                        "layer {idx}: digital operand prep handed to a \
+                         photonic backend"
+                    );
+                }
+                let s = spec.act_scale;
+                let y = if self.use_plans {
+                    // in-place rescale keeps the pooled buffer (same
+                    // op order as the reference's .scale: one extra
+                    // multiply per element after the sign fuse)
+                    let mut y = sim.forward_signed_planned_enc(
+                        self.tile_owner,
+                        idx,
+                        &lp.sign,
+                        &xp,
+                        enc.as_ref(),
+                    );
+                    for v in y.data.iter_mut() {
+                        *v *= s;
+                    }
+                    y
+                } else {
+                    sim.forward_signed(bcm, &xp).scale(s)
+                };
+                scratch::put(xp.data);
+                y
+            }
+        };
+        if let Some(enc) = enc {
+            enc.recycle();
+        }
+        match shape {
+            PrepShape::Conv { b, h, w } => {
+                let out = cols_to_images(&y, b, spec.cout, h, w);
+                scratch::put(y.data);
+                Ok(Activation::Image(add_channel_bias_batch(out, &wts.bias)))
+            }
+            PrepShape::Fc { b } => {
                 // keep logical rows, transpose back to (b, cout), add bias
                 let m = spec.cout.min(y.shape[0]);
                 let mut out = Tensor::zeros(&[b, m]);
@@ -411,8 +592,20 @@ impl Engine {
                     }
                 }
                 scratch::put(y.data);
-                Activation::Matrix(out)
+                Ok(Activation::Matrix(out))
             }
+        }
+    }
+
+    /// Run a non-linear (chip-free) layer — the arms shared by the pre
+    /// and post stages and [`Engine::run_layer`].
+    fn run_electronic_layer(
+        &self,
+        idx: usize,
+        spec: &LayerSpec,
+        act: Activation,
+    ) -> Result<Activation> {
+        Ok(match (&self.layers[idx], spec.kind) {
             (LayerState::Bn(bn), LayerKind::Bn) => {
                 Activation::Image(tensor::batchnorm_batch(
                     &act.image()?,
@@ -458,6 +651,55 @@ impl Engine {
             _ => bail!("photonic path needs circ arch"),
         }
     }
+}
+
+/// Output of [`Engine::pre_batch`]: a validated, packed batch with the
+/// prefix layers run and (when the network leads with a planned linear)
+/// the first linear's operand packed — everything that can happen before
+/// the backend is needed.  Opaque hand-off token between the pre and
+/// chip stages; plain owned tensors, so it crosses threads freely.
+pub struct PreBatch {
+    state: PreState,
+}
+
+enum PreState {
+    /// empty input batch: flows through to empty logits
+    Empty,
+    /// prefix ran; the chip stage resumes the layer walk at `next`
+    /// (either the network has no planned first linear or none at all)
+    Plain { act: Activation, next: usize },
+    /// prefix ran and the first linear's operand is packed (and possibly
+    /// pre-encoded against an [`EncodeSnapshot`])
+    Prepped { prep: LinearPrep },
+}
+
+/// Output of [`Engine::chip_batch`]: the activation after the last
+/// linear layer, ready for the chip-free post stage.
+pub struct MidBatch {
+    state: MidState,
+}
+
+enum MidState {
+    Empty,
+    Act { act: Activation, next: usize },
+}
+
+/// A linear layer's packed operand, between prep and execution.
+struct LinearPrep {
+    idx: usize,
+    /// packed for the photonic path (activation-scale clamp applied)?
+    /// Must match the backend handed to [`Engine::finish_linear`].
+    photonic: bool,
+    xp: Tensor,
+    /// optimistic off-thread operand encode, generation-stamped; the
+    /// chip re-validates per pass and falls back to in-line encoding
+    enc: Option<EncodedOperand>,
+    shape: PrepShape,
+}
+
+enum PrepShape {
+    Conv { b: usize, h: usize, w: usize },
+    Fc { b: usize },
 }
 
 /// Batch-major activation flowing between layers: the whole batch rides in
@@ -756,6 +998,73 @@ mod tests {
             // 2 linear layers × 2 sign halves, encoded once — not per batch
             assert_eq!(sim.encodes_done, 4);
             assert_eq!(sim.cached_tiles(), 4);
+        }
+    }
+
+    #[test]
+    fn staged_pre_chip_post_composes_to_forward_batch() {
+        // the stage split IS the sequential path; running the stages by
+        // hand must reproduce forward_batch exactly on both backends
+        let e = tiny_engine();
+        let imgs = distinct_inputs(4);
+        let want_dig =
+            e.forward_batch(&imgs, &mut Backend::Digital).unwrap();
+        let pre = e.pre_batch(&imgs, false, None).unwrap();
+        let mut be = Backend::Digital;
+        let mid = e.chip_batch(pre, &mut be).unwrap();
+        assert_eq!(e.post_batch(mid).unwrap(), want_dig);
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.015;
+        let want_pho = e
+            .forward_batch(
+                &imgs,
+                &mut Backend::PhotonicSim(ChipSim::deterministic(
+                    desc.clone(),
+                )),
+            )
+            .unwrap();
+        let pre = e.pre_batch(&imgs, true, None).unwrap();
+        let mut be = Backend::PhotonicSim(ChipSim::deterministic(desc));
+        let mid = e.chip_batch(pre, &mut be).unwrap();
+        assert_eq!(e.post_batch(mid).unwrap(), want_pho);
+        // and the empty batch flows through the stages to empty logits
+        let pre = e.pre_batch(&[], true, None).unwrap();
+        let mid = e.chip_batch(pre, &mut be).unwrap();
+        assert!(e.post_batch(mid).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pre_encoded_first_linear_is_bit_identical_and_engages() {
+        let e = tiny_engine();
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.015;
+        let imgs = distinct_inputs(3);
+        let want = e
+            .forward_batch(
+                &imgs,
+                &mut Backend::PhotonicSim(ChipSim::deterministic(
+                    desc.clone(),
+                )),
+            )
+            .unwrap();
+        let mut be = Backend::PhotonicSim(ChipSim::deterministic(desc));
+        let snap = match &be {
+            Backend::PhotonicSim(sim) => sim.encode_snapshot(),
+            Backend::Digital => unreachable!(),
+        };
+        let pre = e.pre_batch(&imgs, true, Some(&snap)).unwrap();
+        let mid = e.chip_batch(pre, &mut be).unwrap();
+        assert_eq!(e.post_batch(mid).unwrap(), want);
+        if let Backend::PhotonicSim(sim) = &be {
+            assert_eq!(
+                sim.pre_hits, 2,
+                "first linear's sign pair must consume the pre-encode"
+            );
+            assert_eq!(sim.pre_stale, 0);
         }
     }
 

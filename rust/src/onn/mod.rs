@@ -15,5 +15,5 @@ pub mod engine;
 pub mod manifest;
 pub mod plan;
 
-pub use engine::{Backend, Engine};
+pub use engine::{Backend, Engine, MidBatch, PreBatch};
 pub use manifest::{LayerKind, LayerSpec, Manifest};

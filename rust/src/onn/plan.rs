@@ -22,6 +22,18 @@
 //! [`crate::simulator::ChipSim::forward_signed`]); `Engine::use_plans =
 //! false` re-routes the whole engine through the reference calls so the
 //! propcheck suite can pin the equivalence end to end.
+//!
+//! **Stage-pipeline contract** ([`crate::coordinator::pipeline`]): plans
+//! are immutable after `Engine::from_parts`, so the pre / chip / post
+//! lanes of the pipelined worker all read them through the same
+//! `Arc<Engine>` without locks — the pre lane packs operands against the
+//! plan geometry (`rows`, `n_pad`) and pre-encodes against a chip
+//! snapshot while the chip lane streams the previous batch.  The
+//! generation stamp on the snapshot (plus the tile-owner id above) is
+//! what keeps that speculation safe: a drift tick or hot swap simply
+//! invalidates the stamp and the chip re-encodes inline.  `LinearPlan`
+//! being `Sync` is load-bearing; `tests::plans_are_shareable_across_
+//! stage_lanes` turns a regression into a compile error.
 
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::Arc;
@@ -107,6 +119,16 @@ mod tests {
         let mut w = vec![0.0f32; p * q * l];
         r.fill_uniform(&mut w);
         Bcm::new(p, q, l, w)
+    }
+
+    #[test]
+    fn plans_are_shareable_across_stage_lanes() {
+        // the pipelined worker's pre and chip lanes read the same
+        // Arc<Engine> (hence the same LinearPlan) concurrently; this
+        // fails to compile if a plan field ever loses Send + Sync
+        fn assert_lane_shareable<T: Send + Sync>() {}
+        assert_lane_shareable::<LinearPlan>();
+        assert_lane_shareable::<LayerPlan>();
     }
 
     #[test]

@@ -171,6 +171,12 @@ pub struct ChipSim {
     /// explicit [`ChipSim::invalidate_encodings`])
     enc_generation: u64,
     enc_cache: EncodeCache,
+    /// pipelined-path observability: passes that accepted a pre-encoded
+    /// operand ([`EncodedOperand`]) because its generation still matched
+    pub pre_hits: u64,
+    /// passes handed a pre-encoded operand that had gone stale (drift
+    /// tick or invalidation since the snapshot) and re-encoded in line
+    pub pre_stale: u64,
 }
 
 /// Pre-encoded weight tiles keyed by `(owner, layer slot, sign half)`.
@@ -188,6 +194,135 @@ struct EncodeCache {
 /// retires generations, so bound the map instead of tracking liveness.
 const ENC_CACHE_CAP: usize = 256;
 
+/// Drift-generation-stamped snapshot of the operand-encode parameters
+/// (input quantizer + crosstalk operator Γ).  The pipelined serving path
+/// ([`crate::coordinator::pipeline`]) hands one to its *pre* stage so
+/// batch *i+1*'s operand can be Γ-mixed on an electronic thread while
+/// batch *i* streams through the crossbar.  The stamp is what keeps the
+/// overlap bit-identical: a [`ChipSim`] only accepts a pre-encoded
+/// operand whose generation still matches its own (checked per pass —
+/// a drift tick between the two sign-split passes retires the snapshot
+/// mid-pair), falling back to the exact in-line encode otherwise.
+#[derive(Clone, Debug)]
+pub struct EncodeSnapshot {
+    xq: Quantizer,
+    gamma: Vec<f32>,
+    l: usize,
+    generation: u64,
+}
+
+impl EncodeSnapshot {
+    /// The [`ChipSim`] encode generation this snapshot was taken under.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Encode an operand off-thread: quantize + Γ-mix exactly as the
+    /// chip's in-line path would (same kernel, same thread split rules,
+    /// bit-identical for any `threads`).  Draws from the *calling*
+    /// thread's scratch arena.
+    pub fn encode_operand(&self, x: &Tensor, threads: usize) -> EncodedOperand {
+        let xenc = encode_operand(&self.xq, &self.gamma, self.l, x, threads, true);
+        EncodedOperand {
+            xenc: Tensor::new(&[x.shape[0], x.shape[1]], xenc),
+            generation: self.generation,
+        }
+    }
+}
+
+/// An operand already quantized + Γ-mixed against a specific encode
+/// generation (see [`EncodeSnapshot`]).  Reused for *both* sign-split
+/// passes of a layer — the in-line encode is deterministic, so encoding
+/// once is bit-identical to the sequential path's encode-per-pass.
+#[derive(Debug)]
+pub struct EncodedOperand {
+    xenc: Tensor,
+    generation: u64,
+}
+
+impl EncodedOperand {
+    /// The encode generation this operand was Γ-mixed under.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Return the encoded buffer to the calling thread's scratch arena.
+    pub fn recycle(self) {
+        scratch::put(self.xenc.data);
+    }
+}
+
+/// Operand (input) encoding: quantize then Γ mixing within each l-block.
+/// Depends only on (`x`, Γ, the input quantizer) — independent of the
+/// weights, the RNG stream and every per-pass counter, which is what
+/// lets a pipelined pre stage compute it off-thread ([`EncodeSnapshot`])
+/// bit-identically to the in-line path.
+///
+/// Row-contiguous SAXPY form (EXPERIMENTS.md §Perf): quantize each
+/// input row once, then accumulate Γ-weighted rows — batch-stride-1
+/// throughout instead of the naive per-(col, channel) gather.
+/// For very wide batches the destination rows are distributed
+/// across scoped workers ([`crate::util::threadpool::scoped_chunks`],
+/// like the crossbar matmul): each row (qb·l + i) is filled by
+/// exactly one thread in the same j-order as the serial loop, so
+/// any thread count is bit-identical; below the madd threshold the
+/// single-thread fallback runs the identical serial path.
+fn encode_operand(
+    xq: &Quantizer,
+    gamma: &[f32],
+    l: usize,
+    x: &Tensor,
+    threads: usize,
+    pooled: bool,
+) -> Vec<f32> {
+    let b = x.shape[1];
+    let mut xqbuf = if pooled {
+        let mut buf = scratch::take(x.data.len());
+        buf.copy_from_slice(&x.data);
+        buf
+    } else {
+        x.data.clone()
+    };
+    xq.q_slice(&mut xqbuf);
+    let mut xenc = if pooled {
+        scratch::take(x.data.len())
+    } else {
+        vec![0.0f32; x.data.len()]
+    };
+    let q_blocks = x.shape[0] / l;
+    if b > 0 {
+        let enc_madds = q_blocks * l * l * b;
+        let enc_threads = if q_blocks >= 2 && enc_madds >= (1 << 19) {
+            threads.min(q_blocks * l)
+        } else {
+            1
+        };
+        crate::util::threadpool::scoped_chunks(
+            enc_threads,
+            &mut xenc,
+            b,
+            |row, dst| {
+                let i = row % l;
+                let base = row - i;
+                for j in 0..l {
+                    let g = gamma[i * l + j];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    let src = &xqbuf[(base + j) * b..(base + j + 1) * b];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d += g * s;
+                    }
+                }
+            },
+        );
+    }
+    if pooled {
+        scratch::put(xqbuf);
+    }
+    xenc
+}
+
 impl ChipSim {
     pub fn new(desc: ChipDescription) -> ChipSim {
         ChipSim {
@@ -203,6 +338,8 @@ impl ChipSim {
             encodes_done: 0,
             enc_generation: 0,
             enc_cache: EncodeCache::default(),
+            pre_hits: 0,
+            pre_stale: 0,
         }
     }
 
@@ -245,75 +382,36 @@ impl ChipSim {
     fn forward_encoded(&mut self, wenc: &Bcm, x: &Tensor, pooled: bool) -> Tensor {
         assert_eq!(wenc.l, self.desc.l, "block order mismatch with chip");
         assert_eq!(x.shape[0], wenc.n());
-        let l = self.desc.l;
-        let b = x.shape[1];
-
-        // input encoding: quantize then Γ mixing within each l-block.
-        // Row-contiguous SAXPY form (EXPERIMENTS.md §Perf): quantize each
-        // input row once, then accumulate Γ-weighted rows — batch-stride-1
-        // throughout instead of the naive per-(col, channel) gather.
-        // For very wide batches the destination rows are distributed
-        // across scoped workers ([`crate::util::threadpool::scoped_chunks`],
-        // like the crossbar matmul): each row (qb·l + i) is filled by
-        // exactly one thread in the same j-order as the serial loop, so
-        // any thread count is bit-identical; below the madd threshold the
-        // single-thread fallback runs the identical serial path.
-        let mut xq = if pooled {
-            let mut buf = scratch::take(x.data.len());
-            buf.copy_from_slice(&x.data);
-            buf
-        } else {
-            x.data.clone()
-        };
-        self.xq.q_slice(&mut xq);
-        let mut xenc = if pooled {
-            scratch::take(x.data.len())
-        } else {
-            vec![0.0f32; x.data.len()]
-        };
-        let q_blocks = wenc.n() / l;
-        if b > 0 {
-            let enc_madds = q_blocks * l * l * b;
-            let enc_threads = if q_blocks >= 2 && enc_madds >= (1 << 19) {
-                self.threads.min(q_blocks * l)
-            } else {
-                1
-            };
-            let gamma = &self.desc.gamma;
-            crate::util::threadpool::scoped_chunks(
-                enc_threads,
-                &mut xenc,
-                b,
-                |row, dst| {
-                    let i = row % l;
-                    let base = row - i;
-                    for j in 0..l {
-                        let g = gamma[i * l + j];
-                        if g == 0.0 {
-                            continue;
-                        }
-                        let src = &xq[(base + j) * b..(base + j + 1) * b];
-                        for (d, &s) in dst.iter_mut().zip(src) {
-                            *d += g * s;
-                        }
-                    }
-                },
-            );
+        let xenc = encode_operand(
+            &self.xq,
+            &self.desc.gamma,
+            self.desc.l,
+            x,
+            self.threads,
+            pooled,
+        );
+        let xenc = Tensor::new(&[wenc.n(), x.shape[1]], xenc);
+        let y = self.crossbar_pass(wenc, &xenc, pooled);
+        if pooled {
+            scratch::put(xenc.data);
         }
-        let xenc = Tensor::new(&[wenc.n(), b], xenc);
+        y
+    }
 
-        // crossbar matmul + dark + noise
+    /// One detection event over an already-encoded weight tile and an
+    /// already-encoded operand: crossbar matmul + dark + noise + the
+    /// pass/tile/drift bookkeeping.  Everything that must serialize on
+    /// the chip (RNG draws, the pass-count drift clock) lives here, so
+    /// the pipelined path can move the operand encode off-thread while
+    /// this stays the single ordered "chip time" step.
+    fn crossbar_pass(&mut self, wenc: &Bcm, xenc: &Tensor, pooled: bool) -> Tensor {
+        let b = xenc.shape[1];
         let mut ybuf = if pooled {
             scratch::take(wenc.m() * b)
         } else {
             vec![0.0f32; wenc.m() * b]
         };
-        wenc.mmm_into(&xenc, self.threads, &mut ybuf);
-        if pooled {
-            let Tensor { data: xenc_buf, .. } = xenc;
-            scratch::put(xenc_buf);
-            scratch::put(xq);
-        }
+        wenc.mmm_into(xenc, self.threads, &mut ybuf);
         let (dark, srel, sabs) =
             (self.desc.dark, self.desc.sigma_rel, self.desc.sigma_abs);
         for v in ybuf.iter_mut() {
@@ -369,6 +467,25 @@ impl ChipSim {
         w: &Bcm,
         x: &Tensor,
     ) -> Tensor {
+        self.forward_planned_enc(owner, slot, negative, w, x, None)
+    }
+
+    /// Planned pass that can additionally consume a pre-encoded operand
+    /// from a pipelined pre stage.  The snapshot generation is checked
+    /// *per pass*: a pre-encode is only trusted while the chip's Γ /
+    /// quantizer state is exactly what [`ChipSim::encode_snapshot`]
+    /// captured (a drift tick between the two sign-split passes retires
+    /// it mid-pair); anything stale falls back to the in-line encode, so
+    /// every path stays bit-identical to [`ChipSim::forward`].
+    pub fn forward_planned_enc(
+        &mut self,
+        owner: u64,
+        slot: usize,
+        negative: bool,
+        w: &Bcm,
+        x: &Tensor,
+        pre: Option<&EncodedOperand>,
+    ) -> Tensor {
         assert_eq!(w.l, self.desc.l, "block order mismatch with chip");
         if self.enc_cache.generation != self.enc_generation {
             self.enc_cache.tiles.clear();
@@ -387,7 +504,21 @@ impl ChipSim {
                 tile
             }
         };
-        self.forward_encoded(&wenc, x, true)
+        match pre {
+            Some(p)
+                if p.generation == self.enc_generation
+                    && p.xenc.shape[0] == wenc.n()
+                    && p.xenc.shape[1] == x.shape[1] =>
+            {
+                self.pre_hits += 1;
+                self.crossbar_pass(&wenc, &p.xenc, true)
+            }
+            Some(_) => {
+                self.pre_stale += 1;
+                self.forward_encoded(&wenc, x, true)
+            }
+            None => self.forward_encoded(&wenc, x, true),
+        }
     }
 
     /// Planned sign-split matmul over a pre-split layer
@@ -401,13 +532,40 @@ impl ChipSim {
         sign: &SignSplit,
         x: &Tensor,
     ) -> Tensor {
-        let mut y = self.forward_planned(owner, slot, false, &sign.pos, x);
-        let yn = self.forward_planned(owner, slot, true, &sign.neg, x);
+        self.forward_signed_planned_enc(owner, slot, sign, x, None)
+    }
+
+    /// Sign-split planned matmul with an optional pre-encoded operand.
+    /// The *same* pre-encode serves both halves — the in-line operand
+    /// encode is deterministic, so encoding once off-thread is
+    /// bit-identical to the sequential encode-per-pass (each pass still
+    /// re-validates the generation; see [`ChipSim::forward_planned_enc`]).
+    pub fn forward_signed_planned_enc(
+        &mut self,
+        owner: u64,
+        slot: usize,
+        sign: &SignSplit,
+        x: &Tensor,
+        pre: Option<&EncodedOperand>,
+    ) -> Tensor {
+        let mut y = self.forward_planned_enc(owner, slot, false, &sign.pos, x, pre);
+        let yn = self.forward_planned_enc(owner, slot, true, &sign.neg, x, pre);
         for (a, b) in y.data.iter_mut().zip(&yn.data) {
             *a = (*a - *b) * sign.scale;
         }
         scratch::put(yn.data);
         y
+    }
+
+    /// Snapshot the operand-encode parameters at the current encode
+    /// generation, for a pipelined pre stage ([`EncodeSnapshot`]).
+    pub fn encode_snapshot(&self) -> EncodeSnapshot {
+        EncodeSnapshot {
+            xq: self.xq,
+            gamma: self.desc.gamma.clone(),
+            l: self.desc.l,
+            generation: self.enc_generation,
+        }
     }
 
     /// Retire every cached pre-encoded tile.  Call after mutating
@@ -941,6 +1099,96 @@ mod tests {
         sim.forward_signed_planned(12, 0, &sign, &x);
         assert_eq!(sim.encodes_done, 4, "new owner must re-encode");
         assert_eq!(sim.cached_tiles(), 4, "old + new owner tiles parked");
+    }
+
+    #[test]
+    fn pre_encoded_operand_is_bit_identical_and_counted() {
+        let d = nonideal_chip();
+        let w = rand_bcm(2, 3, 4, 81);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(12, 5, 82);
+        let mut seq = ChipSim::deterministic(d.clone());
+        let mut pip = ChipSim::deterministic(d);
+        let y0 = seq.forward_signed_planned(21, 0, &sign, &x);
+        let snap = pip.encode_snapshot();
+        let pre = snap.encode_operand(&x, 1);
+        let y1 = pip.forward_signed_planned_enc(21, 0, &sign, &x, Some(&pre));
+        pre.recycle();
+        assert_eq!(y0.data, y1.data, "pre-encoded pass must be bit-identical");
+        assert_eq!(pip.pre_hits, 2, "both sign passes reuse the pre-encode");
+        assert_eq!(pip.pre_stale, 0);
+        assert_eq!(seq.passes(), pip.passes());
+        assert_eq!(seq.tiles_executed, pip.tiles_executed);
+    }
+
+    #[test]
+    fn stale_pre_encode_falls_back_to_inline_reencode() {
+        let d = nonideal_chip();
+        let w = rand_bcm(2, 2, 4, 83);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 3, 84);
+        let mut sim = ChipSim::deterministic(d.clone());
+        let snap = sim.encode_snapshot();
+        let pre = snap.encode_operand(&x, 1);
+        sim.desc.resp[2] = 0.7; // chip moved between snapshot and use
+        sim.invalidate_encodings();
+        let y = sim.forward_signed_planned_enc(25, 0, &sign, &x, Some(&pre));
+        pre.recycle();
+        assert_eq!(sim.pre_hits, 0);
+        assert_eq!(sim.pre_stale, 2, "both passes must reject the stale operand");
+        let mut twin = ChipSim::deterministic({
+            let mut d2 = d;
+            d2.resp[2] = 0.7;
+            d2
+        });
+        let want = twin.forward_signed(&w, &x);
+        assert_eq!(y.data, want.data, "fallback must see the post-move chip");
+    }
+
+    #[test]
+    fn drift_tick_between_sign_passes_retires_pre_encode_mid_pair() {
+        // passes_per_tick = 1: the positive pass ticks drift, so the
+        // negative pass must re-encode against the walked Γ instead of
+        // trusting the snapshot — exactly what the sequential path does.
+        let d = nonideal_chip();
+        let w = rand_bcm(2, 2, 4, 85);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 3, 86);
+        let want = {
+            let mut s = ChipSim::deterministic(d.clone());
+            s.set_drift(DriftModel::new(accel_drift(29)));
+            s.forward_signed_planned(26, 0, &sign, &x).data
+        };
+        let mut sim = ChipSim::deterministic(d);
+        sim.set_drift(DriftModel::new(accel_drift(29)));
+        let snap = sim.encode_snapshot();
+        let pre = snap.encode_operand(&x, 1);
+        let y = sim.forward_signed_planned_enc(26, 0, &sign, &x, Some(&pre));
+        pre.recycle();
+        assert_eq!(y.data, want, "mid-pair drift tick must force a re-encode");
+        assert_eq!(sim.pre_hits, 1, "positive pass ran at the snapshot generation");
+        assert_eq!(sim.pre_stale, 1, "negative pass saw the post-tick Γ");
+    }
+
+    #[test]
+    fn noisy_pre_encode_consumes_the_same_rng_stream() {
+        let mut d = nonideal_chip();
+        d.sigma_rel = 0.01;
+        d.sigma_abs = 0.005;
+        d.seed = 123;
+        let w = rand_bcm(2, 2, 4, 87);
+        let sign = SignSplit::of(&w);
+        let x = rand_x(8, 3, 88);
+        let mut seq = ChipSim::new(d.clone());
+        let mut pip = ChipSim::new(d);
+        for _ in 0..3 {
+            let y0 = seq.forward_signed_planned(27, 0, &sign, &x);
+            let snap = pip.encode_snapshot();
+            let pre = snap.encode_operand(&x, 4);
+            let y1 = pip.forward_signed_planned_enc(27, 0, &sign, &x, Some(&pre));
+            pre.recycle();
+            assert_eq!(y0.data, y1.data, "operand encode must not draw RNG");
+        }
     }
 
     #[test]

@@ -155,6 +155,24 @@ where
     });
 }
 
+/// Spawn a named thread inside a [`std::thread::scope`].  The pipeline
+/// executor's pre/post stages borrow stage channels and the snapshot slot
+/// from the executor's stack frame, so they must be scoped (non-`'static`)
+/// — and named, so stalls show up attributably in thread dumps.
+pub fn spawn_scoped_named<'scope, 'env, F>(
+    scope: &'scope thread::Scope<'scope, 'env>,
+    name: &str,
+    f: F,
+) -> thread::ScopedJoinHandle<'scope, ()>
+where
+    F: FnOnce() + Send + 'scope,
+{
+    thread::Builder::new()
+        .name(name.to_string())
+        .spawn_scoped(scope, f)
+        .expect("spawn scoped thread")
+}
+
 /// Global chunked-work counter useful for progress metrics in benches.
 pub struct WorkCounter(AtomicUsize);
 

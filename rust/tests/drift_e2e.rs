@@ -19,11 +19,12 @@ use std::time::{Duration, Instant};
 
 use cirptc::coordinator::{
     BackendFactory, BatcherConfig, Coordinator, InferenceBackend, Metrics,
+    StagedFactory,
 };
 use cirptc::data::datasets::{self, SHAPES_MANIFEST_JSON, Split};
 use cirptc::drift::{
-    DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
-    MonitorConfig, RecalConfig, Recalibrator, RecalRequest,
+    staged_drift, DriftBackend, DriftConfig, DriftModel, DriftMonitor,
+    DriftShared, MonitorConfig, RecalConfig, Recalibrator, RecalRequest,
 };
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::simulator::{ChipDescription, ChipSim};
@@ -141,7 +142,80 @@ fn drift_factory(
 }
 
 fn batcher() -> BatcherConfig {
-    BatcherConfig { max_batch: CHUNK, max_wait_us: 20_000 }
+    BatcherConfig { max_batch: CHUNK, max_wait_us: 20_000, queue_cap: 0 }
+}
+
+#[test]
+fn pipelined_drift_serving_probes_and_drops_nothing() {
+    // the *pipelined* coordinator under a drifting, monitored chip: the
+    // monitor rides the chip-stage hook, probe passes interleave with
+    // traffic exactly as in the sequential DriftBackend, and no request
+    // is dropped or failed while the chip walks — the stage split's
+    // zero-drop guarantee under drift.  (Full recalibration recovery is
+    // pinned sequentially below; hot swaps through the pipeline are
+    // pinned bit-identically in rust/tests/pipelined_path.rs.)
+    let manifest = Manifest::parse(SHAPES_MANIFEST_JSON).unwrap();
+    let eval_split = datasets::synth_shapes(64, 0xB3);
+    // accuracy is not under test here, so an untrained model keeps this
+    // variant cheap; the drift/probe/accounting machinery is identical
+    let model = TrainModel::init(manifest.clone(), 0xB4).unwrap();
+    let bundle = model.export_bundle();
+    let metrics = Arc::new(Metrics::default());
+    let engine = Engine::from_parts(manifest, &bundle).unwrap();
+    let shared = DriftShared::new(engine, Arc::clone(&metrics));
+    let (tx, rx) = mpsc::channel();
+    drop(rx); // monitor-only: probes + metrics, no recalibrator
+    let mcfg = MonitorConfig {
+        probe_every: 1,
+        residual_trigger: f32::INFINITY,
+        cooldown_passes: 0,
+        ..MonitorConfig::default()
+    };
+    let staged: StagedFactory = {
+        let shared = Arc::clone(&shared);
+        Box::new(move || {
+            let desc = chip0();
+            let mut sim = ChipSim::deterministic(desc.clone());
+            sim.set_drift(DriftModel::new(drift_cfg()));
+            let monitor = DriftMonitor::new(mcfg, &desc);
+            staged_drift(shared, sim, monitor, tx)
+        })
+    };
+    let coord = Coordinator::start_pipelined_with_metrics(
+        vec![staged],
+        // admission control armed, but bounded well above the in-flight
+        // ceiling: the zero-drop claim covers every accepted request
+        BatcherConfig {
+            max_batch: CHUNK,
+            max_wait_us: 20_000,
+            queue_cap: 1024,
+        },
+        Arc::clone(&metrics),
+    );
+    let mut rounds = 0;
+    while metrics.drift_ticks.get() < PLATEAU_TICKS {
+        serve_round(&coord, &eval_split);
+        rounds += 1;
+        assert!(rounds <= 24, "drift clock must reach the plateau");
+    }
+    assert_eq!(metrics.errors.get(), 0, "no request may fail");
+    assert_eq!(metrics.rejected.get(), 0, "nothing sheds below the cap");
+    assert_eq!(
+        metrics.completed.get(),
+        metrics.submitted.get(),
+        "every accepted request must complete"
+    );
+    assert!(metrics.probes.get() > 0, "probes must interleave with traffic");
+    assert!(
+        metrics.last_probe_residual_ppm.get() > 0,
+        "the walking chip must show a residual: {}",
+        metrics.summary()
+    );
+    // all three lanes ran and were timed
+    assert!(metrics.stage_pre_us.count() > 0);
+    assert_eq!(metrics.stage_chip_us.count(), metrics.stage_pre_us.count());
+    assert_eq!(metrics.stage_post_us.count(), metrics.stage_pre_us.count());
+    drop(coord);
 }
 
 #[test]

@@ -53,7 +53,7 @@ fn failed_batches_are_counted_and_requests_fail_cleanly() {
         vec![Box::new(move || {
             Box::new(FlakyBackend { calls: calls2 }) as Box<dyn InferenceBackend>
         }) as BackendFactory],
-        BatcherConfig { max_batch: 4, max_wait_us: 200 },
+        BatcherConfig { max_batch: 4, max_wait_us: 200, queue_cap: 0 },
     );
     let mut ok = 0usize;
     let mut failed = 0usize;
@@ -78,7 +78,7 @@ fn dead_backend_fails_everything_without_hanging() {
     let coord = Coordinator::start(
         vec![Box::new(|| Box::new(DeadBackend) as Box<dyn InferenceBackend>)
             as BackendFactory],
-        BatcherConfig { max_batch: 8, max_wait_us: 100 },
+        BatcherConfig { max_batch: 8, max_wait_us: 100, queue_cap: 0 },
     );
     for _ in 0..10 {
         assert!(coord.submit(img()).wait().is_err());
@@ -101,7 +101,7 @@ fn mixed_healthy_and_dead_workers_still_serve() {
                     as Box<dyn InferenceBackend>
             }) as BackendFactory,
         ],
-        BatcherConfig { max_batch: 2, max_wait_us: 100 },
+        BatcherConfig { max_batch: 2, max_wait_us: 100, queue_cap: 0 },
     );
     let mut answered = 0;
     for _ in 0..30 {

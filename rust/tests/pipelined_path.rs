@@ -1,0 +1,304 @@
+//! Pipelined-vs-sequential bit-identity: the contract of the stage
+//! pipeline (DESIGN.md §pipeline).
+//!
+//! The pipelined coordinator (pre / chip / post lanes, speculative
+//! operand pre-encode, bounded inter-stage buffers) must produce
+//! **exactly** the bytes of `Engine::forward_batch` run sequentially —
+//! across random engine shapes and batch sizes, on both backends, with
+//! chip noise, through drift episodes that retire pre-encoded operands
+//! mid-stream, and across an `EngineSlot` hot swap.  Overlap is a
+//! throughput lever only; it must never be observable in the numbers.
+
+use std::sync::Arc;
+
+use cirptc::coordinator::{
+    BatcherConfig, Coordinator, EngineSource, Staged, StagedFactory,
+};
+use cirptc::data::Bundle;
+use cirptc::drift::{DriftConfig, DriftModel, EngineSlot};
+use cirptc::onn::{Backend, Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::util::propcheck;
+use cirptc::util::rng::Rng;
+
+/// A mildly non-ideal chip of block order `l` (same as planned_path.rs).
+fn chip(l: usize) -> ChipDescription {
+    let mut d = ChipDescription::ideal(l);
+    for i in 0..l {
+        for j in 0..l {
+            if i != j {
+                d.gamma[i * l + j] = 0.02 / (1.0 + (i as f32 - j as f32).abs());
+            }
+        }
+        d.resp[i] = 1.0 - 0.02 * i as f32;
+    }
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d
+}
+
+/// In-memory circ engine: conv(1→cout, k=3) → relu → flatten → fc → 3
+/// classes, on 8×8 inputs, all layers at block order `l`.
+fn build_engine(l: usize, cout: usize, seed: u64) -> Engine {
+    let n_fc = cout * 64;
+    let manifest = Manifest::parse(&format!(
+        r#"{{
+          "dataset": "pipelined_prop", "classes": 3,
+          "layers": [
+            {{"kind": "conv", "cin": 1, "cout": {cout}, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}},
+            {{"kind": "fc", "cin": {n_fc}, "cout": 3, "k": 3, "pool": 2,
+             "arch": "circ", "l": {l}, "act_scale": 4.0}}
+          ]}}"#
+    ))
+    .unwrap();
+    let mut bundle = Bundle::default();
+    let mut rng = Rng::new(seed);
+    let specs = manifest.layers.clone();
+    for (i, spec) in specs.iter().enumerate() {
+        if !matches!(spec.kind.as_str(), "conv" | "fc") {
+            continue;
+        }
+        let (p, q) = spec.bcm_dims();
+        let mut w = vec![0.0f32; p * q * spec.l];
+        rng.fill_uniform(&mut w);
+        for v in w.iter_mut() {
+            *v = (*v - 0.5) * 0.4;
+        }
+        bundle.insert_f32(&format!("layer{i}.w"), &[p, q, spec.l], w);
+        let mut bias = vec![0.0f32; spec.cout];
+        rng.fill_uniform(&mut bias);
+        bundle.insert_f32(&format!("layer{i}.b"), &[spec.cout], bias);
+    }
+    Engine::from_parts(manifest, &bundle).unwrap()
+}
+
+fn images(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut d = vec![0.0f32; 64];
+            rng.fill_uniform(&mut d);
+            Tensor::new(&[1, 8, 8], d)
+        })
+        .collect()
+}
+
+fn accel_drift(seed: u64) -> DriftConfig {
+    DriftConfig {
+        seed,
+        passes_per_tick: 3,
+        gamma_walk: 2e-3,
+        resp_tilt: 5e-3,
+        dark_creep: 1e-4,
+        max_ticks: 0,
+    }
+}
+
+/// Serve `imgs` through a single pipelined worker with a deterministic
+/// batch partition: every image is submitted up front from one thread
+/// (FIFO intake order), `max_batch = bsz` and a generous deadline, so
+/// the batcher's greedy drain forms exactly `imgs.len()/bsz` batches of
+/// `bsz` in order — the same groups the sequential oracle runs.
+/// Returns per-request logits in submit order.
+fn serve_pipelined(
+    engine: Arc<Engine>,
+    backend: Backend,
+    imgs: &[Tensor],
+    bsz: usize,
+) -> Vec<Vec<f32>> {
+    assert_eq!(imgs.len() % bsz, 0, "use full batches for determinism");
+    let c = Coordinator::start_pipelined(
+        vec![Box::new(move || {
+            Staged::new(EngineSource::Fixed(engine), backend)
+        }) as StagedFactory],
+        BatcherConfig { max_batch: bsz, max_wait_us: 2_000_000, queue_cap: 0 },
+    );
+    let admissions: Vec<_> =
+        imgs.iter().map(|im| c.submit(im.clone())).collect();
+    let out: Vec<Vec<f32>> = admissions
+        .into_iter()
+        .map(|a| a.wait().unwrap().logits)
+        .collect();
+    assert_eq!(c.metrics.errors.get(), 0, "no batch may fail");
+    assert_eq!(c.metrics.completed.get(), imgs.len());
+    assert_eq!(c.metrics.queue_depth.get(), 0);
+    out
+}
+
+/// The sequential oracle: the same engine, the same batch groups, one
+/// `forward_batch` at a time on a twin backend.
+fn serve_sequential(
+    engine: &Engine,
+    backend: &mut Backend,
+    imgs: &[Tensor],
+    bsz: usize,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(imgs.len());
+    for group in imgs.chunks(bsz) {
+        out.extend(engine.forward_batch(group, backend).unwrap());
+    }
+    out
+}
+
+#[test]
+fn pipelined_serving_bit_identical_over_random_shapes_and_backends() {
+    propcheck::check("pipelined coordinator == sequential", 6, |g| {
+        let l = *g.choose(&[2usize, 4]);
+        let cout = *g.choose(&[4usize, 8]);
+        let bsz = g.usize_in(1, 4);
+        let n_batches = g.usize_in(2, 4);
+        let seed = g.usize_in(1, 1_000_000) as u64;
+        let engine = Arc::new(build_engine(l, cout, seed));
+        let imgs = images(bsz * n_batches, seed ^ 0x5EED);
+
+        let got_d = serve_pipelined(
+            Arc::clone(&engine),
+            Backend::Digital,
+            &imgs,
+            bsz,
+        );
+        let want_d =
+            serve_sequential(&engine, &mut Backend::Digital, &imgs, bsz);
+        cirptc::prop_assert!(
+            got_d == want_d,
+            "digital diverged: l={l} cout={cout} bsz={bsz}"
+        );
+
+        // photonic, including chip *noise*: the speculative pre-encode
+        // consumes no RNG, so the pipelined pass stream must draw the
+        // exact same noise sequence as the sequential one
+        let mut noisy = chip(l);
+        noisy.seed = seed ^ 0xA11CE;
+        noisy.sigma_rel = 0.01;
+        noisy.sigma_abs = 1e-3;
+        let got_p = serve_pipelined(
+            Arc::clone(&engine),
+            Backend::PhotonicSim(ChipSim::new(noisy.clone())),
+            &imgs,
+            bsz,
+        );
+        let want_p = serve_sequential(
+            &engine,
+            &mut Backend::PhotonicSim(ChipSim::new(noisy)),
+            &imgs,
+            bsz,
+        );
+        cirptc::prop_assert!(
+            got_p == want_p,
+            "noisy photonic diverged: l={l} cout={cout} bsz={bsz}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pipelined_serving_bit_identical_through_drift_episodes() {
+    // drift ticks land on the chip's pass clock; the pipelined chip lane
+    // serializes batches FIFO, so the episode must replay exactly — and
+    // any tick between a snapshot publish and the next batch's passes
+    // retires that batch's pre-encode (the chip lane re-encodes inline,
+    // which this equality makes unobservable)
+    let engine = Arc::new(build_engine(4, 8, 909));
+    let imgs = images(12, 910);
+    let drifting = |seed: u64| -> ChipSim {
+        let mut sim = ChipSim::deterministic(chip(4));
+        sim.set_drift(DriftModel::new(accel_drift(seed)));
+        sim
+    };
+    let got = serve_pipelined(
+        Arc::clone(&engine),
+        Backend::PhotonicSim(drifting(5)),
+        &imgs,
+        3,
+    );
+    let want = serve_sequential(
+        &engine,
+        &mut Backend::PhotonicSim(drifting(5)),
+        &imgs,
+        3,
+    );
+    assert_eq!(got, want, "drift episode must replay bit-identically");
+}
+
+#[test]
+fn pipelined_hot_swap_bit_identical_and_zero_drop() {
+    // engine A serves, then a hot swap lands between batches; the same
+    // worker chip keeps running.  The pipelined stream must match the
+    // sequential A-then-B stream on a twin chip, with every request
+    // answered (the swap drops nothing).
+    let a = build_engine(4, 8, 101);
+    let b = build_engine(4, 8, 202);
+    let slot = Arc::new(EngineSlot::new(a));
+    let first = images(6, 7000);
+    let second = images(6, 7001);
+
+    let c = Coordinator::start_pipelined(
+        vec![{
+            let slot = Arc::clone(&slot);
+            Box::new(move || {
+                Staged::new(
+                    EngineSource::Slot(slot),
+                    Backend::PhotonicSim(ChipSim::deterministic(chip(4))),
+                )
+            }) as StagedFactory
+        }],
+        BatcherConfig { max_batch: 3, max_wait_us: 2_000_000, queue_cap: 0 },
+    );
+    // first half under A — wait before swapping so the swap is strictly
+    // between batches in the pipelined stream too
+    let adm: Vec<_> = first.iter().map(|im| c.submit(im.clone())).collect();
+    let got_a: Vec<Vec<f32>> =
+        adm.into_iter().map(|x| x.wait().unwrap().logits).collect();
+    slot.swap(build_engine(4, 8, 202));
+    let adm: Vec<_> = second.iter().map(|im| c.submit(im.clone())).collect();
+    let got_b: Vec<Vec<f32>> =
+        adm.into_iter().map(|x| x.wait().unwrap().logits).collect();
+    assert_eq!(c.metrics.completed.get(), 12, "zero dropped requests");
+    assert_eq!(c.metrics.errors.get(), 0);
+
+    // sequential oracle: A then B through one twin chip
+    let mut twin = Backend::PhotonicSim(ChipSim::deterministic(chip(4)));
+    let a_oracle = Arc::new(build_engine(4, 8, 101));
+    let want_a = serve_sequential(&a_oracle, &mut twin, &first, 3);
+    let want_b = serve_sequential(&b, &mut twin, &second, 3);
+    assert_eq!(got_a, want_a, "pre-swap stream must match engine A");
+    assert_eq!(got_b, want_b, "post-swap stream must match engine B");
+    assert_ne!(got_a[0], got_b[0], "distinct weights must serve distinctly");
+}
+
+#[test]
+fn pipelined_stage_metrics_account_every_batch_and_request() {
+    let engine = Arc::new(build_engine(4, 4, 313));
+    let imgs = images(16, 314);
+    let c = Coordinator::start_pipelined(
+        vec![{
+            let engine = Arc::clone(&engine);
+            Box::new(move || {
+                Staged::new(
+                    EngineSource::Fixed(engine),
+                    Backend::PhotonicSim(ChipSim::deterministic(chip(4))),
+                )
+            }) as StagedFactory
+        }],
+        BatcherConfig { max_batch: 4, max_wait_us: 2_000_000, queue_cap: 0 },
+    );
+    let responses = c.classify_all(&imgs).unwrap();
+    assert_eq!(responses.len(), 16);
+    let batches = c.metrics.batches.get() as u64;
+    assert_eq!(batches, 4, "16 requests at max_batch=4");
+    // each lane records once per batch; wait is per request
+    assert_eq!(c.metrics.stage_pre_us.count(), batches);
+    assert_eq!(c.metrics.stage_chip_us.count(), batches);
+    assert_eq!(c.metrics.stage_post_us.count(), batches);
+    assert_eq!(c.metrics.batch_compute_us.count(), batches);
+    assert_eq!(c.metrics.batch_wait_us.count(), 16);
+    let s = c.metrics.summary();
+    assert!(s.contains("pre_p99"), "stage timers must surface: {s}");
+}

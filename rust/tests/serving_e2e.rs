@@ -60,7 +60,7 @@ fn serve_accuracy(dir: &PathBuf, photonic: bool, n: usize) -> f64 {
         .collect();
     let coord = Coordinator::start(
         backends,
-        BatcherConfig { max_batch: 8, max_wait_us: 1000 },
+        BatcherConfig { max_batch: 8, max_wait_us: 1000, queue_cap: 0 },
     );
     let responses = coord.classify_all(&images).unwrap();
     assert_eq!(coord.metrics.completed.get(), n);
