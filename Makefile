@@ -72,6 +72,10 @@ validate:
 	cargo run --release --bin validate -- --expect-invalid \
 		--manifest rust/tests/fixtures/verify/valid_model.json \
 		--bundle rust/tests/fixtures/verify/corrupt_spectra.cpt
+	cargo run --release --bin validate -- --expect-invalid \
+		--manifest rust/tests/fixtures/verify/valid_model.json \
+		--bundle rust/tests/fixtures/verify/valid_model.cpt \
+		--chip rust/tests/fixtures/verify/chip_tiny_mrr.json
 
 ## One-iteration serving + mvm bench smoke (works without artifacts —
 ## synthetic model); writes BENCH_serving.json / BENCH_mvm.json and diffs

@@ -7,7 +7,11 @@
 //!      multi-column BCM multiply per layer per batch (the acceptance
 //!      check: images/sec at batch ≥ 8 must beat the per-image loop);
 //!   3. coordinator overhead + batching-policy sweep + worker scaling;
-//!   4. drifting-chip scenario sweep (`-- --drift` full, `-- --drift-smoke`
+//!   4. farm scaling (DESIGN.md §farm): a partitioned engine over
+//!      N ∈ {1, 2, 4} chips with one compute thread per chip, vs the
+//!      single-chip baseline, plus the throughput retained when one of
+//!      three farm members is forced Failed mid-stream;
+//!   5. drifting-chip scenario sweep (`-- --drift` full, `-- --drift-smoke`
 //!      CI-sized with a forced recalibration): accuracy-over-time and tail
 //!      latency with the drift monitor + background recalibrator on vs.
 //!      off (DESIGN.md §drift).
@@ -32,6 +36,9 @@ use cirptc::data::Bundle;
 use cirptc::drift::{
     DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
     MonitorConfig, RecalConfig, Recalibrator,
+};
+use cirptc::farm::{
+    Farm, FarmConfig, FarmMember, PartitionPlan, PartitionedEngine,
 };
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::simulator::{ChipDescription, ChipSim};
@@ -94,6 +101,47 @@ fn synthetic_images(n: usize) -> Vec<Tensor> {
             Tensor::new(&[1, 32, 32], d)
         })
         .collect()
+}
+
+/// Wider synthetic model for the farm section: both circ layers carry
+/// P=4 block-rows (conv cout 16 → grid [4, 3, 4], fc 4096→16 → grid
+/// [4, 1024, 4]), so every farm width in {1, 2, 4} shards each linear
+/// layer non-trivially.
+fn farm_engine() -> Engine {
+    let manifest = Manifest::parse(
+        r#"{
+          "dataset": "synth_farm", "classes": 16,
+          "layers": [
+            {"kind": "conv", "cin": 1, "cout": 16, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "fc", "cin": 4096, "cout": 16, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0}
+          ]}"#,
+    )
+    .unwrap();
+    let mut bundle = Bundle::default();
+    let mut rng = Rng::new(19);
+    let mut w0 = vec![0.0f32; 4 * 3 * 4];
+    rng.fill_uniform(&mut w0);
+    for v in w0.iter_mut() {
+        *v = (*v - 0.5) * 0.5;
+    }
+    bundle.insert_f32("layer0.w", &[4, 3, 4], w0);
+    bundle.insert_f32("layer0.b", &[16], vec![0.0; 16]);
+    let mut w4 = vec![0.0f32; 4 * 1024 * 4];
+    rng.fill_uniform(&mut w4);
+    for v in w4.iter_mut() {
+        *v = (*v - 0.5) * 0.1;
+    }
+    bundle.insert_f32("layer4.w", &[4, 1024, 4], w4);
+    bundle.insert_f32("layer4.b", &[16], vec![0.1; 16]);
+    Engine::from_parts(manifest, &bundle).unwrap()
 }
 
 /// The as-calibrated chip the drift scenario deploys on.
@@ -557,6 +605,109 @@ fn main() {
         }
         drop(coord);
     }
+
+    section("farm scaling: partitioned engine over N chips (1 thread/chip)");
+    // one photonic chip is one fixed-rate compute lane, so this section
+    // pins engine.threads = 1: the single-chip baseline walks every
+    // block-row serially, while an N-chip partition runs N row-shard
+    // passes concurrently on its own lanes.  The result is bit-identical
+    // across widths by construction (propchecked in tests/farm_e2e.rs);
+    // this section only prices the shard fan-out + electronic reduce.
+    let fe = {
+        let mut e = farm_engine();
+        e.threads = 1;
+        Arc::new(e)
+    };
+    let fimgs = synthetic_images(if smoke { 8 } else { 32 });
+    let fcount = fimgs.len();
+    let freps = if smoke { 2 } else { 4 };
+    let farm_chip = || {
+        Backend::PhotonicSim(ChipSim::deterministic(ChipDescription::ideal(4)))
+    };
+    let single_s = {
+        let mut be = farm_chip();
+        // warm: FFT plans, encoded chip tiles, scratch arenas
+        fe.forward_batch(&fimgs, &mut be).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..freps {
+            fe.forward_batch(&fimgs, &mut be).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    row("single chip", &[
+        ("img_s", format!("{:.1}", (fcount * freps) as f64 / single_s)),
+    ]);
+    for chips_n in [1usize, 2, 4] {
+        let plan = PartitionPlan::plan(&fe.manifest, chips_n);
+        let part = PartitionedEngine::new(Arc::clone(&fe), plan).unwrap();
+        let mut chips: Vec<Backend> =
+            (0..chips_n).map(|_| farm_chip()).collect();
+        part.forward_batch(&fimgs, &mut chips).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..freps {
+            part.forward_batch(&fimgs, &mut chips).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let speedup = single_s / wall;
+        row(&format!("farm n={chips_n}"), &[
+            ("img_s", format!("{:.1}", (fcount * freps) as f64 / wall)),
+            ("speedup_vs_single", format!("{speedup:.2}x")),
+        ]);
+        rep.metric(
+            &format!("farm_n{chips_n}_img_s"),
+            (fcount * freps) as f64 / wall,
+        );
+        if chips_n == 4 {
+            rep.metric("farm_speedup_n4", speedup);
+        }
+    }
+
+    section("farm failover: 3 replica members, one forced Failed");
+    // identical fixed members; the router's health preference order
+    // reroutes around the failed chip with zero drops, and the metric
+    // pins the fraction of healthy throughput that survives
+    let fmetrics = Arc::new(Metrics::default());
+    let members: Vec<FarmMember> = (0..3)
+        .map(|_| FarmMember::fixed(Arc::clone(&engine), farm_chip()))
+        .collect();
+    let farm = Farm::start(
+        members,
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait_us: 2_000,
+                queue_cap: 0,
+            },
+            ..FarmConfig::default()
+        },
+        Arc::clone(&fmetrics),
+    );
+    // two warm rounds so round-robin touches every member pipeline
+    farm.coord.classify_all(&images).unwrap();
+    farm.coord.classify_all(&images).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..freps {
+        farm.coord.classify_all(&images).unwrap();
+    }
+    let healthy_s = t0.elapsed().as_secs_f64();
+    farm.status[1].fail();
+    let t0 = Instant::now();
+    for _ in 0..freps {
+        farm.coord.classify_all(&images).unwrap();
+    }
+    let failed_s = t0.elapsed().as_secs_f64();
+    let retained = healthy_s / failed_s;
+    assert_eq!(fmetrics.errors.get(), 0, "farm failover dropped requests");
+    row("failover", &[
+        ("healthy_img_s", format!("{:.1}", (n * freps) as f64 / healthy_s)),
+        ("failed_img_s", format!("{:.1}", (n * freps) as f64 / failed_s)),
+        ("throughput_retained", format!("{retained:.2}")),
+        ("rerouted", format!("{}", fmetrics.farm_rerouted.get())),
+        ("transitions", format!("{}", fmetrics.farm_transitions.get())),
+    ]);
+    rep.metric("farm_reroute_overhead", retained);
+    println!("  metrics: {}", fmetrics.summary());
+    drop(farm);
 
     if smoke {
         println!("\nsmoke mode: skipping policy sweep + worker scaling");

@@ -4,9 +4,9 @@
 //!
 //! * **hot-path-unwrap** — no `.unwrap()` / `.expect(` / `panic!(` in
 //!   the request-path modules (`coordinator/`, `onn/`, `simulator/`,
-//!   `circulant/`).  A panic there poisons locks shared with sibling
-//!   workers and takes down the serving stack; errors must travel as
-//!   `Result` or be recovered (`PoisonError::into_inner`).
+//!   `circulant/`, `farm/`).  A panic there poisons locks shared with
+//!   sibling workers and takes down the serving stack; errors must
+//!   travel as `Result` or be recovered (`PoisonError::into_inner`).
 //! * **std-sync** — no direct `std::sync` paths outside the
 //!   `util/sync/` shim (and `bin/`, which never runs under the model
 //!   checker).  Everything that synchronises must import through the
@@ -17,10 +17,12 @@
 //!   `vec![` / `Vec::with_capacity` / `Vec::new` / `.to_vec(` — they
 //!   draw from the thread-local scratch arena instead.
 //! * **stage-buffer-bounded** — the stage-pipeline executor
-//!   (`coordinator/pipeline.rs`) must not create unbounded
-//!   `mpsc::channel` inter-stage buffers: stage hand-offs go through
-//!   `mpsc::sync_channel` so a slow stage exerts backpressure instead
-//!   of queueing batches (and their scratch buffers) without bound.
+//!   (`coordinator/pipeline.rs`) and the farm's failover router
+//!   (`farm/router.rs`) must not create unbounded `mpsc::channel`
+//!   inter-stage buffers: stage and member hand-offs go through
+//!   `mpsc::sync_channel` so a slow stage (or wedged chip) exerts
+//!   backpressure instead of queueing batches (and their scratch
+//!   buffers) without bound.
 //!
 //! Escapes: a `// lint:allow(<rule>): <reason>` comment suppresses the
 //! rule on the next non-comment line (or on its own line when it
@@ -37,12 +39,14 @@ const KNOWN_RULES: &[&str] =
     &["hot-path-unwrap", "std-sync", "scratch-alloc", "stage-buffer-bounded"];
 const UNWRAP_NEEDLES: &[&str] = &[".unwrap()", ".expect(", "panic!("];
 const ALLOC_NEEDLES: &[&str] = &["vec![", "Vec::with_capacity", "Vec::new", ".to_vec("];
-const HOT_DIRS: &[&str] = &["coordinator/", "onn/", "simulator/", "circulant/"];
+const HOT_DIRS: &[&str] =
+    &["coordinator/", "onn/", "simulator/", "circulant/", "farm/"];
 
 /// Files whose non-test code must only use bounded (`sync_channel`)
 /// stage buffers.  `mpsc::sync_channel` does not contain the needle, so
 /// matching the bare path is safe (and catches turbofish call sites).
-const BOUNDED_CHANNEL_FILES: &[&str] = &["coordinator/pipeline.rs"];
+const BOUNDED_CHANNEL_FILES: &[&str] =
+    &["coordinator/pipeline.rs", "farm/router.rs"];
 const UNBOUNDED_CHANNEL_NEEDLE: &str = "mpsc::channel";
 
 /// (file relative to src/, function name) pairs held to the
@@ -416,6 +420,20 @@ mod tests {
         assert!(analyze_file("coordinator/pipeline.rs", ok).findings.is_empty());
         // the reply channels elsewhere in the coordinator stay legal
         assert!(analyze_file("coordinator/mod.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn farm_dir_is_hot_and_its_router_buffers_are_bounded() {
+        let hot = "fn f() {\n    x.unwrap();\n}\n";
+        let r = analyze_file("farm/mod.rs", hot);
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "hot-path-unwrap");
+        let unbounded = "fn wire() {\n    let (tx, rx) = mpsc::channel::<Batch>();\n}\n";
+        let r = analyze_file("farm/router.rs", unbounded);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "stage-buffer-bounded");
+        // the farm's intake/reply channels outside the router stay legal
+        assert!(analyze_file("farm/mod.rs", unbounded).findings.is_empty());
     }
 
     #[test]

@@ -296,6 +296,19 @@ impl Bcm {
         }
     }
 
+    /// Contiguous block-row slice `[r0, r1)` as its own BCM — the unit a
+    /// farm partition assigns to one chip ([`crate::farm::partition`]).
+    /// The `[p][q][l]` layout keeps whole block-rows contiguous in `w`,
+    /// so the slice is a straight copy; every multiply path computes
+    /// output rows independently per block-row in the same inner-loop
+    /// order, so a shard's product equals rows `[r0·l, r1·l)` of the full
+    /// product bit for bit (pinned by `rust/tests/farm_e2e.rs`).
+    pub fn block_rows(&self, r0: usize, r1: usize) -> Bcm {
+        assert!(r0 <= r1 && r1 <= self.p, "block-row range out of bounds");
+        let stride = self.q * self.l;
+        Bcm::new(r1 - r0, self.q, self.l, self.w[r0 * stride..r1 * stride].to_vec())
+    }
+
     /// Split a full-range BCM into positive-only halves and a scale, the
     /// paper's time-domain-multiplexed sign handling.  The split depends
     /// only on the weights, so the planned execution path computes it
@@ -359,6 +372,25 @@ mod tests {
                 assert_eq!(d.at2(r, c), d.at2(0, (c + 4 - r) % 4));
             }
         }
+    }
+
+    #[test]
+    fn block_rows_slices_contiguous_rows() {
+        let b = rand_bcm(4, 3, 4, 29);
+        let s = b.block_rows(1, 3);
+        assert_eq!((s.p, s.q, s.l), (2, 3, 4));
+        assert_eq!(s.w[..], b.w[1 * 3 * 4..3 * 3 * 4]);
+        // the shard's dense expansion is rows [l, 3l) of the full one
+        let full = b.expand();
+        let shard = s.expand();
+        for r in 0..s.m() {
+            for c in 0..s.n() {
+                assert_eq!(shard.at2(r, c), full.at2(r + 4, c));
+            }
+        }
+        // degenerate shard (a chip assigned zero rows) is legal
+        let empty = b.block_rows(2, 2);
+        assert_eq!((empty.p, empty.m()), (0, 0));
     }
 
     #[test]

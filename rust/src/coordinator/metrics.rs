@@ -194,6 +194,16 @@ pub struct Metrics {
     /// updates here are single `push`/`drain` calls), but the count is the
     /// signal to go look at worker logs.
     pub lock_poisons: WorkCounter,
+    /// farm router: chip health-state transitions observed
+    /// ([`crate::farm::ChipHealth`]) — each edge of the
+    /// Healthy → Drifting → Recalibrating → … machine counts once
+    pub farm_transitions: WorkCounter,
+    /// farm router: batches routed *around* a recalibrating or failed
+    /// chip (the preferred member was skipped, another absorbed the load)
+    pub farm_rerouted: WorkCounter,
+    /// farm router: batches absorbed by the fallback member because no
+    /// healthy or merely-drifting chip was routable at dispatch time
+    pub farm_absorbed: WorkCounter,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -254,7 +264,8 @@ impl Metrics {
              p50={}µs p99={}µs queue_depth={} batch_p50≤{}µs batch_p99≤{}µs \
              pre_p99≤{}µs chip_p99≤{}µs post_p99≤{}µs wait_p99≤{}µs \
              probes={} recals={} probe_res≤{}ppm scratch_miss={}/{} \
-             lock_poisons={}",
+             lock_poisons={} \
+             farm_transitions={} farm_rerouted={} farm_absorbed={}",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
@@ -276,6 +287,9 @@ impl Metrics {
             self.scratch_misses.get(),
             self.scratch_takes.get(),
             self.lock_poisons.get(),
+            self.farm_transitions.get(),
+            self.farm_rerouted.get(),
+            self.farm_absorbed.get(),
         )
     }
 }
@@ -433,6 +447,18 @@ mod tests {
         assert!(s.contains("chip_p99≤127µs"), "summary: {s}");
         assert!(s.contains("post_p99≤7µs"), "summary: {s}");
         assert!(s.contains("wait_p99≤63µs"), "summary: {s}");
+    }
+
+    #[test]
+    fn farm_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.farm_transitions.add(4);
+        m.farm_rerouted.add(2);
+        m.farm_absorbed.add(1);
+        let s = m.summary();
+        assert!(s.contains("farm_transitions=4"), "summary: {s}");
+        assert!(s.contains("farm_rerouted=2"), "summary: {s}");
+        assert!(s.contains("farm_absorbed=1"), "summary: {s}");
     }
 
     #[test]

@@ -209,6 +209,28 @@ impl Coordinator {
         }
     }
 
+    /// Assemble a coordinator from externally wired parts.  The farm
+    /// ([`crate::farm`]) builds its own thread topology — batcher →
+    /// health router → per-chip pipelines — but serves through the same
+    /// submit/shed/classify front end; `workers` joins in Vec order
+    /// after `batcher`, so list threads in channel-cascade order.
+    pub(crate) fn assemble(
+        tx: mpsc::Sender<Request>,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+        batcher: worker::JoinOnDrop,
+        workers: Vec<worker::JoinOnDrop>,
+    ) -> Coordinator {
+        Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            queue_cap,
+            metrics,
+            _batcher: batcher,
+            _workers: workers,
+        }
+    }
+
     /// Submit one image; returns the admission outcome.  With
     /// `queue_cap = 0` (the default) every request is accepted and this
     /// behaves exactly like the pre-admission-control submit.

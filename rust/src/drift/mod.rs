@@ -26,6 +26,14 @@
 //! current engine once per drained batch, the recalibrator publishes a
 //! new one atomically, and nothing on the request path ever blocks on
 //! training (`rust/tests/drift_e2e.rs` pins the zero-drop guarantee).
+//!
+//! One [`DriftShared`] describes **one chip's** compensation stack.
+//! A single-chip deployment shares it across that chip's workers; a
+//! multi-chip farm ([`crate::farm`]) instantiates one stack per member
+//! — each chip drifts on its own seeded process, probes against its own
+//! calibration point, and recalibrates independently, so a sibling's
+//! recalibration never rebases or blocks a healthy chip
+//! (`rust/tests/farm_e2e.rs`).
 
 pub mod model;
 pub mod monitor;

@@ -75,6 +75,9 @@ pub struct DriftMonitor {
     /// probes (and re-encoded automatically after every drift tick) —
     /// probe passes stop paying per-probe encode + FFT/alloc setup
     owner: u64,
+    /// most recent probe residual (0 until the first probe runs) — the
+    /// member-local drift signal the farm health machine classifies on
+    last_residual: f32,
 }
 
 impl DriftMonitor {
@@ -97,6 +100,7 @@ impl DriftMonitor {
             recals_seen: 0,
             last_recal_pass: 0,
             owner: crate::onn::plan::next_tile_owner(),
+            last_residual: 0.0,
         };
         m.rebase(calibration);
         m
@@ -108,6 +112,9 @@ impl DriftMonitor {
     pub fn rebase(&mut self, desc: &ChipDescription) {
         let mut reference = ChipSim::deterministic(desc.clone());
         self.want = reference.forward(&self.probe_w, &self.probe_x);
+        // a fresh reference means the drift the last probe saw is gone;
+        // drop the stale signal so farm health doesn't linger in Drifting
+        self.last_residual = 0.0;
     }
 
     /// One calibration-probe pass on the live chip; returns the
@@ -122,7 +129,15 @@ impl DriftMonitor {
         // the photocurrent buffer came from the scratch arena — park it
         // again so probes stay alloc-free instead of draining the pool
         crate::util::scratch::put(got.data);
+        self.last_residual = res;
         res
+    }
+
+    /// Most recent probe residual (0 before the first probe).  The farm
+    /// health machine reads this to classify a member as Drifting without
+    /// forcing an extra chip pass.
+    pub fn last_residual(&self) -> f32 {
+        self.last_residual
     }
 
     /// Worker-loop hook, called after every drained batch: refresh the

@@ -1,0 +1,412 @@
+//! Partitioned execution: one logical engine spread over N chips
+//! (DESIGN.md §farm).
+//!
+//! A [`PartitionedEngine`] wraps a normal [`Engine`] plus a
+//! [`PartitionPlan`] and executes each circ linear layer as N concurrent
+//! **row-shard passes** followed by an electronic reduce:
+//!
+//! 1. the *shared* operand prep ([`Engine::pre_batch`] /
+//!    `Engine::prep_linear`) packs one operand for the whole layer —
+//!    every chip multiplies the same columns;
+//! 2. chip `k` runs its block-row shard (sliced weights + sliced sign
+//!    split from [`LinearPlan::shard_of`]) and writes rows
+//!    `[r0·l, r1·l)` of the output — disjoint slices of one buffer, so
+//!    the reduce is the write itself (a row concatenation);
+//! 3. the shared tail (reshape + bias, [`Engine::post_batch`]) finishes
+//!    the layer exactly as the single-chip path would.
+//!
+//! Because each shard keeps the layer's full Q extent, the parent sign
+//! split's *global* rescale, and the same per-block-row inner-loop
+//! order, the N-chip result is **bit-identical** to the single-chip
+//! engine on deterministic backends — any N, digital or photonic
+//! (propchecked in `rust/tests/farm_e2e.rs`).  Electronic (non-linear)
+//! layers and the pre/post stages run once, on the front end, not per
+//! chip.
+
+use crate::bail;
+use crate::onn::engine::{
+    Activation, LinearPrep, MidState, PreState, PrepShape,
+};
+use crate::onn::plan::next_tile_owner;
+use crate::onn::{Backend, Engine, LayerKind, MidBatch};
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::scratch;
+use crate::util::sync::Arc;
+use crate::util::threadpool::spawn_scoped_named;
+
+use super::partition::PartitionPlan;
+
+/// One chip's resident slice of one layer: the sliced weights and the
+/// sliced-sign plan produced by [`LinearPlan::shard_of`]
+/// (`crate::onn::plan`), plus where its output rows land.
+struct ChipShard {
+    chip: usize,
+    /// first block-row (output rows start at `r0·l`)
+    r0: usize,
+    bcm: crate::circulant::Bcm,
+    plan: crate::onn::plan::LinearPlan,
+}
+
+/// A logical engine partitioned across `plan.chips` physical chips.
+pub struct PartitionedEngine {
+    pub engine: Arc<Engine>,
+    pub plan: PartitionPlan,
+    /// per-chip tile-cache owner ids: chip `k` caches its shard tiles
+    /// under `owners[k]`, so farm members never collide in a sim's
+    /// encode cache even when two farms share a chip
+    owners: Vec<u64>,
+    /// per manifest layer, the non-empty shards sorted by `r0`
+    layer_shards: Vec<Vec<ChipShard>>,
+}
+
+impl PartitionedEngine {
+    /// Build the per-chip shard state for `plan` over `engine`'s weights.
+    /// The plan is re-validated against the manifest (coverage, no
+    /// dangling block refs) — a broken plan is refused here, not
+    /// discovered as a garbled logit downstream.
+    pub fn new(engine: Arc<Engine>, plan: PartitionPlan) -> Result<PartitionedEngine> {
+        let diags = plan.validate(&engine.manifest);
+        if let Some(d) = diags.first() {
+            bail!("invalid partition plan: {}", d.render());
+        }
+        for (idx, spec) in engine.manifest.layers.iter().enumerate() {
+            if matches!(spec.kind, LayerKind::Conv | LayerKind::Fc)
+                && spec.arch != "circ"
+            {
+                bail!(
+                    "layer {idx}: farm partitioning requires circ arch \
+                     (gemm layers have no block-rows to shard)"
+                );
+            }
+        }
+        let mut layer_shards: Vec<Vec<ChipShard>> =
+            (0..engine.manifest.layers.len()).map(|_| Vec::new()).collect();
+        for (chip, shards) in plan.assignments.iter().enumerate() {
+            for s in shards.iter().filter(|s| s.rows() > 0) {
+                let (bcm, lp) = engine.linear_plan(s.layer)?;
+                let (sbcm, splan) = lp.shard_of(bcm, s.row0, s.row1);
+                layer_shards[s.layer].push(ChipShard {
+                    chip,
+                    r0: s.row0,
+                    bcm: sbcm,
+                    plan: splan,
+                });
+            }
+        }
+        for shards in &mut layer_shards {
+            shards.sort_by_key(|s| s.r0);
+        }
+        let owners = (0..plan.chips).map(|_| next_tile_owner()).collect();
+        Ok(PartitionedEngine { engine, plan, owners, layer_shards })
+    }
+
+    /// Forward a batch through the farm: shared pre stage, each linear
+    /// layer as N concurrent row-shard passes + electronic reduce,
+    /// shared post stage.  `backends[k]` is chip `k`; the set must be
+    /// homogeneous (all digital or all photonic) because operand packing
+    /// differs between the two paths.
+    pub fn forward_batch(
+        &self,
+        imgs: &[Tensor],
+        backends: &mut [Backend],
+    ) -> Result<Vec<Vec<f32>>> {
+        if backends.len() != self.plan.chips {
+            bail!(
+                "partition plan wants {} chips, got {} backends",
+                self.plan.chips,
+                backends.len()
+            );
+        }
+        let photonic =
+            matches!(backends.first(), Some(Backend::PhotonicSim(_)));
+        if backends
+            .iter()
+            .any(|b| matches!(b, Backend::PhotonicSim(_)) != photonic)
+        {
+            bail!("farm backends must be homogeneous (all digital or all photonic)");
+        }
+        let e = &*self.engine;
+        let pre = e.pre_batch(imgs, photonic, None)?;
+        let (mut act, mut next) = match pre.state {
+            PreState::Empty => return Ok(Vec::new()),
+            PreState::Plain { act, next } => (act, next),
+            PreState::Prepped { prep } => {
+                let idx = prep.idx;
+                (self.finish_sharded(prep, backends)?, idx + 1)
+            }
+        };
+        let stop = e.last_linear().map(|i| i + 1).unwrap_or(next).max(next);
+        while next < stop {
+            let spec = &e.manifest.layers[next];
+            act = match spec.kind {
+                LayerKind::Conv | LayerKind::Fc => {
+                    let prep =
+                        e.prep_linear(next, spec, act, photonic, None)?;
+                    self.finish_sharded(prep, backends)?
+                }
+                _ => e.run_electronic_layer(next, spec, act)?,
+            };
+            next += 1;
+        }
+        e.post_batch(MidBatch { state: MidState::Act { act, next } })
+    }
+
+    /// Execute one linear layer's packed operand as row-shard passes on
+    /// the farm and reduce into the full (P·l, b) output.  The farm twin
+    /// of `Engine::finish_linear`; the reshape + bias tail is identical.
+    fn finish_sharded(
+        &self,
+        prep: LinearPrep,
+        backends: &mut [Backend],
+    ) -> Result<Activation> {
+        let LinearPrep { idx, photonic: _, xp, enc, shape } = prep;
+        if let Some(enc) = enc {
+            // farm prep never pre-encodes (each chip has its own encode
+            // generation); recycle defensively if a caller passed one
+            enc.recycle();
+        }
+        let e = &*self.engine;
+        let spec = &e.manifest.layers[idx];
+        let (bcm, _) = e.linear_plan(idx)?;
+        let b = xp.shape[1];
+        let m = bcm.m();
+        let mut y = Tensor::new(&[m, b], scratch::take(m * b));
+        let shards = &self.layer_shards[idx];
+        {
+            // pair each shard with its disjoint row-slice of the output;
+            // shard order is ascending r0 and validate() guaranteed an
+            // exact tiling of [0, P), so the split walks the buffer once
+            let mut parts: Vec<(&ChipShard, &mut [f32])> = Vec::new();
+            let mut rest: &mut [f32] = &mut y.data;
+            for sh in shards {
+                let len = sh.bcm.m() * b;
+                let (head, tail) = rest.split_at_mut(len);
+                rest = tail;
+                parts.push((sh, head));
+            }
+            // attach chip backends (shards ascend in chip order too —
+            // contiguous row ranges are assigned to increasing chips)
+            let mut jobs: Vec<(&ChipShard, &mut Backend, &mut [f32])> =
+                Vec::new();
+            let mut bes = backends.iter_mut().enumerate();
+            for (sh, out) in parts {
+                let be = loop {
+                    match bes.next() {
+                        Some((i, be)) if i == sh.chip => break be,
+                        Some(_) => continue,
+                        None => bail!(
+                            "layer {idx}: shard for chip {} has no backend",
+                            sh.chip
+                        ),
+                    }
+                };
+                jobs.push((sh, be, out));
+            }
+            let threads = (e.threads / jobs.len().max(1)).max(1);
+            let use_plans = e.use_plans;
+            let scale = spec.act_scale;
+            let owners = &self.owners;
+            let xref = &xp;
+            let run = |sh: &ChipShard, be: &mut Backend, out: &mut [f32]| {
+                match be {
+                    Backend::Digital => {
+                        let yk = if use_plans {
+                            sh.plan.multiply(&sh.bcm, xref, threads)
+                        } else {
+                            sh.plan.multiply_reference(&sh.bcm, xref)
+                        };
+                        out.copy_from_slice(&yk.data);
+                        scratch::put(yk.data);
+                    }
+                    Backend::PhotonicSim(sim) => {
+                        sim.threads = threads;
+                        let mut yk = sim.forward_signed_planned(
+                            owners[sh.chip],
+                            idx,
+                            &sh.plan.sign,
+                            xref,
+                        );
+                        for v in yk.data.iter_mut() {
+                            *v *= scale;
+                        }
+                        out.copy_from_slice(&yk.data);
+                        scratch::put(yk.data);
+                    }
+                }
+            };
+            if jobs.len() <= 1 {
+                for (sh, be, out) in jobs {
+                    run(sh, be, out);
+                }
+            } else {
+                let run = &run;
+                std::thread::scope(|s| {
+                    for (sh, be, out) in jobs {
+                        spawn_scoped_named(s, "cirptc-farm-shard", move || {
+                            run(sh, be, out)
+                        });
+                    }
+                });
+            }
+        }
+        scratch::put(xp.data);
+        // shared electronic reduce tail — identical to finish_linear
+        let bias = e.linear_bias(idx)?;
+        match shape {
+            PrepShape::Conv { b, h, w } => {
+                let out = crate::onn::engine::cols_to_images(
+                    &y, b, spec.cout, h, w,
+                );
+                scratch::put(y.data);
+                Ok(Activation::Image(
+                    crate::onn::engine::add_channel_bias_batch(out, bias),
+                ))
+            }
+            PrepShape::Fc { b } => {
+                let m = spec.cout.min(y.shape[0]);
+                let mut out = Tensor::zeros(&[b, m]);
+                for bi in 0..b {
+                    for r in 0..m {
+                        out.data[bi * m + r] = y.at2(r, bi)
+                            + bias.get(r).copied().unwrap_or(0.0);
+                    }
+                }
+                scratch::put(y.data);
+                Ok(Activation::Matrix(out))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Bundle;
+    use crate::onn::Manifest;
+    use crate::simulator::{ChipDescription, ChipSim};
+    use crate::util::rng::Rng;
+
+    /// 4-block-row conv + 2-block-row fc model — wide enough that every
+    /// farm width in {1, 2, 3} shards at least one layer non-trivially.
+    fn wide_engine() -> Arc<Engine> {
+        let manifest = Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 8,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 16, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 256, "cout": 8, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap();
+        let mut bundle = Bundle::default();
+        let mut rng = Rng::new(4242);
+        // conv: P=4, Q=3
+        let mut w0 = vec![0.0f32; 4 * 3 * 4];
+        rng.fill_uniform(&mut w0);
+        for v in w0.iter_mut() {
+            *v = (*v - 0.5) * 0.5;
+        }
+        bundle.insert_f32("layer0.w", &[4, 3, 4], w0);
+        bundle.insert_f32("layer0.b", &[16], vec![0.01; 16]);
+        // fc: P=2, Q=64
+        let mut w4 = vec![0.0f32; 2 * 64 * 4];
+        rng.fill_uniform(&mut w4);
+        for v in w4.iter_mut() {
+            *v = (*v - 0.5) * 0.2;
+        }
+        bundle.insert_f32("layer4.w", &[2, 64, 4], w4);
+        bundle.insert_f32("layer4.b", &[8], vec![0.1; 8]);
+        Arc::new(Engine::from_parts(manifest, &bundle).unwrap())
+    }
+
+    fn inputs(n: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Rng::new(900 + i as u64);
+                let mut d = vec![0.0f32; 8 * 8];
+                rng.fill_uniform(&mut d);
+                Tensor::new(&[1, 8, 8], d)
+            })
+            .collect()
+    }
+
+    fn nonideal() -> ChipDescription {
+        let mut d = ChipDescription::ideal(4);
+        d.w_bits = 6;
+        d.x_bits = 4;
+        d.dark = 0.015;
+        d
+    }
+
+    #[test]
+    fn digital_farm_matches_single_chip_bitwise() {
+        let e = wide_engine();
+        let imgs = inputs(5);
+        let want =
+            e.forward_batch(&imgs, &mut Backend::Digital).unwrap();
+        for n in [1usize, 2, 3] {
+            let plan = PartitionPlan::plan(&e.manifest, n);
+            let part = PartitionedEngine::new(e.clone(), plan).unwrap();
+            let mut chips: Vec<Backend> =
+                (0..n).map(|_| Backend::Digital).collect();
+            let got = part.forward_batch(&imgs, &mut chips).unwrap();
+            assert_eq!(got, want, "n={n} digital farm must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn photonic_farm_matches_single_chip_bitwise() {
+        let e = wide_engine();
+        let imgs = inputs(4);
+        let want = e
+            .forward_batch(
+                &imgs,
+                &mut Backend::PhotonicSim(ChipSim::deterministic(nonideal())),
+            )
+            .unwrap();
+        for n in [1usize, 2, 4] {
+            let plan = PartitionPlan::plan(&e.manifest, n);
+            let part = PartitionedEngine::new(e.clone(), plan).unwrap();
+            let mut chips: Vec<Backend> = (0..n)
+                .map(|_| {
+                    Backend::PhotonicSim(ChipSim::deterministic(nonideal()))
+                })
+                .collect();
+            let got = part.forward_batch(&imgs, &mut chips).unwrap();
+            assert_eq!(got, want, "n={n} photonic farm must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn farm_rejects_mixed_backends_and_wrong_width() {
+        let e = wide_engine();
+        let plan = PartitionPlan::plan(&e.manifest, 2);
+        let part = PartitionedEngine::new(e, plan).unwrap();
+        let imgs = inputs(1);
+        let mut mixed = vec![
+            Backend::Digital,
+            Backend::PhotonicSim(ChipSim::deterministic(nonideal())),
+        ];
+        assert!(part.forward_batch(&imgs, &mut mixed).is_err());
+        let mut narrow = vec![Backend::Digital];
+        assert!(part.forward_batch(&imgs, &mut narrow).is_err());
+    }
+
+    #[test]
+    fn empty_batch_flows_to_empty_logits() {
+        let e = wide_engine();
+        let plan = PartitionPlan::plan(&e.manifest, 2);
+        let part = PartitionedEngine::new(e, plan).unwrap();
+        let mut chips = vec![Backend::Digital, Backend::Digital];
+        assert!(part.forward_batch(&[], &mut chips).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,567 @@
+//! Multi-chip serving farm: partitioned engines, per-chip drift
+//! compensation, and health-state failover (DESIGN.md §farm).
+//!
+//! The [`crate::drift`] subsystem assumes one shared engine slot and one
+//! chip per worker; a *farm* generalizes that to N chips that fail and
+//! drift **independently**:
+//!
+//! * [`partition`] — shard a manifest's circulant block-rows across
+//!   chips whose [`crate::simulator::ChipDescription::mrr_capacity`]
+//!   cannot hold the whole model, [`PartitionedEngine`] ([`engine`])
+//!   executes the shards bit-identically to the single-chip engine;
+//! * [`FarmMember`] (here) — one chip's full serving stack: its own
+//!   engine copy in its own [`crate::drift::DriftShared`], its own
+//!   (differently seeded) drifting sim, its own
+//!   [`crate::drift::DriftMonitor`] and recalibration channel.  Nothing
+//!   is shared between members except the metrics sink, so one chip
+//!   recalibrating never blocks or rebases a sibling;
+//! * [`ChipStatus`] (here) — the per-chip health machine
+//!   `Healthy → Drifting → Recalibrating → (Healthy | Failed)`, derived
+//!   *live* from the member's drift state (never latched, so a chip
+//!   that recovers is immediately routable again) plus a sticky
+//!   operator kill switch ([`ChipStatus::fail`]);
+//! * [`router`] — the failover stage between the dynamic batcher and
+//!   the per-chip pipelines: round-robin over serving-capable members,
+//!   reroute around `Recalibrating`/`Failed` chips, absorb into
+//!   whatever still lives when nothing healthy remains.
+//!
+//! [`Farm::start`] wires intake → batcher → router → N single-member
+//! pipelined workers ([`crate::coordinator::pipeline`]) behind the
+//! ordinary [`Coordinator`] submit/shed front end, so admission control,
+//! metrics and the zero-drop drain guarantee carry over unchanged
+//! (`rust/tests/farm_e2e.rs` pins all of it).
+
+pub mod engine;
+pub mod partition;
+mod router;
+
+pub use engine::PartitionedEngine;
+pub use partition::{circ_grids, tile_demand, LayerGrid, LayerShard, PartitionPlan};
+
+use crate::util::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
+
+use crate::coordinator::{
+    batcher, pipeline, worker, Batch, BatcherConfig, Coordinator,
+    EngineSource, InferenceBackend, Metrics, PipelineConfig, Request, Staged,
+};
+use crate::drift::{DriftMonitor, DriftShared, RecalRequest};
+use crate::onn::{Backend, Engine};
+use crate::simulator::ChipSim;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+
+/// Residual (ppm of the probe reference range) at which a member counts
+/// as [`ChipHealth::Drifting`]: degraded-but-serving, deprioritized by
+/// the router.  One fifth of the default recalibration trigger
+/// ([`crate::drift::MonitorConfig::residual_trigger`] = 0.05), so the
+/// state machine visibly passes through Drifting before a
+/// recalibration fires.
+pub const DEFAULT_DRIFTING_PPM: i64 = 10_000;
+
+/// One chip's health state, most healthy first.  `Drifting` still
+/// serves (the router only deprioritizes it); `Recalibrating` serves on
+/// the pre-swap engine but is routed around; `Failed` is the sticky
+/// operator kill switch and never serves while any sibling lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChipHealth {
+    Healthy,
+    Drifting,
+    Recalibrating,
+    Failed,
+}
+
+impl ChipHealth {
+    /// Serving-capable at full trust: the router's first-choice pool.
+    pub fn serves(self) -> bool {
+        matches!(self, ChipHealth::Healthy | ChipHealth::Drifting)
+    }
+}
+
+/// Live health handle for one farm member.  The state is **derived** on
+/// every read — `Recalibrating` from the member's single-flight recal
+/// gate, `Drifting` from its last probe residual — so recovery needs no
+/// acknowledgment protocol: the moment the recalibrator finishes and a
+/// probe comes back clean, the member reads `Healthy` again.  Only
+/// `Failed` is latched ([`ChipStatus::fail`] / [`ChipStatus::restore`]).
+pub struct ChipStatus {
+    failed: AtomicBool,
+    /// last probe residual in ppm, published by the member's chip hook
+    residual_ppm: AtomicI64,
+    /// at or above this residual the member reads `Drifting`
+    drifting_ppm: i64,
+    /// the member's drift state; `None` for members without drift
+    /// machinery (digital fallback), which only toggle Healthy/Failed
+    shared: Option<Arc<DriftShared>>,
+}
+
+impl ChipStatus {
+    pub fn new(
+        shared: Option<Arc<DriftShared>>,
+        drifting_ppm: i64,
+    ) -> Arc<ChipStatus> {
+        Arc::new(ChipStatus {
+            failed: AtomicBool::new(false),
+            residual_ppm: AtomicI64::new(0),
+            drifting_ppm: drifting_ppm.max(1),
+            shared,
+        })
+    }
+
+    /// Derive the current health state (see the type docs for priority).
+    pub fn health(&self) -> ChipHealth {
+        if self.failed.load(Ordering::Relaxed) {
+            return ChipHealth::Failed;
+        }
+        if let Some(s) = &self.shared {
+            if s.recal_in_flight.in_flight() {
+                return ChipHealth::Recalibrating;
+            }
+        }
+        if self.residual_ppm.load(Ordering::Relaxed) >= self.drifting_ppm {
+            ChipHealth::Drifting
+        } else {
+            ChipHealth::Healthy
+        }
+    }
+
+    /// Sticky operator kill switch: the member stops receiving traffic
+    /// (unless every sibling is also down) until [`ChipStatus::restore`].
+    pub fn fail(&self) {
+        self.failed.store(true, Ordering::Relaxed);
+    }
+
+    /// Clear the kill switch; health derivation resumes normally.
+    pub fn restore(&self) {
+        self.failed.store(false, Ordering::Relaxed);
+    }
+
+    /// Last published probe residual, ppm.
+    pub fn residual_ppm(&self) -> i64 {
+        self.residual_ppm.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn set_residual_ppm(&self, ppm: i64) {
+        self.residual_ppm.store(ppm, Ordering::Relaxed);
+    }
+}
+
+/// Farm-wide tuning.
+#[derive(Clone, Debug)]
+pub struct FarmConfig {
+    pub batcher: BatcherConfig,
+    pub pipeline: PipelineConfig,
+    /// bounded routing queue per member (batches a member may run
+    /// behind the router before backpressure reaches admission control)
+    pub member_queue: usize,
+}
+
+impl Default for FarmConfig {
+    fn default() -> FarmConfig {
+        FarmConfig {
+            batcher: BatcherConfig::default(),
+            pipeline: PipelineConfig::default(),
+            member_queue: 2,
+        }
+    }
+}
+
+/// One chip's serving stack, ready to be wired into a [`Farm`].
+pub struct FarmMember {
+    /// live health handle (also returned in [`Farm::status`])
+    pub status: Arc<ChipStatus>,
+    /// the member's drift state, for attaching a
+    /// [`crate::drift::Recalibrator`]; `None` for fixed members
+    pub shared: Option<Arc<DriftShared>>,
+    source: EngineSource,
+    backend: Backend,
+    hook: Option<pipeline::ChipHook>,
+}
+
+impl FarmMember {
+    /// Drift-compensated photonic member: its own engine copy behind its
+    /// own hot-swap slot, its own chip (give each member's `sim` a
+    /// differently seeded drift process), its own monitor.  Returns the
+    /// recalibration-request receiver — hand it to a
+    /// [`crate::drift::Recalibrator`] built over the member's `shared`,
+    /// or drop it for a monitor-only member.
+    pub fn monitored(
+        engine: Engine,
+        sim: ChipSim,
+        monitor: DriftMonitor,
+        drifting_ppm: i64,
+        metrics: Arc<Metrics>,
+    ) -> (FarmMember, mpsc::Receiver<RecalRequest>) {
+        let shared = DriftShared::new(engine, metrics);
+        let status = ChipStatus::new(Some(Arc::clone(&shared)), drifting_ppm);
+        let (recal_tx, recal_rx) = mpsc::channel();
+        let hook_shared = Arc::clone(&shared);
+        let hook_status = Arc::clone(&status);
+        let mut monitor = monitor;
+        let mut batches = 0u64;
+        let hook: pipeline::ChipHook = Box::new(move |backend: &mut Backend| {
+            if let Backend::PhotonicSim(sim) = backend {
+                batches += 1;
+                monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
+                // publish the member-local drift signal the health
+                // machine classifies on (the metrics gauge is shared
+                // farm-wide and would mix the members together)
+                hook_status.set_residual_ppm(
+                    (monitor.last_residual() as f64 * 1e6) as i64,
+                );
+            }
+        });
+        (
+            FarmMember {
+                status,
+                shared: Some(Arc::clone(&shared)),
+                source: EngineSource::Shared(shared),
+                backend: Backend::PhotonicSim(sim),
+                hook: Some(hook),
+            },
+            recal_rx,
+        )
+    }
+
+    /// Static member with no drift machinery: a digital fallback or a
+    /// fixed photonic chip.  Health only toggles Healthy/Failed.
+    pub fn fixed(engine: Arc<Engine>, backend: Backend) -> FarmMember {
+        FarmMember {
+            status: ChipStatus::new(None, i64::MAX),
+            shared: None,
+            source: EngineSource::Fixed(engine),
+            backend,
+            hook: None,
+        }
+    }
+}
+
+/// The running farm: the ordinary coordinator front end (submit / shed /
+/// classify_all / metrics) over batcher → health router → one pipelined
+/// worker per member.  Dropping the farm drains everything in channel
+/// order: intake, batcher, router, member pipelines.
+pub struct Farm {
+    pub coord: Coordinator,
+    /// per-member health handles, in member order
+    pub status: Vec<Arc<ChipStatus>>,
+}
+
+impl Farm {
+    pub fn start(
+        members: Vec<FarmMember>,
+        cfg: FarmConfig,
+        metrics: Arc<Metrics>,
+    ) -> Farm {
+        assert!(!members.is_empty(), "a farm needs at least one member");
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batcher_handle = worker::spawn_named("cirptc-batcher", {
+            let bcfg = cfg.batcher.clone();
+            move || batcher::run(rx, batch_tx, bcfg)
+        });
+        let depth = cfg.member_queue.max(1);
+        let mut targets = Vec::with_capacity(members.len());
+        let mut status = Vec::with_capacity(members.len());
+        let mut pipes = Vec::with_capacity(members.len());
+        for (i, m) in members.into_iter().enumerate() {
+            let FarmMember { status: st, shared: _, source, backend, hook } = m;
+            let (mtx, mrx) = mpsc::sync_channel::<Batch>(depth);
+            targets.push(router::RouteTarget {
+                tx: mtx,
+                status: Arc::clone(&st),
+            });
+            status.push(st);
+            let mrx = Arc::new(Mutex::new(mrx));
+            let metrics = Arc::clone(&metrics);
+            let pcfg = cfg.pipeline.clone();
+            pipes.push(worker::spawn_named(&format!("cirptc-farm-{i}"), move || {
+                let mut staged =
+                    Staged::new(source, backend).with_depth(pcfg.depth);
+                if let Some(h) = hook {
+                    staged = staged.with_hook(h);
+                }
+                pipeline::run(staged, mrx, metrics);
+            }));
+        }
+        let router_handle = worker::spawn_named("cirptc-farm-router", {
+            let metrics = Arc::clone(&metrics);
+            move || router::run(batch_rx, targets, metrics)
+        });
+        // join order must follow the channel cascade: batcher first
+        // (drops the router's input), then the router (drops the member
+        // queues), then the member pipelines
+        let mut workers = vec![router_handle];
+        workers.extend(pipes);
+        let coord = Coordinator::assemble(
+            tx,
+            cfg.batcher.queue_cap,
+            metrics,
+            batcher_handle,
+            workers,
+        );
+        Farm { coord, status }
+    }
+}
+
+/// The partitioned engine as a serving backend: one worker drives all N
+/// chips of a [`PartitionedEngine`] (the shard passes fan out inside
+/// `forward_batch`).  This is how a model too large for one chip's MRR
+/// bank serves through the ordinary coordinator or a farm member.
+pub struct PartitionedBackend {
+    pub part: Arc<PartitionedEngine>,
+    pub chips: Vec<Backend>,
+}
+
+impl InferenceBackend for PartitionedBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        self.part.forward_batch(imgs, &mut self.chips)
+    }
+
+    fn name(&self) -> String {
+        format!("farm/partitioned[{}]", self.part.plan.chips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Bundle;
+    use crate::drift::MonitorConfig;
+    use crate::onn::Manifest;
+    use crate::simulator::ChipDescription;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(seed: u64) -> Engine {
+        let manifest = Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 3,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 4, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 256, "cout": 3, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap();
+        let mut bundle = Bundle::default();
+        let mut rng = Rng::new(seed);
+        let mut w0 = vec![0.0f32; 3 * 4];
+        rng.fill_uniform(&mut w0);
+        bundle.insert_f32("layer0.w", &[1, 3, 4], w0);
+        bundle.insert_f32("layer0.b", &[4], vec![0.1; 4]);
+        let mut w3 = vec![0.0f32; 64 * 4];
+        rng.fill_uniform(&mut w3);
+        bundle.insert_f32("layer3.w", &[1, 64, 4], w3);
+        bundle.insert_f32("layer3.b", &[3], vec![0.0; 3]);
+        Engine::from_parts(manifest, &bundle).unwrap()
+    }
+
+    fn img(seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let mut d = vec![0.0f32; 64];
+        r.fill_uniform(&mut d);
+        Tensor::new(&[1, 8, 8], d)
+    }
+
+    #[test]
+    fn health_priority_failed_over_recal_over_drifting() {
+        let metrics = Arc::new(Metrics::default());
+        let shared = DriftShared::new(tiny_engine(3), Arc::clone(&metrics));
+        let st = ChipStatus::new(Some(Arc::clone(&shared)), 10_000);
+        assert_eq!(st.health(), ChipHealth::Healthy);
+        st.set_residual_ppm(10_000);
+        assert_eq!(st.health(), ChipHealth::Drifting);
+        assert!(st.health().serves());
+        assert!(shared.recal_in_flight.try_begin());
+        assert_eq!(st.health(), ChipHealth::Recalibrating);
+        st.fail();
+        assert_eq!(st.health(), ChipHealth::Failed);
+        st.restore();
+        assert_eq!(st.health(), ChipHealth::Recalibrating);
+        shared.recal_in_flight.finish();
+        assert_eq!(st.health(), ChipHealth::Drifting);
+        st.set_residual_ppm(0);
+        assert_eq!(
+            st.health(),
+            ChipHealth::Healthy,
+            "recovery must need no acknowledgment"
+        );
+    }
+
+    #[test]
+    fn fixed_member_health_only_toggles_failed() {
+        let m = FarmMember::fixed(Arc::new(tiny_engine(4)), Backend::Digital);
+        assert_eq!(m.status.health(), ChipHealth::Healthy);
+        m.status.fail();
+        assert_eq!(m.status.health(), ChipHealth::Failed);
+        m.status.restore();
+        assert_eq!(m.status.health(), ChipHealth::Healthy);
+    }
+
+    #[test]
+    fn farm_of_fixed_members_serves_like_a_coordinator() {
+        let oracle = Arc::new(tiny_engine(5));
+        let members: Vec<FarmMember> = (0..3)
+            .map(|_| FarmMember::fixed(Arc::clone(&oracle), Backend::Digital))
+            .collect();
+        let metrics = Arc::new(Metrics::default());
+        let farm = Farm::start(
+            members,
+            FarmConfig {
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait_us: 300,
+                    queue_cap: 0,
+                },
+                ..FarmConfig::default()
+            },
+            metrics,
+        );
+        let images: Vec<Tensor> = (0..24).map(img).collect();
+        let responses = farm.coord.classify_all(&images).unwrap();
+        assert_eq!(responses.len(), 24);
+        for (im, r) in images.iter().zip(&responses) {
+            let want = oracle.forward(im, &mut Backend::Digital).unwrap();
+            assert_eq!(r.logits, want, "farm must serve the engine exactly");
+        }
+        let m = &farm.coord.metrics;
+        assert_eq!(m.completed.get(), 24);
+        assert_eq!(m.errors.get(), 0);
+        assert_eq!(m.queue_depth.get(), 0);
+        assert_eq!(m.farm_absorbed.get(), 0);
+    }
+
+    #[test]
+    fn farm_reroutes_around_a_failed_member_with_zero_drops() {
+        let oracle = Arc::new(tiny_engine(6));
+        let members: Vec<FarmMember> = (0..3)
+            .map(|_| FarmMember::fixed(Arc::clone(&oracle), Backend::Digital))
+            .collect();
+        let metrics = Arc::new(Metrics::default());
+        let farm = Farm::start(
+            members,
+            FarmConfig {
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_wait_us: 100,
+                    queue_cap: 0,
+                },
+                ..FarmConfig::default()
+            },
+            metrics,
+        );
+        farm.status[1].fail();
+        let images: Vec<Tensor> = (0..20).map(img).collect();
+        let responses = farm.coord.classify_all(&images).unwrap();
+        assert_eq!(responses.len(), 20, "no request may be dropped");
+        let m = &farm.coord.metrics;
+        assert_eq!(m.completed.get(), 20);
+        assert_eq!(m.rejected.get(), 0);
+        assert_eq!(m.errors.get(), 0);
+        assert!(m.farm_rerouted.get() >= 1, "traffic rerouted around chip 1");
+        assert!(m.farm_transitions.get() >= 1);
+        let s = m.summary();
+        assert!(s.contains("farm_rerouted="), "summary: {s}");
+    }
+
+    #[test]
+    fn partitioned_backend_serves_through_a_coordinator() {
+        let oracle = {
+            // wide enough to shard: reuse the farm engine fixture shape
+            let manifest = Manifest::parse(
+                r#"{
+                  "dataset": "synth_cxr", "classes": 8,
+                  "layers": [
+                    {"kind": "conv", "cin": 1, "cout": 16, "k": 3, "pool": 2,
+                     "arch": "circ", "l": 4, "act_scale": 4.0},
+                    {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                     "arch": "circ", "l": 4, "act_scale": 4.0},
+                    {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                     "arch": "circ", "l": 4, "act_scale": 4.0},
+                    {"kind": "fc", "cin": 1024, "cout": 8, "k": 3, "pool": 2,
+                     "arch": "circ", "l": 4, "act_scale": 4.0}
+                  ]}"#,
+            )
+            .unwrap();
+            let mut bundle = Bundle::default();
+            let mut rng = Rng::new(77);
+            let mut w0 = vec![0.0f32; 4 * 3 * 4];
+            rng.fill_uniform(&mut w0);
+            bundle.insert_f32("layer0.w", &[4, 3, 4], w0);
+            bundle.insert_f32("layer0.b", &[16], vec![0.01; 16]);
+            let mut w3 = vec![0.0f32; 2 * 256 * 4];
+            rng.fill_uniform(&mut w3);
+            bundle.insert_f32("layer3.w", &[2, 256, 4], w3);
+            bundle.insert_f32("layer3.b", &[8], vec![0.0; 8]);
+            Arc::new(Engine::from_parts(manifest, &bundle).unwrap())
+        };
+        let plan = PartitionPlan::plan(&oracle.manifest, 2);
+        let part =
+            Arc::new(PartitionedEngine::new(Arc::clone(&oracle), plan).unwrap());
+        let c = Coordinator::start(
+            vec![Box::new(move || {
+                Box::new(PartitionedBackend {
+                    part,
+                    chips: vec![Backend::Digital, Backend::Digital],
+                }) as Box<dyn InferenceBackend>
+            })],
+            BatcherConfig { max_batch: 4, max_wait_us: 200, queue_cap: 0 },
+        );
+        let images: Vec<Tensor> = (0..8).map(img).collect();
+        let responses = c.classify_all(&images).unwrap();
+        for (im, r) in images.iter().zip(&responses) {
+            let want = oracle.forward(im, &mut Backend::Digital).unwrap();
+            assert_eq!(r.logits, want, "partitioned serving must be exact");
+        }
+    }
+
+    #[test]
+    fn monitored_member_probes_and_publishes_residual() {
+        let metrics = Arc::new(Metrics::default());
+        let desc = ChipDescription::ideal(4);
+        let sim = ChipSim::deterministic(desc.clone());
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                cooldown_passes: 0,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let (member, recal_rx) = FarmMember::monitored(
+            tiny_engine(7),
+            sim,
+            monitor,
+            DEFAULT_DRIFTING_PPM,
+            Arc::clone(&metrics),
+        );
+        drop(recal_rx); // monitor-only member
+        let status = Arc::clone(&member.status);
+        let farm = Farm::start(
+            vec![member],
+            FarmConfig {
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait_us: 100,
+                    queue_cap: 0,
+                },
+                ..FarmConfig::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let images: Vec<Tensor> = (0..12).map(img).collect();
+        farm.coord.classify_all(&images).unwrap();
+        assert!(metrics.probes.get() >= 1, "hook must probe");
+        assert_eq!(
+            status.health(),
+            ChipHealth::Healthy,
+            "deterministic un-drifted chip stays healthy"
+        );
+        assert_eq!(metrics.errors.get(), 0);
+    }
+}

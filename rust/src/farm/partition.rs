@@ -1,0 +1,401 @@
+//! Partition planner: shard a manifest's circulant block-rows across N
+//! chips (DESIGN.md §farm).
+//!
+//! The unit of assignment is a whole **block-row** of a circ layer's
+//! P×Q block grid: one block-row is `Q` l×l tiles programmed onto a
+//! chip's MRR bank, and — because every BCM multiply path computes its
+//! output rows independently per block-row — a chip holding block-rows
+//! `[r0, r1)` produces exactly rows `[r0·l, r1·l)` of the layer output.
+//! The electronic reduce step is therefore a plain row concatenation in
+//! block-row order, which is what keeps an N-chip farm **bit-identical**
+//! to the single-chip engine (pinned by `rust/tests/farm_e2e.rs`).
+//!
+//! Capacity model: [`crate::simulator::ChipDescription::mrr_capacity`]
+//! declares how many l×l tiles a chip can hold resident across all
+//! weight-stationary circ layers (`0` = unlimited).  A chip's load under
+//! a plan is the sum of its shard tile counts over every layer; the
+//! planner splits each layer's block-rows contiguously and near-evenly
+//! (chip `k` takes rows `[⌊k·P/N⌋, ⌊(k+1)·P/N⌋)`), and
+//! [`PartitionPlan::validate`] re-derives the grid from the manifest so
+//! a stale or hand-edited plan with dangling block references is
+//! refused with attributed diagnostics (the `partition` verify pass).
+
+use crate::onn::{LayerKind, Manifest};
+use crate::verify::Diagnostic;
+
+/// The block grid of one circ linear layer, derived from the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerGrid {
+    /// manifest layer index
+    pub layer: usize,
+    /// block-rows (P)
+    pub p: usize,
+    /// block-cols (Q) — every block-row is Q resident tiles
+    pub q: usize,
+    /// block order (l)
+    pub l: usize,
+}
+
+impl LayerGrid {
+    /// Total resident tiles of the full layer (P·Q).
+    pub fn tiles(&self) -> usize {
+        self.p * self.q
+    }
+}
+
+/// One chip's slice of one layer: block-rows `[row0, row1)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerShard {
+    /// manifest layer index (must name a circ linear layer)
+    pub layer: usize,
+    pub row0: usize,
+    pub row1: usize,
+    /// block-cols, copied from the grid so a shard is self-describing
+    pub q: usize,
+}
+
+impl LayerShard {
+    pub fn rows(&self) -> usize {
+        self.row1 - self.row0
+    }
+
+    /// Resident tiles this shard pins on its chip.
+    pub fn tiles(&self) -> usize {
+        self.rows() * self.q
+    }
+}
+
+/// A full farm partition: which block-rows of which layers live on which
+/// chip.  `assignments[k]` lists chip `k`'s shards in layer order; a
+/// chip may hold zero rows of a layer (narrow layers on wide farms).
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub chips: usize,
+    /// the circ-layer grids the plan was derived from, in layer order
+    pub grids: Vec<LayerGrid>,
+    /// per-chip shard lists, `assignments.len() == chips`
+    pub assignments: Vec<Vec<LayerShard>>,
+}
+
+/// The circ linear layers of a manifest as block grids, in layer order.
+pub fn circ_grids(manifest: &Manifest) -> Vec<LayerGrid> {
+    manifest
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            matches!(s.kind, LayerKind::Conv | LayerKind::Fc) && s.arch == "circ"
+        })
+        .map(|(i, s)| {
+            let (p, q) = s.bcm_dims();
+            LayerGrid { layer: i, p, q, l: s.l }
+        })
+        .collect()
+}
+
+/// Total resident tiles a single chip would need for the whole model.
+pub fn tile_demand(manifest: &Manifest) -> usize {
+    circ_grids(manifest).iter().map(LayerGrid::tiles).sum()
+}
+
+impl PartitionPlan {
+    /// Balanced contiguous split: for every circ layer, chip `k` takes
+    /// block-rows `[⌊k·P/N⌋, ⌊(k+1)·P/N⌋)`.  Deterministic, covers every
+    /// row exactly once, and keeps each chip's shard contiguous so the
+    /// reduce step is a straight row concatenation.
+    pub fn plan(manifest: &Manifest, chips: usize) -> PartitionPlan {
+        assert!(chips >= 1, "a farm has at least one chip");
+        let grids = circ_grids(manifest);
+        let assignments = (0..chips)
+            .map(|k| {
+                grids
+                    .iter()
+                    .map(|g| LayerShard {
+                        layer: g.layer,
+                        row0: k * g.p / chips,
+                        row1: (k + 1) * g.p / chips,
+                        q: g.q,
+                    })
+                    .collect()
+            })
+            .collect();
+        PartitionPlan { chips, grids, assignments }
+    }
+
+    /// Resident tiles chip `k` holds under this plan.
+    pub fn chip_tiles(&self, k: usize) -> usize {
+        self.assignments[k].iter().map(LayerShard::tiles).sum()
+    }
+
+    /// The most-loaded chip's resident tile count.
+    pub fn max_chip_tiles(&self) -> usize {
+        (0..self.chips).map(|k| self.chip_tiles(k)).max().unwrap_or(0)
+    }
+
+    /// Does every chip fit a bank of `capacity` tiles (`0` = unlimited)?
+    pub fn fits(&self, capacity: usize) -> bool {
+        capacity == 0 || self.max_chip_tiles() <= capacity
+    }
+
+    /// Smallest farm width whose balanced plan fits `capacity`, or `None`
+    /// when no block-row split can (some layer's single block-row — `Q`
+    /// tiles — already exceeds the bank).  `capacity == 0` → 1 chip.
+    pub fn required_chips(manifest: &Manifest, capacity: usize) -> Option<usize> {
+        if capacity == 0 {
+            return Some(1);
+        }
+        let grids = circ_grids(manifest);
+        if grids.iter().any(|g| g.p >= 1 && g.q > capacity) {
+            return None;
+        }
+        let total_rows: usize = grids.iter().map(|g| g.p).sum();
+        for n in 1..=total_rows.max(1) {
+            if PartitionPlan::plan(manifest, n).fits(capacity) {
+                return Some(n);
+            }
+        }
+        None
+    }
+
+    /// Structural validation against the manifest: the grids must match a
+    /// fresh derivation (a stale plan is refused), every shard must
+    /// reference an existing circ layer with in-range block-rows (no
+    /// dangling block refs), and per layer the shards must tile `[0, P)`
+    /// exactly — no gaps, no overlaps.  Returns attributed diagnostics
+    /// under the `partition` pass; empty means sound.
+    pub fn validate(&self, manifest: &Manifest) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        let fresh = circ_grids(manifest);
+        if self.grids != fresh {
+            out.push(diag(
+                None,
+                "grids",
+                format!("{} circ layer grids from the manifest", fresh.len()),
+                format!("{} stored grids", self.grids.len()),
+                "plan was derived from a different manifest",
+            ));
+            return out;
+        }
+        if self.assignments.len() != self.chips {
+            out.push(diag(
+                None,
+                "assignments",
+                format!("{} chip shard lists", self.chips),
+                format!("{}", self.assignments.len()),
+                "one shard list per chip",
+            ));
+            return out;
+        }
+        for g in &self.grids {
+            // collect this layer's shards across chips, in row order
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for shards in &self.assignments {
+                for s in shards.iter().filter(|s| s.layer == g.layer) {
+                    if s.row0 > s.row1 || s.row1 > g.p {
+                        out.push(diag(
+                            Some(g.layer),
+                            "shard.rows",
+                            format!("block-rows within [0, {}]", g.p),
+                            format!("[{}, {})", s.row0, s.row1),
+                            "dangling block-row reference",
+                        ));
+                        return out;
+                    }
+                    if s.q != g.q {
+                        out.push(diag(
+                            Some(g.layer),
+                            "shard.q",
+                            format!("{}", g.q),
+                            format!("{}", s.q),
+                            "shard width disagrees with the layer grid",
+                        ));
+                    }
+                    if s.rows() > 0 {
+                        spans.push((s.row0, s.row1));
+                    }
+                }
+            }
+            spans.sort_unstable();
+            let mut next = 0usize;
+            for (r0, r1) in &spans {
+                if *r0 != next {
+                    out.push(diag(
+                        Some(g.layer),
+                        "coverage",
+                        format!("block-row {next} covered exactly once"),
+                        if *r0 > next {
+                            format!("gap [{next}, {r0})")
+                        } else {
+                            format!("overlap at {r0}")
+                        },
+                        "shards must tile [0, P) exactly",
+                    ));
+                    return out;
+                }
+                next = *r1;
+            }
+            if next != g.p {
+                out.push(diag(
+                    Some(g.layer),
+                    "coverage",
+                    format!("{} block-rows covered", g.p),
+                    format!("{next}"),
+                    "shards must tile [0, P) exactly",
+                ));
+            }
+        }
+        // a shard naming a layer with no grid is dangling
+        for shards in &self.assignments {
+            for s in shards {
+                if !self.grids.iter().any(|g| g.layer == s.layer) {
+                    out.push(diag(
+                        Some(s.layer),
+                        "shard.layer",
+                        "a circ linear layer",
+                        format!("layer {}", s.layer),
+                        "dangling layer reference",
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Capacity validation: every chip's resident tiles must fit a bank
+    /// of `capacity` tiles (`0` = unlimited → always empty).
+    pub fn capacity_diags(&self, capacity: usize) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        if capacity == 0 {
+            return out;
+        }
+        for k in 0..self.chips {
+            let t = self.chip_tiles(k);
+            if t > capacity {
+                out.push(diag(
+                    None,
+                    format!("chip{k}.mrr_capacity"),
+                    format!("≤ {capacity} resident tiles"),
+                    format!("{t}"),
+                    "partition exceeds the chip's declared MRR bank",
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn diag(
+    layer: Option<usize>,
+    field: impl Into<String>,
+    expected: impl Into<String>,
+    found: String,
+    message: &str,
+) -> Diagnostic {
+    Diagnostic {
+        pass: "partition",
+        layer,
+        field: field.into(),
+        expected: expected.into(),
+        found,
+        message: message.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        // conv: cout 16 / l 4 -> P=4, n_in 1·3·3=9 -> Q=3 (12 tiles/row-4)
+        // fc: cout 8 / l 4 -> P=2, cin 64 -> Q=16
+        Manifest::parse(
+            r#"{
+              "dataset": "synth_cxr", "classes": 8,
+              "layers": [
+                {"kind": "conv", "cin": 1, "cout": 16, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0},
+                {"kind": "fc", "cin": 64, "cout": 8, "k": 3, "pool": 2,
+                 "arch": "circ", "l": 4, "act_scale": 4.0}
+              ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn grids_and_demand() {
+        let m = manifest();
+        let g = circ_grids(&m);
+        assert_eq!(g.len(), 2);
+        assert_eq!((g[0].p, g[0].q, g[0].layer), (4, 3, 0));
+        assert_eq!((g[1].p, g[1].q, g[1].layer), (2, 16, 2));
+        assert_eq!(tile_demand(&m), 4 * 3 + 2 * 16);
+    }
+
+    #[test]
+    fn plan_tiles_rows_exactly_for_any_width() {
+        let m = manifest();
+        for n in 1..=7 {
+            let plan = PartitionPlan::plan(&m, n);
+            assert!(plan.validate(&m).is_empty(), "n={n}");
+            let total: usize = (0..n).map(|k| plan.chip_tiles(k)).sum();
+            assert_eq!(total, tile_demand(&m), "n={n}: no tile lost or doubled");
+        }
+    }
+
+    #[test]
+    fn balanced_split_is_near_even() {
+        let plan = PartitionPlan::plan(&manifest(), 2);
+        // conv P=4 → 2+2 rows, fc P=2 → 1+1: both chips carry 6+16 tiles
+        assert_eq!(plan.chip_tiles(0), 2 * 3 + 16);
+        assert_eq!(plan.chip_tiles(1), 2 * 3 + 16);
+    }
+
+    #[test]
+    fn required_chips_walks_up_and_detects_infeasible() {
+        let m = manifest();
+        assert_eq!(PartitionPlan::required_chips(&m, 0), Some(1));
+        assert_eq!(PartitionPlan::required_chips(&m, 1000), Some(1));
+        // demand is 44; half of it forces a 2-chip farm
+        assert_eq!(PartitionPlan::required_chips(&m, 22), Some(2));
+        // 19 tiles: a chip can hold one fc row (16) + one conv row (3),
+        // which the balanced split first achieves at 4 chips
+        assert_eq!(PartitionPlan::required_chips(&m, 19), Some(4));
+        assert!(PartitionPlan::plan(&m, 4).fits(19));
+        assert!(!PartitionPlan::plan(&m, 3).fits(19));
+        // one fc block-row is 16 tiles: a 15-tile bank can never fit
+        assert_eq!(PartitionPlan::required_chips(&m, 15), None);
+    }
+
+    #[test]
+    fn validate_rejects_dangling_and_overlapping_shards() {
+        let m = manifest();
+        let mut plan = PartitionPlan::plan(&m, 2);
+        plan.assignments[1][0].row1 = 9; // past conv P=4
+        let d = &plan.validate(&m)[0];
+        assert_eq!(d.pass, "partition");
+        assert!(d.message.contains("dangling"), "{}", d.render());
+
+        let mut plan = PartitionPlan::plan(&m, 2);
+        plan.assignments[1][0].row0 = 1; // overlaps chip 0's [0, 2)
+        assert!(!plan.validate(&m).is_empty());
+
+        let mut plan = PartitionPlan::plan(&m, 2);
+        plan.assignments[1][1].row1 = 1; // fc rows [1, 2) dropped
+        let d = &plan.validate(&m)[0];
+        assert_eq!(d.layer, Some(2));
+        assert!(d.found.contains('1'), "{}", d.render());
+    }
+
+    #[test]
+    fn capacity_diags_name_the_overloaded_chip() {
+        let plan = PartitionPlan::plan(&manifest(), 2);
+        assert!(plan.capacity_diags(0).is_empty());
+        assert!(plan.capacity_diags(22).is_empty());
+        let d = plan.capacity_diags(21);
+        assert_eq!(d.len(), 2, "both chips hold 22 tiles");
+        assert!(d[0].field.contains("chip0"));
+        assert!(d[0].message.contains("MRR bank"));
+    }
+}

@@ -1,0 +1,301 @@
+//! Health-aware batch router: the farm's failover stage between the
+//! dynamic batcher and the per-chip pipelines (DESIGN.md §farm).
+//!
+//! The router owns the batcher's output and one **bounded**
+//! `sync_channel` per farm member, so a slow or wedged chip exerts
+//! backpressure toward admission control instead of queueing batches
+//! without bound (`repo_lint`'s stage-buffer-bounded rule covers this
+//! file).  Per batch it reads every member's live
+//! [`ChipHealth`](super::ChipHealth) and dispatches by preference:
+//!
+//! 1. round-robin over serving-capable members (`Healthy` / `Drifting`);
+//! 2. a `Recalibrating` member if nothing healthier is routable — its
+//!    pipeline still serves on the old engine while the background
+//!    recalibration runs, it is just a worse operating point
+//!    (`farm_absorbed` counts these);
+//! 3. a `Failed` member only when *every* member has failed — zero-drop
+//!    beats refusing, and the operator sees it in the health states.
+//!
+//! A batch that lands anywhere other than the round-robin's natural next
+//! member counts in `farm_rerouted`; observed health-state edges count
+//! in `farm_transitions`.  Members whose pipeline is gone (teardown
+//! race) are skipped; only when no member can take the batch at all are
+//! its requests accounted as errors, so the submitted/completed/errors
+//! conservation the coordinator tests pin still holds.
+
+use crate::util::sync::{mpsc, Arc};
+
+use crate::coordinator::{Batch, Metrics};
+
+use super::{ChipHealth, ChipStatus};
+
+/// One routable farm member: its bounded batch queue and health handle.
+pub(crate) struct RouteTarget {
+    pub tx: mpsc::SyncSender<Batch>,
+    pub status: Arc<ChipStatus>,
+}
+
+/// Router loop body (runs on its own thread).  Exits when the batcher's
+/// sender closes; dropping the member senders then cascades shutdown
+/// into the per-chip pipelines.
+pub(crate) fn run(
+    rx: mpsc::Receiver<Batch>,
+    targets: Vec<RouteTarget>,
+    metrics: Arc<Metrics>,
+) {
+    let n = targets.len();
+    let mut cursor = 0usize;
+    // transition edges count from the farm's documented starting state
+    // (every member Healthy), not from a racy first observation
+    let mut last: Vec<ChipHealth> = vec![ChipHealth::Healthy; n];
+    while let Ok(batch) = rx.recv() {
+        if n == 0 {
+            // a farm always has ≥1 member (Farm::start asserts); this
+            // arm only keeps accounting sound if that ever changes
+            metrics.queue_depth.sub(batch.requests.len() as i64);
+            metrics.errors.add(batch.requests.len());
+            continue;
+        }
+        // observe health once per batch; count every state edge
+        let health: Vec<ChipHealth> =
+            targets.iter().map(|t| t.status.health()).collect();
+        for (h, l) in health.iter().zip(last.iter_mut()) {
+            if h != l {
+                metrics.farm_transitions.add(1);
+                *l = *h;
+            }
+        }
+        // preference order from the round-robin cursor: serving-capable
+        // members first, then recalibrating, failed only as last resort
+        let mut order: Vec<usize> = Vec::with_capacity(n);
+        let mut absorbing = false;
+        for pass in 0..3 {
+            for k in 0..n {
+                let i = (cursor + k) % n;
+                let take = match pass {
+                    0 => health[i].serves(),
+                    1 => health[i] == ChipHealth::Recalibrating,
+                    _ => health[i] == ChipHealth::Failed,
+                };
+                if take {
+                    order.push(i);
+                }
+            }
+            if pass == 0 {
+                absorbing = order.is_empty();
+            }
+        }
+
+        let natural = cursor % n;
+        let mut pending = Some(batch);
+        let mut routed = None;
+        // first pass: first member in preference order with queue space
+        // — a busy chip must not stall traffic a healthy sibling could
+        // take right now
+        for &i in &order {
+            let Some(b) = pending.take() else { break };
+            match targets[i].tx.try_send(b) {
+                Ok(()) => {
+                    routed = Some(i);
+                    break;
+                }
+                Err(mpsc::TrySendError::Full(b))
+                | Err(mpsc::TrySendError::Disconnected(b)) => pending = Some(b),
+            }
+        }
+        // every queue full: block on the most-preferred live member, so
+        // the backpressure reaches admission control at the intake queue
+        if routed.is_none() {
+            for &i in &order {
+                let Some(b) = pending.take() else { break };
+                match targets[i].tx.send(b) {
+                    Ok(()) => {
+                        routed = Some(i);
+                        break;
+                    }
+                    Err(mpsc::SendError(b)) => pending = Some(b),
+                }
+            }
+        }
+        match routed {
+            Some(i) => {
+                if i != natural {
+                    metrics.farm_rerouted.add(1);
+                }
+                if absorbing {
+                    metrics.farm_absorbed.add(1);
+                }
+                cursor = i + 1;
+            }
+            None => {
+                // every member pipeline is gone (teardown race): account
+                // the requests as errors so conservation holds
+                if let Some(b) = pending {
+                    metrics.queue_depth.sub(b.requests.len() as i64);
+                    metrics.errors.add(b.requests.len());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use crate::tensor::Tensor;
+    use std::time::{Duration, Instant};
+
+    fn batch(ids: &[u64]) -> Batch {
+        Batch {
+            requests: ids
+                .iter()
+                .map(|&id| {
+                    // reply target irrelevant here: the router never
+                    // answers requests, it only moves batches
+                    let (reply, _rx) = mpsc::channel();
+                    Request {
+                        id,
+                        image: Tensor::zeros(&[1, 2, 2]),
+                        enqueued: Instant::now(),
+                        reply,
+                    }
+                })
+                .collect(),
+            formed: Instant::now(),
+        }
+    }
+
+    struct Farmlet {
+        tx: mpsc::Sender<Batch>,
+        rxs: Vec<mpsc::Receiver<Batch>>,
+        status: Vec<Arc<ChipStatus>>,
+        metrics: Arc<Metrics>,
+        _h: std::thread::JoinHandle<()>,
+    }
+
+    fn farmlet(n: usize) -> Farmlet {
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let mut rxs = Vec::new();
+        let mut status = Vec::new();
+        let mut targets = Vec::new();
+        for _ in 0..n {
+            let (mtx, mrx) = mpsc::sync_channel::<Batch>(4);
+            let st = ChipStatus::new(None, 10_000);
+            targets.push(RouteTarget { tx: mtx, status: Arc::clone(&st) });
+            rxs.push(mrx);
+            status.push(st);
+        }
+        let m = Arc::clone(&metrics);
+        let _h = std::thread::spawn(move || run(rx, targets, m));
+        Farmlet { tx, rxs, status, metrics, _h }
+    }
+
+    fn recv(rx: &mpsc::Receiver<Batch>) -> Option<Batch> {
+        rx.recv_timeout(Duration::from_secs(2)).ok()
+    }
+
+    #[test]
+    fn round_robins_over_healthy_members() {
+        let f = farmlet(3);
+        for i in 0..6 {
+            f.tx.send(batch(&[i])).unwrap();
+        }
+        for k in 0..3 {
+            // member k gets batches k and k+3, in order
+            let a = recv(&f.rxs[k]).unwrap();
+            let b = recv(&f.rxs[k]).unwrap();
+            assert_eq!(a.requests[0].id, k as u64);
+            assert_eq!(b.requests[0].id, (k + 3) as u64);
+        }
+        assert_eq!(f.metrics.farm_rerouted.get(), 0);
+        assert_eq!(f.metrics.farm_absorbed.get(), 0);
+    }
+
+    #[test]
+    fn failed_member_is_skipped_and_counted() {
+        let f = farmlet(3);
+        f.status[1].fail();
+        for i in 0..4 {
+            f.tx.send(batch(&[i])).unwrap();
+        }
+        // member 1 never serves; 0 and 2 alternate
+        assert_eq!(recv(&f.rxs[0]).unwrap().requests[0].id, 0);
+        assert_eq!(recv(&f.rxs[2]).unwrap().requests[0].id, 1);
+        assert_eq!(recv(&f.rxs[0]).unwrap().requests[0].id, 2);
+        assert_eq!(recv(&f.rxs[2]).unwrap().requests[0].id, 3);
+        assert!(
+            f.rxs[1].recv_timeout(Duration::from_millis(50)).is_err(),
+            "a failed chip must not receive traffic"
+        );
+        // one transition edge (Healthy → Failed), and every batch whose
+        // natural round-robin slot was the dead member rerouted
+        assert_eq!(f.metrics.farm_transitions.get(), 1);
+        assert!(f.metrics.farm_rerouted.get() >= 1);
+        assert_eq!(f.metrics.farm_absorbed.get(), 0);
+        assert_eq!(f.metrics.errors.get(), 0);
+    }
+
+    #[test]
+    fn drifting_member_still_serves() {
+        let f = farmlet(2);
+        f.status[0].set_residual_ppm(50_000); // ≥ the 10_000 threshold
+        f.tx.send(batch(&[0])).unwrap();
+        f.tx.send(batch(&[1])).unwrap();
+        assert!(recv(&f.rxs[0]).is_some(), "drifting is degraded, not dead");
+        assert!(recv(&f.rxs[1]).is_some());
+        assert_eq!(f.metrics.farm_transitions.get(), 1);
+    }
+
+    #[test]
+    fn all_failed_still_routes_zero_drop() {
+        let f = farmlet(2);
+        f.status[0].fail();
+        f.status[1].fail();
+        f.tx.send(batch(&[7, 8])).unwrap();
+        let b = recv(&f.rxs[0]).unwrap();
+        assert_eq!(b.requests.len(), 2, "zero-drop beats refusing");
+        assert_eq!(f.metrics.farm_absorbed.get(), 1);
+        assert_eq!(f.metrics.errors.get(), 0);
+    }
+
+    #[test]
+    fn full_preferred_queue_spills_to_sibling() {
+        // member 0's queue holds one undrained batch: when the cursor
+        // comes back around, the next batch must spill to member 1
+        // instead of waiting on the full queue
+        let (tx, rx) = mpsc::channel::<Batch>();
+        let metrics = Arc::new(Metrics::default());
+        let (t0, r0) = mpsc::sync_channel::<Batch>(1);
+        let (t1, r1) = mpsc::sync_channel::<Batch>(4);
+        let targets = vec![
+            RouteTarget { tx: t0, status: ChipStatus::new(None, 10_000) },
+            RouteTarget { tx: t1, status: ChipStatus::new(None, 10_000) },
+        ];
+        let m = Arc::clone(&metrics);
+        let _h = std::thread::spawn(move || run(rx, targets, m));
+        tx.send(batch(&[0])).unwrap(); // → member 0 (now full)
+        tx.send(batch(&[1])).unwrap(); // → member 1 (its natural turn)
+        tx.send(batch(&[2])).unwrap(); // natural turn 0 is full → spills
+        assert_eq!(recv(&r1).unwrap().requests[0].id, 1);
+        assert_eq!(recv(&r1).unwrap().requests[0].id, 2, "spilled batch");
+        assert_eq!(recv(&r0).unwrap().requests[0].id, 0);
+        assert!(metrics.farm_rerouted.get() >= 1, "spill counts as reroute");
+    }
+
+    #[test]
+    fn dead_members_fall_through_and_total_loss_counts_errors() {
+        let f = farmlet(2);
+        drop(f.rxs); // both pipelines gone
+        f.tx.send(batch(&[1, 2, 3])).unwrap();
+        // the router must not hang; the lost requests become errors
+        let t0 = Instant::now();
+        while f.metrics.errors.get() < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "router stuck");
+            std::thread::yield_now();
+        }
+        assert_eq!(f.metrics.errors.get(), 3);
+        assert_eq!(f.metrics.queue_depth.get(), -3, "depth rebalanced");
+    }
+}

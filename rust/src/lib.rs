@@ -43,6 +43,7 @@ pub mod circulant;
 pub mod coordinator;
 pub mod data;
 pub mod drift;
+pub mod farm;
 pub mod onn;
 pub mod photonic;
 pub mod quant;

@@ -3,6 +3,14 @@
 //! Subcommands:
 //!   info                       artifact + chip inventory
 //!   serve  [--model M]         serve the exported test set, print metrics
+//!          [--chips N]         farm width: N=1 (default) is the plain
+//!                              coordinator; N>1 serves through the
+//!                              health-routed farm, partitioning the
+//!                              model across chips when its tile demand
+//!                              exceeds --chip-capacity
+//!          [--chip-capacity T] per-chip MRR bank in resident tiles
+//!                              (default: chip.json's mrr_capacity;
+//!                              0 = unlimited)
 //!   mvm    [--size S]          one BCM matmul through sim (+ XLA with
 //!                              `--features pjrt`)
 //!   analyze                    print the benchmark-analysis summary
@@ -19,8 +27,12 @@ use cirptc::analysis::{AreaModel, PowerModel, WeightTech};
 use cirptc::arch::CirPtcConfig;
 use cirptc::circulant::Bcm;
 use cirptc::coordinator::worker::EngineBackend;
-use cirptc::coordinator::{BatcherConfig, Coordinator};
+use cirptc::coordinator::{BatcherConfig, Coordinator, Metrics};
 use cirptc::data::Bundle;
+use cirptc::farm::{
+    tile_demand, Farm, FarmConfig, FarmMember, PartitionPlan, PartitionedBackend,
+    PartitionedEngine,
+};
 use cirptc::onn::{Backend, Engine};
 use cirptc::runtime::available_artifacts;
 #[cfg(feature = "pjrt")]
@@ -28,7 +40,7 @@ use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
 use cirptc::util::cli::Args;
-use cirptc::util::error::Result;
+use cirptc::util::error::{Error, Result};
 use cirptc::util::rng::Rng;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -46,7 +58,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
                  [--model NAME] [--backend digital|photonic] [--size S] \
-                 [--batch N] [--wait-us US] [--queue-cap N]"
+                 [--batch N] [--wait-us US] [--queue-cap N] [--chips N] \
+                 [--chip-capacity TILES]"
             );
             Ok(())
         }
@@ -109,31 +122,103 @@ fn serve(args: &Args) -> Result<()> {
         })
         .collect();
 
-    let backends: Vec<cirptc::coordinator::BackendFactory> = (0..workers)
-        .map(|i| {
-            let engine = Arc::clone(&engine);
-            let backend = backend.clone();
-            let mut d = chip.clone();
-            d.seed ^= i as u64; // independent chip instances
-            Box::new(move || {
+    let chips_n = args.usize_or("chips", 1).max(1);
+    let capacity = args.usize_or("chip-capacity", chip.mrr_capacity);
+    let bcfg = BatcherConfig {
+        max_batch: args.usize_or("batch", 8),
+        max_wait_us: args.usize_or("wait-us", 2000) as u64,
+        queue_cap: args.usize_or("queue-cap", 0),
+    };
+
+    let coord = if chips_n == 1 {
+        let backends: Vec<cirptc::coordinator::BackendFactory> = (0..workers)
+            .map(|i| {
+                let engine = Arc::clone(&engine);
+                let backend = backend.clone();
+                let mut d = chip.clone();
+                d.seed ^= i as u64; // independent chip instances
+                Box::new(move || {
+                    let mode = match backend.as_str() {
+                        "digital" => Backend::Digital,
+                        _ => Backend::PhotonicSim(ChipSim::new(d)),
+                    };
+                    Box::new(EngineBackend { engine, mode })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as cirptc::coordinator::BackendFactory
+            })
+            .collect();
+        Coordinator::start(backends, bcfg)
+    } else if capacity > 0 && tile_demand(&engine.manifest) > capacity {
+        // the model's resident tiles exceed one chip's MRR bank: shard
+        // its circulant block-rows across the farm, every worker driving
+        // all N chips of the partition per batch
+        let demand = tile_demand(&engine.manifest);
+        let plan = PartitionPlan::plan(&engine.manifest, chips_n);
+        if let Some(d) = plan.capacity_diags(capacity).first() {
+            let hint = match PartitionPlan::required_chips(&engine.manifest, capacity)
+            {
+                Some(n) => format!(" (need --chips {n})"),
+                None => " (no farm width fits: a single block-row exceeds \
+                         the bank)"
+                    .to_string(),
+            };
+            return Err(Error::msg(format!(
+                "--chips {chips_n} cannot hold {model}: {}{hint}",
+                d.render()
+            )));
+        }
+        println!(
+            "partitioning {model} across {chips_n} chips \
+             (demand {demand} tiles, bank {capacity} tiles/chip)"
+        );
+        let part = Arc::new(PartitionedEngine::new(Arc::clone(&engine), plan)?);
+        let backends: Vec<cirptc::coordinator::BackendFactory> = (0..workers)
+            .map(|i| {
+                let part = Arc::clone(&part);
+                let backend = backend.clone();
+                let chip = chip.clone();
+                Box::new(move || {
+                    let chips: Vec<Backend> = (0..part.plan.chips)
+                        .map(|k| match backend.as_str() {
+                            "digital" => Backend::Digital,
+                            _ => {
+                                let mut d = chip.clone();
+                                d.seed ^= (i * part.plan.chips + k) as u64;
+                                Backend::PhotonicSim(ChipSim::new(d))
+                            }
+                        })
+                        .collect();
+                    Box::new(PartitionedBackend { part, chips })
+                        as Box<dyn cirptc::coordinator::InferenceBackend>
+                }) as cirptc::coordinator::BackendFactory
+            })
+            .collect();
+        Coordinator::start(backends, bcfg)
+    } else {
+        // the model fits each chip: serve N independent replicas behind
+        // the health-routed farm (failover + per-chip accounting)
+        let members: Vec<FarmMember> = (0..chips_n)
+            .map(|k| {
                 let mode = match backend.as_str() {
                     "digital" => Backend::Digital,
-                    _ => Backend::PhotonicSim(ChipSim::new(d)),
+                    _ => {
+                        let mut d = chip.clone();
+                        d.seed ^= k as u64; // independent chip instances
+                        Backend::PhotonicSim(ChipSim::new(d))
+                    }
                 };
-                Box::new(EngineBackend { engine, mode })
-                    as Box<dyn cirptc::coordinator::InferenceBackend>
-            }) as cirptc::coordinator::BackendFactory
-        })
-        .collect();
-
-    let coord = Coordinator::start(
-        backends,
-        BatcherConfig {
-            max_batch: args.usize_or("batch", 8),
-            max_wait_us: args.usize_or("wait-us", 2000) as u64,
-            queue_cap: args.usize_or("queue-cap", 0),
-        },
-    );
+                FarmMember::fixed(Arc::clone(&engine), mode)
+            })
+            .collect();
+        println!("serving {model} on a {chips_n}-chip replica farm");
+        let farm = Farm::start(
+            members,
+            FarmConfig { batcher: bcfg, ..FarmConfig::default() },
+            Arc::new(Metrics::default()),
+        );
+        let Farm { coord, status: _ } = farm;
+        coord
+    };
     let t0 = std::time::Instant::now();
     let responses = coord.classify_all(&images)?;
     let wall = t0.elapsed();

@@ -204,7 +204,7 @@ impl Engine {
     }
 
     /// Index of the first conv/fc layer, if any.
-    fn first_linear(&self) -> Option<usize> {
+    pub(crate) fn first_linear(&self) -> Option<usize> {
         self.manifest
             .layers
             .iter()
@@ -212,7 +212,7 @@ impl Engine {
     }
 
     /// Index of the last conv/fc layer, if any.
-    fn last_linear(&self) -> Option<usize> {
+    pub(crate) fn last_linear(&self) -> Option<usize> {
         self.manifest
             .layers
             .iter()
@@ -417,8 +417,11 @@ impl Engine {
     /// im2col / transpose, the photonic activation-scale clamp, row
     /// padding to the BCM width, and (given a snapshot) the off-thread
     /// quantize + Γ-mix.  Pure with respect to the backend — this is the
-    /// half of a linear layer the pipeline's pre stage hoists.
-    fn prep_linear(
+    /// half of a linear layer the pipeline's pre stage hoists.  Also the
+    /// shared operand prep of a farm-partitioned layer
+    /// ([`crate::farm::PartitionedEngine`]) — every chip's shard multiplies
+    /// the same packed operand.
+    pub(crate) fn prep_linear(
         &self,
         idx: usize,
         spec: &LayerSpec,
@@ -599,7 +602,7 @@ impl Engine {
 
     /// Run a non-linear (chip-free) layer — the arms shared by the pre
     /// and post stages and [`Engine::run_layer`].
-    fn run_electronic_layer(
+    pub(crate) fn run_electronic_layer(
         &self,
         idx: usize,
         spec: &LayerSpec,
@@ -641,7 +644,7 @@ impl Engine {
 
     /// The compressed weights + planned state of linear layer `idx`
     /// (photonic execution requires the circ arch).
-    fn linear_plan(&self, idx: usize) -> Result<(&Bcm, &LinearPlan)> {
+    pub(crate) fn linear_plan(&self, idx: usize) -> Result<(&Bcm, &LinearPlan)> {
         let bcm = match &self.layers[idx] {
             LayerState::Linear(lw) => lw.bcm.as_ref(),
             _ => None,
@@ -649,6 +652,15 @@ impl Engine {
         match (bcm, &self.plans[idx]) {
             (Some(bcm), LayerPlan::Linear(lp)) => Ok((bcm, lp)),
             _ => bail!("photonic path needs circ arch"),
+        }
+    }
+
+    /// Bias vector of linear layer `idx` — the farm's shared reduce step
+    /// adds it once, after the per-chip partials are concatenated.
+    pub(crate) fn linear_bias(&self, idx: usize) -> Result<&[f32]> {
+        match &self.layers[idx] {
+            LayerState::Linear(lw) => Ok(&lw.bias),
+            _ => bail!("layer {idx}: linear_bias on a non-linear layer"),
         }
     }
 }
@@ -659,10 +671,10 @@ impl Engine {
 /// the backend is needed.  Opaque hand-off token between the pre and
 /// chip stages; plain owned tensors, so it crosses threads freely.
 pub struct PreBatch {
-    state: PreState,
+    pub(crate) state: PreState,
 }
 
-enum PreState {
+pub(crate) enum PreState {
     /// empty input batch: flows through to empty logits
     Empty,
     /// prefix ran; the chip stage resumes the layer walk at `next`
@@ -676,35 +688,35 @@ enum PreState {
 /// Output of [`Engine::chip_batch`]: the activation after the last
 /// linear layer, ready for the chip-free post stage.
 pub struct MidBatch {
-    state: MidState,
+    pub(crate) state: MidState,
 }
 
-enum MidState {
+pub(crate) enum MidState {
     Empty,
     Act { act: Activation, next: usize },
 }
 
 /// A linear layer's packed operand, between prep and execution.
-struct LinearPrep {
-    idx: usize,
+pub(crate) struct LinearPrep {
+    pub(crate) idx: usize,
     /// packed for the photonic path (activation-scale clamp applied)?
     /// Must match the backend handed to [`Engine::finish_linear`].
-    photonic: bool,
-    xp: Tensor,
+    pub(crate) photonic: bool,
+    pub(crate) xp: Tensor,
     /// optimistic off-thread operand encode, generation-stamped; the
     /// chip re-validates per pass and falls back to in-line encoding
-    enc: Option<EncodedOperand>,
-    shape: PrepShape,
+    pub(crate) enc: Option<EncodedOperand>,
+    pub(crate) shape: PrepShape,
 }
 
-enum PrepShape {
+pub(crate) enum PrepShape {
     Conv { b: usize, h: usize, w: usize },
     Fc { b: usize },
 }
 
 /// Batch-major activation flowing between layers: the whole batch rides in
 /// one tensor so every linear layer sees a single multi-column operand.
-enum Activation {
+pub(crate) enum Activation {
     /// image batch, shape (b, c, h, w)
     Image(Tensor),
     /// flattened feature batch, shape (b, n), one row per image
@@ -712,7 +724,7 @@ enum Activation {
 }
 
 impl Activation {
-    fn image(self) -> Result<Tensor> {
+    pub(crate) fn image(self) -> Result<Tensor> {
         match self {
             Activation::Image(t) => Ok(t),
             Activation::Matrix(_) => bail!("expected image activation"),
@@ -720,7 +732,7 @@ impl Activation {
     }
 
     /// Row-per-image matrix view; images flatten to their row-major data.
-    fn matrix(self) -> Result<Tensor> {
+    pub(crate) fn matrix(self) -> Result<Tensor> {
         match self {
             Activation::Matrix(t) => Ok(t),
             Activation::Image(t) => {

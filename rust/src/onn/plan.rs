@@ -107,6 +107,30 @@ impl LinearPlan {
             None => bcm.matmul(x),
         }
     }
+
+    /// Block-row shard `[r0, r1)` of this plan for one farm chip
+    /// ([`crate::farm`]): the sliced weights plus a plan whose sign halves
+    /// are *sliced from the parent split*, keeping the parent's global
+    /// rescale.  Re-splitting the sliced weights would pick a shard-local
+    /// scale and break the farm's bit-identity with the single-chip
+    /// engine whenever the layer's max-magnitude weight lives outside the
+    /// shard.  The FFT route decision is inherited (same `l`), with
+    /// spectra rebuilt over the sliced rows, so each shard takes the same
+    /// direct-vs-Eq.(2) route as the full layer.
+    pub fn shard_of(&self, bcm: &Bcm, r0: usize, r1: usize) -> (Bcm, LinearPlan) {
+        let shard = bcm.block_rows(r0, r1);
+        let fft_state = self.fft.as_ref().map(|f| FftPlanned {
+            plan: Arc::clone(&f.plan),
+            spec: fft::WeightSpectra::new(&shard, &f.plan),
+        });
+        let sign = SignSplit {
+            pos: self.sign.pos.block_rows(r0, r1),
+            neg: self.sign.neg.block_rows(r0, r1),
+            scale: self.sign.scale,
+        };
+        let plan = LinearPlan { sign, n_pad: self.n_pad, rows: self.rows, fft: fft_state };
+        (shard, plan)
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +167,35 @@ mod tests {
         // order 4: direct; order 16: Eq. (2) with cached spectra
         assert!(LinearPlan::new(&rand_bcm(2, 2, 4, 1), 8).fft.is_none());
         assert!(LinearPlan::new(&rand_bcm(2, 2, 16, 2), 32).fft.is_some());
+    }
+
+    #[test]
+    fn shard_plan_slices_sign_and_keeps_parent_scale() {
+        for l in [4usize, 16] {
+            let bcm = rand_bcm(4, 2, l, 7);
+            let full = LinearPlan::new(&bcm, bcm.n());
+            let (sb, sp) = full.shard_of(&bcm, 1, 3);
+            assert_eq!((sb.p, sb.q, sb.l), (2, 2, l));
+            assert_eq!(sp.fft.is_some(), full.fft.is_some(), "route inherited");
+            assert_eq!(sp.sign.scale, full.sign.scale, "global rescale kept");
+            let stride = 2 * l;
+            assert_eq!(sp.sign.pos.w[..], full.sign.pos.w[stride..3 * stride]);
+            assert_eq!(sp.sign.neg.w[..], full.sign.neg.w[stride..3 * stride]);
+            // the shard's planned product must equal the matching rows of
+            // the full planned product, bit for bit — the farm's reduce
+            // step is a plain row concatenation
+            let mut r = Rng::new(77);
+            let mut xd = vec![0.0f32; bcm.n() * 5];
+            r.fill_uniform(&mut xd);
+            let x = Tensor::new(&[bcm.n(), 5], xd);
+            let want = full.multiply(&bcm, &x, 2);
+            let got = sp.multiply(&sb, &x, 2);
+            for rr in 0..sb.m() {
+                for c in 0..5 {
+                    assert_eq!(got.at2(rr, c), want.at2(rr + l, c), "row {rr} col {c}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub struct ChipDescription {
     pub w_bits: u32,
     pub x_bits: u32,
     pub seed: u64,
+    /// MRR-bank capacity: how many l×l tiles this chip can hold resident
+    /// across all weight-stationary layers.  `0` means unlimited (the
+    /// pre-farm single-chip assumption, and the default when absent from
+    /// `chip.json`).  A model whose total circ tile count exceeds this is
+    /// partitioned across chips by [`crate::farm::PartitionPlan`].
+    pub mrr_capacity: usize,
 }
 
 impl ChipDescription {
@@ -58,6 +64,7 @@ impl ChipDescription {
             w_bits: 0,
             x_bits: 0,
             seed: 0,
+            mrr_capacity: 0,
         }
     }
 
@@ -80,6 +87,7 @@ impl ChipDescription {
             w_bits: f("w_bits") as u32,
             x_bits: f("x_bits") as u32,
             seed: f("seed") as u64,
+            mrr_capacity: f("mrr_capacity") as usize,
         })
     }
 
@@ -122,6 +130,7 @@ impl ChipDescription {
             ("w_bits", Json::Num(self.w_bits as f64)),
             ("x_bits", Json::Num(self.x_bits as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("mrr_capacity", Json::Num(self.mrr_capacity as f64)),
         ])
         .dump()
     }
@@ -958,6 +967,7 @@ mod tests {
         d.w_bits = 6;
         d.x_bits = 4;
         d.seed = 7;
+        d.mrr_capacity = 48;
         let dir = std::env::temp_dir().join("cirptc_chipdesc_rt");
         let path = dir.join("drift_snapshot.json");
         d.save(&path).unwrap();
@@ -967,6 +977,12 @@ mod tests {
         assert_eq!(back.resp, d.resp);
         assert_eq!(back.dark, d.dark);
         assert_eq!((back.w_bits, back.x_bits, back.seed), (6, 4, 7));
+        assert_eq!(back.mrr_capacity, 48);
+        // pre-farm chip.json files omit mrr_capacity → unlimited
+        let legacy = r#"{"l": 2,
+            "gamma_true": [[1.0, 0.0], [0.0, 1.0]], "resp": [1.0, 1.0]}"#;
+        std::fs::write(&path, legacy).unwrap();
+        assert_eq!(ChipDescription::load(&path).unwrap().mrr_capacity, 0);
         // a corrupt snapshot names the file in the error chain
         std::fs::write(&path, "{\"l\": 4}").unwrap();
         let err = ChipDescription::load(&path).unwrap_err();

@@ -4,8 +4,9 @@
 //! optionally a [`ChipDescription`]) **before** an engine is built from
 //! them: layer-graph shape propagation, block-size divisibility, tensor
 //! presence/shape/finiteness, BN statistics sanity, quantizer scales,
-//! weight-spectra consistency, chip capability and dangling artifact
-//! references.  Every violation is an attributed, machine-readable
+//! weight-spectra consistency, chip capability, farm-partition
+//! feasibility against the chip's declared MRR bank, and dangling
+//! artifact references.  Every violation is an attributed, machine-readable
 //! [`Diagnostic`] (which layer, which field, expected vs found), so a
 //! refused artifact says *what* is wrong instead of failing deep inside
 //! layer construction with a shape panic.
@@ -27,7 +28,7 @@ use crate::util::json::Json;
 #[derive(Clone, Debug, PartialEq)]
 pub struct Diagnostic {
     /// which pass fired (`graph`, `tensors`, `blocks`, `bn`, `quantizer`,
-    /// `spectra`, `chip`, `artifacts`)
+    /// `spectra`, `chip`, `partition`, `artifacts`)
     pub pass: &'static str,
     /// the layer the violation is attributed to (`None` for bundle- or
     /// chip-level findings)
@@ -135,6 +136,7 @@ pub fn validate_artifacts(
     passes::check_weight_spectra(manifest, bundle, &mut out);
     if let Some(c) = chip {
         passes::check_chip(manifest, c, &mut out);
+        passes::check_partition(manifest, c, &mut out);
     }
     passes::check_artifact_coverage(manifest, bundle, &mut out);
     Report { diagnostics: out }

@@ -9,6 +9,7 @@
 use crate::circulant::{fft, Bcm};
 use crate::data::bundle::Entry;
 use crate::data::Bundle;
+use crate::farm::partition::{circ_grids, tile_demand, PartitionPlan};
 use crate::onn::manifest::{LayerKind, LayerSpec};
 use crate::onn::Manifest;
 use crate::simulator::ChipDescription;
@@ -616,6 +617,51 @@ pub fn check_chip(
                 "block order does not fit the chip's wavelength bank",
             ));
         }
+    }
+}
+
+/// Partition feasibility against the chip's declared MRR bank
+/// ([`ChipDescription::mrr_capacity`], `0` = unlimited → no-op).  The
+/// farm planner's unit of assignment is a whole block-row of `Q`
+/// resident tiles, so a layer whose `Q` exceeds the bank cannot be
+/// served by *any* farm width; otherwise the model must admit some
+/// width whose per-chip load fits ([`PartitionPlan::required_chips`]).
+/// A deeper structural check of a concrete plan (dangling block-rows,
+/// gaps, overlaps) lives in [`PartitionPlan::validate`] and runs when a
+/// [`crate::farm::PartitionedEngine`] is built.
+pub fn check_partition(
+    manifest: &Manifest,
+    chip: &ChipDescription,
+    out: &mut Vec<Diagnostic>,
+) {
+    let cap = chip.mrr_capacity;
+    if cap == 0 {
+        return;
+    }
+    let mut indivisible = false;
+    for g in circ_grids(manifest) {
+        if g.q > cap {
+            indivisible = true;
+            out.push(diag(
+                "partition",
+                Some(g.layer),
+                "mrr_capacity",
+                format!("≥ {} tiles (one block-row is the unit of assignment)", g.q),
+                format!("{cap}"),
+                "a single block-row exceeds the chip's MRR bank; \
+                 no farm width can serve this layer",
+            ));
+        }
+    }
+    if !indivisible && PartitionPlan::required_chips(manifest, cap).is_none() {
+        out.push(diag(
+            "partition",
+            None,
+            "mrr_capacity",
+            format!("a farm width whose per-chip load fits {cap} tiles"),
+            format!("{} tiles of demand, no width fits", tile_demand(manifest)),
+            "no contiguous block-row partition fits the declared MRR bank",
+        ));
     }
 }
 

@@ -16,6 +16,8 @@ Corrupt variants, one per validator pass under test:
   corrupt_dangling.cpt  extra tensor layer9.w for a 6-layer manifest
   corrupt_spectra.cpt   layer5.w [1,16,8]: implied spectra length 256
                         vs the 128 the manifest's l=4 grid implies
+  chip_tiny_mrr.json    mrr_capacity 8 < layer5's block-row of Q=16
+                        tiles: no farm width can serve the model
 """
 
 import os
@@ -130,9 +132,17 @@ CHIP_JSON = """{
 }
 """
 
+# same chip, but an MRR bank of 8 resident tiles: smaller than layer5's
+# single block-row of Q=16 tiles, so no farm width can serve the model
+# (block-rows are the partition planner's unit of assignment)
+TINY_MRR_JSON = CHIP_JSON.replace(
+    '"seed": 7', '"seed": 7,\n  "mrr_capacity": 8'
+)
+
 write("valid_model.json", manifest_json())
 write("valid_model.cpt", bundle_bytes(VALID_TENSORS))
 write("chip.json", CHIP_JSON)
+write("chip_tiny_mrr.json", TINY_MRR_JSON)
 
 write("corrupt_graph.json", manifest_json(bn_cin=8))
 write("corrupt_quant.json", manifest_json(fc_act="1e999"))

@@ -119,6 +119,22 @@ fn spectra_pass_catches_wrong_spectra_length() {
 }
 
 #[test]
+fn partition_pass_catches_undersized_mrr_bank() {
+    // chip_tiny_mrr.json declares an 8-tile bank; layer5's block-row is
+    // Q=16 tiles, so no farm width can serve the model
+    let manifest = Manifest::load(&fixture("valid_model.json")).expect("manifest");
+    let bundle = Bundle::load(&fixture("valid_model.cpt")).expect("bundle");
+    let chip = ChipDescription::load(&fixture("chip_tiny_mrr.json")).expect("chip");
+    let report = validate_artifacts(&manifest, &bundle, Some(&chip));
+    assert_rejected(&report, "partition", Some(5));
+    // the legacy chip (no mrr_capacity → unlimited) stays accepted, so
+    // the pass only fires on an actual declared bank
+    let ok = ChipDescription::load(&fixture("chip.json")).expect("chip");
+    let report = validate_artifacts(&manifest, &bundle, Some(&ok));
+    assert!(report.is_ok(), "unlimited bank rejected:\n{}", report.json_dump());
+}
+
+#[test]
 fn nan_act_scale_is_rejected_in_memory() {
     // JSON cannot carry NaN, so this corruption class is in-memory only
     let mut manifest = Manifest::load(&fixture("valid_model.json")).expect("manifest");
