@@ -8,7 +8,7 @@ PY ?= python3
 OUT ?= artifacts
 
 .PHONY: artifacts train train-smoke train-py train-py-quick verify \
-	bench-smoke drift-smoke lint loom validate help
+	bench-smoke drift-smoke trace-smoke lint loom validate help
 
 ## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
 artifacts:
@@ -41,7 +41,8 @@ verify:
 
 ## Repo-specific source lint: no unwrap/expect/panic on the request
 ## path, no std::sync outside the util/sync shim, no allocation in the
-## zero-alloc kernels (escape with `// lint:allow(<rule>): <reason>`)
+## zero-alloc kernels or the tracing record path, bounded obs channels,
+## named /metrics listener (escape: `// lint:allow(<rule>): <reason>`)
 lint:
 	cargo run --release --bin repo_lint
 
@@ -92,6 +93,17 @@ bench-smoke:
 ## zero-downtime engine hot swap through the live coordinator
 drift-smoke:
 	cargo bench --bench serving -- --drift-smoke
+
+## Observability smoke (what CI runs): serve the synthetic drift farm
+## with the trace recorder, the /metrics endpoint (self-scraped) and
+## the JSONL sampler all live, then validate the Chrome trace file —
+## request/stage/farm/drift span families, shard_pass + recalibrate —
+## with trace_check
+trace-smoke:
+	cargo run --release --bin cirptc -- serve --smoke --chips 3 \
+		--trace trace_smoke.json --metrics-addr 127.0.0.1:0 \
+		--sample sample_smoke.jsonl --sample-ms 25
+	cargo run --release --bin trace_check -- trace_smoke.json
 
 help:
 	@grep -B1 -E '^[a-z-]+:' Makefile | grep -E '^(##|[a-z-]+:)' | sed 's/:.*//'

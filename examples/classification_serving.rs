@@ -23,6 +23,7 @@ use cirptc::coordinator::worker::EngineBackend;
 use cirptc::coordinator::worker::XlaBackend;
 use cirptc::coordinator::{BackendFactory, BatcherConfig, Coordinator};
 use cirptc::data::Bundle;
+use cirptc::obs;
 use cirptc::onn::{Backend, Engine};
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
@@ -44,6 +45,7 @@ fn run_backends(
     classes: usize,
     backends: Vec<BackendFactory>,
     max_batch: usize,
+    json: bool,
 ) -> Result<RunResult> {
     let coord = Coordinator::start(
         backends,
@@ -62,6 +64,16 @@ fn run_backends(
         }
     }
     let (p50, p99) = coord.metrics.latency_percentiles_us();
+    // the shared end-of-run report (obs::report's render): summary-format
+    // text by default, the full-resolution export with `--json`
+    println!(
+        "  {}",
+        obs::render_report(
+            &coord.metrics,
+            &[("rps", images.len() as f64 / wall)],
+            json,
+        )
+    );
     Ok(RunResult {
         acc: correct as f64 / images.len() as f64,
         throughput: images.len() as f64 / wall,
@@ -86,6 +98,7 @@ fn main() -> Result<()> {
     let workers = args.usize_or("workers", 2);
     let max_batch = args.usize_or("batch", 8);
     let limit = args.usize_or("limit", 128);
+    let json = args.has("json");
     let models: Vec<String> = match args.get("model") {
         Some(m) => vec![m.to_string()],
         None => ["synth_cxr", "synth_digits", "synth_textures"]
@@ -147,7 +160,8 @@ fn main() -> Result<()> {
                 }) as BackendFactory
             })
             .collect();
-        let r = run_backends(&images, labels, classes, factories, max_batch)?;
+        let r =
+            run_backends(&images, labels, classes, factories, max_batch, json)?;
         print_result("digital ", &r);
 
         // -- photonic sim (each worker owns an independent chip instance) --
@@ -165,7 +179,8 @@ fn main() -> Result<()> {
                 }) as BackendFactory
             })
             .collect();
-        let r = run_backends(&images, labels, classes, factories, max_batch)?;
+        let r =
+            run_backends(&images, labels, classes, factories, max_batch, json)?;
         print_result("photonic", &r);
         if classes <= 3 {
             println!("  photonic confusion matrix: {:?}", r.confusion);
@@ -184,7 +199,8 @@ fn main() -> Result<()> {
                         .expect("XLA backend"),
                 ) as Box<dyn cirptc::coordinator::InferenceBackend>
             });
-            let r = run_backends(&images, labels, classes, vec![factory], 8)?;
+            let r =
+                run_backends(&images, labels, classes, vec![factory], 8, json)?;
             print_result("xla-aot ", &r);
         }
         #[cfg(not(feature = "pjrt"))]

@@ -23,6 +23,19 @@
 //!   `mpsc::sync_channel` so a slow stage (or wedged chip) exerts
 //!   backpressure instead of queueing batches (and their scratch
 //!   buffers) without bound.
+//! * **obs-record-alloc** — the tracing record path (`obs/trace.rs`:
+//!   `push` / `record_instant` / `record_complete` / `begin` / `end` /
+//!   `instant`) must not allocate.  These run inline on the serving
+//!   hot path; when tracing is disabled they must reduce to one atomic
+//!   load, and when enabled they write into the pre-sized ring only.
+//! * **obs-bounded-channel** — no unbounded `mpsc::channel` anywhere
+//!   under `obs/`: the sampler's control channel and any future obs
+//!   plumbing stay bounded so observability can never buffer without
+//!   limit while the thing it observes is wedged.
+//! * **obs-named-listener** — obs threads must be identifiable in a
+//!   hung-process dump: no anonymous `thread::spawn(` under `obs/`,
+//!   and the `/metrics` accept loop (`obs/prom.rs`, the file holding
+//!   the `TcpListener`) must go through `spawn_scoped_named`.
 //!
 //! Escapes: a `// lint:allow(<rule>): <reason>` comment suppresses the
 //! rule on the next non-comment line (or on its own line when it
@@ -35,8 +48,15 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-const KNOWN_RULES: &[&str] =
-    &["hot-path-unwrap", "std-sync", "scratch-alloc", "stage-buffer-bounded"];
+const KNOWN_RULES: &[&str] = &[
+    "hot-path-unwrap",
+    "std-sync",
+    "scratch-alloc",
+    "stage-buffer-bounded",
+    "obs-record-alloc",
+    "obs-bounded-channel",
+    "obs-named-listener",
+];
 const UNWRAP_NEEDLES: &[&str] = &[".unwrap()", ".expect(", "panic!("];
 const ALLOC_NEEDLES: &[&str] = &["vec![", "Vec::with_capacity", "Vec::new", ".to_vec("];
 const HOT_DIRS: &[&str] =
@@ -58,6 +78,18 @@ const SCRATCH_FNS: &[(&str, &str)] = &[
     ("onn/engine.rs", "pad_rows_pooled"),
     ("onn/plan.rs", "multiply"),
 ];
+
+/// Directory prefix the obs-specific rules apply to.
+const OBS_DIR: &str = "obs/";
+/// The file holding the `/metrics` accept loop.
+const OBS_LISTENER_FILE: &str = "obs/prom.rs";
+/// Functions on the tracing record path (all in `obs/trace.rs`) held to
+/// the no-allocation discipline — same `fn_span` mechanism as
+/// `SCRATCH_FNS`.  `new` / `snapshot` / the Chrome exporter are
+/// deliberately absent: they run at setup / export time, not per event.
+const OBS_RECORD_FNS: &[&str] =
+    &["push", "record_instant", "record_complete", "begin", "end", "instant"];
+const ANON_SPAWN_NEEDLE: &str = "thread::spawn(";
 
 #[derive(Debug)]
 struct Finding {
@@ -213,6 +245,15 @@ fn analyze_file(rel: &str, content: &str) -> FileReport {
         .filter(|(f, _)| *f == rel)
         .filter_map(|(_, name)| fn_span(&stripped, name))
         .collect();
+    let obs_file = rel.starts_with(OBS_DIR);
+    let obs_record_spans: Vec<(usize, usize)> = if rel == "obs/trace.rs" {
+        OBS_RECORD_FNS
+            .iter()
+            .filter_map(|name| fn_span(&stripped, name))
+            .collect()
+    } else {
+        Vec::new()
+    };
 
     for (i, code) in stripped.iter().enumerate().take(test_start) {
         if hot_path && !is_allowed(i, "hot-path-unwrap") {
@@ -260,6 +301,72 @@ fn analyze_file(rel: &str, content: &str) -> FileReport {
                     line: i + 1,
                     rule: "scratch-alloc",
                     excerpt: format!("`{n}` in a zero-alloc kernel: {}", raw[i].trim()),
+                });
+            }
+        }
+        if obs_record_spans.iter().any(|&(a, b)| i >= a && i <= b)
+            && !is_allowed(i, "obs-record-alloc")
+        {
+            if let Some(n) = ALLOC_NEEDLES.iter().find(|n| code.contains(*n)) {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "obs-record-alloc",
+                    excerpt: format!(
+                        "`{n}` on the tracing record path: {}",
+                        raw[i].trim()
+                    ),
+                });
+            }
+        }
+        if obs_file
+            && code.contains(UNBOUNDED_CHANNEL_NEEDLE)
+            && !is_allowed(i, "obs-bounded-channel")
+        {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "obs-bounded-channel",
+                excerpt: format!(
+                    "unbounded mpsc::channel in obs (sampler/control channels \
+                     must be sync_channel): {}",
+                    raw[i].trim()
+                ),
+            });
+        }
+        if obs_file
+            && code.contains(ANON_SPAWN_NEEDLE)
+            && !is_allowed(i, "obs-named-listener")
+        {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "obs-named-listener",
+                excerpt: format!(
+                    "anonymous thread::spawn in obs (use spawn_scoped_named / \
+                     spawn_named so dumps are attributable): {}",
+                    raw[i].trim()
+                ),
+            });
+        }
+    }
+
+    // Whole-file check: the `/metrics` accept loop must run on a named
+    // scoped thread.  Flagged at the first `TcpListener` mention when
+    // `spawn_scoped_named` is absent from the non-test code.
+    if rel == OBS_LISTENER_FILE {
+        let non_test = &stripped[..test_start];
+        let listener = non_test.iter().position(|l| l.contains("TcpListener"));
+        let named = non_test.iter().any(|l| l.contains("spawn_scoped_named"));
+        if let Some(i) = listener {
+            if !named && !is_allowed(i, "obs-named-listener") {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "obs-named-listener",
+                    excerpt: "TcpListener accept loop without a \
+                              spawn_scoped_named thread"
+                        .to_string(),
                 });
             }
         }
@@ -445,5 +552,51 @@ mod tests {
         // the vec! in `after` is outside the multiply span
         let r = analyze_file("onn/plan.rs", src);
         assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn obs_record_alloc_fires_inside_record_fns_only() {
+        let src = "pub fn record_instant(&self, n: u32) {\n    \
+                   let v = vec![0u64; 4];\n}\n\n\
+                   pub fn snapshot(&self) -> Vec<u64> {\n    \
+                   Vec::with_capacity(8)\n}\n";
+        let r = analyze_file("obs/trace.rs", src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.findings[0].rule, "obs-record-alloc");
+        // the same record fn in an unrelated file is out of scope
+        assert!(analyze_file("obs/sampler.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn obs_channels_must_be_bounded() {
+        let src = "fn wire() {\n    let (tx, rx) = mpsc::channel::<()>();\n}\n";
+        let r = analyze_file("obs/sampler.rs", src);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "obs-bounded-channel");
+        // sync_channel is the sanctioned hand-off
+        let ok = "fn wire() {\n    let (tx, rx) = mpsc::sync_channel::<()>(1);\n}\n";
+        assert!(analyze_file("obs/sampler.rs", ok).findings.is_empty());
+        // outside obs/, this stays the stage-buffer rule's business
+        assert!(analyze_file("util/metrics.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn metrics_listener_thread_must_be_named() {
+        // TcpListener without spawn_scoped_named: whole-file finding
+        let bad = "fn serve() {\n    let l = TcpListener::bind(\"x\");\n}\n";
+        let r = analyze_file("obs/prom.rs", bad);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "obs-named-listener");
+        assert_eq!(r.findings[0].line, 2);
+        // named scoped accept loop passes
+        let ok = "fn serve() {\n    let l = TcpListener::bind(\"x\");\n    \
+                  spawn_scoped_named(scope, \"cirptc-metrics\", move || accept(l));\n}\n";
+        assert!(analyze_file("obs/prom.rs", ok).findings.is_empty());
+        // anonymous spawns anywhere under obs/ are flagged line-by-line
+        let anon = "fn go() {\n    std::thread::spawn(move || {});\n}\n";
+        let r = analyze_file("obs/sampler.rs", anon);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "obs-named-listener");
     }
 }

@@ -1,0 +1,97 @@
+//! `trace_check` — CI validator for the Chrome trace-event files
+//! `cirptc serve --trace` writes (the second half of `make trace-smoke`).
+//!
+//! Checks, failing loudly on any miss:
+//!   * the file parses as a top-level JSON array of event objects;
+//!   * every event carries `name` / `cat` / `ph` / `ts` / `pid` / `tid`,
+//!     with `ph == "X"` (complete) events also carrying `dur`;
+//!   * all four span families the serving stack records are present
+//!     (`request`, `stage`, `farm`, `drift` categories — DESIGN.md §obs),
+//!     including a farm `shard_pass` span and a drift `recalibrate` span.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use cirptc::util::json::Json;
+
+fn run(path: &str) -> Result<(), String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+    let events = j.as_arr().ok_or("top level must be a JSON array")?;
+    if events.is_empty() {
+        return Err("trace holds no events".into());
+    }
+    let mut by_cat: BTreeMap<String, usize> = BTreeMap::new();
+    let mut names: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        let cat = e
+            .get("cat")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing cat"))?;
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        for key in ["ts", "pid", "tid"] {
+            if e.get(key).and_then(Json::as_f64).is_none() {
+                return Err(format!("event {i} ({name}): missing {key}"));
+            }
+        }
+        match ph {
+            "X" => {
+                if e.get("dur").and_then(Json::as_f64).is_none() {
+                    return Err(format!(
+                        "event {i} ({name}): complete span without dur"
+                    ));
+                }
+            }
+            "i" => {}
+            other => {
+                return Err(format!("event {i} ({name}): unknown ph {other:?}"))
+            }
+        }
+        *by_cat.entry(cat.to_string()).or_insert(0) += 1;
+        *names.entry(name.to_string()).or_insert(0) += 1;
+    }
+    for cat in ["request", "stage", "farm", "drift"] {
+        if !by_cat.contains_key(cat) {
+            return Err(format!(
+                "no {cat:?} spans (categories present: {:?})",
+                by_cat.keys().collect::<Vec<_>>()
+            ));
+        }
+    }
+    for name in ["shard_pass", "recalibrate"] {
+        if !names.contains_key(name) {
+            return Err(format!(
+                "no {name:?} span (names present: {:?})",
+                names.keys().collect::<Vec<_>>()
+            ));
+        }
+    }
+    println!("trace OK: {} events", events.len());
+    for (cat, n) in &by_cat {
+        println!("  cat {cat:<8} {n}");
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(path) = args.first() else {
+        eprintln!("usage: trace_check TRACE.json");
+        return ExitCode::FAILURE;
+    };
+    match run(path) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("trace_check: {path}: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

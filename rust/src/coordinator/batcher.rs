@@ -4,6 +4,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::obs::trace;
 use crate::util::sync::mpsc;
 
 use super::Request;
@@ -47,6 +48,9 @@ pub fn run(
 ) {
     let max_wait = Duration::from_micros(cfg.max_wait_us);
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    // spans one batch's formation window: opened when pending goes 0→1,
+    // closed (as a "batch_form" complete event) at dispatch
+    let mut form_start: Option<trace::SpanStart> = None;
     loop {
         let timeout = if pending.is_empty() {
             // idle: block until something arrives (bounded poll so channel
@@ -59,6 +63,9 @@ pub fn run(
         };
         match rx.recv_timeout(timeout) {
             Ok(req) => {
+                if pending.is_empty() {
+                    form_start = Some(trace::begin());
+                }
                 pending.push(req);
                 // greedily drain whatever is already queued: under burst
                 // load this forms full batches in one wakeup instead of
@@ -71,17 +78,17 @@ pub fn run(
                     }
                 }
                 if pending.len() >= cfg.max_batch {
-                    dispatch(&mut pending, &out);
+                    dispatch(&mut pending, &out, &mut form_start);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &out);
+                    dispatch(&mut pending, &out, &mut form_start);
                 }
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &out);
+                    dispatch(&mut pending, &out, &mut form_start);
                 }
                 return;
             }
@@ -89,7 +96,19 @@ pub fn run(
     }
 }
 
-fn dispatch(pending: &mut Vec<Request>, out: &mpsc::Sender<Batch>) {
+fn dispatch(
+    pending: &mut Vec<Request>,
+    out: &mpsc::Sender<Batch>,
+    form_start: &mut Option<trace::SpanStart>,
+) {
+    if let Some(start) = form_start.take() {
+        trace::end(
+            start,
+            "batch_form",
+            "request",
+            trace::arg1("size", pending.len() as i64),
+        );
+    }
     let batch = Batch {
         requests: std::mem::take(pending),
         formed: Instant::now(),

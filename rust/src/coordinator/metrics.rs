@@ -5,6 +5,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use crate::util::sync::{Mutex, MutexGuard};
 use crate::util::threadpool::WorkCounter;
@@ -94,6 +95,24 @@ impl Histogram {
             }
         }
         (1u64 << 40) - 1
+    }
+
+    /// Total of all recorded samples (each clamped to ≥1 on record).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact per-bucket counts — the raw data `summary()` rounds away.
+    /// Bucket `i` holds samples in `[2^i, 2^(i+1))` (the last bucket is
+    /// open-ended); [`Histogram::bucket_edge`] gives the upper edge.
+    pub fn bucket_counts(&self) -> [u64; 40] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Inclusive upper edge of bucket `i` (`2^(i+1) - 1`); the final
+    /// bucket is reported at its nominal edge but is open-ended.
+    pub const fn bucket_edge(i: usize) -> u64 {
+        (1u64 << (i + 1)) - 1
     }
 
     /// Start an RAII stage timer recording into this histogram: elapsed
@@ -253,6 +272,101 @@ impl Metrics {
         } else {
             self.completed.get() as f64 / b as f64
         }
+    }
+
+    /// Every counter as `(name, value)` — one stable list shared by the
+    /// JSON export and the Prometheus renderer (`obs::prom`), so the two
+    /// cannot drift apart.
+    pub fn counters(&self) -> Vec<(&'static str, usize)> {
+        vec![
+            ("submitted", self.submitted.get()),
+            ("completed", self.completed.get()),
+            ("errors", self.errors.get()),
+            ("rejected", self.rejected.get()),
+            ("batches", self.batches.get()),
+            ("probes", self.probes.get()),
+            ("recalibrations", self.recalibrations.get()),
+            ("lock_poisons", self.lock_poisons.get()),
+            ("farm_transitions", self.farm_transitions.get()),
+            ("farm_rerouted", self.farm_rerouted.get()),
+            ("farm_absorbed", self.farm_absorbed.get()),
+        ]
+    }
+
+    /// Every gauge as `(name, value)`.
+    pub fn gauges(&self) -> Vec<(&'static str, i64)> {
+        vec![
+            ("queue_depth", self.queue_depth.get()),
+            ("last_probe_residual_ppm", self.last_probe_residual_ppm.get()),
+            ("passes_since_recal", self.passes_since_recal.get()),
+            ("drift_ticks", self.drift_ticks.get()),
+            ("scratch_takes", self.scratch_takes.get()),
+            ("scratch_misses", self.scratch_misses.get()),
+        ]
+    }
+
+    /// Every histogram as `(name, histogram)`.
+    pub fn histograms(&self) -> Vec<(&'static str, &Histogram)> {
+        vec![
+            ("batch_compute_us", &self.batch_compute_us),
+            ("batch_sizes", &self.batch_sizes),
+            ("stage_pre_us", &self.stage_pre_us),
+            ("stage_chip_us", &self.stage_chip_us),
+            ("stage_post_us", &self.stage_post_us),
+            ("batch_wait_us", &self.batch_wait_us),
+            ("probe_residual_ppm", &self.probe_residual_ppm),
+        ]
+    }
+
+    /// Full-resolution structured snapshot: exact counter/gauge values
+    /// and, per histogram, the exact `count`/`sum`/40 log₂ bucket counts
+    /// that [`Metrics::summary`] rounds to upper edges.  This is the one
+    /// shape the JSONL sampler, the `/metrics` endpoint and `--json`
+    /// reports all derive from.
+    pub fn export(&self) -> Json {
+        let counters = self
+            .counters()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        let gauges = self
+            .gauges()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        let hists = self
+            .histograms()
+            .into_iter()
+            .map(|(k, h)| {
+                let buckets = h
+                    .bucket_counts()
+                    .iter()
+                    .map(|&c| Json::Num(c as f64))
+                    .collect();
+                (
+                    k,
+                    Json::obj(vec![
+                        ("count", Json::Num(h.count() as f64)),
+                        ("sum", Json::Num(h.sum() as f64)),
+                        ("buckets", Json::Arr(buckets)),
+                    ]),
+                )
+            })
+            .collect();
+        let (p50, p99) = self.latency_percentiles_us();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::Num(p50 as f64)),
+                    ("p99", Json::Num(p99 as f64)),
+                    ("mean", Json::Num(self.mean_latency_us())),
+                ]),
+            ),
+        ])
     }
 
     /// One-line summary for logs / benches.
@@ -469,6 +583,62 @@ mod tests {
         assert_eq!(g.get(), 7);
         g.set(-3);
         assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn export_exposes_exact_buckets() {
+        let m = Metrics::default();
+        m.submitted.add(5);
+        m.queue_depth.set(2);
+        m.batch_compute_us.record(1000); // bucket 9
+        m.batch_compute_us.record(1000);
+        m.batch_compute_us.record(3); // bucket 1
+        let e = m.export();
+        assert_eq!(
+            e.get("counters").and_then(|c| c.get("submitted")).and_then(Json::as_f64),
+            Some(5.0)
+        );
+        assert_eq!(
+            e.get("gauges").and_then(|g| g.get("queue_depth")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+        let h = e
+            .get("histograms")
+            .and_then(|h| h.get("batch_compute_us"))
+            .expect("histogram present");
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(h.get("sum").and_then(Json::as_f64), Some(2003.0));
+        let buckets = h.get("buckets").and_then(Json::as_arr).expect("buckets");
+        assert_eq!(buckets.len(), 40);
+        assert_eq!(buckets[9].as_f64(), Some(2.0));
+        assert_eq!(buckets[1].as_f64(), Some(1.0));
+        // the exact buckets round-trip through the dump/parse cycle the
+        // sampler and /metrics endpoint rely on
+        let parsed = Json::parse(&e.dump()).expect("export parses");
+        assert_eq!(
+            parsed
+                .get("histograms")
+                .and_then(|h| h.get("batch_compute_us"))
+                .and_then(|h| h.get("sum"))
+                .and_then(Json::as_f64),
+            Some(2003.0)
+        );
+    }
+
+    #[test]
+    fn histogram_accessors_match_records() {
+        let h = Histogram::default();
+        for v in [1u64, 2, 2, 1024] {
+            h.record(v);
+        }
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[1], 2);
+        assert_eq!(b[10], 1);
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum(), 1029);
+        assert_eq!(Histogram::bucket_edge(0), 1);
+        assert_eq!(Histogram::bucket_edge(10), 2047);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::bail;
 use crate::util::sync::atomic::{AtomicU64, Ordering};
 use crate::util::sync::{mpsc, Arc, Mutex};
 
+use crate::obs::trace;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
@@ -243,6 +244,7 @@ impl Coordinator {
             // and `rejected`, never in `completed`/`errors`
             self.metrics.submitted.add(1);
             self.metrics.rejected.add(1);
+            trace::instant("shed", "request", trace::arg1("id", id as i64));
             return Admission::Shed { id };
         }
         let (reply, rx) = mpsc::channel();
@@ -253,6 +255,7 @@ impl Coordinator {
         if sent {
             self.metrics.submitted.add(1);
             self.metrics.queue_depth.add(1);
+            trace::instant("submit", "request", trace::arg1("id", id as i64));
         } else {
             // batcher gone (it only exits when the coordinator is being
             // torn down): the dropped reply sender surfaces as a clean

@@ -31,6 +31,7 @@ use std::time::Instant;
 use crate::util::sync::{mpsc, Arc, Mutex};
 
 use crate::drift::{DriftShared, EngineSlot};
+use crate::obs::trace;
 use crate::onn::{Backend, Engine, MidBatch, PreBatch};
 use crate::simulator::EncodeSnapshot;
 use crate::util::scratch;
@@ -121,6 +122,9 @@ struct PreItem {
     replies: Vec<Reply>,
     formed: Instant,
     pre_us: u64,
+    /// worker-local batch sequence number, stamped on the stage spans so
+    /// a trace view lines the three lanes up per batch
+    seq: u64,
 }
 
 /// A batch between chip and post.
@@ -131,6 +135,7 @@ struct PostItem {
     formed: Instant,
     /// pre + chip stage time so far (µs); post adds its own share
     work_us: u64,
+    seq: u64,
 }
 
 /// Pipelined worker loop body (runs on its own thread; the pre and post
@@ -164,6 +169,7 @@ pub fn run(
             let metrics = &metrics;
             let snap = &snap;
             let source = &source;
+            let mut seq = 0u64;
             move || loop {
                 // same shared-queue discipline as worker::run: take one
                 // batch under the lock, recover a poisoned lock (a dead
@@ -202,12 +208,29 @@ pub fn run(
                     .lock()
                     .unwrap_or_else(|e| e.into_inner())
                     .clone();
+                seq += 1;
+                let gen =
+                    snap_now.as_ref().map(|sn| sn.generation()).unwrap_or(0);
+                let span = trace::begin();
                 let t = metrics.stage_pre_us.timer();
                 match engine.pre_batch(&images, photonic, snap_now.as_ref()) {
                     Ok(pre) => {
                         let pre_us = t.stop();
+                        trace::end(
+                            span,
+                            "pre",
+                            "stage",
+                            [("batch", seq as i64), ("gen", gen as i64)],
+                        );
                         if pre_tx
-                            .send(PreItem { engine, pre, replies, formed, pre_us })
+                            .send(PreItem {
+                                engine,
+                                pre,
+                                replies,
+                                formed,
+                                pre_us,
+                                seq,
+                            })
                             .is_err()
                         {
                             return; // chip lane gone: tearing down
@@ -227,12 +250,21 @@ pub fn run(
         spawn_scoped_named(s, "cirptc-post", {
             let metrics = &metrics;
             move || {
-                for PostItem { engine, mid, replies, formed, work_us } in post_rx {
+                for PostItem { engine, mid, replies, formed, work_us, seq } in
+                    post_rx
+                {
                     let n = replies.len();
+                    let span = trace::begin();
                     let t = metrics.stage_post_us.timer();
                     match engine.post_batch(mid) {
                         Ok(all_logits) => {
                             let post_us = t.stop();
+                            trace::end(
+                                span,
+                                "post",
+                                "stage",
+                                [("batch", seq as i64), ("size", n as i64)],
+                            );
                             // the batch's *work* time: the sum of its
                             // three stage times (what the batch cost),
                             // not wall time (which overlaps neighbors)
@@ -273,12 +305,19 @@ pub fn run(
         });
 
         // ── chip lane (this thread) ─────────────────────────────────
-        for PreItem { engine, pre, replies, formed, pre_us } in pre_rx {
+        for PreItem { engine, pre, replies, formed, pre_us, seq } in pre_rx {
             let n = replies.len();
+            let span = trace::begin();
             let t = metrics.stage_chip_us.timer();
             match engine.chip_batch(pre, &mut backend) {
                 Ok(mid) => {
                     let chip_us = t.stop();
+                    trace::end(
+                        span,
+                        "chip",
+                        "stage",
+                        [("batch", seq as i64), ("size", n as i64)],
+                    );
                     // monitor/recal hook sees the chip between batches,
                     // exactly like the sequential DriftBackend
                     if let Some(h) = hook.as_mut() {
@@ -297,6 +336,7 @@ pub fn run(
                         replies,
                         formed,
                         work_us: pre_us + chip_us,
+                        seq,
                     };
                     if post_tx.send(item).is_err() {
                         break; // post lane gone: tearing down

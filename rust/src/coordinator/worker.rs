@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use crate::util::sync::{mpsc, Arc, Mutex};
 
+use crate::obs::trace;
 use crate::onn::{Backend, Engine};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -148,8 +149,10 @@ pub fn run(
             replies.push((req.id, req.enqueued, req.reply));
         }
         let t0 = Instant::now();
+        let span = trace::begin();
         match backend.infer_batch(&images) {
             Ok(all_logits) => {
+                trace::end(span, "infer", "stage", trace::arg1("size", n as i64));
                 let batch_us = t0.elapsed().as_micros() as u64;
                 metrics.batch_compute_us.record(batch_us.max(1));
                 metrics.batch_sizes.record(n as u64);

@@ -20,6 +20,7 @@
 //! was trained against, so residuals always measure drift the served
 //! weights have never seen.
 
+use crate::obs::trace;
 use crate::util::sync::{mpsc, PoisonError};
 
 use crate::circulant::Bcm;
@@ -182,11 +183,17 @@ impl DriftMonitor {
         shared.metrics.probes.add(1);
         shared.metrics.probe_residual_ppm.record(ppm.max(1));
         shared.metrics.last_probe_residual_ppm.set(ppm as i64);
+        trace::instant("probe", "drift", trace::arg1("residual_ppm", ppm as i64));
         if res >= self.cfg.residual_trigger
             && sim.passes().saturating_sub(self.last_recal_pass)
                 >= self.cfg.cooldown_passes
             && shared.recal_in_flight.try_begin()
         {
+            trace::instant(
+                "recal_trigger",
+                "drift",
+                [("residual_ppm", ppm as i64), ("passes", sim.passes() as i64)],
+            );
             let req = RecalRequest {
                 desc: sim.desc.clone(),
                 residual: res,

@@ -29,6 +29,7 @@ use crate::util::sync::{mpsc, Arc, PoisonError};
 
 use crate::coordinator::worker::{spawn_named, JoinOnDrop};
 use crate::data::datasets::Split;
+use crate::obs::trace;
 use crate::onn::Engine;
 use crate::simulator::{ChipDescription, ChipSim};
 use crate::tensor::Tensor;
@@ -102,6 +103,7 @@ impl Recalibrator {
     /// swap.  Synchronous — callers that must not block use
     /// [`Recalibrator::spawn`].
     pub fn recalibrate(&mut self, desc: ChipDescription) -> Result<()> {
+        let span = trace::begin();
         let point = desc.clone();
         if let Some(dir) = &self.cfg.snapshot_dir {
             let n = self.cycles;
@@ -150,6 +152,17 @@ impl Recalibrator {
         // observability counter
         self.shared.recal_generation.add(1);
         self.shared.metrics.recalibrations.add(1);
+        trace::instant(
+            "hot_swap",
+            "drift",
+            trace::arg1("generation", self.shared.recal_generation.get() as i64),
+        );
+        trace::end(
+            span,
+            "recalibrate",
+            "drift",
+            trace::arg1("cycle", self.cycles as i64),
+        );
         Ok(())
     }
 

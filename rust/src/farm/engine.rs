@@ -209,6 +209,7 @@ impl PartitionedEngine {
             let owners = &self.owners;
             let xref = &xp;
             let run = |sh: &ChipShard, be: &mut Backend, out: &mut [f32]| {
+                let span = crate::obs::trace::begin();
                 match be {
                     Backend::Digital => {
                         let yk = if use_plans {
@@ -234,6 +235,12 @@ impl PartitionedEngine {
                         scratch::put(yk.data);
                     }
                 }
+                crate::obs::trace::end(
+                    span,
+                    "shard_pass",
+                    "farm",
+                    [("chip", sh.chip as i64), ("rows", sh.bcm.m() as i64)],
+                );
             };
             if jobs.len() <= 1 {
                 for (sh, be, out) in jobs {

@@ -76,6 +76,29 @@ impl ChipHealth {
     pub fn serves(self) -> bool {
         matches!(self, ChipHealth::Healthy | ChipHealth::Drifting)
     }
+
+    /// Stable lowercase name, used by the telemetry exporters
+    /// ([`crate::obs`]) as the label value in Prometheus text and the
+    /// JSONL sampler stream.
+    pub fn name(self) -> &'static str {
+        match self {
+            ChipHealth::Healthy => "healthy",
+            ChipHealth::Drifting => "drifting",
+            ChipHealth::Recalibrating => "recalibrating",
+            ChipHealth::Failed => "failed",
+        }
+    }
+
+    /// Numeric code for gauge export, most healthy first (0 = Healthy …
+    /// 3 = Failed) so dashboards can alert on `health > 1`.
+    pub fn code(self) -> i64 {
+        match self {
+            ChipHealth::Healthy => 0,
+            ChipHealth::Drifting => 1,
+            ChipHealth::Recalibrating => 2,
+            ChipHealth::Failed => 3,
+        }
+    }
 }
 
 /// Live health handle for one farm member.  The state is **derived** on

@@ -23,6 +23,7 @@
 //! its requests accounted as errors, so the submitted/completed/errors
 //! conservation the coordinator tests pin still holds.
 
+use crate::obs::trace;
 use crate::util::sync::{mpsc, Arc};
 
 use crate::coordinator::{Batch, Metrics};
@@ -59,9 +60,14 @@ pub(crate) fn run(
         // observe health once per batch; count every state edge
         let health: Vec<ChipHealth> =
             targets.iter().map(|t| t.status.health()).collect();
-        for (h, l) in health.iter().zip(last.iter_mut()) {
+        for (i, (h, l)) in health.iter().zip(last.iter_mut()).enumerate() {
             if h != l {
                 metrics.farm_transitions.add(1);
+                trace::instant(
+                    "health",
+                    "farm",
+                    [("chip", i as i64), ("state", h.code())],
+                );
                 *l = *h;
             }
         }
@@ -119,6 +125,11 @@ pub(crate) fn run(
         }
         match routed {
             Some(i) => {
+                trace::instant(
+                    "route",
+                    "farm",
+                    [("chip", i as i64), ("rerouted", (i != natural) as i64)],
+                );
                 if i != natural {
                     metrics.farm_rerouted.add(1);
                 }

@@ -11,6 +11,16 @@
 //!          [--chip-capacity T] per-chip MRR bank in resident tiles
 //!                              (default: chip.json's mrr_capacity;
 //!                              0 = unlimited)
+//!          [--trace OUT.json]  record serving spans, write a Chrome
+//!                              trace-event file on exit (DESIGN.md §obs)
+//!          [--metrics-addr A]  serve Prometheus text on http://A/metrics
+//!                              while requests flow (A like 127.0.0.1:0)
+//!          [--sample OUT.jsonl] periodic full-resolution telemetry
+//!          [--sample-ms MS]     stream, one JSON object per interval
+//!          [--json]            end-of-run report as JSON, not text
+//!          [--smoke]           artifact-free synthetic run: monitored
+//!                              farm + forced recalibration + partition
+//!                              shard pass (the `make trace-smoke` body)
 //!   mvm    [--size S]          one BCM matmul through sim (+ XLA with
 //!                              `--features pjrt`)
 //!   analyze                    print the benchmark-analysis summary
@@ -19,7 +29,8 @@
 //! is the operational front door.  The default build is pure rust; the
 //! `pjrt` cargo feature re-enables the XLA artifact paths.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use cirptc::util::sync::Arc;
 
@@ -28,17 +39,24 @@ use cirptc::arch::CirPtcConfig;
 use cirptc::circulant::Bcm;
 use cirptc::coordinator::worker::EngineBackend;
 use cirptc::coordinator::{BatcherConfig, Coordinator, Metrics};
+use cirptc::data::datasets;
 use cirptc::data::Bundle;
-use cirptc::farm::{
-    tile_demand, Farm, FarmConfig, FarmMember, PartitionPlan, PartitionedBackend,
-    PartitionedEngine,
+use cirptc::drift::{
+    DriftConfig, DriftModel, DriftMonitor, MonitorConfig, RecalConfig,
+    Recalibrator,
 };
-use cirptc::onn::{Backend, Engine};
+use cirptc::farm::{
+    tile_demand, ChipStatus, Farm, FarmConfig, FarmMember, PartitionPlan,
+    PartitionedBackend, PartitionedEngine, DEFAULT_DRIFTING_PPM,
+};
+use cirptc::obs::{self, prom, sampler::Sampler, trace};
+use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::runtime::available_artifacts;
 #[cfg(feature = "pjrt")]
 use cirptc::runtime::Runtime;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::{argmax, Tensor};
+use cirptc::train::{fit, Optimizer, TrainBackend, TrainConfig, TrainModel};
 use cirptc::util::cli::Args;
 use cirptc::util::error::{Error, Result};
 use cirptc::util::rng::Rng;
@@ -59,7 +77,9 @@ fn main() -> Result<()> {
                 "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
                  [--model NAME] [--backend digital|photonic] [--size S] \
                  [--batch N] [--wait-us US] [--queue-cap N] [--chips N] \
-                 [--chip-capacity TILES]"
+                 [--chip-capacity TILES] [--trace OUT.json] \
+                 [--metrics-addr HOST:PORT] [--sample OUT.jsonl] \
+                 [--sample-ms MS] [--json] [--smoke]"
             );
             Ok(())
         }
@@ -92,9 +112,79 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve` front door: installs the trace recorder when asked, dispatches
+/// to the artifact-backed server or the synthetic smoke run, and writes
+/// the Chrome trace-event file on the way out.
 fn serve(args: &Args) -> Result<()> {
+    let trace_path = args.get("trace").map(PathBuf::from);
+    if trace_path.is_some() {
+        trace::install(trace::TraceRecorder::new(1 << 16));
+        trace::set_enabled(true);
+    }
     let dir = artifacts_dir(args);
     let model = args.str_or("model", "synth_cxr");
+    if args.has("smoke") || !dir.join(format!("models/{model}.json")).exists() {
+        if !args.has("smoke") {
+            println!("artifacts missing — running the synthetic serve smoke");
+        }
+        serve_smoke(args)?;
+    } else {
+        serve_artifacts(args, &dir, &model)?;
+    }
+    if let Some(path) = trace_path {
+        let rec = trace::global().expect("recorder installed above");
+        rec.write_chrome_trace(&path)?;
+        println!(
+            "chrome trace: {} ({} events, {} dropped)",
+            path.display(),
+            rec.snapshot().len(),
+            rec.dropped()
+        );
+    }
+    Ok(())
+}
+
+/// Start the `/metrics` endpoint and the JSONL sampler inside `scope`
+/// when the flags ask for them.  Both handles shut their threads down on
+/// drop, so a `?`-return from the caller cannot wedge the scope's
+/// implicit join.
+fn start_obs<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    args: &Args,
+    metrics: &Arc<Metrics>,
+    chips: &[Arc<ChipStatus>],
+    default_sample_ms: usize,
+) -> Result<(Option<prom::MetricsEndpoint>, Option<Sampler>)> {
+    let endpoint = match args.get("metrics-addr") {
+        Some(addr) => {
+            let ep = prom::serve_scoped(
+                scope,
+                addr,
+                Arc::clone(metrics),
+                chips.to_vec(),
+            )?;
+            println!("metrics endpoint: http://{}/metrics", ep.addr());
+            Some(ep)
+        }
+        None => None,
+    };
+    let smp = match args.get("sample") {
+        Some(p) => Some(Sampler::start(
+            Path::new(p),
+            Duration::from_millis(
+                args.usize_or("sample-ms", default_sample_ms) as u64
+            ),
+            Arc::clone(metrics),
+            chips.to_vec(),
+        )?),
+        None => None,
+    };
+    Ok((endpoint, smp))
+}
+
+/// Serve the exported test set from trained artifacts, with the optional
+/// telemetry endpoint / sampler attached for the duration of the run.
+fn serve_artifacts(args: &Args, dir: &Path, model: &str) -> Result<()> {
     let backend = args.str_or("backend", "photonic");
     let workers = args.usize_or("workers", 2);
 
@@ -130,7 +220,7 @@ fn serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_or("queue-cap", 0),
     };
 
-    let coord = if chips_n == 1 {
+    let (coord, chip_status) = if chips_n == 1 {
         let backends: Vec<cirptc::coordinator::BackendFactory> = (0..workers)
             .map(|i| {
                 let engine = Arc::clone(&engine);
@@ -147,7 +237,7 @@ fn serve(args: &Args) -> Result<()> {
                 }) as cirptc::coordinator::BackendFactory
             })
             .collect();
-        Coordinator::start(backends, bcfg)
+        (Coordinator::start(backends, bcfg), Vec::new())
     } else if capacity > 0 && tile_demand(&engine.manifest) > capacity {
         // the model's resident tiles exceed one chip's MRR bank: shard
         // its circulant block-rows across the farm, every worker driving
@@ -193,7 +283,7 @@ fn serve(args: &Args) -> Result<()> {
                 }) as cirptc::coordinator::BackendFactory
             })
             .collect();
-        Coordinator::start(backends, bcfg)
+        (Coordinator::start(backends, bcfg), Vec::new())
     } else {
         // the model fits each chip: serve N independent replicas behind
         // the health-routed farm (failover + per-chip accounting)
@@ -216,25 +306,255 @@ fn serve(args: &Args) -> Result<()> {
             FarmConfig { batcher: bcfg, ..FarmConfig::default() },
             Arc::new(Metrics::default()),
         );
-        let Farm { coord, status: _ } = farm;
-        coord
+        let Farm { coord, status } = farm;
+        (coord, status)
     };
-    let t0 = std::time::Instant::now();
-    let responses = coord.classify_all(&images)?;
-    let wall = t0.elapsed();
-    let correct = responses
-        .iter()
-        .zip(ys)
-        .filter(|(r, &y)| argmax(&r.logits) == y as usize)
-        .count();
-    println!(
-        "served {n} requests on {model} [{backend}] in {:.2}s  \
-         acc={:.4}  throughput={:.1} req/s",
-        wall.as_secs_f64(),
-        correct as f64 / n as f64,
-        n as f64 / wall.as_secs_f64()
+    std::thread::scope(|s| -> Result<()> {
+        let (_endpoint, smp) =
+            start_obs(s, args, &coord.metrics, &chip_status, 250)?;
+        let t0 = std::time::Instant::now();
+        let responses = coord.classify_all(&images)?;
+        let wall = t0.elapsed();
+        let correct = responses
+            .iter()
+            .zip(ys)
+            .filter(|(r, &y)| argmax(&r.logits) == y as usize)
+            .count();
+        println!(
+            "served {n} requests on {model} [{backend}] in {:.2}s  \
+             acc={:.4}  throughput={:.1} req/s",
+            wall.as_secs_f64(),
+            correct as f64 / n as f64,
+            n as f64 / wall.as_secs_f64()
+        );
+        obs::report(
+            &coord.metrics,
+            &[("rps", n as f64 / wall.as_secs_f64())],
+            args.has("json"),
+        );
+        if let Some(smp) = smp {
+            smp.stop();
+        }
+        Ok(())
+    })
+}
+
+/// Artifact-free smoke run (the body of `make trace-smoke`): a monitored
+/// replica farm trained in-process serves until a forced recalibration
+/// lands, one member is failed and restored to exercise health routing,
+/// and a partitioned shard pass runs at the end — together covering
+/// every span family the tracer records (request, stage, farm, drift).
+fn serve_smoke(args: &Args) -> Result<()> {
+    let chips_n = args.usize_or("chips", 3).max(1);
+    println!("serve smoke: {chips_n}-chip monitored farm, forced recal");
+
+    // tiny in-process model: a short digital fit on the shapes set is
+    // enough — the smoke pins plumbing, not accuracy
+    let manifest = Manifest::parse(datasets::SHAPES_MANIFEST_JSON)?;
+    let train_split = datasets::synth_shapes(96, 0xC1);
+    let calib_split = datasets::synth_shapes(64, 0xC2);
+    let eval_split = datasets::synth_shapes(32, 0xC3);
+    let mut model = TrainModel::init(manifest.clone(), 0xC4)?;
+    let mut opt = Optimizer::adam(5e-3);
+    let tcfg = TrainConfig { epochs: 2, batch: 16, max_steps: 0, seed: 0xC5 };
+    fit(&mut model, &mut TrainBackend::Digital, &mut opt, &train_split, &tcfg)?;
+    let bundle = model.export_bundle();
+
+    let metrics = Arc::new(Metrics::default());
+    let mut members = Vec::with_capacity(chips_n);
+    let mut recals = Vec::with_capacity(chips_n);
+    for k in 0..chips_n {
+        let engine = Engine::from_parts(manifest.clone(), &bundle)?;
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.01;
+        desc.seed = 0xD0 ^ k as u64;
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_drift(DriftModel::new(DriftConfig {
+            seed: 0xE0 ^ k as u64,
+            passes_per_tick: 1,
+            gamma_walk: 2e-3,
+            resp_tilt: 4e-3,
+            dark_creep: 2e-4,
+            max_ticks: 60,
+        }));
+        let mcfg = MonitorConfig {
+            probe_every: 1,
+            // so low the first cooled-down probe forces a recalibration
+            residual_trigger: 1e-6,
+            cooldown_passes: 8,
+            ..MonitorConfig::default()
+        };
+        let monitor = DriftMonitor::new(mcfg, &desc);
+        let (member, recal_rx) = FarmMember::monitored(
+            engine,
+            sim,
+            monitor,
+            DEFAULT_DRIFTING_PPM,
+            Arc::clone(&metrics),
+        );
+        let shared =
+            Arc::clone(member.shared.as_ref().expect("monitored member"));
+        let rcfg = RecalConfig {
+            fine_tune_steps: 2,
+            lr: 2e-3,
+            batch: 16,
+            bn_batches: 2,
+            seed: 0xF0 ^ k as u64,
+            noisy: false,
+            snapshot_dir: None,
+        };
+        recals.push(
+            Recalibrator::new(model.clone(), calib_split.clone(), rcfg, shared)
+                .spawn(recal_rx),
+        );
+        members.push(member);
+    }
+    let Farm { coord, status } = Farm::start(
+        members,
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait_us: 2_000,
+                queue_cap: 0,
+            },
+            ..FarmConfig::default()
+        },
+        Arc::clone(&metrics),
     );
-    println!("metrics: {}", coord.metrics.summary());
+
+    let images: Vec<Tensor> =
+        (0..eval_split.n).map(|i| eval_split.image(i)).collect();
+    std::thread::scope(|s| -> Result<()> {
+        let (endpoint, smp) = start_obs(s, args, &metrics, &status, 50)?;
+        // serve until a recalibration + hot swap lands; fail loudly if
+        // none does (the CI contract of `make trace-smoke`)
+        let deadline = std::time::Instant::now() + Duration::from_secs(120);
+        loop {
+            coord.classify_all(&images)?;
+            if metrics.recalibrations.get() >= 1 {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::msg(format!(
+                    "serve smoke: no recalibration landed: {}",
+                    metrics.summary()
+                )));
+            }
+        }
+        // exercise health-routing edges: fail one member, serve, restore
+        if status.len() > 1 {
+            status[0].fail();
+            coord.classify_all(&images)?;
+            status[0].restore();
+        }
+        if let Some(ep) = &endpoint {
+            let scrape = self_scrape(ep.addr())?;
+            if !scrape.contains("cirptc_chip_health") {
+                return Err(Error::msg(
+                    "metrics scrape is missing the chip health series",
+                ));
+            }
+            println!("scraped {} bytes of metrics exposition", scrape.len());
+        }
+        if let Some(smp) = smp {
+            smp.stop();
+        }
+        Ok(())
+    })?;
+    obs::report(&metrics, &[], args.has("json"));
+    // the recalibrators' request senders live in the farm pipelines:
+    // drop the farm first so the join-on-drop handles can exit
+    drop(coord);
+    drop(status);
+    drop(recals);
+    smoke_partitioned(chips_n)
+}
+
+/// Read one `/metrics` scrape back from our own endpoint.
+fn self_scrape(addr: std::net::SocketAddr) -> Result<String> {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr)
+        .map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
+    conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")
+        .map_err(|e| Error::msg(format!("scrape write: {e}")))?;
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp)
+        .map_err(|e| Error::msg(format!("scrape read: {e}")))?;
+    Ok(resp)
+}
+
+/// Shard a wide synthetic model's circulant block-rows across a small
+/// partition so the smoke trace also carries farm `shard_pass` spans.
+fn smoke_partitioned(chips_n: usize) -> Result<()> {
+    // both circ layers carry 4 block-rows, so every width here shards
+    // them evenly
+    let part_n = if chips_n >= 4 {
+        4
+    } else if chips_n >= 2 {
+        2
+    } else {
+        1
+    };
+    let manifest = Manifest::parse(
+        r#"{
+          "dataset": "synth_smoke_farm", "classes": 16,
+          "layers": [
+            {"kind": "conv", "cin": 1, "cout": 16, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "relu", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "pool", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "flatten", "cin": 0, "cout": 0, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0},
+            {"kind": "fc", "cin": 4096, "cout": 16, "k": 3, "pool": 2,
+             "arch": "circ", "l": 4, "act_scale": 4.0}
+          ]}"#,
+    )?;
+    let mut bundle = Bundle::default();
+    let mut rng = Rng::new(0x51_0C);
+    let mut w0 = vec![0.0f32; 4 * 3 * 4];
+    rng.fill_uniform(&mut w0);
+    for v in w0.iter_mut() {
+        *v = (*v - 0.5) * 0.5;
+    }
+    bundle.insert_f32("layer0.w", &[4, 3, 4], w0);
+    bundle.insert_f32("layer0.b", &[16], vec![0.0; 16]);
+    let mut w4 = vec![0.0f32; 4 * 1024 * 4];
+    rng.fill_uniform(&mut w4);
+    for v in w4.iter_mut() {
+        *v = (*v - 0.5) * 0.1;
+    }
+    bundle.insert_f32("layer4.w", &[4, 1024, 4], w4);
+    bundle.insert_f32("layer4.b", &[16], vec![0.1; 16]);
+    let mut engine = Engine::from_parts(manifest, &bundle)?;
+    // one fixed-rate compute lane per chip (see benches/serving.rs §farm)
+    engine.threads = 1;
+    let engine = Arc::new(engine);
+    let plan = PartitionPlan::plan(&engine.manifest, part_n);
+    let part = PartitionedEngine::new(Arc::clone(&engine), plan)?;
+    let mut chips: Vec<Backend> = (0..part_n)
+        .map(|_| {
+            Backend::PhotonicSim(ChipSim::deterministic(
+                ChipDescription::ideal(4),
+            ))
+        })
+        .collect();
+    let mut irng = Rng::new(0x51_0D);
+    let imgs: Vec<Tensor> = (0..8)
+        .map(|_| {
+            let mut d = vec![0.0f32; 32 * 32];
+            irng.fill_uniform(&mut d);
+            Tensor::new(&[1, 32, 32], d)
+        })
+        .collect();
+    let out = part.forward_batch(&imgs, &mut chips)?;
+    println!(
+        "partitioned smoke: {part_n}-chip shard pass over {} images OK",
+        out.len()
+    );
     Ok(())
 }
 

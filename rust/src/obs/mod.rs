@@ -1,0 +1,91 @@
+//! Observability for the serving stack (DESIGN.md §obs): span tracing,
+//! telemetry export, and the shared end-of-run report.
+//!
+//! Three pillars, each dependency-free:
+//!
+//! * [`trace`] — a bounded, lock-striped ring-buffer [`trace::TraceRecorder`]
+//!   recording request / stage / farm / drift spans, exported as Chrome
+//!   trace-event JSON (`chrome://tracing` / Perfetto).  Near-zero cost
+//!   when disabled: one relaxed atomic load, no allocation.
+//! * [`prom`] + [`sampler`] — the same [`Metrics::export`] snapshot
+//!   rendered two ways: Prometheus text exposition on a `/metrics`
+//!   TCP endpoint (pull), and a periodic JSONL stream (push).
+//! * [`report`] (here) — the single end-of-run report every serving
+//!   entry point emits, replacing the ad-hoc `println!("metrics: …")`
+//!   sites; `--json` switches it to a machine-readable export.
+
+pub mod prom;
+pub mod sampler;
+pub mod trace;
+
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+
+/// Render the end-of-run report.  Text mode stays line-compatible with
+/// the historical `metrics: <summary>` shape (extras appended as
+/// `key=value`); JSON mode emits the full-resolution [`Metrics::export`]
+/// plus the extras under one parseable object.
+pub fn render_report(
+    metrics: &Metrics,
+    extra: &[(&str, f64)],
+    json: bool,
+) -> String {
+    if json {
+        let mut fields = vec![("metrics", metrics.export())];
+        if !extra.is_empty() {
+            fields.push((
+                "extra",
+                Json::obj(
+                    extra.iter().map(|(k, v)| (*k, Json::Num(*v))).collect(),
+                ),
+            ));
+        }
+        Json::obj(fields).dump()
+    } else {
+        let mut s = format!("metrics: {}", metrics.summary());
+        for (k, v) in extra {
+            s.push_str(&format!(" {k}={v}"));
+        }
+        s
+    }
+}
+
+/// Print the end-of-run report to stdout (see [`render_report`]).
+pub fn report(metrics: &Metrics, extra: &[(&str, f64)], json: bool) {
+    println!("{}", render_report(metrics, extra, json));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_report_is_summary_compatible() {
+        let m = Metrics::default();
+        m.submitted.add(2);
+        let line = render_report(&m, &[], false);
+        assert_eq!(line, format!("metrics: {}", m.summary()));
+        let with_extra = render_report(&m, &[("rps", 123.5)], false);
+        assert!(with_extra.starts_with(&line));
+        assert!(with_extra.ends_with(" rps=123.5"));
+    }
+
+    #[test]
+    fn json_report_parses_and_carries_extras() {
+        let m = Metrics::default();
+        m.completed.add(9);
+        let line = render_report(&m, &[("rps", 42.0)], true);
+        let j = Json::parse(&line).expect("json report parses");
+        assert_eq!(
+            j.get("metrics")
+                .and_then(|x| x.get("counters"))
+                .and_then(|c| c.get("completed"))
+                .and_then(Json::as_f64),
+            Some(9.0)
+        );
+        assert_eq!(
+            j.get("extra").and_then(|e| e.get("rps")).and_then(Json::as_f64),
+            Some(42.0)
+        );
+    }
+}

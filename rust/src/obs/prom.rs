@@ -1,0 +1,229 @@
+//! Prometheus text exposition for [`Metrics`] plus per-chip farm health,
+//! served by a minimal `std::net` `/metrics` endpoint (DESIGN.md §obs).
+//!
+//! [`render`] is a pure function from a metrics snapshot to the text
+//! exposition format (version 0.0.4): counters as `_total`, gauges
+//! verbatim, histograms with cumulative `_bucket{le=...}` lines over the
+//! exact log₂ buckets [`Metrics::export`] exposes, and two per-chip
+//! series (`cirptc_chip_health`, `cirptc_chip_residual_ppm`) labeled by
+//! member index.  [`serve_scoped`] binds a `TcpListener` and answers
+//! every connection with a fresh render on a named scoped thread, so the
+//! endpoint cannot outlive the serving stack it reports on.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use crate::coordinator::Metrics;
+use crate::farm::ChipStatus;
+use crate::util::error::{Error, Result};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
+use crate::util::threadpool::spawn_scoped_named;
+
+use super::trace;
+
+/// Render the full metrics state as Prometheus text exposition.  Every
+/// series carries the `cirptc_` prefix; histogram buckets are the exact
+/// log₂ upper edges from [`crate::coordinator::Histogram`], cumulative
+/// as the format requires, with the final open bucket as `+Inf`.
+pub fn render(metrics: &Metrics, chips: &[Arc<ChipStatus>]) -> String {
+    let mut out = String::with_capacity(8192);
+    for (name, v) in metrics.counters() {
+        out.push_str(&format!(
+            "# TYPE cirptc_{name}_total counter\ncirptc_{name}_total {v}\n"
+        ));
+    }
+    for (name, v) in metrics.gauges() {
+        out.push_str(&format!(
+            "# TYPE cirptc_{name} gauge\ncirptc_{name} {v}\n"
+        ));
+    }
+    for (name, h) in metrics.histograms() {
+        out.push_str(&format!("# TYPE cirptc_{name} histogram\n"));
+        let buckets = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, b) in buckets.iter().enumerate() {
+            cum += b;
+            let le = if i + 1 == buckets.len() {
+                "+Inf".to_string()
+            } else {
+                crate::coordinator::Histogram::bucket_edge(i).to_string()
+            };
+            out.push_str(&format!(
+                "cirptc_{name}_bucket{{le=\"{le}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!("cirptc_{name}_sum {}\n", h.sum()));
+        out.push_str(&format!("cirptc_{name}_count {}\n", h.count()));
+    }
+    if !chips.is_empty() {
+        out.push_str("# TYPE cirptc_chip_health gauge\n");
+        for (i, st) in chips.iter().enumerate() {
+            let h = st.health();
+            out.push_str(&format!(
+                "cirptc_chip_health{{chip=\"{i}\",state=\"{}\"}} {}\n",
+                h.name(),
+                h.code()
+            ));
+        }
+        out.push_str("# TYPE cirptc_chip_residual_ppm gauge\n");
+        for (i, st) in chips.iter().enumerate() {
+            out.push_str(&format!(
+                "cirptc_chip_residual_ppm{{chip=\"{i}\"}} {}\n",
+                st.residual_ppm()
+            ));
+        }
+    }
+    out
+}
+
+/// Handle to a running `/metrics` endpoint: the bound address (for
+/// `--metrics-addr 127.0.0.1:0` the OS-assigned port) and the stop flag.
+pub struct MetricsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl MetricsEndpoint {
+    /// The address actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the accept loop to exit.  The flag alone is not enough — the
+    /// listener blocks in `accept` — so nudge it awake with a throwaway
+    /// self-connection; the scoped spawn then joins at scope exit.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for MetricsEndpoint {
+    /// Shut down on drop so an early return (`?`) inside the owning
+    /// `thread::scope` can never leave the accept loop blocking the
+    /// scope's implicit join.  Idempotent: after an explicit
+    /// [`MetricsEndpoint::shutdown`] the extra nudge connection just
+    /// fails and is ignored.
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve `/metrics` on `addr` from a named thread inside `scope`.  Every
+/// connection gets a fresh [`render`] over HTTP/1.0 with
+/// `Connection: close`, which is all Prometheus scrapers and `curl`
+/// need.  The thread is scoped so the endpoint can borrow nothing and
+/// leak nothing: it must be shut down (or the scope must end) before the
+/// serving stack it samples is dropped.
+pub fn serve_scoped<'scope, 'env>(
+    scope: &'scope thread::Scope<'scope, 'env>,
+    addr: &str,
+    metrics: Arc<Metrics>,
+    chips: Vec<Arc<ChipStatus>>,
+) -> Result<MetricsEndpoint> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::msg(format!("bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::msg(format!("local_addr: {e}")))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    spawn_scoped_named(scope, "cirptc-metrics", move || {
+        for conn in listener.incoming() {
+            if stop_flag.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Ok(mut stream) = conn {
+                handle(&mut stream, &metrics, &chips);
+            }
+        }
+    });
+    Ok(MetricsEndpoint { addr: local, stop })
+}
+
+/// Answer one connection.  The request head is read (and discarded — a
+/// single-route endpoint needs no routing) so the peer's write never
+/// fails before the response lands; a short read timeout keeps a stalled
+/// scraper from wedging the accept loop.
+fn handle(stream: &mut TcpStream, metrics: &Metrics, chips: &[Arc<ChipStatus>]) {
+    trace::instant("scrape", "obs", trace::NO_ARGS);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut head = [0u8; 1024];
+    let _ = stream.read(&mut head);
+    let body = render(metrics, chips);
+    let resp = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(resp.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_covers_counters_gauges_histograms() {
+        let m = Metrics::default();
+        m.submitted.add(3);
+        m.batch_compute_us.record(100);
+        m.batch_compute_us.record(5000);
+        let text = render(&m, &[]);
+        assert!(text.contains("# TYPE cirptc_submitted_total counter"));
+        assert!(text.contains("cirptc_submitted_total 3"));
+        assert!(text.contains("# TYPE cirptc_queue_depth gauge"));
+        assert!(text.contains("# TYPE cirptc_batch_compute_us histogram"));
+        // 100 lands in bucket ⌊log₂ 100⌋ = 6 (upper edge 127); the
+        // cumulative count at that edge must include it
+        assert!(text.contains("cirptc_batch_compute_us_bucket{le=\"127\"} 1"));
+        assert!(text.contains("cirptc_batch_compute_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("cirptc_batch_compute_us_sum 5100"));
+        assert!(text.contains("cirptc_batch_compute_us_count 2"));
+        assert!(
+            !text.contains("cirptc_chip_health"),
+            "no chip series without chips"
+        );
+    }
+
+    #[test]
+    fn render_labels_chip_health_and_residual() {
+        let m = Metrics::default();
+        let healthy = ChipStatus::new(None, i64::MAX);
+        let failed = ChipStatus::new(None, i64::MAX);
+        failed.fail();
+        failed.set_residual_ppm(42);
+        let text = render(&m, &[healthy, failed]);
+        assert!(text
+            .contains("cirptc_chip_health{chip=\"0\",state=\"healthy\"} 0"));
+        assert!(text.contains("cirptc_chip_health{chip=\"1\",state=\"failed\"} 3"));
+        assert!(text.contains("cirptc_chip_residual_ppm{chip=\"0\"} 0"));
+        assert!(text.contains("cirptc_chip_residual_ppm{chip=\"1\"} 42"));
+    }
+
+    #[test]
+    fn endpoint_serves_a_scrape_and_shuts_down() {
+        let metrics = Arc::new(Metrics::default());
+        metrics.completed.add(7);
+        thread::scope(|s| {
+            let ep = serve_scoped(
+                s,
+                "127.0.0.1:0",
+                Arc::clone(&metrics),
+                vec![ChipStatus::new(None, i64::MAX)],
+            )
+            .expect("bind ephemeral port");
+            let mut conn = TcpStream::connect(ep.addr()).expect("connect");
+            conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            conn.read_to_string(&mut resp).expect("read response");
+            assert!(resp.starts_with("HTTP/1.0 200 OK"), "resp: {resp}");
+            assert!(resp.contains("cirptc_completed_total 7"), "resp: {resp}");
+            assert!(resp.contains("cirptc_chip_health{chip=\"0\""), "{resp}");
+            ep.shutdown();
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! Background telemetry sampler: snapshots [`Metrics`] (full-resolution
+//! [`Metrics::export`], not the summary string) plus per-chip health into
+//! a JSONL stream at a fixed interval (DESIGN.md §obs).
+//!
+//! One line per tick: `{"t_ms": …, "metrics": {…}, "chips": [{…}]}`,
+//! plus `"event": "recalibration"` on any tick where the recalibration
+//! counter advanced since the last one — the drift-recal e2e test pins
+//! that a forced recalibration is visible in the stream.  A final line is
+//! written on stop so short runs always produce at least one sample.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{worker, Metrics};
+use crate::farm::ChipStatus;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::sync::{mpsc, Arc};
+
+/// Running sampler thread.  Dropping it (or calling [`Sampler::stop`])
+/// signals the thread, which writes one last sample and exits; the
+/// embedded [`worker::JoinOnDrop`] then joins, so the JSONL file is
+/// complete and flushed by the time the handle is gone.
+pub struct Sampler {
+    stop: mpsc::SyncSender<()>,
+    _handle: worker::JoinOnDrop,
+}
+
+impl Sampler {
+    /// Start sampling `metrics` (and `chips`, possibly empty) every
+    /// `interval` into the JSONL file at `path`.
+    pub fn start(
+        path: &Path,
+        interval: Duration,
+        metrics: Arc<Metrics>,
+        chips: Vec<Arc<ChipStatus>>,
+    ) -> Result<Sampler> {
+        let file = File::create(path).map_err(|e| {
+            Error::msg(format!("create {}: {e}", path.display()))
+        })?;
+        // bounded (capacity 1): the only message ever sent is the single
+        // stop signal, and try_send keeps Drop non-blocking
+        let (stop_tx, stop_rx) = mpsc::sync_channel::<()>(1);
+        let handle = worker::spawn_named("cirptc-sampler", move || {
+            run(file, interval, metrics, chips, stop_rx);
+        });
+        Ok(Sampler { stop: stop_tx, _handle: handle })
+    }
+
+    /// Stop the sampler and wait for the final sample to be flushed.
+    pub fn stop(self) {}
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        // a full buffer means a stop is already signalled; either way the
+        // thread exits and _handle joins it
+        let _ = self.stop.try_send(());
+    }
+}
+
+fn run(
+    file: File,
+    interval: Duration,
+    metrics: Arc<Metrics>,
+    chips: Vec<Arc<ChipStatus>>,
+    stop_rx: mpsc::Receiver<()>,
+) {
+    let mut out = BufWriter::new(file);
+    let epoch = Instant::now();
+    let mut last_recals = metrics.recalibrations.get();
+    loop {
+        // a stop signal (or a dropped sender) ends the loop after one
+        // final sample; only a timeout means "keep sampling"
+        let stop_now = !matches!(
+            stop_rx.recv_timeout(interval),
+            Err(mpsc::RecvTimeoutError::Timeout)
+        );
+        let recals = metrics.recalibrations.get();
+        let mut fields = vec![
+            ("t_ms", Json::Num(epoch.elapsed().as_millis() as f64)),
+            ("metrics", metrics.export()),
+            (
+                "chips",
+                Json::Arr(
+                    chips
+                        .iter()
+                        .enumerate()
+                        .map(|(i, st)| {
+                            Json::obj(vec![
+                                ("chip", Json::Num(i as f64)),
+                                (
+                                    "health",
+                                    Json::Str(st.health().name().to_string()),
+                                ),
+                                (
+                                    "residual_ppm",
+                                    Json::Num(st.residual_ppm() as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if recals > last_recals {
+            fields.push(("event", Json::Str("recalibration".to_string())));
+            last_recals = recals;
+        }
+        let line = Json::obj(fields).dump();
+        if writeln!(out, "{line}").is_err() {
+            return; // sink gone (disk full, pipe closed): stop sampling
+        }
+        if stop_now {
+            let _ = out.flush();
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_jsonl(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("cirptc_sampler_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn sampler_writes_parseable_lines_and_final_sample() {
+        let path = temp_jsonl("basic");
+        let metrics = Arc::new(Metrics::default());
+        metrics.submitted.add(5);
+        let chips = vec![ChipStatus::new(None, i64::MAX)];
+        let s = Sampler::start(
+            &path,
+            Duration::from_millis(5),
+            Arc::clone(&metrics),
+            chips,
+        )
+        .expect("start sampler");
+        std::thread::sleep(Duration::from_millis(30));
+        s.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert!(!lines.is_empty(), "at least the final sample must land");
+        for line in &lines {
+            let j = Json::parse(line).expect("every line parses");
+            assert!(j.get("t_ms").and_then(Json::as_f64).is_some());
+            let sub = j
+                .get("metrics")
+                .and_then(|m| m.get("counters"))
+                .and_then(|c| c.get("submitted"))
+                .and_then(Json::as_f64);
+            assert_eq!(sub, Some(5.0));
+            let chips = j.get("chips").and_then(Json::as_arr).unwrap();
+            assert_eq!(chips.len(), 1);
+            assert_eq!(
+                chips[0].get("health").and_then(Json::as_str),
+                Some("healthy")
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recalibration_tick_is_tagged_as_event() {
+        let path = temp_jsonl("recal");
+        let metrics = Arc::new(Metrics::default());
+        let s = Sampler::start(
+            &path,
+            Duration::from_millis(5),
+            Arc::clone(&metrics),
+            vec![],
+        )
+        .expect("start sampler");
+        std::thread::sleep(Duration::from_millis(15));
+        metrics.recalibrations.add(1);
+        std::thread::sleep(Duration::from_millis(30));
+        s.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let events: Vec<Json> = text
+            .lines()
+            .filter(|l| !l.is_empty())
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        let tagged = events
+            .iter()
+            .filter(|j| {
+                j.get("event").and_then(Json::as_str) == Some("recalibration")
+            })
+            .count();
+        assert_eq!(
+            tagged, 1,
+            "exactly one tick spans the counter increment: {text}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,471 @@
+//! Span tracing for the serving stack (DESIGN.md §obs).
+//!
+//! A bounded, lock-striped ring-buffer recorder with near-zero cost when
+//! tracing is off: every record helper first checks one process-wide
+//! relaxed [`AtomicBool`] and returns immediately when it is false — no
+//! allocation, no lock, no clock read.  When tracing is on, events are
+//! `Copy` structs written into per-stripe rings preallocated at install
+//! time, so the record path never allocates either (enforced by the
+//! `obs-record-alloc` repo_lint rule); a full ring overwrites its oldest
+//! events and counts them in `dropped`.
+//!
+//! The span taxonomy (who records what) is tabulated in DESIGN.md §obs:
+//! request lifecycle (`submit`/`shed` instants), batcher (`batch_form`),
+//! worker (`infer`), pipeline lanes (`pre`/`chip`/`post` with batch seq +
+//! encode generation), farm (`route`/`health` instants, `shard_pass`
+//! spans), drift (`probe`/`recal_trigger`/`hot_swap` instants,
+//! `recalibrate` spans) and the engine (`forward_batch`).
+//!
+//! Export is Chrome trace-event JSON (an array of `ph: "X"` complete
+//! events and `ph: "i"` instants), loadable in `chrome://tracing` or
+//! Perfetto: `cirptc serve --trace out.json`.
+
+use std::cell::Cell;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+/// Lock stripes: writers on different threads hash to different rings,
+/// so concurrent recording contends only within a stripe.
+const STRIPES: usize = 8;
+
+/// Per-event argument slots; an empty-string key marks an unused slot
+/// (fixed-size so [`TraceEvent`] stays `Copy` and the record path stays
+/// allocation-free).
+pub type SpanArgs = [(&'static str, i64); 2];
+
+/// No arguments — both slots unused.
+pub const NO_ARGS: SpanArgs = [("", 0), ("", 0)];
+
+/// One argument, second slot unused.
+pub const fn arg1(k: &'static str, v: i64) -> SpanArgs {
+    [(k, v), ("", 0)]
+}
+
+/// Chrome trace-event phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `ph: "X"` — a complete span with a duration.
+    Complete,
+    /// `ph: "i"` — a thread-scoped instant.
+    Instant,
+}
+
+/// One recorded event.  `Copy` by construction: names and argument keys
+/// are `&'static str`, so recording moves a fixed-size value into a
+/// preallocated slot.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: Phase,
+    /// Microseconds since the recorder's epoch.
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Recorder-assigned thread id (stable per OS thread).
+    pub tid: u64,
+    pub args: SpanArgs,
+}
+
+/// One lock stripe: a fixed-capacity ring.  `buf` is reserved to the
+/// stripe capacity up front; once full, `head` marks the oldest slot and
+/// new events overwrite it.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    head: usize,
+}
+
+/// The bounded, lock-striped trace recorder.  Create with
+/// [`TraceRecorder::new`], publish process-wide with [`install`], switch
+/// recording with [`set_enabled`].
+pub struct TraceRecorder {
+    stripes: Vec<Mutex<Ring>>,
+    per_stripe: usize,
+    dropped: AtomicU64,
+    epoch: Instant,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<TraceRecorder>> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Recorder thread id, lazily assigned (0 = unassigned).
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn tid() -> u64 {
+    TID.with(|c| {
+        let mut t = c.get();
+        if t == 0 {
+            t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            c.set(t);
+        }
+        t
+    })
+}
+
+impl TraceRecorder {
+    /// A recorder holding at most `capacity` events in total, split over
+    /// the lock stripes (each stripe gets `max(capacity/STRIPES, 1)`
+    /// slots, reserved up front).
+    pub fn new(capacity: usize) -> Arc<TraceRecorder> {
+        let per_stripe = (capacity / STRIPES).max(1);
+        Arc::new(TraceRecorder {
+            stripes: (0..STRIPES)
+                .map(|_| {
+                    Mutex::new(Ring {
+                        buf: Vec::with_capacity(per_stripe),
+                        head: 0,
+                    })
+                })
+                .collect(),
+            per_stripe,
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+        })
+    }
+
+    /// Total event capacity across all stripes.
+    pub fn capacity(&self) -> usize {
+        self.per_stripe * self.stripes.len()
+    }
+
+    /// Events overwritten because their ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since this recorder's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event (no allocation: the ring was reserved at
+    /// construction, so `push` below capacity reuses reserved space and
+    /// at capacity overwrites the oldest slot).
+    fn push(&self, ev: TraceEvent) {
+        let stripe = (ev.tid as usize) % self.stripes.len();
+        let mut r = self.stripes[stripe]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if r.buf.len() < self.per_stripe {
+            r.buf.push(ev);
+        } else {
+            let h = r.head;
+            r.buf[h] = ev;
+            r.head = (h + 1) % self.per_stripe;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record an instant on the calling thread, stamped now.
+    pub fn record_instant(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        args: SpanArgs,
+    ) {
+        let ts_us = self.now_us();
+        self.push(TraceEvent {
+            name,
+            cat,
+            ph: Phase::Instant,
+            ts_us,
+            dur_us: 0,
+            tid: tid(),
+            args,
+        });
+    }
+
+    /// Record a complete span on the calling thread.
+    pub fn record_complete(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        ts_us: u64,
+        dur_us: u64,
+        args: SpanArgs,
+    ) {
+        self.push(TraceEvent {
+            name,
+            cat,
+            ph: Phase::Complete,
+            ts_us,
+            dur_us,
+            tid: tid(),
+            args,
+        });
+    }
+
+    /// Copy out every retained event, oldest-first per stripe, merged and
+    /// sorted by timestamp.  Non-destructive: writers racing with a
+    /// snapshot keep their events (they land in the rings either before
+    /// the stripe lock, and are included, or after, and are retained for
+    /// the next snapshot — never lost).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.capacity());
+        for s in &self.stripes {
+            let r = s.lock().unwrap_or_else(PoisonError::into_inner);
+            if r.buf.len() < self.per_stripe {
+                out.extend_from_slice(&r.buf);
+            } else {
+                out.extend_from_slice(&r.buf[r.head..]);
+                out.extend_from_slice(&r.buf[..r.head]);
+            }
+        }
+        out.sort_by_key(|e| e.ts_us);
+        out
+    }
+
+    /// Write the retained events as a Chrome trace-event JSON array.
+    pub fn write_chrome_trace(&self, path: &Path) -> Result<()> {
+        let json = chrome_trace(&self.snapshot());
+        std::fs::write(path, json.dump()).map_err(|e| {
+            Error::msg(format!("write trace {}: {e}", path.display()))
+        })
+    }
+}
+
+/// Render events as a Chrome trace-event JSON array (the "JSON Array
+/// Format": complete events carry `ph: "X"` + `dur`; instants carry
+/// `ph: "i"` with thread scope `s: "t"`; everything runs under `pid` 1).
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("name", Json::Str(e.name.to_string())),
+                    ("cat", Json::Str(e.cat.to_string())),
+                    ("ts", Json::Num(e.ts_us as f64)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(e.tid as f64)),
+                ];
+                match e.ph {
+                    Phase::Complete => {
+                        pairs.push(("ph", Json::Str("X".to_string())));
+                        pairs.push(("dur", Json::Num(e.dur_us as f64)));
+                    }
+                    Phase::Instant => {
+                        pairs.push(("ph", Json::Str("i".to_string())));
+                        pairs.push(("s", Json::Str("t".to_string())));
+                    }
+                }
+                let args: Vec<(&str, Json)> = e
+                    .args
+                    .iter()
+                    .filter(|(k, _)| !k.is_empty())
+                    .map(|(k, v)| (*k, Json::Num(*v as f64)))
+                    .collect();
+                pairs.push(("args", Json::obj(args)));
+                Json::obj(pairs)
+            })
+            .collect(),
+    )
+}
+
+/// Publish a recorder process-wide.  Returns false (and keeps the first)
+/// if one was already installed.  Recording still requires
+/// [`set_enabled`]`(true)`.
+pub fn install(rec: Arc<TraceRecorder>) -> bool {
+    GLOBAL.set(rec).is_ok()
+}
+
+/// Switch recording on or off.  Off is the default and costs the hot
+/// paths exactly one relaxed atomic load per record call.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether recording is currently on.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The installed recorder, if any.
+pub fn global() -> Option<&'static Arc<TraceRecorder>> {
+    GLOBAL.get()
+}
+
+/// Opaque span-start token from [`begin`]; cheap to hold across the
+/// traced section (a single `u64`, sentinel when tracing is off).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanStart(u64);
+
+const DISABLED_SPAN: u64 = u64::MAX;
+
+/// Start a span: a timestamp when tracing is on, a sentinel (making the
+/// matching [`end`] free) when off.
+#[inline]
+pub fn begin() -> SpanStart {
+    if !enabled() {
+        return SpanStart(DISABLED_SPAN);
+    }
+    match GLOBAL.get() {
+        Some(r) => SpanStart(r.now_us()),
+        None => SpanStart(DISABLED_SPAN),
+    }
+}
+
+/// Finish a span started with [`begin`], recording a complete event.
+#[inline]
+pub fn end(start: SpanStart, name: &'static str, cat: &'static str, args: SpanArgs) {
+    if start.0 == DISABLED_SPAN || !enabled() {
+        return;
+    }
+    if let Some(r) = GLOBAL.get() {
+        let now = r.now_us();
+        r.record_complete(
+            name,
+            cat,
+            start.0,
+            now.saturating_sub(start.0).max(1),
+            args,
+        );
+    }
+}
+
+/// Record an instant event on the calling thread.
+#[inline]
+pub fn instant(name: &'static str, cat: &'static str, args: SpanArgs) {
+    if !enabled() {
+        return;
+    }
+    if let Some(r) = GLOBAL.get() {
+        r.record_instant(name, cat, args);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn ring_bounded_and_accounts_overwrites() {
+        let rec = TraceRecorder::new(16);
+        // all from one thread → one stripe of max(16/8, 1) = 2 slots
+        for _ in 0..5 {
+            rec.record_instant("e", "test", NO_ARGS);
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len() as u64 + rec.dropped(), 5);
+        assert!(snap.len() <= rec.capacity());
+        for _ in 0..100 {
+            rec.record_instant("e", "test", NO_ARGS);
+        }
+        let snap = rec.snapshot();
+        assert!(snap.len() <= rec.capacity(), "ring stays bounded");
+        assert_eq!(snap.len() as u64 + rec.dropped(), 105, "no event lost silently");
+    }
+
+    #[test]
+    fn concurrent_writers_bounded_memory_no_lost_events() {
+        let rec = TraceRecorder::new(1024);
+        let writers = 8usize;
+        let per_writer = 5_000u64;
+        thread::scope(|s| {
+            for _ in 0..writers {
+                let rec = &rec;
+                s.spawn(move || {
+                    for i in 0..per_writer {
+                        rec.record_instant("w", "stress", arg1("i", i as i64));
+                        // drains racing with writers must not lose events
+                        if i % 1024 == 0 {
+                            let snap = rec.snapshot();
+                            assert!(snap.len() <= rec.capacity());
+                        }
+                    }
+                });
+            }
+        });
+        let snap = rec.snapshot();
+        assert!(snap.len() <= rec.capacity(), "bounded under 8 writers");
+        assert_eq!(
+            snap.len() as u64 + rec.dropped(),
+            writers as u64 * per_writer,
+            "every write is retained or counted as overwritten"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_parser() {
+        let rec = TraceRecorder::new(64);
+        rec.record_complete("pre", "stage", 10, 5, [("batch", 3), ("gen", 1)]);
+        rec.record_instant("probe", "drift", arg1("residual_ppm", 412));
+        let dump = chrome_trace(&rec.snapshot()).dump();
+        let parsed = Json::parse(&dump).expect("emitted trace must parse");
+        let events = parsed.as_arr().expect("top-level array");
+        assert_eq!(events.len(), 2);
+        let complete = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("complete event");
+        assert_eq!(complete.get("name").and_then(Json::as_str), Some("pre"));
+        assert_eq!(complete.get("cat").and_then(Json::as_str), Some("stage"));
+        assert_eq!(complete.get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(complete.get("dur").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(complete.get("pid").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            complete.get("args").and_then(|a| a.get("batch")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        let inst = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .expect("instant event");
+        assert_eq!(inst.get("s").and_then(Json::as_str), Some("t"));
+        assert_eq!(inst.get("dur"), None, "instants carry no duration");
+        assert_eq!(
+            inst.get("args")
+                .and_then(|a| a.get("residual_ppm"))
+                .and_then(Json::as_f64),
+            Some(412.0)
+        );
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op_and_global_path_records() {
+        // the one test that touches the process-wide recorder
+        let rec = TraceRecorder::new(256);
+        install(Arc::clone(&rec));
+        assert!(!enabled(), "tracing starts disabled");
+        instant("before_enable", "test", NO_ARGS);
+        let t = begin();
+        end(t, "span_before_enable", "test", NO_ARGS);
+        assert!(
+            !rec.snapshot().iter().any(|e| e.cat == "test"),
+            "disabled helpers must not record"
+        );
+        set_enabled(true);
+        instant("after_enable", "test", NO_ARGS);
+        let t = begin();
+        end(t, "span_after_enable", "test", arg1("k", 7));
+        set_enabled(false);
+        instant("after_disable", "test", NO_ARGS);
+        let snap = rec.snapshot();
+        assert!(snap.iter().any(|e| e.name == "after_enable"));
+        let span = snap
+            .iter()
+            .find(|e| e.name == "span_after_enable")
+            .expect("span recorded while enabled");
+        assert!(span.dur_us >= 1, "complete spans clamp dur to ≥1µs");
+        assert!(!snap.iter().any(|e| e.name == "after_disable"));
+    }
+
+    #[test]
+    fn snapshot_orders_by_timestamp() {
+        let rec = TraceRecorder::new(64);
+        rec.record_complete("b", "t", 20, 1, NO_ARGS);
+        rec.record_complete("a", "t", 5, 1, NO_ARGS);
+        let snap = rec.snapshot();
+        assert_eq!(snap[0].name, "a");
+        assert_eq!(snap[1].name, "b");
+    }
+}

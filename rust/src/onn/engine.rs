@@ -197,10 +197,18 @@ impl Engine {
         // the sequential path IS the staged path run back to back — the
         // stage split can't drift from it because there is nothing else
         // to drift from (rust/tests/pipelined_path.rs pins the overlap)
+        let span = crate::obs::trace::begin();
         let photonic = matches!(backend, Backend::PhotonicSim(_));
         let pre = self.pre_batch(imgs, photonic, None)?;
         let mid = self.chip_batch(pre, backend)?;
-        self.post_batch(mid)
+        let out = self.post_batch(mid);
+        crate::obs::trace::end(
+            span,
+            "forward_batch",
+            "engine",
+            crate::obs::trace::arg1("size", imgs.len() as i64),
+        );
+        out
     }
 
     /// Index of the first conv/fc layer, if any.

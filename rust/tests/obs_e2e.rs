@@ -1,0 +1,247 @@
+//! End-to-end observability (DESIGN.md §obs): one process-owned trace
+//! recorder + telemetry sampler over a live drift-recalibrating
+//! coordinator.
+//!
+//! Pins the dynamic side of what repo_lint pins statically:
+//!
+//! * spans from every instrumented layer of this scenario — request
+//!   admission, batch formation, worker inference, drift probes and a
+//!   full `recalibrate` span with its `hot_swap` instant — land in the
+//!   recorder while requests keep flowing with zero drops;
+//! * the written Chrome trace-event file round-trips through the JSON
+//!   parser with the exact event shape `chrome://tracing` expects;
+//! * the sampler's JSONL stream parses line-by-line, carries the
+//!   structured `Metrics::export()` snapshot, and tags the tick where
+//!   the recalibration counter advanced with `"event":"recalibration"`.
+//!
+//! This is the one integration test that owns the process-global
+//! recorder (`trace::install` is install-once), so it stays a single
+//! `#[test]` — everything else in the file is a helper.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cirptc::coordinator::{
+    BackendFactory, BatcherConfig, Coordinator, InferenceBackend, Metrics,
+};
+use cirptc::data::datasets::{self, Split, SHAPES_MANIFEST_JSON};
+use cirptc::drift::{
+    DriftBackend, DriftConfig, DriftModel, DriftMonitor, DriftShared,
+    MonitorConfig, RecalConfig, Recalibrator, RecalRequest,
+};
+use cirptc::obs::sampler::Sampler;
+use cirptc::obs::trace;
+use cirptc::onn::{Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::train::TrainModel;
+use cirptc::util::json::Json;
+
+const CHUNK: usize = 8;
+
+fn chip0() -> ChipDescription {
+    let mut d = ChipDescription::ideal(4);
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d.seed = 31;
+    d
+}
+
+fn drift_cfg() -> DriftConfig {
+    DriftConfig {
+        seed: 0xE5,
+        passes_per_tick: 1,
+        gamma_walk: 1.5e-3,
+        resp_tilt: 3e-3,
+        dark_creep: 2e-4,
+        max_ticks: 60,
+    }
+}
+
+/// One drift-monitored photonic worker with an aggressive trigger, so a
+/// recalibration is forced within a few passes.
+fn drift_factory(
+    shared: &Arc<DriftShared>,
+    tx: mpsc::Sender<RecalRequest>,
+) -> BackendFactory {
+    let shared = Arc::clone(shared);
+    Box::new(move || {
+        let desc = chip0();
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_drift(DriftModel::new(drift_cfg()));
+        let mcfg = MonitorConfig {
+            probe_every: 1,
+            residual_trigger: 1e-6,
+            cooldown_passes: 8,
+            ..MonitorConfig::default()
+        };
+        let monitor = DriftMonitor::new(mcfg, &desc);
+        Box::new(DriftBackend::new(shared, sim, monitor, tx))
+            as Box<dyn InferenceBackend>
+    })
+}
+
+/// One pass of `eval` through the live coordinator in chunks of 8;
+/// panics on any dropped request.
+fn serve_round(coord: &Coordinator, eval: &Split) {
+    let mut s = 0usize;
+    while s < eval.n {
+        let e = (s + CHUNK).min(eval.n);
+        let imgs: Vec<Tensor> = (s..e).map(|i| eval.image(i)).collect();
+        let responses = coord.classify_all(&imgs).unwrap();
+        assert_eq!(responses.len(), imgs.len(), "request dropped");
+        s = e;
+    }
+}
+
+#[test]
+fn tracing_and_sampler_observe_a_live_recalibration() {
+    let rec = trace::TraceRecorder::new(1 << 14);
+    assert!(trace::install(Arc::clone(&rec)), "first install wins");
+    trace::set_enabled(true);
+
+    // tiny untrained model: accuracy is not under test, the obs plumbing
+    // is identical (same idiom as the pipelined drift e2e)
+    let manifest = Manifest::parse(SHAPES_MANIFEST_JSON).unwrap();
+    let eval_split = datasets::synth_shapes(48, 0xE1);
+    let calib_split = datasets::synth_shapes(64, 0xE2);
+    let model = TrainModel::init(manifest.clone(), 0xE3).unwrap();
+    let bundle = model.export_bundle();
+    let metrics = Arc::new(Metrics::default());
+    let engine = Engine::from_parts(manifest, &bundle).unwrap();
+    let shared = DriftShared::new(engine, Arc::clone(&metrics));
+
+    let (tx, rx) = mpsc::channel();
+    let rcfg = RecalConfig {
+        fine_tune_steps: 2,
+        lr: 2e-3,
+        batch: 16,
+        bn_batches: 2,
+        seed: 0xE4,
+        noisy: false,
+        snapshot_dir: None,
+    };
+    let _recal =
+        Recalibrator::new(model, calib_split, rcfg, Arc::clone(&shared))
+            .spawn(rx);
+    let coord = Coordinator::start_with_metrics(
+        vec![drift_factory(&shared, tx)],
+        BatcherConfig { max_batch: CHUNK, max_wait_us: 20_000, queue_cap: 0 },
+        Arc::clone(&metrics),
+    );
+
+    let jsonl = std::env::temp_dir()
+        .join(format!("cirptc_obs_e2e_{}.jsonl", std::process::id()));
+    let smp = Sampler::start(
+        &jsonl,
+        Duration::from_millis(10),
+        Arc::clone(&metrics),
+        vec![],
+    )
+    .expect("start sampler");
+
+    // serve until a recalibration lands (aggressive trigger: a few
+    // passes), synchronizing on the shared metrics, never sleeps alone
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while metrics.recalibrations.get() < 1 {
+        serve_round(&coord, &eval_split);
+        assert!(
+            Instant::now() < deadline,
+            "no recalibration landed: {}",
+            metrics.summary()
+        );
+    }
+    // a few more sampler ticks so the counter advance is spanned by one
+    std::thread::sleep(Duration::from_millis(50));
+    smp.stop();
+    drop(coord);
+
+    assert_eq!(metrics.errors.get(), 0, "no request may fail");
+    assert_eq!(
+        metrics.completed.get(),
+        metrics.submitted.get(),
+        "every accepted request must complete"
+    );
+
+    // -- spans: every instrumented layer of this scenario is present ---
+    let snap = rec.snapshot();
+    for (name, cat) in [
+        ("submit", "request"),
+        ("batch_form", "request"),
+        ("infer", "stage"),
+        ("probe", "drift"),
+        ("recal_trigger", "drift"),
+        ("hot_swap", "drift"),
+        ("recalibrate", "drift"),
+    ] {
+        assert!(
+            snap.iter().any(|e| e.name == name && e.cat == cat),
+            "missing {cat}/{name} span among {} events",
+            snap.len()
+        );
+    }
+    let recal_span = snap
+        .iter()
+        .find(|e| e.name == "recalibrate")
+        .expect("recalibrate span");
+    assert!(matches!(recal_span.ph, trace::Phase::Complete));
+    assert!(recal_span.dur_us >= 1);
+
+    // -- Chrome trace file round-trips through the parser --------------
+    let trace_path = std::env::temp_dir()
+        .join(format!("cirptc_obs_e2e_{}.json", std::process::id()));
+    rec.write_chrome_trace(&trace_path).expect("write trace");
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let events = Json::parse(&text).expect("trace parses");
+    let events = events.as_arr().expect("top-level array");
+    assert_eq!(events.len(), snap.len(), "every retained event exported");
+    for e in events {
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        match ph {
+            "X" => assert!(e.get("dur").and_then(Json::as_f64).is_some()),
+            "i" => assert_eq!(e.get("s").and_then(Json::as_str), Some("t")),
+            other => panic!("unexpected ph {other:?}"),
+        }
+    }
+
+    // -- sampler JSONL: parseable, structured, recal event tagged ------
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Json::parse(l).expect("every JSONL line parses"))
+        .collect();
+    assert!(!lines.is_empty());
+    for j in &lines {
+        assert!(j.get("t_ms").and_then(Json::as_f64).is_some());
+        assert!(
+            j.get("metrics")
+                .and_then(|m| m.get("counters"))
+                .and_then(|c| c.get("submitted"))
+                .and_then(Json::as_f64)
+                .is_some(),
+            "each line carries the structured export"
+        );
+    }
+    assert!(
+        lines.iter().any(|j| {
+            j.get("event").and_then(Json::as_str) == Some("recalibration")
+        }),
+        "the recalibration tick must be tagged: {text}"
+    );
+    let last = lines.last().unwrap();
+    assert!(
+        last.get("metrics")
+            .and_then(|m| m.get("counters"))
+            .and_then(|c| c.get("recalibrations"))
+            .and_then(Json::as_f64)
+            .is_some_and(|r| r >= 1.0),
+        "the final sample must show the landed recalibration"
+    );
+
+    let _ = std::fs::remove_file(&jsonl);
+    let _ = std::fs::remove_file(&trace_path);
+}
