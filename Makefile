@@ -8,7 +8,7 @@ PY ?= python3
 OUT ?= artifacts
 
 .PHONY: artifacts train train-smoke train-py train-py-quick verify \
-	bench-smoke drift-smoke trace-smoke lint loom validate help
+	bench-smoke drift-smoke trace-smoke chaos-smoke lint loom validate help
 
 ## AOT-lower the jax graphs to $(OUT)/*.hlo.txt + chip.json (compile.aot)
 artifacts:
@@ -104,6 +104,19 @@ trace-smoke:
 		--trace trace_smoke.json --metrics-addr 127.0.0.1:0 \
 		--sample sample_smoke.jsonl --sample-ms 25
 	cargo run --release --bin trace_check -- trace_smoke.json
+
+## Self-healing chaos smoke (what CI runs): emit a seeded random fault
+## plan with `cirptc chaos`, then serve the 3-member supervised farm
+## under the pinned builtin schedule (one silent DeadChip + one
+## detectable TransientPassError episode, shared across members) over a
+## digital fallback lane.  The run itself asserts auto-quarantine,
+## budgeted retry, degradation and probe-driven auto-restore with zero
+## dropped or rejected requests, and that the retry / quarantine /
+## restore / degraded span families land in the Chrome trace
+chaos-smoke:
+	cargo run --release --bin cirptc -- chaos --seed 7 --out chaos_plan.json
+	cargo run --release --bin cirptc -- serve --chaos builtin \
+		--trace chaos_smoke.json
 
 help:
 	@grep -B1 -E '^[a-z-]+:' Makefile | grep -E '^(##|[a-z-]+:)' | sed 's/:.*//'

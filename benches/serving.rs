@@ -38,7 +38,11 @@ use cirptc::drift::{
     MonitorConfig, RecalConfig, Recalibrator,
 };
 use cirptc::farm::{
-    Farm, FarmConfig, FarmMember, PartitionPlan, PartitionedEngine,
+    ChipHealth, Farm, FarmConfig, FarmMember, PartitionPlan,
+    PartitionedEngine, DEFAULT_DRIFTING_PPM,
+};
+use cirptc::fault::{
+    ChipSupervisor, Episode, FaultKind, FaultPlan, SupervisorConfig,
 };
 use cirptc::obs::{self, trace};
 use cirptc::onn::{Backend, Engine, Manifest};
@@ -760,6 +764,113 @@ fn main() {
     ]);
     rep.metric("trace_overhead_frac", frac);
     rep.metric("trace_enabled_frac", enabled_rps / base_rps.max(1e-9));
+
+    section("chaos: supervised farm under a seeded fault plan");
+    // every member rides the same episode schedule on its own noise
+    // stream, so the DeadChip window is a total-loss window: the run
+    // exercises probe-driven quarantine, batch retry, degradation to the
+    // digital fallback lane, and probation restore.  The floored metric
+    // pins the completed/submitted fraction at exactly 1.0 — the
+    // self-healing loop may never drop a request.
+    let cmetrics = Arc::new(Metrics::default());
+    let cimgs = synthetic_images(32);
+    let episodes = vec![
+        Episode { start_pass: 8, duration: 50, kind: FaultKind::DeadChip },
+        Episode {
+            start_pass: 4,
+            duration: 40,
+            kind: FaultKind::TransientPassError { p: 0.5 },
+        },
+    ];
+    let mut cmembers = Vec::new();
+    for k in 0..3usize {
+        let cengine = synthetic_engine();
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.01;
+        desc.seed = 0xBE ^ k as u64;
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_fault(FaultPlan::new(0xC405 ^ k as u64, episodes.clone()));
+        // monitor-only: probe every batch for the supervisor, never
+        // request a recalibration (nothing services the channel here)
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let (member, recal_rx) = FarmMember::supervised(
+            cengine,
+            sim,
+            monitor,
+            ChipSupervisor::new(SupervisorConfig {
+                residual_ceiling: 0.05,
+                consecutive_failures: 2,
+                probation_probes: 2,
+                max_probations: 100_000,
+            }),
+            DEFAULT_DRIFTING_PPM,
+            Duration::from_millis(2),
+            Arc::clone(&cmetrics),
+        );
+        drop(recal_rx);
+        cmembers.push(member);
+    }
+    let cstatus: Vec<_> =
+        cmembers.iter().map(|m| Arc::clone(&m.status)).collect();
+    let cfb_engine = Arc::new(synthetic_engine());
+    let cfallback: cirptc::coordinator::worker::BackendFactory =
+        Box::new(move || {
+            Box::new(EngineBackend {
+                engine: cfb_engine,
+                mode: Backend::Digital,
+            }) as Box<dyn InferenceBackend>
+        });
+    let cfarm = Farm::start_with_fallback(
+        cmembers,
+        Some(cfallback),
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait_us: 2_000,
+                queue_cap: 0,
+            },
+            ..FarmConfig::default()
+        },
+        Arc::clone(&cmetrics),
+    );
+    let cdeadline = Instant::now() + Duration::from_secs(180);
+    let mut healed = false;
+    while Instant::now() < cdeadline {
+        cfarm.coord.classify_all(&cimgs).unwrap();
+        let serving = cstatus
+            .iter()
+            .filter(|st| st.health() != ChipHealth::Failed)
+            .count();
+        if cmetrics.quarantines.get() >= 1
+            && cmetrics.retries.get() >= 1
+            && serving >= 2
+        {
+            healed = true;
+            break;
+        }
+    }
+    assert!(healed, "chaos farm never healed: {}", cmetrics.summary());
+    cfarm.coord.classify_all(&cimgs).unwrap();
+    let recovery = cmetrics.completed.get() as f64
+        / cmetrics.submitted.get().max(1) as f64;
+    row("chaos", &[
+        ("recovery_frac", format!("{recovery:.3}")),
+        ("retries", format!("{}", cmetrics.retries.get())),
+        ("quarantines", format!("{}", cmetrics.quarantines.get())),
+        ("degraded", format!("{}", cmetrics.degraded_batches.get())),
+    ]);
+    rep.metric("chaos_recovery_frac", recovery);
+    println!("  {}", obs::render_report(&cmetrics, &[], false));
+    drop(cfarm);
 
     if smoke {
         println!("\nsmoke mode: skipping policy sweep + worker scaling");

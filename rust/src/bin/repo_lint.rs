@@ -36,6 +36,14 @@
 //!   hung-process dump: no anonymous `thread::spawn(` under `obs/`,
 //!   and the `/metrics` accept loop (`obs/prom.rs`, the file holding
 //!   the `TcpListener`) must go through `spawn_scoped_named`.
+//! * **retry-budget** — every retry redispatch site must be bounded:
+//!   a non-test line that both mentions `retry` and performs a
+//!   `.send(` is only legal in a file whose non-test code references
+//!   a `RETRY_BUDGET` constant somewhere.  An unbounded retry loop
+//!   (requeue on every failure with no attempt ceiling) turns one
+//!   poisoned batch into an infinite hot loop that starves the farm;
+//!   tying the send site to a named budget constant keeps the bound
+//!   greppable and reviewable.
 //!
 //! Escapes: a `// lint:allow(<rule>): <reason>` comment suppresses the
 //! rule on the next non-comment line (or on its own line when it
@@ -56,6 +64,7 @@ const KNOWN_RULES: &[&str] = &[
     "obs-record-alloc",
     "obs-bounded-channel",
     "obs-named-listener",
+    "retry-budget",
 ];
 const UNWRAP_NEEDLES: &[&str] = &[".unwrap()", ".expect(", "panic!("];
 const ALLOC_NEEDLES: &[&str] = &["vec![", "Vec::with_capacity", "Vec::new", ".to_vec("];
@@ -90,6 +99,16 @@ const OBS_LISTENER_FILE: &str = "obs/prom.rs";
 const OBS_RECORD_FNS: &[&str] =
     &["push", "record_instant", "record_complete", "begin", "end", "instant"];
 const ANON_SPAWN_NEEDLE: &str = "thread::spawn(";
+
+/// A retry redispatch site: a line mentioning `retry` that also calls
+/// `.send(` (covers `retry_tx.send(` and `retry_tx.try_send(`).  Any
+/// file containing one must also reference a `RETRY_BUDGET` constant in
+/// its non-test code — the greppable evidence that the retry loop is
+/// bounded by an attempt ceiling.  `RETRY_BUDGET` is case-distinct from
+/// the lowercase `retry` needle, so the constant's own definition line
+/// never counts as a send site.
+const RETRY_SEND_NEEDLES: (&str, &str) = ("retry", ".send(");
+const RETRY_BUDGET_NEEDLE: &str = "RETRY_BUDGET";
 
 #[derive(Debug)]
 struct Finding {
@@ -372,6 +391,36 @@ fn analyze_file(rel: &str, content: &str) -> FileReport {
         }
     }
 
+    // Whole-file check: retry redispatch sends are only legal when the
+    // file's non-test code names a `RETRY_BUDGET` constant — the
+    // evidence that the retry loop has an attempt ceiling.  Flagged at
+    // every send site so each one is individually allowable.
+    {
+        let non_test = &stripped[..test_start];
+        let budgeted =
+            non_test.iter().any(|l| l.contains(RETRY_BUDGET_NEEDLE));
+        if !budgeted {
+            let (a, b) = RETRY_SEND_NEEDLES;
+            for (i, code) in non_test.iter().enumerate() {
+                if code.contains(a)
+                    && code.contains(b)
+                    && !is_allowed(i, "retry-budget")
+                {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: i + 1,
+                        rule: "retry-budget",
+                        excerpt: format!(
+                            "retry send without a RETRY_BUDGET bound in \
+                             this file: {}",
+                            raw[i].trim()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
     FileReport { findings, allows }
 }
 
@@ -579,6 +628,34 @@ mod tests {
         assert!(analyze_file("obs/sampler.rs", ok).findings.is_empty());
         // outside obs/, this stays the stage-buffer rule's business
         assert!(analyze_file("util/metrics.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn retry_sends_require_a_budget_constant() {
+        // a retry send with no RETRY_BUDGET anywhere: finding
+        let bad = "fn requeue() {\n    let _ = link.retry_tx.send((m, batch));\n}\n";
+        let r = analyze_file("coordinator/pipeline.rs", bad);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "retry-budget");
+        assert_eq!(r.findings[0].line, 2);
+        // naming the budget constant anywhere in non-test code clears it
+        let ok = "pub const FARM_RETRY_BUDGET: u32 = 3;\n\
+                  fn requeue() {\n    let _ = link.retry_tx.send((m, batch));\n}\n";
+        assert!(analyze_file("coordinator/pipeline.rs", ok).findings.is_empty());
+        // a budget constant only inside #[cfg(test)] does NOT count
+        let test_only = "fn requeue() {\n    let _ = retry_tx.send(b);\n}\n\
+                         #[cfg(test)]\nmod t {\n    const RETRY_BUDGET: u32 = 1;\n}\n";
+        let r = analyze_file("farm/mod.rs", test_only);
+        assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+        assert_eq!(r.findings[0].rule, "retry-budget");
+        // sends that do not mention retry are out of scope
+        let unrelated = "fn go() {\n    tx.send(batch);\n    retry_count += 1;\n}\n";
+        assert!(analyze_file("farm/router.rs", unrelated).findings.is_empty());
+        // an explicit allow with a reason suppresses the site
+        let allowed = "fn requeue() {\n    \
+                       // lint:allow(retry-budget): bounded by caller's attempt check\n    \
+                       let _ = retry_tx.send(b);\n}\n";
+        assert!(analyze_file("farm/mod.rs", allowed).findings.is_empty());
     }
 
     #[test]

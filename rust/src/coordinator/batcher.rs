@@ -37,6 +37,10 @@ impl Default for BatcherConfig {
 pub struct Batch {
     pub requests: Vec<Request>,
     pub formed: Instant,
+    /// Delivery attempts consumed so far: 0 from the batcher; bumped by
+    /// the farm pipeline each time the batch fails on a member and is
+    /// redispatched (see [`super::pipeline::FARM_RETRY_BUDGET`]).
+    pub attempts: u32,
 }
 
 /// Batcher loop: drains the intake channel into batches.  Exits when the
@@ -112,6 +116,7 @@ fn dispatch(
     let batch = Batch {
         requests: std::mem::take(pending),
         formed: Instant::now(),
+        attempts: 0,
     };
     // receiver gone ⇒ shutting down; requests drop, senders see RecvError
     let _ = out.send(batch);

@@ -223,6 +223,22 @@ pub struct Metrics {
     /// farm router: batches absorbed by the fallback member because no
     /// healthy or merely-drifting chip was routable at dispatch time
     pub farm_absorbed: WorkCounter,
+    /// fault injection: passes whose readout a [`crate::fault::FaultPlan`]
+    /// corrupted (silent or detectable), summed across chips
+    pub faults_injected: WorkCounter,
+    /// farm pipeline: batch redispatches after a member failure (each
+    /// consumes one unit of [`crate::coordinator::pipeline::FARM_RETRY_BUDGET`])
+    pub retries: WorkCounter,
+    /// supervisor verdicts that took a member out of routing
+    /// ([`crate::fault::Verdict::Fail`] / `Quarantine` applied to
+    /// [`crate::farm::ChipStatus`])
+    pub quarantines: WorkCounter,
+    /// batches served by the digital fallback lane because no photonic
+    /// member was routable (graceful degradation)
+    pub degraded_batches: WorkCounter,
+    /// level gauge: 1 while the farm is degraded to the digital fallback
+    /// (no serving-capable photonic member), else 0
+    pub degraded: Gauge,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -290,6 +306,10 @@ impl Metrics {
             ("farm_transitions", self.farm_transitions.get()),
             ("farm_rerouted", self.farm_rerouted.get()),
             ("farm_absorbed", self.farm_absorbed.get()),
+            ("faults_injected", self.faults_injected.get()),
+            ("retries", self.retries.get()),
+            ("quarantines", self.quarantines.get()),
+            ("degraded_batches", self.degraded_batches.get()),
         ]
     }
 
@@ -302,6 +322,7 @@ impl Metrics {
             ("drift_ticks", self.drift_ticks.get()),
             ("scratch_takes", self.scratch_takes.get()),
             ("scratch_misses", self.scratch_misses.get()),
+            ("degraded", self.degraded.get()),
         ]
     }
 
@@ -379,7 +400,8 @@ impl Metrics {
              pre_p99≤{}µs chip_p99≤{}µs post_p99≤{}µs wait_p99≤{}µs \
              probes={} recals={} probe_res≤{}ppm scratch_miss={}/{} \
              lock_poisons={} \
-             farm_transitions={} farm_rerouted={} farm_absorbed={}",
+             farm_transitions={} farm_rerouted={} farm_absorbed={} \
+             faults={} retries={} quarantines={} degraded={}/{}",
             self.submitted.get(),
             self.completed.get(),
             self.errors.get(),
@@ -404,6 +426,11 @@ impl Metrics {
             self.farm_transitions.get(),
             self.farm_rerouted.get(),
             self.farm_absorbed.get(),
+            self.faults_injected.get(),
+            self.retries.get(),
+            self.quarantines.get(),
+            self.degraded_batches.get(),
+            self.degraded.get(),
         )
     }
 }
@@ -573,6 +600,33 @@ mod tests {
         assert!(s.contains("farm_transitions=4"), "summary: {s}");
         assert!(s.contains("farm_rerouted=2"), "summary: {s}");
         assert!(s.contains("farm_absorbed=1"), "summary: {s}");
+    }
+
+    #[test]
+    fn fault_counters_surface_in_summary_and_export() {
+        let m = Metrics::default();
+        m.faults_injected.add(7);
+        m.retries.add(3);
+        m.quarantines.add(1);
+        m.degraded_batches.add(2);
+        m.degraded.set(1);
+        let s = m.summary();
+        assert!(s.contains("faults=7"), "summary: {s}");
+        assert!(s.contains("retries=3"), "summary: {s}");
+        assert!(s.contains("quarantines=1"), "summary: {s}");
+        assert!(s.contains("degraded=2/1"), "summary: {s}");
+        let e = m.export();
+        let counter = |k: &str| {
+            e.get("counters").and_then(|c| c.get(k)).and_then(Json::as_f64)
+        };
+        assert_eq!(counter("faults_injected"), Some(7.0));
+        assert_eq!(counter("retries"), Some(3.0));
+        assert_eq!(counter("quarantines"), Some(1.0));
+        assert_eq!(counter("degraded_batches"), Some(2.0));
+        assert_eq!(
+            e.get("gauges").and_then(|g| g.get("degraded")).and_then(Json::as_f64),
+            Some(1.0)
+        );
     }
 
     #[test]

@@ -26,19 +26,21 @@
 //! unboundedly, and queueing pressure stays visible to admission control
 //! at the intake queue where [`super::Coordinator::submit`] can shed.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::util::sync::atomic::{AtomicI64, Ordering};
 use crate::util::sync::{mpsc, Arc, Mutex};
 
 use crate::drift::{DriftShared, EngineSlot};
 use crate::obs::trace;
 use crate::onn::{Backend, Engine, MidBatch, PreBatch};
 use crate::simulator::EncodeSnapshot;
+use crate::tensor::Tensor;
 use crate::util::scratch;
 use crate::util::threadpool::spawn_scoped_named;
 
 use super::metrics::Metrics;
-use super::{Batch, Response};
+use super::{Batch, Request, Response};
 
 /// Tuning for one pipelined worker.
 #[derive(Clone, Debug)]
@@ -54,6 +56,37 @@ impl Default for PipelineConfig {
     fn default() -> Self {
         PipelineConfig { depth: 1 }
     }
+}
+
+/// Attempt budget for farm redispatch: a batch that has already failed on
+/// this many members is no longer offered to chip members by the router —
+/// it may only land on the digital fallback lane (or, with no fallback,
+/// be dropped with `errors` accounting).  Every retry site references
+/// this bound (`bin/repo_lint.rs` rejects retry sends in files that
+/// don't), so no retry loop is unbounded.
+pub const FARM_RETRY_BUDGET: u32 = 3;
+
+/// A pipelined worker's handle back into the farm's retry plumbing
+/// (absent outside a farm): where failed batches are redispatched, and
+/// the farm-wide in-flight count the router uses to decide when the
+/// retry channel may close.
+#[derive(Clone)]
+pub struct FarmLink {
+    /// this worker's member index — the router moves the origin member to
+    /// the *end* of its preference order when redispatching, so a retry
+    /// lands on a different healthy member whenever one exists
+    pub member: usize,
+    /// failed batches go back to the router tagged with their origin
+    pub retry_tx: mpsc::Sender<(usize, Batch)>,
+    /// batches dispatched to members and not yet terminal (replied,
+    /// redispatched, or dropped).  A retry send happens *before* the
+    /// decrement, so the router never observes zero while a retry from a
+    /// still-counted batch is unsent (the shutdown-drain invariant).
+    pub in_flight: Arc<AtomicI64>,
+    /// per-batch chip-stage deadline: a pass stream exceeding it is
+    /// treated as a fault (wedged backend becomes a verdict, not a hang)
+    /// and the batch is redispatched
+    pub deadline: Option<Duration>,
 }
 
 /// Where the pipeline reads "the engine to use for the next batch":
@@ -90,15 +123,38 @@ pub struct Staged {
     pub backend: Backend,
     pub hook: Option<ChipHook>,
     pub cfg: PipelineConfig,
+    /// run this hook whenever the chip lane has seen no traffic for the
+    /// given interval — how a quarantined (traffic-less) member still
+    /// runs its probation probes off the serving path
+    pub idle: Option<(Duration, ChipHook)>,
+    /// farm retry/deadline plumbing (absent for standalone pipelines)
+    pub link: Option<FarmLink>,
 }
 
 impl Staged {
     pub fn new(source: EngineSource, backend: Backend) -> Staged {
-        Staged { source, backend, hook: None, cfg: PipelineConfig::default() }
+        Staged {
+            source,
+            backend,
+            hook: None,
+            cfg: PipelineConfig::default(),
+            idle: None,
+            link: None,
+        }
     }
 
     pub fn with_hook(mut self, hook: ChipHook) -> Staged {
         self.hook = Some(hook);
+        self
+    }
+
+    pub fn with_idle(mut self, every: Duration, hook: ChipHook) -> Staged {
+        self.idle = Some((every, hook));
+        self
+    }
+
+    pub fn with_farm_link(mut self, link: FarmLink) -> Staged {
+        self.link = Some(link);
         self
     }
 
@@ -120,8 +176,13 @@ struct PreItem {
     engine: Arc<Engine>,
     pre: PreBatch,
     replies: Vec<Reply>,
+    /// original input tensors, retained so a stage failure can reassemble
+    /// the requests for redispatch to a different member
+    images: Vec<Tensor>,
     formed: Instant,
     pre_us: u64,
+    /// delivery attempts consumed before this dispatch (see [`Batch`])
+    attempts: u32,
     /// worker-local batch sequence number, stamped on the stage spans so
     /// a trace view lines the three lanes up per batch
     seq: u64,
@@ -132,10 +193,62 @@ struct PostItem {
     engine: Arc<Engine>,
     mid: MidBatch,
     replies: Vec<Reply>,
+    images: Vec<Tensor>,
     formed: Instant,
     /// pre + chip stage time so far (µs); post adds its own share
     work_us: u64,
+    attempts: u32,
     seq: u64,
+}
+
+/// Redispatch a failed batch through the farm's retry channel.  The
+/// requests are reassembled from the retained reply handles and input
+/// tensors — each reply sender still rides exactly one batch, so the
+/// no-double-delivery argument of the FIFO chip lane is unchanged — and
+/// the attempt counter is bumped.  The router stops offering the batch to
+/// chip members once `attempts` reaches [`FARM_RETRY_BUDGET`]; beyond
+/// that only the digital fallback lane (or the terminal drop accounting)
+/// can consume it, so the retry loop is bounded.
+fn requeue(
+    link: &FarmLink,
+    replies: Vec<Reply>,
+    images: Vec<Tensor>,
+    formed: Instant,
+    attempts: u32,
+    metrics: &Metrics,
+) {
+    let n = replies.len();
+    let requests: Vec<Request> = replies
+        .into_iter()
+        .zip(images)
+        .map(|((id, enqueued, reply), image)| Request {
+            id,
+            image,
+            enqueued,
+            reply,
+        })
+        .collect();
+    let attempts = attempts + 1;
+    metrics.retries.add(1);
+    trace::instant(
+        "retry",
+        "fault",
+        [("attempt", attempts as i64), ("member", link.member as i64)],
+    );
+    // back onto the queue-depth books: the router's drop path and the pre
+    // lane's take account against queue_depth exactly like a fresh batch
+    metrics.queue_depth.add(n as i64);
+    let send =
+        link.retry_tx.send((link.member, Batch { requests, formed, attempts }));
+    if send.is_err() {
+        // router already gone (teardown): terminal, same books as a
+        // stage failure without a farm
+        metrics.queue_depth.sub(n as i64);
+        metrics.errors.add(n);
+    }
+    // decrement *after* the send: the router treats in-flight == 0 as
+    // "no further retries can arrive" when deciding to close the lanes
+    link.in_flight.fetch_sub(1, Ordering::SeqCst);
 }
 
 /// Pipelined worker loop body (runs on its own thread; the pre and post
@@ -148,7 +261,7 @@ pub fn run(
     rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
     metrics: Arc<Metrics>,
 ) {
-    let Staged { source, mut backend, mut hook, cfg } = staged;
+    let Staged { source, mut backend, mut hook, cfg, mut idle, link } = staged;
     let depth = cfg.depth.max(1);
     let photonic = matches!(backend, Backend::PhotonicSim(_));
     // the chip stage publishes an encoding snapshot after each batch's
@@ -169,6 +282,7 @@ pub fn run(
             let metrics = &metrics;
             let snap = &snap;
             let source = &source;
+            let link = link.clone();
             let mut seq = 0u64;
             move || loop {
                 // same shared-queue discipline as worker::run: take one
@@ -188,16 +302,22 @@ pub fn run(
                 if batch.requests.is_empty() {
                     continue;
                 }
-                let Batch { requests, formed } = batch;
+                let Batch { requests, formed, attempts } = batch;
                 let n = requests.len();
                 // requests leave the queue the moment a worker owns them
                 metrics.queue_depth.sub(n as i64);
                 let mut images = Vec::with_capacity(n);
                 let mut replies: Vec<Reply> = Vec::with_capacity(n);
                 for req in requests {
-                    metrics.batch_wait_us.record(
-                        formed.duration_since(req.enqueued).as_micros() as u64,
-                    );
+                    // wait time is recorded once per request, on its
+                    // first dispatch — a redispatched batch would skew
+                    // the histogram with double counts
+                    if attempts == 0 {
+                        metrics.batch_wait_us.record(
+                            formed.duration_since(req.enqueued).as_micros()
+                                as u64,
+                        );
+                    }
                     images.push(req.image);
                     replies.push((req.id, req.enqueued, req.reply));
                 }
@@ -227,20 +347,34 @@ pub fn run(
                                 engine,
                                 pre,
                                 replies,
+                                images,
                                 formed,
                                 pre_us,
+                                attempts,
                                 seq,
                             })
                             .is_err()
                         {
-                            return; // chip lane gone: tearing down
+                            // chip lane gone mid-teardown: terminal for
+                            // this batch (reply senders drop with it)
+                            metrics.errors.add(n);
+                            if let Some(l) = link.as_ref() {
+                                l.in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            return;
                         }
                     }
                     Err(e) => {
-                        // fail the whole batch here: drop reply senders
-                        // (receivers see a closed channel), count errors
+                        // in a farm the batch is redispatched; standalone,
+                        // fail it here: drop reply senders (receivers see
+                        // a closed channel), count errors
                         eprintln!("cirptc pre stage failed: {e:#}");
-                        metrics.errors.add(n);
+                        match link.as_ref() {
+                            Some(l) => requeue(
+                                l, replies, images, formed, attempts, metrics,
+                            ),
+                            None => metrics.errors.add(n),
+                        }
                     }
                 }
             }
@@ -249,9 +383,18 @@ pub fn run(
         // ── post lane ───────────────────────────────────────────────
         spawn_scoped_named(s, "cirptc-post", {
             let metrics = &metrics;
+            let link = link.clone();
             move || {
-                for PostItem { engine, mid, replies, formed, work_us, seq } in
-                    post_rx
+                for PostItem {
+                    engine,
+                    mid,
+                    replies,
+                    images,
+                    formed,
+                    work_us,
+                    attempts,
+                    seq,
+                } in post_rx
                 {
                     let n = replies.len();
                     let span = trace::begin();
@@ -294,10 +437,21 @@ pub fn run(
                             let st = scratch::stats();
                             metrics.scratch_takes.set(st.takes as i64);
                             metrics.scratch_misses.set(st.misses as i64);
+                            // the batch is terminal (replies delivered):
+                            // off the farm's in-flight books
+                            if let Some(l) = link.as_ref() {
+                                l.in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
                         }
                         Err(e) => {
                             eprintln!("cirptc post stage failed: {e:#}");
-                            metrics.errors.add(n);
+                            match link.as_ref() {
+                                Some(l) => requeue(
+                                    l, replies, images, formed, attempts,
+                                    metrics,
+                                ),
+                                None => metrics.errors.add(n),
+                            }
                         }
                     }
                 }
@@ -305,7 +459,38 @@ pub fn run(
         });
 
         // ── chip lane (this thread) ─────────────────────────────────
-        for PreItem { engine, pre, replies, formed, pre_us, seq } in pre_rx {
+        loop {
+            let item = match idle.as_mut() {
+                // an idle interval is configured: poll, so a traffic-less
+                // member (e.g. one the router stopped routing to) still
+                // runs its probation probes off the serving path
+                Some((every, idle_hook)) => match pre_rx.recv_timeout(*every) {
+                    Ok(it) => it,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        idle_hook(&mut backend);
+                        if let Backend::PhotonicSim(sim) = &backend {
+                            *snap.lock().unwrap_or_else(|e| e.into_inner()) =
+                                Some(sim.encode_snapshot());
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                },
+                None => match pre_rx.recv() {
+                    Ok(it) => it,
+                    Err(_) => break,
+                },
+            };
+            let PreItem {
+                engine,
+                pre,
+                replies,
+                images,
+                formed,
+                pre_us,
+                attempts,
+                seq,
+            } = item;
             let n = replies.len();
             let span = trace::begin();
             let t = metrics.stage_chip_us.timer();
@@ -330,21 +515,69 @@ pub fn run(
                         *snap.lock().unwrap_or_else(|e| e.into_inner()) =
                             Some(sim.encode_snapshot());
                     }
+                    // fault verdicts: a detectable readout fault latched
+                    // during this batch's passes (or the hook's probes)
+                    // poisons the mid-results; a pass stream over the
+                    // farm deadline marks the member wedged.  Either way
+                    // the batch is redispatched, never delivered corrupt.
+                    let mut fault = match &mut backend {
+                        Backend::PhotonicSim(sim) => sim.take_fault_event(),
+                        Backend::Digital => None,
+                    };
+                    if fault.is_none() {
+                        if let Some(d) = link.as_ref().and_then(|l| l.deadline)
+                        {
+                            if chip_us as u128 > d.as_micros() {
+                                fault = Some("pass_deadline");
+                                if let Backend::PhotonicSim(sim) = &mut backend
+                                {
+                                    sim.note_fault();
+                                }
+                            }
+                        }
+                    }
+                    if let Some(event) = fault {
+                        eprintln!("cirptc chip stage fault: {event}");
+                        trace::instant(
+                            "fault",
+                            "fault",
+                            [("batch", seq as i64), ("size", n as i64)],
+                        );
+                        match link.as_ref() {
+                            Some(l) => requeue(
+                                l, replies, images, formed, attempts, metrics,
+                            ),
+                            None => metrics.errors.add(n),
+                        }
+                        continue;
+                    }
                     let item = PostItem {
                         engine,
                         mid,
                         replies,
+                        images,
                         formed,
                         work_us: pre_us + chip_us,
+                        attempts,
                         seq,
                     };
                     if post_tx.send(item).is_err() {
-                        break; // post lane gone: tearing down
+                        // post lane gone mid-teardown: terminal
+                        metrics.errors.add(n);
+                        if let Some(l) = link.as_ref() {
+                            l.in_flight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        break;
                     }
                 }
                 Err(e) => {
                     eprintln!("cirptc chip stage failed: {e:#}");
-                    metrics.errors.add(n);
+                    match link.as_ref() {
+                        Some(l) => requeue(
+                            l, replies, images, formed, attempts, metrics,
+                        ),
+                        None => metrics.errors.add(n),
+                    }
                 }
             }
         }
@@ -512,6 +745,7 @@ mod tests {
                 reply,
             }],
             formed: Instant::now(),
+            attempts: 0,
         })
         .unwrap();
         drop(tx);

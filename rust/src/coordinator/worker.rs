@@ -136,7 +136,7 @@ pub fn run(
         if batch.requests.is_empty() {
             continue;
         }
-        let Batch { requests, formed } = batch;
+        let Batch { requests, formed, attempts: _ } = batch;
         let n = requests.len();
         // requests leave the queue the moment a worker owns them
         metrics.queue_depth.sub(n as i64);
@@ -257,7 +257,8 @@ mod tests {
         });
         // an empty batch must not kill the worker (the per-request
         // accounting divides by the batch size) or count as served work
-        tx.send(Batch { requests: vec![], formed: Instant::now() }).unwrap();
+        tx.send(Batch { requests: vec![], formed: Instant::now(), attempts: 0 })
+            .unwrap();
         // ... and a real request submitted afterwards must still be served
         let (reply, reply_rx) = mpsc::channel();
         tx.send(Batch {
@@ -268,6 +269,7 @@ mod tests {
                 reply,
             }],
             formed: Instant::now(),
+            attempts: 0,
         })
         .unwrap();
         let resp = reply_rx
@@ -319,6 +321,7 @@ mod tests {
                 reply,
             }],
             formed: Instant::now(),
+            attempts: 0,
         })
         .unwrap();
         let resp = reply_rx

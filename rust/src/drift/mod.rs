@@ -174,7 +174,8 @@ pub fn staged_drift(
     .with_hook(Box::new(move |backend: &mut Backend| {
         if let Backend::PhotonicSim(sim) = backend {
             batches += 1;
-            monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
+            // probe residual consumed by the farm supervisor only
+            let _ = monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
         }
     }))
 }
@@ -187,7 +188,7 @@ impl InferenceBackend for DriftBackend {
         let out = engine.forward_batch(imgs, &mut self.mode)?;
         self.batches += 1;
         if let Backend::PhotonicSim(sim) = &mut self.mode {
-            self.monitor.after_batch(
+            let _ = self.monitor.after_batch(
                 sim,
                 self.batches,
                 &self.shared,

@@ -144,14 +144,16 @@ impl DriftMonitor {
     /// Worker-loop hook, called after every drained batch: refresh the
     /// drift gauges, run a probe on cadence, and fire the recalibration
     /// trigger when the policy says so.  `batches` is the worker's
-    /// drained-batch count.
+    /// drained-batch count.  Returns the probe residual when this call
+    /// ran a probe (`None` off-cadence) — the farm supervisor feeds every
+    /// observed residual into its fail/restore state machine.
     pub fn after_batch(
         &mut self,
         sim: &mut ChipSim,
         batches: u64,
         shared: &DriftShared,
         recal_tx: &mpsc::Sender<RecalRequest>,
-    ) {
+    ) -> Option<f32> {
         // a recalibration of *this stack* landed since we last looked:
         // rebase the probe reference to the point it was trained against,
         // so the residual keeps measuring drift the new weights have
@@ -176,7 +178,7 @@ impl DriftMonitor {
             shared.metrics.drift_ticks.set(d.ticks() as i64);
         }
         if self.cfg.probe_every == 0 || batches % self.cfg.probe_every != 0 {
-            return;
+            return None;
         }
         let res = self.probe(sim);
         let ppm = (res as f64 * 1e6) as u64;
@@ -204,6 +206,7 @@ impl DriftMonitor {
                 shared.recal_in_flight.finish();
             }
         }
+        Some(res)
     }
 }
 

@@ -32,6 +32,7 @@ use crate::onn::{Backend, Engine, LayerKind, MidBatch};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::scratch;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 use crate::util::sync::Arc;
 use crate::util::threadpool::spawn_scoped_named;
 
@@ -173,6 +174,9 @@ impl PartitionedEngine {
         let m = bcm.m();
         let mut y = Tensor::new(&[m, b], scratch::take(m * b));
         let shards = &self.layer_shards[idx];
+        // chip index of the first shard whose photonic readout came back
+        // non-finite (NaN/Inf readout fault); usize::MAX means clean
+        let poisoned = AtomicUsize::new(usize::MAX);
         {
             // pair each shard with its disjoint row-slice of the output;
             // shard order is ascending r0 and validate() guaranteed an
@@ -231,6 +235,19 @@ impl PartitionedEngine {
                         for v in yk.data.iter_mut() {
                             *v *= scale;
                         }
+                        // a NaN/Inf readout (e.g. an injected
+                        // `FaultKind::NaNReadout` episode) must surface
+                        // as a fault verdict, never as a garbled logit:
+                        // record the chip and let the reduce tail bail
+                        if yk.data.iter().any(|v| !v.is_finite()) {
+                            sim.note_fault();
+                            let _ = poisoned.compare_exchange(
+                                usize::MAX,
+                                sh.chip,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            );
+                        }
                         out.copy_from_slice(&yk.data);
                         scratch::put(yk.data);
                     }
@@ -258,6 +275,14 @@ impl PartitionedEngine {
             }
         }
         scratch::put(xp.data);
+        let bad = poisoned.load(Ordering::Relaxed);
+        if bad != usize::MAX {
+            scratch::put(y.data);
+            bail!(
+                "layer {idx}: chip {bad} produced a non-finite shard \
+                 readout (treated as a detectable pass fault)"
+            );
+        }
         // shared electronic reduce tail — identical to finish_linear
         let bias = e.linear_bias(idx)?;
         match shape {
@@ -406,6 +431,33 @@ mod tests {
         assert!(part.forward_batch(&imgs, &mut mixed).is_err());
         let mut narrow = vec![Backend::Digital];
         assert!(part.forward_batch(&imgs, &mut narrow).is_err());
+    }
+
+    #[test]
+    fn non_finite_shard_readout_is_a_fault_not_a_garbled_logit() {
+        use crate::fault::{Episode, FaultKind, FaultPlan};
+        let e = wide_engine();
+        let plan = PartitionPlan::plan(&e.manifest, 2);
+        let part = PartitionedEngine::new(e, plan).unwrap();
+        let imgs = inputs(2);
+        let mut sick = ChipSim::deterministic(nonideal());
+        sick.set_fault(FaultPlan::new(
+            7,
+            vec![Episode {
+                start_pass: 0,
+                duration: u64::MAX / 2,
+                kind: FaultKind::NaNReadout,
+            }],
+        ));
+        let mut chips = vec![
+            Backend::PhotonicSim(sick),
+            Backend::PhotonicSim(ChipSim::deterministic(nonideal())),
+        ];
+        let err = part.forward_batch(&imgs, &mut chips).unwrap_err();
+        assert!(
+            format!("{err}").contains("non-finite"),
+            "NaN readout must bail, got: {err}"
+        );
     }
 
     #[test]

@@ -38,14 +38,18 @@ mod router;
 pub use engine::PartitionedEngine;
 pub use partition::{circ_grids, tile_demand, LayerGrid, LayerShard, PartitionPlan};
 
+use std::time::Duration;
+
 use crate::util::sync::atomic::{AtomicBool, AtomicI64, Ordering};
-use crate::util::sync::{mpsc, Arc, Mutex};
+use crate::util::sync::{mpsc, Arc, Mutex, PoisonError};
 
 use crate::coordinator::{
     batcher, pipeline, worker, Batch, BatcherConfig, Coordinator,
     EngineSource, InferenceBackend, Metrics, PipelineConfig, Request, Staged,
 };
 use crate::drift::{DriftMonitor, DriftShared, RecalRequest};
+use crate::fault::{ChipSupervisor, Verdict};
+use crate::obs::trace;
 use crate::onn::{Backend, Engine};
 use crate::simulator::ChipSim;
 use crate::tensor::Tensor;
@@ -109,6 +113,10 @@ impl ChipHealth {
 /// `Failed` is latched ([`ChipStatus::fail`] / [`ChipStatus::restore`]).
 pub struct ChipStatus {
     failed: AtomicBool,
+    /// escalation latch: set by the supervisor after repeated failed
+    /// probations.  Implies `failed`; only [`ChipStatus::restore`] (an
+    /// operator action) clears it.
+    quarantined: AtomicBool,
     /// last probe residual in ppm, published by the member's chip hook
     residual_ppm: AtomicI64,
     /// at or above this residual the member reads `Drifting`
@@ -125,6 +133,7 @@ impl ChipStatus {
     ) -> Arc<ChipStatus> {
         Arc::new(ChipStatus {
             failed: AtomicBool::new(false),
+            quarantined: AtomicBool::new(false),
             residual_ppm: AtomicI64::new(0),
             drifting_ppm: drifting_ppm.max(1),
             shared,
@@ -148,15 +157,36 @@ impl ChipStatus {
         }
     }
 
-    /// Sticky operator kill switch: the member stops receiving traffic
-    /// (unless every sibling is also down) until [`ChipStatus::restore`].
+    /// Sticky kill switch — thrown by an operator or by the member's
+    /// [`ChipSupervisor`]: the member stops receiving traffic (unless
+    /// every sibling is also down) until [`ChipStatus::restore`].
     pub fn fail(&self) {
         self.failed.store(true, Ordering::Relaxed);
     }
 
-    /// Clear the kill switch; health derivation resumes normally.
+    /// Escalation latch: like [`ChipStatus::fail`], but also marks the
+    /// member [`ChipStatus::is_quarantined`] so dashboards and the
+    /// sampler can tell "down, supervisor gave up" from a plain failure.
+    pub fn quarantine(&self) {
+        self.quarantined.store(true, Ordering::Relaxed);
+        self.failed.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the supervisor escalated this member to `Quarantined`.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Clear the kill switch (and any quarantine latch); health
+    /// derivation resumes normally.  The stale residual from before the
+    /// failure is also dropped — the member was failed precisely because
+    /// its last probes were bad, and leaving them published would make a
+    /// restored member immediately re-read as `Drifting` until the next
+    /// probe lands.
     pub fn restore(&self) {
         self.failed.store(false, Ordering::Relaxed);
+        self.quarantined.store(false, Ordering::Relaxed);
+        self.residual_ppm.store(0, Ordering::Relaxed);
     }
 
     /// Last published probe residual, ppm.
@@ -177,6 +207,11 @@ pub struct FarmConfig {
     /// bounded routing queue per member (batches a member may run
     /// behind the router before backpressure reaches admission control)
     pub member_queue: usize,
+    /// chip-stage deadline per batch: a member whose pass stream exceeds
+    /// it is treated as wedged — the batch is redispatched and the event
+    /// counts as a fault toward the member's supervisor.  `None` (the
+    /// default) disables the check.
+    pub pass_deadline: Option<Duration>,
 }
 
 impl Default for FarmConfig {
@@ -185,6 +220,7 @@ impl Default for FarmConfig {
             batcher: BatcherConfig::default(),
             pipeline: PipelineConfig::default(),
             member_queue: 2,
+            pass_deadline: None,
         }
     }
 }
@@ -199,6 +235,47 @@ pub struct FarmMember {
     source: EngineSource,
     backend: Backend,
     hook: Option<pipeline::ChipHook>,
+    /// idle-interval hook ([`crate::coordinator::Staged`]): how a
+    /// failed (traffic-less) member still runs probation probes
+    idle: Option<(Duration, pipeline::ChipHook)>,
+}
+
+/// Everything the supervised member's two hooks (serving + idle) share.
+/// Both hooks run on the member's single chip-lane thread, so the mutex
+/// is uncontended — it only satisfies the `Send` bound on the closures.
+struct SupervisorInner {
+    monitor: DriftMonitor,
+    supervisor: ChipSupervisor,
+    batches: u64,
+    /// detectable fault events already fed to the supervisor
+    faults_seen: u64,
+    /// plan-injected corruptions already surfaced in the metrics
+    injected_seen: u64,
+}
+
+/// Apply a supervisor verdict to the member's health handle: this is the
+/// probe-driven automatic `fail()` / `restore()` loop — the operator
+/// actions become outputs of the state machine.
+fn apply_verdict(v: Verdict, status: &ChipStatus, metrics: &Metrics) {
+    match v {
+        Verdict::Fail => {
+            status.fail();
+            metrics.quarantines.add(1);
+            trace::instant("quarantine", "fault", trace::arg1("latched", 0));
+        }
+        Verdict::Restore => {
+            status.restore();
+            trace::instant("restore", "fault", trace::arg1("latched", 0));
+        }
+        Verdict::Quarantine => {
+            status.quarantine();
+            metrics.quarantines.add(1);
+            trace::instant("quarantine", "fault", trace::arg1("latched", 1));
+            eprintln!(
+                "cirptc farm: member quarantined after repeated failed probations"
+            );
+        }
+    }
 }
 
 impl FarmMember {
@@ -225,7 +302,10 @@ impl FarmMember {
         let hook: pipeline::ChipHook = Box::new(move |backend: &mut Backend| {
             if let Backend::PhotonicSim(sim) = backend {
                 batches += 1;
-                monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
+                // the probe residual only feeds a supervisor (see
+                // [`FarmMember::supervised`]); a plain monitored member
+                // classifies off the published ppm signal below
+                let _ = monitor.after_batch(sim, batches, &hook_shared, &recal_tx);
                 // publish the member-local drift signal the health
                 // machine classifies on (the metrics gauge is shared
                 // farm-wide and would mix the members together)
@@ -241,6 +321,116 @@ impl FarmMember {
                 source: EngineSource::Shared(shared),
                 backend: Backend::PhotonicSim(sim),
                 hook: Some(hook),
+                idle: None,
+            },
+            recal_rx,
+        )
+    }
+
+    /// Self-healing photonic member: [`FarmMember::monitored`] plus a
+    /// [`ChipSupervisor`] that turns probe residuals and detected fault
+    /// events into automatic [`ChipStatus::fail`] / `restore` /
+    /// `quarantine` verdicts.  While the member is failed (and therefore
+    /// traffic-less) the idle hook keeps probing every `idle_every`, so
+    /// probation runs off the serving path and a recovered chip restores
+    /// itself without operator action.
+    pub fn supervised(
+        engine: Engine,
+        sim: ChipSim,
+        monitor: DriftMonitor,
+        supervisor: ChipSupervisor,
+        drifting_ppm: i64,
+        idle_every: Duration,
+        metrics: Arc<Metrics>,
+    ) -> (FarmMember, mpsc::Receiver<RecalRequest>) {
+        let shared = DriftShared::new(engine, Arc::clone(&metrics));
+        let status = ChipStatus::new(Some(Arc::clone(&shared)), drifting_ppm);
+        let (recal_tx, recal_rx) = mpsc::channel();
+        let inner = Arc::new(Mutex::new(SupervisorInner {
+            monitor,
+            supervisor,
+            batches: 0,
+            faults_seen: 0,
+            injected_seen: 0,
+        }));
+        let hook: pipeline::ChipHook = {
+            let inner = Arc::clone(&inner);
+            let shared = Arc::clone(&shared);
+            let status = Arc::clone(&status);
+            let metrics = Arc::clone(&metrics);
+            Box::new(move |backend: &mut Backend| {
+                if let Backend::PhotonicSim(sim) = backend {
+                    let mut inner =
+                        inner.lock().unwrap_or_else(PoisonError::into_inner);
+                    inner.batches += 1;
+                    let batches = inner.batches;
+                    // surface plan-injected corruptions in the farm-wide
+                    // counter, and feed each *detectable* event to the
+                    // supervisor as a bad observation so a member fails
+                    // even between probe cadences
+                    let injected = sim.faults_injected();
+                    if injected > inner.injected_seen {
+                        metrics
+                            .faults_injected
+                            .add((injected - inner.injected_seen) as usize);
+                        inner.injected_seen = injected;
+                    }
+                    let mut verdict = None;
+                    let faults = sim.fault_events();
+                    while inner.faults_seen < faults {
+                        inner.faults_seen += 1;
+                        if let Some(v) = inner.supervisor.note_fault() {
+                            verdict = Some(v);
+                        }
+                    }
+                    if let Some(res) =
+                        inner.monitor.after_batch(sim, batches, &shared, &recal_tx)
+                    {
+                        if let Some(v) = inner.supervisor.observe(res) {
+                            verdict = Some(v);
+                        }
+                    }
+                    status.set_residual_ppm(
+                        (inner.monitor.last_residual() as f64 * 1e6) as i64,
+                    );
+                    if let Some(v) = verdict {
+                        apply_verdict(v, &status, &metrics);
+                    }
+                }
+            })
+        };
+        let idle_hook: pipeline::ChipHook = {
+            let inner = Arc::clone(&inner);
+            let status = Arc::clone(&status);
+            let metrics = Arc::clone(&metrics);
+            Box::new(move |backend: &mut Backend| {
+                if let Backend::PhotonicSim(sim) = backend {
+                    let mut inner =
+                        inner.lock().unwrap_or_else(PoisonError::into_inner);
+                    // probation probe, off the serving path (the member
+                    // sees no traffic while failed, so the serving hook
+                    // never runs): same instrumentation as the monitor's
+                    // in-band probes
+                    let res = inner.monitor.probe(sim);
+                    let ppm = (res as f64 * 1e6) as u64;
+                    metrics.probes.add(1);
+                    metrics.probe_residual_ppm.record(ppm.max(1));
+                    metrics.last_probe_residual_ppm.set(ppm as i64);
+                    status.set_residual_ppm(ppm as i64);
+                    if let Some(v) = inner.supervisor.observe(res) {
+                        apply_verdict(v, &status, &metrics);
+                    }
+                }
+            })
+        };
+        (
+            FarmMember {
+                status,
+                shared: Some(Arc::clone(&shared)),
+                source: EngineSource::Shared(shared),
+                backend: Backend::PhotonicSim(sim),
+                hook: Some(hook),
+                idle: Some((idle_every, idle_hook)),
             },
             recal_rx,
         )
@@ -255,6 +445,7 @@ impl FarmMember {
             source: EngineSource::Fixed(engine),
             backend,
             hook: None,
+            idle: None,
         }
     }
 }
@@ -275,6 +466,21 @@ impl Farm {
         cfg: FarmConfig,
         metrics: Arc<Metrics>,
     ) -> Farm {
+        Farm::start_with_fallback(members, None, cfg, metrics)
+    }
+
+    /// [`Farm::start`] plus an optional *digital fallback lane*: a plain
+    /// sequential worker ([`crate::coordinator::worker::run`]) over the
+    /// given backend factory.  The router degrades to it when no chip
+    /// member may take a batch — every member quarantined, or the batch
+    /// over its [`pipeline::FARM_RETRY_BUDGET`] — so `completed ==
+    /// submitted` holds even under total photonic loss.
+    pub fn start_with_fallback(
+        members: Vec<FarmMember>,
+        fallback: Option<worker::BackendFactory>,
+        cfg: FarmConfig,
+        metrics: Arc<Metrics>,
+    ) -> Farm {
         assert!(!members.is_empty(), "a farm needs at least one member");
         let (tx, rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
@@ -283,11 +489,25 @@ impl Farm {
             move || batcher::run(rx, batch_tx, bcfg)
         });
         let depth = cfg.member_queue.max(1);
+        // the retry loop: member pipelines send failed batches back to
+        // the router for redispatch.  Unbounded by design — a bounded
+        // channel here could deadlock the router (blocking-send into a
+        // full member queue while the member blocks sending a retry);
+        // occupancy is still bounded by the farm's in-flight batches.
+        let (retry_tx, retry_rx) = mpsc::channel::<(usize, Batch)>();
+        let in_flight = Arc::new(AtomicI64::new(0));
         let mut targets = Vec::with_capacity(members.len());
         let mut status = Vec::with_capacity(members.len());
         let mut pipes = Vec::with_capacity(members.len());
         for (i, m) in members.into_iter().enumerate() {
-            let FarmMember { status: st, shared: _, source, backend, hook } = m;
+            let FarmMember {
+                status: st,
+                shared: _,
+                source,
+                backend,
+                hook,
+                idle,
+            } = m;
             let (mtx, mrx) = mpsc::sync_channel::<Batch>(depth);
             targets.push(router::RouteTarget {
                 tx: mtx,
@@ -297,24 +517,63 @@ impl Farm {
             let mrx = Arc::new(Mutex::new(mrx));
             let metrics = Arc::clone(&metrics);
             let pcfg = cfg.pipeline.clone();
+            let link = pipeline::FarmLink {
+                member: i,
+                retry_tx: retry_tx.clone(),
+                in_flight: Arc::clone(&in_flight),
+                deadline: cfg.pass_deadline,
+            };
             pipes.push(worker::spawn_named(&format!("cirptc-farm-{i}"), move || {
-                let mut staged =
-                    Staged::new(source, backend).with_depth(pcfg.depth);
+                let mut staged = Staged::new(source, backend)
+                    .with_depth(pcfg.depth)
+                    .with_farm_link(link);
                 if let Some(h) = hook {
                     staged = staged.with_hook(h);
+                }
+                if let Some((every, h)) = idle {
+                    staged = staged.with_idle(every, h);
                 }
                 pipeline::run(staged, mrx, metrics);
             }));
         }
+        // the member links hold the only retry senders: when the last
+        // member pipeline exits, the router's retry receiver disconnects
+        drop(retry_tx);
+        let (fallback_tx, fallback_handle) = match fallback {
+            Some(factory) => {
+                let (ftx, frx) = mpsc::sync_channel::<Batch>(depth);
+                let frx = Arc::new(Mutex::new(frx));
+                let metrics = Arc::clone(&metrics);
+                let h = worker::spawn_named("cirptc-farm-fallback", move || {
+                    worker::run(factory(), frx, metrics)
+                });
+                (Some(ftx), Some(h))
+            }
+            None => (None, None),
+        };
         let router_handle = worker::spawn_named("cirptc-farm-router", {
             let metrics = Arc::clone(&metrics);
-            move || router::run(batch_rx, targets, metrics)
+            let in_flight = Arc::clone(&in_flight);
+            move || {
+                router::run(
+                    batch_rx,
+                    retry_rx,
+                    targets,
+                    fallback_tx,
+                    in_flight,
+                    metrics,
+                )
+            }
         });
         // join order must follow the channel cascade: batcher first
         // (drops the router's input), then the router (drops the member
-        // queues), then the member pipelines
+        // queues and the fallback queue), then the member pipelines and
+        // the fallback worker
         let mut workers = vec![router_handle];
         workers.extend(pipes);
+        if let Some(h) = fallback_handle {
+            workers.push(h);
+        }
         let coord = Coordinator::assemble(
             tx,
             cfg.batcher.queue_cap,
@@ -405,6 +664,8 @@ mod tests {
         assert_eq!(st.health(), ChipHealth::Failed);
         st.restore();
         assert_eq!(st.health(), ChipHealth::Recalibrating);
+        // restore dropped the stale residual; a live monitor republishes
+        st.set_residual_ppm(10_000);
         shared.recal_in_flight.finish();
         assert_eq!(st.health(), ChipHealth::Drifting);
         st.set_residual_ppm(0);
@@ -413,6 +674,33 @@ mod tests {
             ChipHealth::Healthy,
             "recovery must need no acknowledgment"
         );
+    }
+
+    #[test]
+    fn restore_clears_stale_residual_and_quarantine_latch() {
+        // the bug this pins: restore() used to clear only the kill
+        // switch, so a restored member immediately re-read as Drifting
+        // off the residual published just before it failed
+        let st = ChipStatus::new(None, 10_000);
+        st.set_residual_ppm(50_000);
+        assert_eq!(st.health(), ChipHealth::Drifting);
+        st.fail();
+        assert_eq!(st.health(), ChipHealth::Failed);
+        st.restore();
+        assert_eq!(
+            st.health(),
+            ChipHealth::Healthy,
+            "restored member must not linger in Drifting on a stale residual"
+        );
+        assert_eq!(st.residual_ppm(), 0);
+        // the quarantine latch implies Failed and survives fail()-level
+        // toggles, but restore() clears it too
+        st.quarantine();
+        assert!(st.is_quarantined());
+        assert_eq!(st.health(), ChipHealth::Failed);
+        st.restore();
+        assert!(!st.is_quarantined());
+        assert_eq!(st.health(), ChipHealth::Healthy);
     }
 
     #[test]

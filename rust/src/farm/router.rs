@@ -1,11 +1,11 @@
 //! Health-aware batch router: the farm's failover stage between the
-//! dynamic batcher and the per-chip pipelines (DESIGN.md §farm).
+//! dynamic batcher and the per-chip pipelines (DESIGN.md §farm, §fault).
 //!
-//! The router owns the batcher's output and one **bounded**
-//! `sync_channel` per farm member, so a slow or wedged chip exerts
-//! backpressure toward admission control instead of queueing batches
-//! without bound (`repo_lint`'s stage-buffer-bounded rule covers this
-//! file).  Per batch it reads every member's live
+//! The router owns the batcher's output, the members' retry channel, and
+//! one **bounded** `sync_channel` per farm member, so a slow or wedged
+//! chip exerts backpressure toward admission control instead of queueing
+//! batches without bound (`repo_lint`'s stage-buffer-bounded rule covers
+//! this file).  Per batch it reads every member's live
 //! [`ChipHealth`](super::ChipHealth) and dispatches by preference:
 //!
 //! 1. round-robin over serving-capable members (`Healthy` / `Drifting`);
@@ -13,20 +13,43 @@
 //!    pipeline still serves on the old engine while the background
 //!    recalibration runs, it is just a worse operating point
 //!    (`farm_absorbed` counts these);
-//! 3. a `Failed` member only when *every* member has failed — zero-drop
-//!    beats refusing, and the operator sees it in the health states.
+//! 3. with no fallback lane: a `Failed` member only when *every* member
+//!    has failed — zero-drop beats refusing, and the operator sees it in
+//!    the health states.  With a fallback lane, `Failed` members never
+//!    receive traffic — the fallback absorbs instead (graceful
+//!    degradation, `degraded_batches` / the `degraded` gauge).
+//!
+//! Redispatched batches (failed on a member, sent back through the retry
+//! channel by [`crate::coordinator::pipeline`]) are drained ahead of new
+//! intake, and their origin member is moved to the *end* of the
+//! preference order so a retry lands on a different healthy member
+//! whenever one exists.  A batch at or over
+//! [`pipeline::FARM_RETRY_BUDGET`] attempts is not offered to chip
+//! members at all — only the fallback lane (or the terminal error
+//! accounting) may consume it, which is what bounds the retry loop.
 //!
 //! A batch that lands anywhere other than the round-robin's natural next
 //! member counts in `farm_rerouted`; observed health-state edges count
 //! in `farm_transitions`.  Members whose pipeline is gone (teardown
-//! race) are skipped; only when no member can take the batch at all are
-//! its requests accounted as errors, so the submitted/completed/errors
-//! conservation the coordinator tests pin still holds.
+//! race) are skipped; only when no member *and no fallback* can take the
+//! batch are its requests accounted as errors, so the
+//! submitted/completed/errors conservation the coordinator tests pin
+//! still holds.
+//!
+//! Shutdown: when the batcher's sender closes the router keeps draining
+//! the retry channel until the farm-wide in-flight count reaches zero —
+//! a member sends its retry *before* decrementing the count, so once the
+//! router observes zero after a drain, no retry can still be unsent.
+//! Only then do the member queues (and the fallback queue) drop,
+//! cascading shutdown into the pipelines.
+
+use std::time::Duration;
 
 use crate::obs::trace;
+use crate::util::sync::atomic::{AtomicI64, Ordering};
 use crate::util::sync::{mpsc, Arc};
 
-use crate::coordinator::{Batch, Metrics};
+use crate::coordinator::{pipeline, Batch, Metrics};
 
 use super::{ChipHealth, ChipStatus};
 
@@ -36,33 +59,33 @@ pub(crate) struct RouteTarget {
     pub status: Arc<ChipStatus>,
 }
 
-/// Router loop body (runs on its own thread).  Exits when the batcher's
-/// sender closes; dropping the member senders then cascades shutdown
-/// into the per-chip pipelines.
-pub(crate) fn run(
-    rx: mpsc::Receiver<Batch>,
+struct Router {
     targets: Vec<RouteTarget>,
+    fallback: Option<mpsc::SyncSender<Batch>>,
+    in_flight: Arc<AtomicI64>,
     metrics: Arc<Metrics>,
-) {
-    let n = targets.len();
-    let mut cursor = 0usize;
-    // transition edges count from the farm's documented starting state
-    // (every member Healthy), not from a racy first observation
-    let mut last: Vec<ChipHealth> = vec![ChipHealth::Healthy; n];
-    while let Ok(batch) = rx.recv() {
+    cursor: usize,
+    last: Vec<ChipHealth>,
+}
+
+impl Router {
+    /// Route one batch.  `origin` is the member a redispatched batch just
+    /// failed on (`None` for fresh batches from the batcher).
+    fn dispatch(&mut self, batch: Batch, origin: Option<usize>) {
+        let n = self.targets.len();
         if n == 0 {
             // a farm always has ≥1 member (Farm::start asserts); this
             // arm only keeps accounting sound if that ever changes
-            metrics.queue_depth.sub(batch.requests.len() as i64);
-            metrics.errors.add(batch.requests.len());
-            continue;
+            self.metrics.queue_depth.sub(batch.requests.len() as i64);
+            self.metrics.errors.add(batch.requests.len());
+            return;
         }
         // observe health once per batch; count every state edge
         let health: Vec<ChipHealth> =
-            targets.iter().map(|t| t.status.health()).collect();
-        for (i, (h, l)) in health.iter().zip(last.iter_mut()).enumerate() {
+            self.targets.iter().map(|t| t.status.health()).collect();
+        for (i, (h, l)) in health.iter().zip(self.last.iter_mut()).enumerate() {
             if h != l {
-                metrics.farm_transitions.add(1);
+                self.metrics.farm_transitions.add(1);
                 trace::instant(
                     "health",
                     "farm",
@@ -71,28 +94,46 @@ pub(crate) fn run(
                 *l = *h;
             }
         }
+        // a batch at its attempt budget is no longer offered to chip
+        // members — only the fallback lane (or the error accounting) may
+        // consume it, which bounds the retry loop
+        let over_budget = batch.attempts >= pipeline::FARM_RETRY_BUDGET;
         // preference order from the round-robin cursor: serving-capable
-        // members first, then recalibrating, failed only as last resort
+        // members first, then recalibrating; failed-as-last-resort only
+        // when there is no fallback lane to degrade to
         let mut order: Vec<usize> = Vec::with_capacity(n);
         let mut absorbing = false;
-        for pass in 0..3 {
-            for k in 0..n {
-                let i = (cursor + k) % n;
-                let take = match pass {
-                    0 => health[i].serves(),
-                    1 => health[i] == ChipHealth::Recalibrating,
-                    _ => health[i] == ChipHealth::Failed,
-                };
-                if take {
+        if !over_budget {
+            let passes: &[u8] =
+                if self.fallback.is_some() { &[0, 1] } else { &[0, 1, 2] };
+            for &pass in passes {
+                for k in 0..n {
+                    let i = (self.cursor + k) % n;
+                    let take = match pass {
+                        0 => health[i].serves(),
+                        1 => health[i] == ChipHealth::Recalibrating,
+                        _ => health[i] == ChipHealth::Failed,
+                    };
+                    if take {
+                        order.push(i);
+                    }
+                }
+                if pass == 0 {
+                    absorbing = order.is_empty();
+                }
+            }
+            // redispatch away from the origin: stable-move it to the end
+            // of the order, so a retry lands on a *different* member
+            // whenever any other can take it
+            if let Some(o) = origin {
+                if let Some(pos) = order.iter().position(|&i| i == o) {
+                    let i = order.remove(pos);
                     order.push(i);
                 }
             }
-            if pass == 0 {
-                absorbing = order.is_empty();
-            }
         }
 
-        let natural = cursor % n;
+        let natural = self.cursor % n;
         let mut pending = Some(batch);
         let mut routed = None;
         // first pass: first member in preference order with queue space
@@ -100,7 +141,7 @@ pub(crate) fn run(
         // take right now
         for &i in &order {
             let Some(b) = pending.take() else { break };
-            match targets[i].tx.try_send(b) {
+            match self.targets[i].tx.try_send(b) {
                 Ok(()) => {
                     routed = Some(i);
                     break;
@@ -114,7 +155,7 @@ pub(crate) fn run(
         if routed.is_none() {
             for &i in &order {
                 let Some(b) = pending.take() else { break };
-                match targets[i].tx.send(b) {
+                match self.targets[i].tx.send(b) {
                     Ok(()) => {
                         routed = Some(i);
                         break;
@@ -125,26 +166,123 @@ pub(crate) fn run(
         }
         match routed {
             Some(i) => {
+                // on the member's books until it replies, redispatches,
+                // or drops the batch (see [`pipeline::FarmLink`])
+                self.in_flight.fetch_add(1, Ordering::SeqCst);
                 trace::instant(
                     "route",
                     "farm",
                     [("chip", i as i64), ("rerouted", (i != natural) as i64)],
                 );
                 if i != natural {
-                    metrics.farm_rerouted.add(1);
+                    self.metrics.farm_rerouted.add(1);
                 }
                 if absorbing {
-                    metrics.farm_absorbed.add(1);
+                    self.metrics.farm_absorbed.add(1);
+                } else {
+                    // a first-choice chip took traffic: the farm is not
+                    // running on the digital fallback
+                    self.metrics.degraded.set(0);
                 }
-                cursor = i + 1;
+                self.cursor = i + 1;
             }
             None => {
-                // every member pipeline is gone (teardown race): account
-                // the requests as errors so conservation holds
-                if let Some(b) = pending {
-                    metrics.queue_depth.sub(b.requests.len() as i64);
-                    metrics.errors.add(b.requests.len());
+                let b = match pending.take() {
+                    Some(b) => b,
+                    None => return,
+                };
+                let len = b.requests.len();
+                if let Some(fb) = &self.fallback {
+                    // graceful degradation: the digital reference lane
+                    // absorbs what no chip member may take, so completed
+                    // still equals submitted under total photonic loss
+                    let sent = match fb.try_send(b) {
+                        Ok(()) => true,
+                        Err(mpsc::TrySendError::Full(b)) => fb.send(b).is_ok(),
+                        Err(mpsc::TrySendError::Disconnected(_)) => false,
+                    };
+                    if sent {
+                        self.metrics.degraded_batches.add(1);
+                        if absorbing {
+                            self.metrics.degraded.set(1);
+                        }
+                        trace::instant(
+                            "degraded",
+                            "fault",
+                            trace::arg1("size", len as i64),
+                        );
+                        return;
+                    }
                 }
+                // nothing can take the batch — every pipeline gone
+                // (teardown race), or over budget with no fallback:
+                // account the requests as errors so conservation holds
+                self.metrics.queue_depth.sub(len as i64);
+                self.metrics.errors.add(len);
+            }
+        }
+    }
+}
+
+/// Router loop body (runs on its own thread).  Exits when the batcher's
+/// sender closes *and* every dispatched batch has reached a terminal
+/// state; dropping the member senders then cascades shutdown into the
+/// per-chip pipelines.
+pub(crate) fn run(
+    rx: mpsc::Receiver<Batch>,
+    retry_rx: mpsc::Receiver<(usize, Batch)>,
+    targets: Vec<RouteTarget>,
+    fallback: Option<mpsc::SyncSender<Batch>>,
+    in_flight: Arc<AtomicI64>,
+    metrics: Arc<Metrics>,
+) {
+    let n = targets.len();
+    let mut r = Router {
+        targets,
+        fallback,
+        in_flight,
+        metrics,
+        cursor: 0,
+        // transition edges count from the farm's documented starting
+        // state (every member Healthy), not a racy first observation
+        last: vec![ChipHealth::Healthy; n],
+    };
+    let mut closed = false;
+    loop {
+        // retries drain ahead of new intake: a redispatched batch has
+        // already waited at least one full member attempt
+        while let Ok((origin, b)) = retry_rx.try_recv() {
+            r.dispatch(b, Some(origin));
+        }
+        let idle = r.in_flight.load(Ordering::SeqCst) == 0;
+        if idle {
+            // the in-flight count hit zero *after* the drain above, and
+            // members send a retry before decrementing, so one more
+            // non-blocking look settles whether anything is pending
+            if let Ok((origin, b)) = retry_rx.try_recv() {
+                r.dispatch(b, Some(origin));
+                continue;
+            }
+            if closed {
+                return;
+            }
+            // nothing in flight ⇒ no retry can be produced until the
+            // next dispatch: safe to block on intake
+            match rx.recv() {
+                Ok(b) => r.dispatch(b, None),
+                Err(_) => closed = true,
+            }
+        } else if closed {
+            if let Ok((origin, b)) =
+                retry_rx.recv_timeout(Duration::from_millis(1))
+            {
+                r.dispatch(b, Some(origin));
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(b) => r.dispatch(b, None),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
             }
         }
     }
@@ -155,6 +293,7 @@ mod tests {
     use super::*;
     use crate::coordinator::Request;
     use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
     use std::time::{Duration, Instant};
 
     fn batch(ids: &[u64]) -> Batch {
@@ -174,20 +313,25 @@ mod tests {
                 })
                 .collect(),
             formed: Instant::now(),
+            attempts: 0,
         }
     }
 
     struct Farmlet {
         tx: mpsc::Sender<Batch>,
+        retry: mpsc::Sender<(usize, Batch)>,
         rxs: Vec<mpsc::Receiver<Batch>>,
+        fallback_rx: Option<mpsc::Receiver<Batch>>,
         status: Vec<Arc<ChipStatus>>,
         metrics: Arc<Metrics>,
         _h: std::thread::JoinHandle<()>,
     }
 
-    fn farmlet(n: usize) -> Farmlet {
+    fn build(n: usize, with_fallback: bool) -> Farmlet {
         let (tx, rx) = mpsc::channel::<Batch>();
+        let (retry, retry_rx) = mpsc::channel::<(usize, Batch)>();
         let metrics = Arc::new(Metrics::default());
+        let in_flight = Arc::new(AtomicI64::new(0));
         let mut rxs = Vec::new();
         let mut status = Vec::new();
         let mut targets = Vec::new();
@@ -198,9 +342,21 @@ mod tests {
             rxs.push(mrx);
             status.push(st);
         }
+        let (fb_tx, fallback_rx) = if with_fallback {
+            let (ftx, frx) = mpsc::sync_channel::<Batch>(4);
+            (Some(ftx), Some(frx))
+        } else {
+            (None, None)
+        };
         let m = Arc::clone(&metrics);
-        let _h = std::thread::spawn(move || run(rx, targets, m));
-        Farmlet { tx, rxs, status, metrics, _h }
+        let _h = std::thread::spawn(move || {
+            run(rx, retry_rx, targets, fb_tx, in_flight, m)
+        });
+        Farmlet { tx, retry, rxs, fallback_rx, status, metrics, _h }
+    }
+
+    fn farmlet(n: usize) -> Farmlet {
+        build(n, false)
     }
 
     fn recv(rx: &mpsc::Receiver<Batch>) -> Option<Batch> {
@@ -277,7 +433,9 @@ mod tests {
         // comes back around, the next batch must spill to member 1
         // instead of waiting on the full queue
         let (tx, rx) = mpsc::channel::<Batch>();
+        let (_retry, retry_rx) = mpsc::channel::<(usize, Batch)>();
         let metrics = Arc::new(Metrics::default());
+        let in_flight = Arc::new(AtomicI64::new(0));
         let (t0, r0) = mpsc::sync_channel::<Batch>(1);
         let (t1, r1) = mpsc::sync_channel::<Batch>(4);
         let targets = vec![
@@ -285,7 +443,9 @@ mod tests {
             RouteTarget { tx: t1, status: ChipStatus::new(None, 10_000) },
         ];
         let m = Arc::clone(&metrics);
-        let _h = std::thread::spawn(move || run(rx, targets, m));
+        let _h = std::thread::spawn(move || {
+            run(rx, retry_rx, targets, None, in_flight, m)
+        });
         tx.send(batch(&[0])).unwrap(); // → member 0 (now full)
         tx.send(batch(&[1])).unwrap(); // → member 1 (its natural turn)
         tx.send(batch(&[2])).unwrap(); // natural turn 0 is full → spills
@@ -308,5 +468,102 @@ mod tests {
         }
         assert_eq!(f.metrics.errors.get(), 3);
         assert_eq!(f.metrics.queue_depth.get(), -3, "depth rebalanced");
+    }
+
+    #[test]
+    fn retry_avoids_origin_and_over_budget_degrades_to_fallback() {
+        let f = build(2, true);
+        // a retry from member 0 must land on member 1 even though 0 is
+        // the round-robin's natural next slot
+        let mut b = batch(&[1]);
+        b.attempts = 1;
+        f.retry.send((0, b)).unwrap();
+        let got = recv(&f.rxs[1]).expect("redispatch to the other member");
+        assert_eq!(got.requests[0].id, 1);
+        assert!(
+            f.rxs[0].recv_timeout(Duration::from_millis(50)).is_err(),
+            "the origin member must be the last resort, not the first"
+        );
+        // at the attempt budget no chip member may take the batch: the
+        // fallback lane absorbs it
+        let mut b = batch(&[2]);
+        b.attempts = pipeline::FARM_RETRY_BUDGET;
+        f.retry.send((1, b)).unwrap();
+        let fb = f.fallback_rx.as_ref().unwrap();
+        let got = recv(fb).expect("over-budget batch degrades to fallback");
+        assert_eq!(got.requests[0].id, 2);
+        assert_eq!(f.metrics.degraded_batches.get(), 1);
+        // the chips themselves are healthy: the degraded *gauge* (farm
+        // is running digitally) must not latch on a per-batch budget
+        assert_eq!(f.metrics.degraded.get(), 0);
+        assert_eq!(f.metrics.errors.get(), 0);
+    }
+
+    #[test]
+    fn total_quarantine_degrades_to_fallback_and_gauge_recovers() {
+        let f = build(2, true);
+        f.status[0].quarantine();
+        f.status[1].quarantine();
+        f.tx.send(batch(&[5])).unwrap();
+        let fb = f.fallback_rx.as_ref().unwrap();
+        let got = recv(fb).expect("total quarantine must degrade, not drop");
+        assert_eq!(got.requests[0].id, 5);
+        assert_eq!(f.metrics.degraded.get(), 1, "farm is running digitally");
+        assert_eq!(f.metrics.degraded_batches.get(), 1);
+        // with a fallback lane, quarantined members never see traffic
+        // (no failed-as-last-resort)
+        assert!(f.rxs[0].recv_timeout(Duration::from_millis(50)).is_err());
+        // a member restored: traffic returns to chips, the gauge clears
+        f.status[0].restore();
+        f.tx.send(batch(&[6])).unwrap();
+        assert_eq!(recv(&f.rxs[0]).unwrap().requests[0].id, 6);
+        assert_eq!(f.metrics.degraded.get(), 0, "degradation must clear");
+        assert_eq!(f.metrics.errors.get(), 0);
+    }
+
+    #[test]
+    fn propcheck_never_routes_to_failed_while_a_capable_member_exists() {
+        // randomized fail/restore sequences over K ∈ {2, 3, 5}: every
+        // batch lands somewhere (zero drops), and never on a Failed
+        // member while any serving-capable member exists
+        for &k in &[2usize, 3, 5] {
+            let f = farmlet(k);
+            let mut rng = Rng::new(0xFA11 + k as u64);
+            for round in 0..40u64 {
+                for st in &f.status {
+                    if rng.f32() < 0.4 {
+                        st.fail();
+                    } else {
+                        st.restore();
+                    }
+                }
+                let failed: Vec<bool> = f
+                    .status
+                    .iter()
+                    .map(|s| s.health() == ChipHealth::Failed)
+                    .collect();
+                f.tx.send(batch(&[round])).unwrap();
+                let mut got = None;
+                let t0 = Instant::now();
+                'hunt: while t0.elapsed() < Duration::from_secs(2) {
+                    for (i, rx) in f.rxs.iter().enumerate() {
+                        if let Ok(b) = rx.try_recv() {
+                            got = Some((i, b));
+                            break 'hunt;
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+                let (i, b) = got.expect("zero drops: every batch must land");
+                assert_eq!(b.requests[0].id, round);
+                if failed.iter().any(|dead| !dead) {
+                    assert!(
+                        !failed[i],
+                        "k={k} round {round}: routed to failed member {i}"
+                    );
+                }
+            }
+            assert_eq!(f.metrics.errors.get(), 0, "zero drops over k={k}");
+        }
     }
 }

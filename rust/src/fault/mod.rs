@@ -1,0 +1,642 @@
+//! Fault injection + self-healing supervision (DESIGN.md §fault).
+//!
+//! Two halves, both deterministic:
+//!
+//! * [`FaultPlan`] — a seeded schedule of abrupt-fault episodes injected
+//!   into [`crate::simulator::ChipSim`] on the same pass-count clock the
+//!   drift model uses ([`crate::drift::DriftModel::on_pass`]).  Every
+//!   episode is `(start_pass, duration, kind)`, so a chaos run replays
+//!   exactly from its seed + plan.
+//! * [`ChipSupervisor`] — the probe-driven health authority that closes
+//!   the ROADMAP loop ("probe-driven automatic fail()/restore()"):
+//!   consecutive bad probes drive an automatic `Fail` verdict, a
+//!   probation state demands N clean probes off the serving path before
+//!   `Restore`, and M failed probations latch `Quarantine` for operator
+//!   escalation.
+//!
+//! The farm applies supervisor verdicts to [`crate::farm::ChipStatus`];
+//! the router + pipeline add bounded retry, per-pass deadlines and
+//! degradation to the digital reference backend (see
+//! [`crate::coordinator::pipeline`] and [`crate::farm::router`]).
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// fault plan
+// ---------------------------------------------------------------------------
+
+/// One abrupt-fault failure mode.  The taxonomy follows the
+/// photonic-accelerator nonideality surveys cited in ISSUE/PAPERS:
+/// whole-die loss, localized stuck hardware, transient readout garbage,
+/// non-finite readout, and a bounded excess-noise episode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Total die loss: every readout is zero.  Silent — only a
+    /// calibration probe notices (huge residual).
+    DeadChip,
+    /// The first `rows` output rows are stuck at the dark level
+    /// (e.g. a dead detector bank).  Silent, probe-detected.
+    StuckTiles { rows: usize },
+    /// With probability `p` per pass the whole readout is replaced by
+    /// garbage, and the pass reports a detectable readout error (models
+    /// a CRC/parity trip on the ADC link).
+    TransientPassError { p: f32 },
+    /// Readout returns NaN and reports a detectable error.
+    NaNReadout,
+    /// Additive Gaussian excess noise of `gain` for up to `ticks`
+    /// passes inside the episode.  Silent, degrades accuracy.
+    NoiseBurst { gain: f32, ticks: u64 },
+}
+
+impl FaultKind {
+    /// Stable tag used in the JSON plan format.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::DeadChip => "dead_chip",
+            FaultKind::StuckTiles { .. } => "stuck_tiles",
+            FaultKind::TransientPassError { .. } => "transient_pass_error",
+            FaultKind::NaNReadout => "nan_readout",
+            FaultKind::NoiseBurst { .. } => "noise_burst",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` is active for passes in
+/// `[start_pass, start_pass + duration)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Episode {
+    pub start_pass: u64,
+    pub duration: u64,
+    pub kind: FaultKind,
+}
+
+impl Episode {
+    fn active_at(&self, pass: u64) -> bool {
+        pass >= self.start_pass
+            && pass - self.start_pass < self.duration
+    }
+}
+
+/// A deterministic, replayable schedule of fault episodes for one chip.
+/// Lives inside [`crate::simulator::ChipSim`] and is advanced once per
+/// crossbar pass, mirroring the drift clock.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    episodes: Vec<Episode>,
+    rng: Rng,
+    passes: u64,
+    injected: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, episodes: Vec<Episode>) -> FaultPlan {
+        FaultPlan {
+            seed,
+            episodes,
+            rng: Rng::new(seed ^ 0xFA_17_FA_17),
+            passes: 0,
+            injected: 0,
+        }
+    }
+
+    /// A small randomized chaos plan: one hard-loss episode (DeadChip or
+    /// NaNReadout), one transient episode, and one noise burst, with
+    /// seeded starts/durations.  `cirptc chaos --seed S` prints this.
+    pub fn generate(seed: u64) -> FaultPlan {
+        let mut r = Rng::new(seed ^ 0xC4_A0_5C_4A);
+        let hard = if r.f32() < 0.5 {
+            FaultKind::DeadChip
+        } else {
+            FaultKind::NaNReadout
+        };
+        let episodes = vec![
+            Episode {
+                start_pass: 20 + r.below(40) as u64,
+                duration: 20 + r.below(40) as u64,
+                kind: hard,
+            },
+            Episode {
+                start_pass: 10 + r.below(30) as u64,
+                duration: 30 + r.below(60) as u64,
+                kind: FaultKind::TransientPassError {
+                    p: 0.1 + 0.3 * r.f32(),
+                },
+            },
+            Episode {
+                start_pass: 40 + r.below(80) as u64,
+                duration: 10 + r.below(30) as u64,
+                kind: FaultKind::NoiseBurst {
+                    gain: 0.05 + 0.1 * r.f32(),
+                    ticks: 8 + r.below(16) as u64,
+                },
+            },
+        ];
+        FaultPlan::new(seed, episodes)
+    }
+
+    /// The plan's base RNG seed (member farms derive per-chip streams
+    /// by XOR-ing the member index in).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn episodes(&self) -> &[Episode] {
+        &self.episodes
+    }
+
+    /// Passes observed so far (the plan's clock position).
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Total passes whose readout this plan corrupted.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Latest pass at which any episode is still active; after this the
+    /// plan is inert and the chip can recover.
+    pub fn last_active_pass(&self) -> u64 {
+        self.episodes
+            .iter()
+            .map(|e| e.start_pass + e.duration)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Advance the fault clock by one crossbar pass and corrupt `ybuf`
+    /// (row-major `[rows, cols]` readout, `cols` batch columns) in
+    /// place according to the active episodes.  Returns the event tag
+    /// when the fault is *detectable at the readout interface* (CRC
+    /// trip / non-finite check); silent faults return `None` and are
+    /// left for calibration probes to catch.
+    pub fn on_pass(
+        &mut self,
+        ybuf: &mut [f32],
+        cols: usize,
+        dark: f32,
+    ) -> Option<&'static str> {
+        let pass = self.passes;
+        self.passes += 1;
+        let mut event = None;
+        let mut hit = false;
+        for i in 0..self.episodes.len() {
+            let ep = self.episodes[i];
+            if !ep.active_at(pass) {
+                continue;
+            }
+            match ep.kind {
+                FaultKind::DeadChip => {
+                    ybuf.fill(0.0);
+                    hit = true;
+                }
+                FaultKind::StuckTiles { rows } => {
+                    let n = (rows * cols.max(1)).min(ybuf.len());
+                    ybuf[..n].fill(dark);
+                    hit = n > 0;
+                }
+                FaultKind::TransientPassError { p } => {
+                    // one seeded draw per active pass keeps the plan
+                    // replayable regardless of batch shape
+                    let u = self.rng.f32();
+                    if u < p {
+                        for v in ybuf.iter_mut() {
+                            *v = (self.rng.f32() - 0.5) * 1e3;
+                        }
+                        hit = true;
+                        event = Some("transient_pass_error");
+                    }
+                }
+                FaultKind::NaNReadout => {
+                    ybuf.fill(f32::NAN);
+                    hit = true;
+                    event = Some("nan_readout");
+                }
+                FaultKind::NoiseBurst { gain, ticks } => {
+                    if pass - ep.start_pass < ticks {
+                        for v in ybuf.iter_mut() {
+                            *v += gain * self.rng.normal() as f32;
+                        }
+                        hit = true;
+                    }
+                }
+            }
+        }
+        if hit {
+            self.injected += 1;
+        }
+        event
+    }
+
+    // -- JSON plan format ---------------------------------------------------
+
+    /// Serialize the plan *spec* (seed + episodes).  The runtime clock
+    /// and RNG position are not part of the spec: parsing the dump
+    /// yields a fresh plan that replays identically from pass 0.
+    pub fn to_json(&self) -> Json {
+        let eps: Vec<Json> = self
+            .episodes
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("start_pass", Json::Num(e.start_pass as f64)),
+                    ("duration", Json::Num(e.duration as f64)),
+                    ("kind", Json::Str(e.kind.tag().to_string())),
+                ];
+                match e.kind {
+                    FaultKind::StuckTiles { rows } => {
+                        pairs.push(("rows", Json::Num(rows as f64)));
+                    }
+                    FaultKind::TransientPassError { p } => {
+                        pairs.push(("p", Json::Num(p as f64)));
+                    }
+                    FaultKind::NoiseBurst { gain, ticks } => {
+                        pairs.push(("gain", Json::Num(gain as f64)));
+                        pairs.push(("ticks", Json::Num(ticks as f64)));
+                    }
+                    FaultKind::DeadChip | FaultKind::NaNReadout => {}
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("episodes", Json::Arr(eps)),
+        ])
+    }
+
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::msg("fault plan: missing numeric `seed`"))?
+            as u64;
+        let eps = j
+            .get("episodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::msg("fault plan: missing `episodes` array"))?;
+        let mut episodes = Vec::with_capacity(eps.len());
+        for (i, e) in eps.iter().enumerate() {
+            let field = |k: &str| -> Result<f64> {
+                e.get(k).and_then(Json::as_f64).ok_or_else(|| {
+                    Error::msg(format!(
+                        "fault plan episode {i}: missing numeric `{k}`"
+                    ))
+                })
+            };
+            let tag = e.get("kind").and_then(Json::as_str).ok_or_else(|| {
+                Error::msg(format!("fault plan episode {i}: missing `kind`"))
+            })?;
+            let kind = match tag {
+                "dead_chip" => FaultKind::DeadChip,
+                "stuck_tiles" => {
+                    FaultKind::StuckTiles { rows: field("rows")? as usize }
+                }
+                "transient_pass_error" => {
+                    FaultKind::TransientPassError { p: field("p")? as f32 }
+                }
+                "nan_readout" => FaultKind::NaNReadout,
+                "noise_burst" => FaultKind::NoiseBurst {
+                    gain: field("gain")? as f32,
+                    ticks: field("ticks")? as u64,
+                },
+                other => {
+                    return Err(Error::msg(format!(
+                        "fault plan episode {i}: unknown kind `{other}`"
+                    )))
+                }
+            };
+            episodes.push(Episode {
+                start_pass: field("start_pass")? as u64,
+                duration: field("duration")? as u64,
+                kind,
+            });
+        }
+        Ok(FaultPlan::new(seed, episodes))
+    }
+
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let j = Json::parse(text)
+            .map_err(|e| Error::msg(format!("fault plan: {e}")))?;
+        FaultPlan::from_json(&j)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// supervisor
+// ---------------------------------------------------------------------------
+
+/// Policy knobs for [`ChipSupervisor`].
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// A probe residual at or above this (or any non-finite residual)
+    /// counts as a failed probe.  This is the *hard* ceiling — well
+    /// above the drift monitor's recalibration trigger.
+    pub residual_ceiling: f32,
+    /// Consecutive failed probes while serving before the automatic
+    /// `Fail` verdict.
+    pub consecutive_failures: u32,
+    /// Clean probes required, off the serving path, before the
+    /// automatic `Restore` verdict.
+    pub probation_probes: u32,
+    /// Failed probation attempts before the latched `Quarantine`
+    /// verdict escalates to the operator.
+    pub max_probations: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            residual_ceiling: 0.05,
+            consecutive_failures: 2,
+            probation_probes: 3,
+            max_probations: 3,
+        }
+    }
+}
+
+/// Supervisor position in the self-healing state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SupervisorState {
+    /// Member serves traffic; probes ride the serving cadence.
+    Serving,
+    /// Member is failed out of routing; idle-path probes decide whether
+    /// it comes back.
+    Probation,
+    /// Latched: automatic recovery gave up after `max_probations`
+    /// failed attempts.  Only an operator `restore()` clears it.
+    Quarantined,
+}
+
+/// Action the farm must apply to the member's [`crate::farm::ChipStatus`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Take the member out of routing (`ChipStatus::fail`).
+    Fail,
+    /// Probation passed: return the member to service
+    /// (`ChipStatus::restore`).
+    Restore,
+    /// Escalate: automatic recovery exhausted
+    /// (`ChipStatus::quarantine`).
+    Quarantine,
+}
+
+/// Probe-driven health authority for one farm member.  Pure state
+/// machine: callers feed probe residuals (and detected pass faults) in,
+/// verdicts come out; applying them to routing is the farm's job.
+#[derive(Clone, Debug)]
+pub struct ChipSupervisor {
+    cfg: SupervisorConfig,
+    state: SupervisorState,
+    bad_streak: u32,
+    clean_streak: u32,
+    probations: u32,
+}
+
+impl ChipSupervisor {
+    pub fn new(cfg: SupervisorConfig) -> ChipSupervisor {
+        ChipSupervisor {
+            cfg,
+            state: SupervisorState::Serving,
+            bad_streak: 0,
+            clean_streak: 0,
+            probations: 0,
+        }
+    }
+
+    pub fn state(&self) -> SupervisorState {
+        self.state
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        self.state == SupervisorState::Quarantined
+    }
+
+    /// Feed one probe residual; returns the verdict the farm must apply,
+    /// if any.  Non-finite residuals are failed probes by definition.
+    pub fn observe(&mut self, residual: f32) -> Option<Verdict> {
+        let bad = !residual.is_finite()
+            || residual >= self.cfg.residual_ceiling;
+        match self.state {
+            SupervisorState::Quarantined => None,
+            SupervisorState::Serving => {
+                if bad {
+                    self.bad_streak += 1;
+                    if self.bad_streak >= self.cfg.consecutive_failures {
+                        self.state = SupervisorState::Probation;
+                        self.bad_streak = 0;
+                        self.clean_streak = 0;
+                        return Some(Verdict::Fail);
+                    }
+                } else {
+                    self.bad_streak = 0;
+                }
+                None
+            }
+            SupervisorState::Probation => {
+                if bad {
+                    self.clean_streak = 0;
+                    self.probations += 1;
+                    if self.probations >= self.cfg.max_probations {
+                        self.state = SupervisorState::Quarantined;
+                        return Some(Verdict::Quarantine);
+                    }
+                    None
+                } else {
+                    self.clean_streak += 1;
+                    if self.clean_streak >= self.cfg.probation_probes {
+                        self.state = SupervisorState::Serving;
+                        self.bad_streak = 0;
+                        self.clean_streak = 0;
+                        self.probations = 0;
+                        return Some(Verdict::Restore);
+                    }
+                    None
+                }
+            }
+        }
+    }
+
+    /// A fault detected outside the probe path (readout error, pass
+    /// deadline): equivalent to the worst possible probe.
+    pub fn note_fault(&mut self) -> Option<Verdict> {
+        self.observe(f32::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            residual_ceiling: 0.1,
+            consecutive_failures: 2,
+            probation_probes: 2,
+            max_probations: 2,
+        }
+    }
+
+    #[test]
+    fn supervisor_fails_after_consecutive_bad_probes_only() {
+        let mut s = ChipSupervisor::new(cfg());
+        // a single bad probe is not enough; a clean one resets the streak
+        assert_eq!(s.observe(0.5), None);
+        assert_eq!(s.observe(0.01), None);
+        assert_eq!(s.observe(0.5), None);
+        assert_eq!(s.observe(0.5), Some(Verdict::Fail));
+        assert_eq!(s.state(), SupervisorState::Probation);
+    }
+
+    #[test]
+    fn supervisor_restores_after_clean_probation() {
+        let mut s = ChipSupervisor::new(cfg());
+        s.observe(f32::NAN);
+        assert_eq!(s.observe(f32::NAN), Some(Verdict::Fail));
+        // one clean probe is not enough to restore
+        assert_eq!(s.observe(0.0), None);
+        assert_eq!(s.observe(0.0), Some(Verdict::Restore));
+        assert_eq!(s.state(), SupervisorState::Serving);
+        // fully reset: the next failure needs a fresh streak
+        assert_eq!(s.observe(0.5), None);
+        assert_eq!(s.observe(0.5), Some(Verdict::Fail));
+    }
+
+    #[test]
+    fn supervisor_quarantines_after_failed_probations_and_latches() {
+        let mut s = ChipSupervisor::new(cfg());
+        s.observe(0.5);
+        assert_eq!(s.observe(0.5), Some(Verdict::Fail));
+        // probation attempt 1 fails (bad probe mid-probation)
+        assert_eq!(s.observe(0.0), None);
+        assert_eq!(s.observe(0.5), None);
+        // probation attempt 2 fails => latched quarantine
+        assert_eq!(s.observe(0.5), Some(Verdict::Quarantine));
+        assert!(s.is_quarantined());
+        // latched: even perfect probes produce no further verdicts
+        for _ in 0..10 {
+            assert_eq!(s.observe(0.0), None);
+        }
+        assert!(s.is_quarantined());
+    }
+
+    #[test]
+    fn note_fault_counts_as_bad_probe() {
+        let mut s = ChipSupervisor::new(cfg());
+        assert_eq!(s.note_fault(), None);
+        assert_eq!(s.note_fault(), Some(Verdict::Fail));
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_episode_scoped() {
+        let eps = vec![
+            Episode {
+                start_pass: 2,
+                duration: 3,
+                kind: FaultKind::TransientPassError { p: 1.0 },
+            },
+        ];
+        let mut a = FaultPlan::new(7, eps.clone());
+        let mut b = FaultPlan::new(7, eps);
+        for pass in 0..8u64 {
+            let mut ya = vec![1.0f32; 12];
+            let mut yb = vec![1.0f32; 12];
+            let ea = a.on_pass(&mut ya, 4, 0.0);
+            let eb = b.on_pass(&mut yb, 4, 0.0);
+            assert_eq!(ea, eb, "pass {pass}");
+            assert_eq!(ya, yb, "pass {pass}");
+            let in_episode = (2..5).contains(&pass);
+            assert_eq!(ea.is_some(), in_episode, "pass {pass}");
+            assert_eq!(ya != vec![1.0f32; 12], in_episode, "pass {pass}");
+        }
+        assert_eq!(a.injected(), 3);
+        assert_eq!(a.passes(), 8);
+    }
+
+    #[test]
+    fn dead_chip_zeros_and_stuck_tiles_clamp_rows() {
+        let mut p = FaultPlan::new(
+            1,
+            vec![Episode {
+                start_pass: 0,
+                duration: 1,
+                kind: FaultKind::DeadChip,
+            }],
+        );
+        let mut y = vec![3.0f32; 6];
+        assert_eq!(p.on_pass(&mut y, 3, 0.5), None, "dead chip is silent");
+        assert!(y.iter().all(|&v| v == 0.0));
+
+        let mut p = FaultPlan::new(
+            1,
+            vec![Episode {
+                start_pass: 0,
+                duration: 1,
+                kind: FaultKind::StuckTiles { rows: 1 },
+            }],
+        );
+        // 2 rows x 3 cols: only row 0 sticks at dark
+        let mut y = vec![3.0f32; 6];
+        assert_eq!(p.on_pass(&mut y, 3, 0.5), None);
+        assert_eq!(&y[..3], &[0.5, 0.5, 0.5]);
+        assert_eq!(&y[3..], &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn nan_readout_is_detectable() {
+        let mut p = FaultPlan::new(
+            1,
+            vec![Episode {
+                start_pass: 1,
+                duration: 2,
+                kind: FaultKind::NaNReadout,
+            }],
+        );
+        let mut y = vec![1.0f32; 4];
+        assert_eq!(p.on_pass(&mut y, 2, 0.0), None);
+        assert_eq!(p.on_pass(&mut y, 2, 0.0), Some("nan_readout"));
+        assert!(y.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan::generate(0xBEEF);
+        let text = plan.dump();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(back.episodes(), plan.episodes());
+        // and the reparsed plan replays identically
+        let mut a = FaultPlan::parse(&text).unwrap();
+        let mut b = FaultPlan::parse(&text).unwrap();
+        for _ in 0..200 {
+            let mut ya = vec![0.25f32; 8];
+            let mut yb = vec![0.25f32; 8];
+            assert_eq!(
+                a.on_pass(&mut ya, 2, 0.01),
+                b.on_pass(&mut yb, 2, 0.01)
+            );
+            assert_eq!(ya, yb);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_kind_and_missing_fields() {
+        assert!(FaultPlan::parse("{\"seed\":1}").is_err());
+        assert!(FaultPlan::parse(
+            "{\"seed\":1,\"episodes\":[{\"start_pass\":0,\"duration\":1,\
+             \"kind\":\"meteor_strike\"}]}"
+        )
+        .is_err());
+        assert!(FaultPlan::parse(
+            "{\"seed\":1,\"episodes\":[{\"start_pass\":0,\"duration\":1,\
+             \"kind\":\"stuck_tiles\"}]}"
+        )
+        .is_err(), "stuck_tiles requires rows");
+    }
+}

@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod drift;
 pub mod farm;
+pub mod fault;
 pub mod obs;
 pub mod onn;
 pub mod photonic;

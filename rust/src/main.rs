@@ -21,6 +21,15 @@
 //!          [--smoke]           artifact-free synthetic run: monitored
 //!                              farm + forced recalibration + partition
 //!                              shard pass (the `make trace-smoke` body)
+//!          [--chaos PLAN.json] chaos smoke instead: a supervised farm
+//!                              with a digital fallback lane serves while
+//!                              every member runs the seeded fault plan
+//!                              (`builtin` for the pinned default) — the
+//!                              run fails unless the self-healing loop
+//!                              closes with zero dropped requests
+//!                              (the `make chaos-smoke` body)
+//!   chaos  [--seed S]          print a seeded random fault plan as JSON
+//!          [--out PLAN.json]   (or write it to a file) for `--chaos`
 //!   mvm    [--size S]          one BCM matmul through sim (+ XLA with
 //!                              `--features pjrt`)
 //!   analyze                    print the benchmark-analysis summary
@@ -46,8 +55,12 @@ use cirptc::drift::{
     Recalibrator,
 };
 use cirptc::farm::{
-    tile_demand, ChipStatus, Farm, FarmConfig, FarmMember, PartitionPlan,
-    PartitionedBackend, PartitionedEngine, DEFAULT_DRIFTING_PPM,
+    tile_demand, ChipHealth, ChipStatus, Farm, FarmConfig, FarmMember,
+    PartitionPlan, PartitionedBackend, PartitionedEngine,
+    DEFAULT_DRIFTING_PPM,
+};
+use cirptc::fault::{
+    ChipSupervisor, Episode, FaultKind, FaultPlan, SupervisorConfig,
 };
 use cirptc::obs::{self, prom, sampler::Sampler, trace};
 use cirptc::onn::{Backend, Engine, Manifest};
@@ -70,16 +83,18 @@ fn main() -> Result<()> {
     match args.positional().first().map(String::as_str) {
         Some("info") => info(&args),
         Some("serve") => serve(&args),
+        Some("chaos") => chaos(&args),
         Some("mvm") => mvm(&args),
         Some("analyze") => analyze(),
         _ => {
             eprintln!(
-                "usage: cirptc <info|serve|mvm|analyze> [--artifacts DIR] \
+                "usage: cirptc <info|serve|chaos|mvm|analyze> [--artifacts DIR] \
                  [--model NAME] [--backend digital|photonic] [--size S] \
                  [--batch N] [--wait-us US] [--queue-cap N] [--chips N] \
                  [--chip-capacity TILES] [--trace OUT.json] \
                  [--metrics-addr HOST:PORT] [--sample OUT.jsonl] \
-                 [--sample-ms MS] [--json] [--smoke]"
+                 [--sample-ms MS] [--json] [--smoke] \
+                 [--chaos PLAN.json|builtin] [--seed S] [--out PLAN.json]"
             );
             Ok(())
         }
@@ -123,7 +138,10 @@ fn serve(args: &Args) -> Result<()> {
     }
     let dir = artifacts_dir(args);
     let model = args.str_or("model", "synth_cxr");
-    if args.has("smoke") || !dir.join(format!("models/{model}.json")).exists() {
+    if args.get("chaos").is_some() {
+        serve_chaos(args)?;
+    } else if args.has("smoke") || !dir.join(format!("models/{model}.json")).exists()
+    {
         if !args.has("smoke") {
             println!("artifacts missing — running the synthetic serve smoke");
         }
@@ -470,6 +488,242 @@ fn serve_smoke(args: &Args) -> Result<()> {
     drop(status);
     drop(recals);
     smoke_partitioned(chips_n)
+}
+
+/// `cirptc chaos --seed S [--out PLAN.json]` — print (or write) a seeded
+/// random fault plan for `cirptc serve --chaos`.
+fn chaos(args: &Args) -> Result<()> {
+    let seed = args.usize_or("seed", 1) as u64;
+    let plan = FaultPlan::generate(seed);
+    let text = plan.dump();
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, &text)
+                .map_err(|e| Error::msg(format!("write {p}: {e}")))?;
+            println!(
+                "chaos plan (seed {seed}, {} episodes) -> {p}",
+                plan.episodes().len()
+            );
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// The pinned default chaos schedule (`--chaos builtin`): one silent
+/// hard fault (DeadChip — probe-detected, quarantines) overlapping one
+/// detectable transient episode (retried).  Because every member rides
+/// the same schedule, the DeadChip window is a total-loss window and the
+/// router must degrade to the fallback lane.
+fn builtin_chaos_plan() -> FaultPlan {
+    FaultPlan::new(
+        0xC4A05,
+        vec![
+            Episode {
+                start_pass: 8,
+                duration: 50,
+                kind: FaultKind::DeadChip,
+            },
+            Episode {
+                start_pass: 4,
+                duration: 40,
+                kind: FaultKind::TransientPassError { p: 0.5 },
+            },
+        ],
+    )
+}
+
+/// Chaos smoke (the body of `make chaos-smoke`): a supervised replica
+/// farm with a digital fallback lane serves while every member runs the
+/// same seeded fault plan on its own noise stream.  The run only passes
+/// when the whole self-healing loop has closed — detectable faults
+/// retried, silent faults auto-quarantined off probes, total loss
+/// degraded to the fallback, probation auto-restoring members once the
+/// episodes end — with `completed == submitted` and zero rejections
+/// throughout (DESIGN.md §fault).
+fn serve_chaos(args: &Args) -> Result<()> {
+    let chips_n = args.usize_or("chips", 3).max(1);
+    let plan = match args.get("chaos") {
+        Some(path) if path != "builtin" => {
+            let text = std::fs::read_to_string(path).map_err(|e| {
+                Error::msg(format!("read fault plan {path}: {e}"))
+            })?;
+            FaultPlan::parse(&text)?
+        }
+        _ => builtin_chaos_plan(),
+    };
+    // which signal families this plan can be held to: detectable kinds
+    // must produce retries; hard kinds must quarantine every member
+    // (same schedule farm-wide), degrade to the fallback, and restore
+    let wants_retry = plan.episodes().iter().any(|e| {
+        matches!(
+            e.kind,
+            FaultKind::TransientPassError { .. } | FaultKind::NaNReadout
+        )
+    });
+    let wants_hard = plan.episodes().iter().any(|e| {
+        matches!(e.kind, FaultKind::DeadChip | FaultKind::NaNReadout)
+    });
+    println!(
+        "chaos smoke: {chips_n}-chip supervised farm + digital fallback, \
+         plan seed {} ({} episodes)",
+        plan.seed(),
+        plan.episodes().len()
+    );
+
+    // the same tiny in-process model the serve smoke trains
+    let manifest = Manifest::parse(datasets::SHAPES_MANIFEST_JSON)?;
+    let train_split = datasets::synth_shapes(96, 0xC1);
+    let eval_split = datasets::synth_shapes(32, 0xC3);
+    let mut model = TrainModel::init(manifest.clone(), 0xC4)?;
+    let mut opt = Optimizer::adam(5e-3);
+    let tcfg = TrainConfig { epochs: 2, batch: 16, max_steps: 0, seed: 0xC5 };
+    fit(&mut model, &mut TrainBackend::Digital, &mut opt, &train_split, &tcfg)?;
+    let bundle = model.export_bundle();
+
+    let metrics = Arc::new(Metrics::default());
+    let mut members = Vec::with_capacity(chips_n);
+    let mut recal_rxs = Vec::new();
+    for k in 0..chips_n {
+        let engine = Engine::from_parts(manifest.clone(), &bundle)?;
+        let mut desc = ChipDescription::ideal(4);
+        desc.w_bits = 6;
+        desc.x_bits = 4;
+        desc.dark = 0.01;
+        desc.seed = 0xD0 ^ k as u64;
+        let mut sim = ChipSim::deterministic(desc.clone());
+        sim.set_fault(FaultPlan::new(
+            plan.seed() ^ k as u64,
+            plan.episodes().to_vec(),
+        ));
+        // monitor-only: probe every batch for the supervisor, never
+        // request a recalibration (no recalibrator is attached here)
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let supervisor = ChipSupervisor::new(SupervisorConfig {
+            residual_ceiling: 0.05,
+            consecutive_failures: 2,
+            probation_probes: 2,
+            // the smoke pins auto-restore; the latched-quarantine
+            // escalation is pinned by unit tests and chaos_e2e instead
+            max_probations: 10_000,
+        });
+        let (member, recal_rx) = FarmMember::supervised(
+            engine,
+            sim,
+            monitor,
+            supervisor,
+            DEFAULT_DRIFTING_PPM,
+            Duration::from_millis(2),
+            Arc::clone(&metrics),
+        );
+        recal_rxs.push(recal_rx);
+        members.push(member);
+    }
+    let fb_engine = Arc::new(Engine::from_parts(manifest.clone(), &bundle)?);
+    let fallback: cirptc::coordinator::worker::BackendFactory =
+        Box::new(move || {
+            Box::new(EngineBackend { engine: fb_engine, mode: Backend::Digital })
+                as Box<dyn cirptc::coordinator::InferenceBackend>
+        });
+    let Farm { coord, status } = Farm::start_with_fallback(
+        members,
+        Some(fallback),
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait_us: 2_000,
+                queue_cap: 0,
+            },
+            pass_deadline: Some(Duration::from_secs(10)),
+            ..FarmConfig::default()
+        },
+        Arc::clone(&metrics),
+    );
+
+    let images: Vec<Tensor> =
+        (0..eval_split.n).map(|i| eval_split.image(i)).collect();
+    let mut rounds = 0u64;
+    std::thread::scope(|s| -> Result<()> {
+        let (_endpoint, smp) = start_obs(s, args, &metrics, &status, 50)?;
+        let deadline = std::time::Instant::now() + Duration::from_secs(180);
+        loop {
+            let responses = coord.classify_all(&images)?;
+            if responses.len() != images.len() {
+                return Err(Error::msg(format!(
+                    "chaos smoke dropped requests: {} of {} answered",
+                    responses.len(),
+                    images.len()
+                )));
+            }
+            rounds += 1;
+            let serving = status
+                .iter()
+                .filter(|st| st.health() != ChipHealth::Failed)
+                .count();
+            let retried = !wants_retry || metrics.retries.get() >= 1;
+            let healed = !wants_hard
+                || (metrics.quarantines.get() >= 1
+                    && metrics.degraded_batches.get() >= 1
+                    && serving >= status.len().min(2));
+            if retried && healed {
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::msg(format!(
+                    "chaos smoke did not converge (retried={retried} \
+                     healed={healed} serving={serving}): {}",
+                    metrics.summary()
+                )));
+            }
+        }
+        if let Some(smp) = smp {
+            smp.stop();
+        }
+        Ok(())
+    })?;
+    if metrics.rejected.get() != 0 {
+        return Err(Error::msg(format!(
+            "chaos smoke rejected requests: {}",
+            metrics.summary()
+        )));
+    }
+    if metrics.completed.get() != metrics.submitted.get() {
+        return Err(Error::msg(format!(
+            "chaos smoke lost requests: {}",
+            metrics.summary()
+        )));
+    }
+    // when tracing, the fault span families must actually be in the ring
+    if let Some(rec) = trace::global() {
+        let snap = rec.snapshot();
+        let mut want: Vec<&str> = Vec::new();
+        if wants_retry {
+            want.push("retry");
+        }
+        if wants_hard {
+            want.extend(["quarantine", "restore", "degraded"]);
+        }
+        for name in want {
+            if !snap.iter().any(|e| e.name == name) {
+                return Err(Error::msg(format!(
+                    "chaos smoke trace is missing the `{name}` span family"
+                )));
+            }
+        }
+    }
+    println!("chaos smoke: converged after {rounds} rounds");
+    obs::report(&metrics, &[], args.has("json"));
+    drop(coord);
+    drop(status);
+    drop(recal_rxs);
+    Ok(())
 }
 
 /// Read one `/metrics` scrape back from our own endpoint.

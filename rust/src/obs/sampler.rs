@@ -5,8 +5,11 @@
 //! One line per tick: `{"t_ms": …, "metrics": {…}, "chips": [{…}]}`,
 //! plus `"event": "recalibration"` on any tick where the recalibration
 //! counter advanced since the last one — the drift-recal e2e test pins
-//! that a forced recalibration is visible in the stream.  A final line is
-//! written on stop so short runs always produce at least one sample.
+//! that a forced recalibration is visible in the stream — and
+//! `"fault_event": "quarantine"` on any tick where the supervisor's
+//! quarantine counter advanced (a distinct key, so a tick that spans both
+//! keeps both).  A final line is written on stop so short runs always
+//! produce at least one sample.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -71,6 +74,7 @@ fn run(
     let mut out = BufWriter::new(file);
     let epoch = Instant::now();
     let mut last_recals = metrics.recalibrations.get();
+    let mut last_quarantines = metrics.quarantines.get();
     loop {
         // a stop signal (or a dropped sender) ends the loop after one
         // final sample; only a timeout means "keep sampling"
@@ -108,6 +112,11 @@ fn run(
         if recals > last_recals {
             fields.push(("event", Json::Str("recalibration".to_string())));
             last_recals = recals;
+        }
+        let quarantines = metrics.quarantines.get();
+        if quarantines > last_quarantines {
+            fields.push(("fault_event", Json::Str("quarantine".to_string())));
+            last_quarantines = quarantines;
         }
         let line = Json::obj(fields).dump();
         if writeln!(out, "{line}").is_err() {
@@ -197,6 +206,38 @@ mod tests {
         assert_eq!(
             tagged, 1,
             "exactly one tick spans the counter increment: {text}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn quarantine_tick_is_tagged_as_fault_event() {
+        let path = temp_jsonl("quarantine");
+        let metrics = Arc::new(Metrics::default());
+        let s = Sampler::start(
+            &path,
+            Duration::from_millis(5),
+            Arc::clone(&metrics),
+            vec![],
+        )
+        .expect("start sampler");
+        std::thread::sleep(Duration::from_millis(15));
+        metrics.quarantines.add(1);
+        std::thread::sleep(Duration::from_millis(30));
+        s.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tagged = text
+            .lines()
+            .filter(|l| !l.is_empty())
+            .map(|l| Json::parse(l).unwrap())
+            .filter(|j| {
+                j.get("fault_event").and_then(Json::as_str)
+                    == Some("quarantine")
+            })
+            .count();
+        assert_eq!(
+            tagged, 1,
+            "exactly one tick spans the quarantine increment: {text}"
         );
         let _ = std::fs::remove_file(&path);
     }

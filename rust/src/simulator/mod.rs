@@ -20,6 +20,7 @@ use crate::util::sync::Arc;
 use crate::bail;
 use crate::circulant::{Bcm, SignSplit};
 use crate::drift::DriftModel;
+use crate::fault::FaultPlan;
 use crate::quant::Quantizer;
 use crate::tensor::Tensor;
 use crate::util::error::{Context, Result};
@@ -186,6 +187,16 @@ pub struct ChipSim {
     /// passes handed a pre-encoded operand that had gone stale (drift
     /// tick or invalidation since the snapshot) and re-encoded in line
     pub pre_stale: u64,
+    /// seeded abrupt-fault schedule ([`FaultPlan`]), advanced on the same
+    /// pass-count clock as drift.  `None` (the default) leaves every code
+    /// path bit-identical to the fault-free simulator.
+    fault: Option<FaultPlan>,
+    /// latched detectable readout event from the most recent faulted
+    /// pass; drained by [`ChipSim::take_fault_event`]
+    pending_fault: Option<&'static str>,
+    /// detectable fault events observed at the readout interface (CRC
+    /// trips, non-finite readouts, external deadline verdicts)
+    fault_events: u64,
 }
 
 /// Pre-encoded weight tiles keyed by `(owner, layer slot, sign half)`.
@@ -349,6 +360,9 @@ impl ChipSim {
             enc_cache: EncodeCache::default(),
             pre_hits: 0,
             pre_stale: 0,
+            fault: None,
+            pending_fault: None,
+            fault_events: 0,
         }
     }
 
@@ -445,6 +459,15 @@ impl ChipSim {
             drift.on_pass(&mut self.desc);
             if drift.ticks() != ticks_before {
                 self.enc_generation = self.enc_generation.wrapping_add(1);
+            }
+        }
+        // fault injection corrupts the detected photocurrents *after*
+        // dark/noise (it models the readout interface, not the optics);
+        // detectable events latch until the serving path drains them
+        if let Some(fault) = self.fault.as_mut() {
+            if let Some(event) = fault.on_pass(&mut ybuf, b, dark) {
+                self.pending_fault = Some(event);
+                self.fault_events += 1;
             }
         }
         Tensor::new(&[wenc.m(), b], ybuf)
@@ -676,6 +699,44 @@ impl ChipSim {
     /// The attached drift process, if any.
     pub fn drift(&self) -> Option<&DriftModel> {
         self.drift.as_ref()
+    }
+
+    /// Attach a seeded abrupt-fault schedule: from now on every crossbar
+    /// pass advances the plan's clock and may corrupt the readout.  Like
+    /// [`ChipSim::set_drift`], attaching retires pre-encoded tiles (a
+    /// chaos run should not trust state staged before the faults began).
+    pub fn set_fault(&mut self, plan: FaultPlan) {
+        self.fault = Some(plan);
+        self.invalidate_encodings();
+    }
+
+    /// The attached fault plan, if any.
+    pub fn fault(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
+    }
+
+    /// Drain the latched detectable readout event from the most recent
+    /// faulted pass, if any.  The pipelined chip lane checks this after
+    /// every batch and converts it into a retry + supervisor verdict.
+    pub fn take_fault_event(&mut self) -> Option<&'static str> {
+        self.pending_fault.take()
+    }
+
+    /// Record an externally detected fault verdict (e.g. a pass-deadline
+    /// overrun in the serving pipeline) against this chip's counters.
+    pub fn note_fault(&mut self) {
+        self.fault_events += 1;
+    }
+
+    /// Detectable fault events seen at the readout interface so far.
+    pub fn fault_events(&self) -> u64 {
+        self.fault_events
+    }
+
+    /// Total passes the attached plan corrupted (silent or detectable);
+    /// 0 when no plan is attached.
+    pub fn faults_injected(&self) -> u64 {
+        self.fault.as_ref().map_or(0, |f| f.injected())
     }
 }
 
@@ -1228,5 +1289,56 @@ mod tests {
         });
         let want = twin.forward_signed(&w, &x);
         assert_eq!(y.data, want.data);
+    }
+
+    #[test]
+    fn fault_detached_is_bit_identical_and_plan_rides_the_pass_clock() {
+        use crate::fault::{Episode, FaultKind};
+        let w = rand_bcm(2, 2, 4, 90);
+        let x = rand_x(8, 3, 91);
+        let mut clean = ChipSim::deterministic(nonideal_chip());
+        let mut faulted = ChipSim::deterministic(nonideal_chip());
+        // episode covers passes [1, 3): pass 0 is untouched
+        faulted.set_fault(FaultPlan::new(
+            5,
+            vec![Episode {
+                start_pass: 1,
+                duration: 2,
+                kind: FaultKind::DeadChip,
+            }],
+        ));
+        let y0c = clean.forward(&w, &x);
+        let y0f = faulted.forward(&w, &x);
+        assert_eq!(y0c.data, y0f.data, "pre-episode pass is bit-identical");
+        assert_eq!(faulted.take_fault_event(), None);
+        let y1 = faulted.forward(&w, &x);
+        assert!(y1.data.iter().all(|&v| v == 0.0), "dead chip reads zero");
+        // silent fault: counted as injected, not as a detectable event
+        assert_eq!(faulted.faults_injected(), 1);
+        assert_eq!(faulted.fault_events(), 0);
+        assert_eq!(faulted.fault().map(|f| f.passes()), Some(2));
+    }
+
+    #[test]
+    fn detectable_fault_latches_until_drained() {
+        use crate::fault::{Episode, FaultKind};
+        let w = rand_bcm(1, 2, 4, 92);
+        let x = rand_x(8, 2, 93);
+        let mut sim = ChipSim::deterministic(nonideal_chip());
+        sim.set_fault(FaultPlan::new(
+            6,
+            vec![Episode {
+                start_pass: 0,
+                duration: 1,
+                kind: FaultKind::NaNReadout,
+            }],
+        ));
+        let y = sim.forward(&w, &x);
+        assert!(y.data.iter().all(|v| v.is_nan()));
+        assert_eq!(sim.fault_events(), 1);
+        assert_eq!(sim.take_fault_event(), Some("nan_readout"));
+        assert_eq!(sim.take_fault_event(), None, "drained");
+        sim.note_fault(); // external deadline verdict
+        assert_eq!(sim.fault_events(), 2);
     }
 }

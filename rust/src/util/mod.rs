@@ -10,4 +10,5 @@ pub mod propcheck;
 pub mod rng;
 pub mod scratch;
 pub mod sync;
+pub mod testing;
 pub mod threadpool;

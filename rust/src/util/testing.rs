@@ -1,0 +1,90 @@
+//! Shared failure-injection backends for tests and chaos tooling.
+//!
+//! Promoted from `rust/tests/failure_injection.rs` so every suite that
+//! needs a misbehaving [`InferenceBackend`] (failure_injection, farm_e2e,
+//! chaos_e2e) exercises the *same* failure modes instead of re-declaring
+//! ad-hoc copies.  Not `#[cfg(test)]`-gated: integration tests link the
+//! crate as a dependency and the chaos CLI smoke uses them too.
+
+use crate::bail;
+use crate::coordinator::InferenceBackend;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::Arc;
+
+/// Fails every other batch; successful batches answer `[1.0, 0.0]`.
+pub struct FlakyBackend {
+    pub calls: Arc<AtomicUsize>,
+}
+
+impl FlakyBackend {
+    pub fn new() -> FlakyBackend {
+        FlakyBackend { calls: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+impl Default for FlakyBackend {
+    fn default() -> FlakyBackend {
+        FlakyBackend::new()
+    }
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n % 2 == 1 {
+            bail!("injected failure on batch {n}");
+        }
+        Ok(imgs.iter().map(|_| vec![1.0, 0.0]).collect())
+    }
+
+    fn name(&self) -> String {
+        "flaky".into()
+    }
+}
+
+/// Always succeeds with fixed `[1.0, 0.0]` logits — a stand-in for the
+/// digital fallback lane in degradation tests.
+pub struct ConstBackend;
+
+impl InferenceBackend for ConstBackend {
+    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        Ok(imgs.iter().map(|_| vec![1.0, 0.0]).collect())
+    }
+
+    fn name(&self) -> String {
+        "const".into()
+    }
+}
+
+/// Always fails.
+pub struct DeadBackend;
+
+impl InferenceBackend for DeadBackend {
+    fn infer_batch(&mut self, _imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        bail!("dead backend")
+    }
+
+    fn name(&self) -> String {
+        "dead".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flaky_alternates_and_dead_always_fails() {
+        let imgs = [Tensor::full(&[1, 2, 2], 0.5)];
+        let mut flaky = FlakyBackend::new();
+        assert!(flaky.infer_batch(&imgs).is_ok());
+        assert!(flaky.infer_batch(&imgs).is_err());
+        assert!(flaky.infer_batch(&imgs).is_ok());
+        assert_eq!(flaky.calls.load(Ordering::SeqCst), 3);
+        let mut dead = DeadBackend;
+        assert!(dead.infer_batch(&imgs).is_err());
+        assert_eq!(dead.name(), "dead");
+    }
+}

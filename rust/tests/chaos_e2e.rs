@@ -1,0 +1,254 @@
+//! Chaos end-to-end: the self-healing farm under seeded fault injection
+//! (DESIGN.md §fault).
+//!
+//! * **pinned scenario** — a 3-member supervised farm where member 0
+//!   takes a DeadChip episode (silent: only probes notice) and member 1
+//!   a TransientPassError episode (detectable: batches fail and are
+//!   retried on siblings).  The run must auto-quarantine, retry, and
+//!   auto-restore with `completed == submitted` and zero rejections —
+//!   no operator action anywhere.
+//! * **randomized propcheck** — farms under `FaultPlan::generate(seed)`
+//!   schedules (every member on its own noise stream) never drop or
+//!   reject a request, never surface an error to a caller, and recover
+//!   to a serving majority once the episodes end.
+//!
+//! Everything is seeded; loops synchronize on metrics and health state
+//! with generous deadlines, never on sleeps alone.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cirptc::coordinator::{worker, BatcherConfig, InferenceBackend, Metrics};
+use cirptc::data::datasets::{self, SHAPES_MANIFEST_JSON};
+use cirptc::drift::{DriftMonitor, MonitorConfig};
+use cirptc::farm::{
+    ChipHealth, ChipStatus, Farm, FarmConfig, FarmMember,
+    DEFAULT_DRIFTING_PPM,
+};
+use cirptc::fault::{
+    ChipSupervisor, Episode, FaultKind, FaultPlan, SupervisorConfig,
+};
+use cirptc::onn::{Engine, Manifest};
+use cirptc::simulator::{ChipDescription, ChipSim};
+use cirptc::tensor::Tensor;
+use cirptc::train::TrainModel;
+use cirptc::util::propcheck;
+use cirptc::util::testing::ConstBackend;
+
+const K: usize = 3;
+const CHUNK: usize = 8;
+
+fn chaos_chip(k: usize) -> ChipDescription {
+    let mut d = ChipDescription::ideal(4);
+    d.w_bits = 6;
+    d.x_bits = 4;
+    d.dark = 0.01;
+    d.seed = 0xCA05 ^ k as u64;
+    d
+}
+
+fn supervisor_cfg() -> SupervisorConfig {
+    SupervisorConfig {
+        residual_ceiling: 0.05,
+        consecutive_failures: 2,
+        probation_probes: 2,
+        // episodes end, so probation must eventually succeed; the
+        // escalation latch is pinned by fault-module unit tests
+        max_probations: 100_000,
+    }
+}
+
+/// Build a K-member supervised farm (untrained shapes model, fixed
+/// deterministic chips) where member `k` runs `plans[k]`, over a
+/// constant digital fallback lane.
+fn supervised_farm(
+    plans: Vec<Option<FaultPlan>>,
+    metrics: &Arc<Metrics>,
+) -> (Farm, Vec<Arc<ChipStatus>>, Vec<Tensor>) {
+    let manifest = Manifest::parse(SHAPES_MANIFEST_JSON).unwrap();
+    let model = TrainModel::init(manifest.clone(), 0xCA).unwrap();
+    let bundle = model.export_bundle();
+    let eval_split = datasets::synth_shapes(32, 0xCB);
+    let imgs: Vec<Tensor> =
+        (0..eval_split.n).map(|i| eval_split.image(i)).collect();
+
+    let mut members = Vec::with_capacity(plans.len());
+    for (k, plan) in plans.into_iter().enumerate() {
+        let engine = Engine::from_parts(manifest.clone(), &bundle).unwrap();
+        let desc = chaos_chip(k);
+        let mut sim = ChipSim::deterministic(desc.clone());
+        if let Some(plan) = plan {
+            sim.set_fault(plan);
+        }
+        // monitor-only: probe every batch, never request a recalibration
+        // (the supervisor, not the recalibrator, is under test here)
+        let monitor = DriftMonitor::new(
+            MonitorConfig {
+                probe_every: 1,
+                residual_trigger: f32::INFINITY,
+                ..MonitorConfig::default()
+            },
+            &desc,
+        );
+        let (member, recal_rx) = FarmMember::supervised(
+            engine,
+            sim,
+            monitor,
+            ChipSupervisor::new(supervisor_cfg()),
+            DEFAULT_DRIFTING_PPM,
+            Duration::from_millis(2),
+            Arc::clone(metrics),
+        );
+        // monitor-only config never requests a recal; the rx can drop
+        drop(recal_rx);
+        members.push(member);
+    }
+    let status: Vec<_> =
+        members.iter().map(|m| Arc::clone(&m.status)).collect();
+    let fallback: worker::BackendFactory =
+        Box::new(|| Box::new(ConstBackend) as Box<dyn InferenceBackend>);
+    let farm = Farm::start_with_fallback(
+        members,
+        Some(fallback),
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: CHUNK,
+                max_wait_us: 20_000,
+                queue_cap: 0,
+            },
+            pass_deadline: Some(Duration::from_secs(10)),
+            ..FarmConfig::default()
+        },
+        Arc::clone(metrics),
+    );
+    (farm, status, imgs)
+}
+
+/// One pass of `imgs` through the farm; panics on any dropped request.
+fn serve_round(farm: &Farm, imgs: &[Tensor]) {
+    for chunk in imgs.chunks(CHUNK) {
+        let responses = farm.coord.classify_all(chunk).unwrap();
+        assert_eq!(responses.len(), chunk.len(), "request dropped");
+    }
+}
+
+fn serving_members(status: &[Arc<ChipStatus>]) -> usize {
+    status.iter().filter(|st| st.health() != ChipHealth::Failed).count()
+}
+
+#[test]
+fn dead_chip_and_transient_errors_self_heal_with_zero_drops() {
+    let metrics = Arc::new(Metrics::default());
+    // member 0: silent total die loss for 40 passes — probes must
+    // quarantine it; member 1: detectable garbage passes — batches must
+    // be retried on siblings; member 2: clean
+    let plans = vec![
+        Some(FaultPlan::new(
+            0xDead,
+            vec![Episode {
+                start_pass: 5,
+                duration: 40,
+                kind: FaultKind::DeadChip,
+            }],
+        )),
+        Some(FaultPlan::new(
+            0x7a51,
+            vec![Episode {
+                start_pass: 0,
+                duration: 30,
+                kind: FaultKind::TransientPassError { p: 0.8 },
+            }],
+        )),
+        None,
+    ];
+    let (farm, status, imgs) = supervised_farm(plans, &metrics);
+
+    // serve until the loop closes: at least one automatic quarantine, at
+    // least one retry, and every member back to serving health (the
+    // episodes are finite, probation restores on idle probes)
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        serve_round(&farm, &imgs);
+        let healed = metrics.quarantines.get() >= 1
+            && metrics.retries.get() >= 1
+            && serving_members(&status) == K;
+        if healed {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "chaos farm never healed: health {:?}, {}",
+            status.iter().map(|s| s.health()).collect::<Vec<_>>(),
+            metrics.summary()
+        );
+    }
+    // one more clean round on the restored farm
+    serve_round(&farm, &imgs);
+
+    assert_eq!(metrics.rejected.get(), 0, "{}", metrics.summary());
+    assert_eq!(
+        metrics.completed.get(),
+        metrics.submitted.get(),
+        "every accepted request must complete: {}",
+        metrics.summary()
+    );
+    assert!(
+        metrics.faults_injected.get() >= 1,
+        "the plan must actually have corrupted passes: {}",
+        metrics.summary()
+    );
+    assert!(
+        !status.iter().any(|st| st.is_quarantined()),
+        "no member may stay latched after episodes end"
+    );
+    drop(farm);
+}
+
+#[test]
+fn randomized_fault_plans_never_drop_requests_and_recover() {
+    propcheck::check("chaos fault-plan robustness", 3, |g| {
+        let seed = g.usize_in(1, 1 << 20) as u64;
+        let base = FaultPlan::generate(seed);
+        let metrics = Arc::new(Metrics::default());
+        let plans: Vec<Option<FaultPlan>> = (0..K)
+            .map(|k| {
+                Some(FaultPlan::new(
+                    seed ^ k as u64,
+                    base.episodes().to_vec(),
+                ))
+            })
+            .collect();
+        let (farm, status, imgs) = supervised_farm(plans, &metrics);
+
+        // generated plans always contain a hard episode, so demand the
+        // full loop: quarantine observed, then a serving majority again
+        let deadline = Instant::now() + Duration::from_secs(300);
+        loop {
+            serve_round(&farm, &imgs);
+            if metrics.quarantines.get() >= 1
+                && serving_members(&status) >= K - 1
+            {
+                break;
+            }
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "seed {seed}: farm never recovered: health {:?}, {}",
+                    status.iter().map(|s| s.health()).collect::<Vec<_>>(),
+                    metrics.summary()
+                ));
+            }
+        }
+        serve_round(&farm, &imgs);
+
+        if metrics.rejected.get() != 0
+            || metrics.completed.get() != metrics.submitted.get()
+        {
+            return Err(format!(
+                "seed {seed}: dropped or rejected requests: {}",
+                metrics.summary()
+            ));
+        }
+        drop(farm);
+        Ok(())
+    });
+}

@@ -1,45 +1,15 @@
 //! Failure injection: the serving stack must degrade cleanly, never hang
 //! or double-deliver, when backends fail or inputs are malformed.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::AtomicUsize;
 use std::sync::Arc;
 
-use cirptc::bail;
 use cirptc::coordinator::{
     BackendFactory, BatcherConfig, Coordinator, InferenceBackend,
 };
 use cirptc::tensor::Tensor;
-use cirptc::util::error::Result;
-
-/// Fails every other batch.
-struct FlakyBackend {
-    calls: Arc<AtomicUsize>,
-}
-
-impl InferenceBackend for FlakyBackend {
-    fn infer_batch(&mut self, imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let n = self.calls.fetch_add(1, Ordering::SeqCst);
-        if n % 2 == 1 {
-            bail!("injected failure on batch {n}");
-        }
-        Ok(imgs.iter().map(|_| vec![1.0, 0.0]).collect())
-    }
-    fn name(&self) -> String {
-        "flaky".into()
-    }
-}
-
-/// Always fails.
-struct DeadBackend;
-
-impl InferenceBackend for DeadBackend {
-    fn infer_batch(&mut self, _imgs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        bail!("dead backend")
-    }
-    fn name(&self) -> String {
-        "dead".into()
-    }
-}
+// the misbehaving backends are shared with farm_e2e / chaos_e2e
+use cirptc::util::testing::{DeadBackend, FlakyBackend};
 
 fn img() -> Tensor {
     Tensor::full(&[1, 2, 2], 0.5)

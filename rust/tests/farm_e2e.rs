@@ -29,12 +29,16 @@ use cirptc::farm::{
     Farm, FarmConfig, FarmMember, PartitionPlan, PartitionedEngine,
     DEFAULT_DRIFTING_PPM,
 };
+use cirptc::coordinator::worker;
 use cirptc::onn::{Backend, Engine, Manifest};
 use cirptc::prop_assert;
 use cirptc::simulator::{ChipDescription, ChipSim};
 use cirptc::tensor::Tensor;
 use cirptc::train::TrainModel;
 use cirptc::util::propcheck;
+// shared misbehaving/constant backends (promoted from failure_injection)
+use cirptc::coordinator::InferenceBackend;
+use cirptc::util::testing::{ConstBackend, DeadBackend};
 
 // ---------------------------------------------------------------- shapes
 
@@ -333,5 +337,99 @@ fn failed_chip_reroutes_with_zero_dropped_requests() {
         "every request must complete"
     );
     assert_eq!(metrics.farm_absorbed.get(), 0, "two chips stayed healthy");
+    drop(farm);
+}
+
+/// Build a K-member fixed photonic farm over an untrained shapes model,
+/// with the given fallback lane attached.
+fn fixed_farm_with_fallback(
+    fallback: worker::BackendFactory,
+    metrics: &Arc<Metrics>,
+) -> (Farm, Vec<Arc<cirptc::farm::ChipStatus>>, Vec<Tensor>) {
+    let manifest = Manifest::parse(SHAPES_MANIFEST_JSON).unwrap();
+    let model = TrainModel::init(manifest.clone(), 0xF9).unwrap();
+    let bundle = model.export_bundle();
+    let eval_split = datasets::synth_shapes(32, 0xFA);
+    let imgs = eval_images(&eval_split);
+    let engine = Arc::new(Engine::from_parts(manifest, &bundle).unwrap());
+    let members: Vec<FarmMember> = (0..K)
+        .map(|k| {
+            FarmMember::fixed(
+                Arc::clone(&engine),
+                Backend::PhotonicSim(ChipSim::deterministic(farm_chip(k))),
+            )
+        })
+        .collect();
+    let status: Vec<_> =
+        members.iter().map(|m| Arc::clone(&m.status)).collect();
+    let farm = Farm::start_with_fallback(
+        members,
+        Some(fallback),
+        FarmConfig {
+            batcher: BatcherConfig {
+                max_batch: CHUNK,
+                max_wait_us: 20_000,
+                queue_cap: 0,
+            },
+            ..FarmConfig::default()
+        },
+        Arc::clone(metrics),
+    );
+    (farm, status, imgs)
+}
+
+#[test]
+fn total_photonic_loss_degrades_to_fallback_with_zero_drops() {
+    let metrics = Arc::new(Metrics::default());
+    let fallback: worker::BackendFactory =
+        Box::new(|| Box::new(ConstBackend) as Box<dyn InferenceBackend>);
+    let (farm, status, imgs) = fixed_farm_with_fallback(fallback, &metrics);
+
+    serve_round(&farm, &imgs);
+    // every chip member lost: the farm must degrade, not drop
+    for st in &status {
+        st.quarantine();
+    }
+    serve_round(&farm, &imgs);
+    serve_round(&farm, &imgs);
+    assert!(
+        metrics.degraded_batches.get() >= 1,
+        "total loss must reach the fallback lane: {}",
+        metrics.summary()
+    );
+    assert_eq!(
+        metrics.degraded.get(),
+        1,
+        "the degraded gauge is raised while absorbing on the fallback"
+    );
+    // recovery: chips restored, traffic returns, the gauge clears
+    for st in &status {
+        st.restore();
+    }
+    serve_round(&farm, &imgs);
+    assert_eq!(metrics.degraded.get(), 0, "{}", metrics.summary());
+
+    assert_eq!(metrics.errors.get(), 0, "no request may fail");
+    assert_eq!(metrics.rejected.get(), 0);
+    assert_eq!(
+        metrics.completed.get(),
+        metrics.submitted.get(),
+        "every request must complete, photonic loss or not"
+    );
+    drop(farm);
+}
+
+#[test]
+fn healthy_farm_never_touches_a_dead_fallback() {
+    // a broken fallback lane must be inert while any chip member serves
+    let metrics = Arc::new(Metrics::default());
+    let fallback: worker::BackendFactory =
+        Box::new(|| Box::new(DeadBackend) as Box<dyn InferenceBackend>);
+    let (farm, _status, imgs) = fixed_farm_with_fallback(fallback, &metrics);
+    serve_round(&farm, &imgs);
+    serve_round(&farm, &imgs);
+    assert_eq!(metrics.degraded_batches.get(), 0, "{}", metrics.summary());
+    assert_eq!(metrics.errors.get(), 0);
+    assert_eq!(metrics.completed.get(), metrics.submitted.get());
     drop(farm);
 }
